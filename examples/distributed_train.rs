@@ -1,0 +1,51 @@
+//! The real-data-movement engine demo: N worker threads, expert-parallel
+//! MoE, actual token tensors crossing the fabric, and Gating Dropout
+//! *measurably* skipping collectives and expert compute.
+//!
+//!   cargo run --release --example distributed_train -- [--steps 60]
+
+use anyhow::Result;
+use gating_dropout::benchkit::Table;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::distributed::{DistEngine, DistRunConfig};
+use gating_dropout::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let steps = args.u64("steps", 60);
+    let seed = args.u64("seed", 7);
+
+    println!("== distributed engine: 4 workers, 1 expert each, real all-to-all ==");
+    let mut t = Table::new(&[
+        "policy", "loss first→last", "a2a ops", "a2a MB", "bcast B", "full ms", "drop ms", "dense ok",
+    ]);
+    for policy in [
+        Policy::Baseline,
+        Policy::HashLayer,
+        Policy::GateDrop { p: 0.3 },
+        Policy::GateExpertDrop { p: 0.3 },
+        Policy::NoAllToAll,
+    ] {
+        let cfg = DistRunConfig { policy, steps, seed, ..Default::default() };
+        let res = DistEngine::run(&cfg)?;
+        let mean = |v: Vec<f64>| {
+            if v.is_empty() { f64::NAN } else { v.iter().sum::<f64>() / v.len() as f64 }
+        };
+        let full = mean(res.step_wall.iter().filter(|(d, _)| !d).map(|(_, s)| s * 1e3).collect());
+        let drop = mean(res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| s * 1e3).collect());
+        t.row(&[
+            policy.name().to_string(),
+            format!("{:.3}→{:.3}", res.losses.first().unwrap(), res.losses.last().unwrap()),
+            res.fabric.a2a_ops.to_string(),
+            format!("{:.2}", res.fabric.a2a_bytes as f64 / 1e6),
+            res.fabric.broadcast_bytes.to_string(),
+            if full.is_nan() { "-".into() } else { format!("{full:.1}") },
+            if drop.is_nan() { "-".into() } else { format!("{drop:.1}") },
+            res.dense_consistent.to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nNote: 'drop ms' < 'full ms' shows the *measured* saving from skipping");
+    println!("the all-to-all (and, for gate-expert-drop, the expert FFN).");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Quickstart: the whole stack in ~40 lines.
+//!
+//! Loads the `tiny` AOT artifacts, trains the MoE transformer for 20 steps
+//! under Gate-Drop (p=0.3), prints the loss curve and the coordinator's
+//! decisions, then reports holdout BLEU.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::train::Trainer;
+
+fn main() -> Result<()> {
+    let mut cfg = RunConfig::preset_named("tiny")?;
+    cfg.policy = Policy::GateDrop { p: 0.3 };
+    cfg.steps = 20;
+    cfg.eval_every = 10;
+    cfg.out_dir = "runs/quickstart".into();
+
+    println!("== gating-dropout quickstart ==");
+    println!("preset={} policy={} (compiling AOT artifacts ...)", cfg.preset, cfg.policy.name());
+    let mut trainer = Trainer::new(cfg, true)?;
+    let dims = &trainer.engine.manifest.dims;
+    println!(
+        "model: {:.1}M params, {} experts, d={} (manifest-driven)",
+        dims.param_count as f64 / 1e6,
+        dims.n_experts,
+        dims.d_model
+    );
+
+    let res = trainer.run(true)?;
+    println!("\nstep  loss    dropped?");
+    for h in &res.history {
+        println!(
+            "{:>4}  {:.4}  {}",
+            h.step,
+            h.loss,
+            if h.dropped { "DROP (no all-to-all)" } else { "-" }
+        );
+    }
+    println!(
+        "\nobserved drop rate: {:.2} (target 0.30) | virtual cluster throughput: {:.0} tok/s",
+        res.observed_drop_rate, res.virtual_tps
+    );
+    println!("holdout BLEU after 20 steps: {:.2} (untrained-ish, as expected)", res.final_bleu);
+    println!("history CSV: runs/quickstart/tiny_gate-drop.csv");
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Fig 3 + Table 1 (and the Table 3 cluster contrast): throughput scaling
+//! of baseline vs no-alltoall on the virtual cluster, 8..128 GPUs.
+//!
+//!   cargo run --release --example throughput_scaling -- [--cluster v100|a100]
+
+use anyhow::Result;
+use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::config::cluster_by_name;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::netmodel::MoeWorkload;
+use gating_dropout::simengine;
+use gating_dropout::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cluster = cluster_by_name(args.get_or("cluster", "v100"))?;
+    let gpus = [8usize, 16, 32, 64, 128];
+    let steps = args.u64("steps", 500);
+
+    println!("== Fig 3: tokens/s vs #GPUs ({}, WMT-10 workload) ==", cluster.name);
+    let mut fig3 = Table::new(&["GPUs", "baseline", "no-alltoall", "improvement"]);
+    for &n in &gpus {
+        let w = MoeWorkload::wmt10(n);
+        let b = simengine::simulate_run(&cluster, n, &w, Policy::Baseline, steps, 1);
+        let o = simengine::simulate_run(&cluster, n, &w, Policy::NoAllToAll, steps, 1);
+        fig3.row(&[
+            n.to_string(),
+            fmt_tps(b.tokens_per_sec),
+            fmt_tps(o.tokens_per_sec),
+            format!("{:+.1}%", (o.tokens_per_sec / b.tokens_per_sec - 1.0) * 100.0),
+        ]);
+    }
+    fig3.print();
+
+    println!("\n== Table 1 (paper: 11.8 / 46.5 / 79.1 / 88.5 / 93.8 %) ==");
+    let mut t1 = Table::new(&["Number of GPUs", "Throughput Impr. (measured)", "paper"]);
+    let paper = ["11.8%", "46.5%", "79.1%", "88.5%", "93.8%"];
+    for ((n, impr), p) in simengine::table1(&cluster, &gpus, steps, 1).into_iter().zip(paper) {
+        t1.row(&[n.to_string(), format!("{:.1}%", impr * 100.0), p.to_string()]);
+    }
+    t1.print();
+    Ok(())
+}

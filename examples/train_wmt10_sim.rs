@@ -1,0 +1,88 @@
+//! The end-to-end validation driver (DESIGN.md §5) and the Table-2 / Fig-5
+//! experiment: train the MoE transformer through the full stack
+//! (Rust data -> coordinator decision -> AOT JAX+Pallas train_step via
+//! PJRT) under each routing policy, on the synthetic-WMT10 multilingual
+//! corpus, logging loss + BLEU vs (virtual cluster) time.
+//!
+//!   cargo run --release --example train_wmt10_sim -- \
+//!       [--run-preset wmt10|e2e|tiny] [--steps N] [--policies a,b,c]
+//!       [--out-dir runs/wmt10]
+//!
+//! `--run-preset e2e` trains the ~100M-parameter preset -- the
+//! "train a ~100M transformer for a few hundred steps and log the loss
+//! curve" deliverable. Results land in EXPERIMENTS.md.
+
+use anyhow::Result;
+use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::train::Trainer;
+use gating_dropout::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut cfg = RunConfig::preset_named(args.get_or("run-preset", "wmt10"))?;
+    cfg.apply_args(&args)?;
+    let policies: Vec<Policy> = args
+        .get_or("policies", "baseline,hash-layer,gate-drop:0.3,gate-expert-drop:0.2")
+        .split(',')
+        .map(|s| Policy::parse(s.trim()).expect("bad policy"))
+        .collect();
+
+    eprintln!(
+        "[wmt10_sim] preset={} steps={} policies={:?} — compiling artifacts (once)...",
+        cfg.preset,
+        cfg.steps,
+        policies.iter().map(|p| p.name()).collect::<Vec<_>>()
+    );
+    let mut trainer = Trainer::new(cfg.clone(), true)?;
+    println!(
+        "model: {:.1}M params | sim cluster: {} x{} GPUs",
+        trainer.engine.manifest.dims.param_count as f64 / 1e6,
+        cfg.cluster.name,
+        cfg.sim_gpus
+    );
+
+    // Target BLEU = baseline's best (the paper's convergence criterion).
+    let mut results = Vec::new();
+    for policy in &policies {
+        trainer.reset_with_policy(*policy)?;
+        eprintln!("[wmt10_sim] running {} ...", policy.name());
+        let res = trainer.run(true)?;
+        eprintln!(
+            "[wmt10_sim] {}: best BLEU {:.2}, virt {} tok/s",
+            policy.name(),
+            res.best_bleu,
+            fmt_tps(res.virtual_tps)
+        );
+        results.push((*policy, res));
+    }
+
+    let target_bleu = results
+        .iter()
+        .find(|(p, _)| matches!(p, Policy::Baseline))
+        .map(|(_, r)| r.best_bleu)
+        .unwrap_or(0.0);
+
+    println!("\n== Table 2 (synthetic-WMT10 analog; target BLEU = baseline best = {target_bleu:.2}) ==");
+    let mut t = Table::new(&[
+        "Method", "Throughput (virt)", "BLEU@end", "Time to target (virt s)", "Steps to target",
+    ]);
+    for (policy, res) in &results {
+        // first history point whose bleu >= target
+        let hit = res
+            .history
+            .iter()
+            .find(|h| h.bleu.map(|b| b >= target_bleu - 1e-9).unwrap_or(false));
+        t.row(&[
+            policy.name().to_string(),
+            fmt_tps(res.virtual_tps),
+            format!("{:.2}", res.final_bleu.max(res.best_bleu)),
+            hit.map(|h| format!("{:.1}", h.virtual_secs)).unwrap_or_else(|| "-".into()),
+            hit.map(|h| format!("{}", h.step + 1)).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    println!("\nFig 5 data: per-policy CSVs under {}/ (bleu vs virtual_secs)", cfg.out_dir);
+    Ok(())
+}

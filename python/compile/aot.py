@@ -1,0 +1,271 @@
+"""AOT export: lower the jitted entry points to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the `xla` rust crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per preset this writes into ``artifacts/<preset>/``:
+    train_step.hlo.txt    params+opt state in, params+opt state+metrics out
+    eval_step.hlo.txt     holdout loss
+    decode_step.hlo.txt   greedy decode for BLEU
+    manifest.json         every artifact's I/O names/shapes/dtypes, the
+                          parameter layout, and the model config
+    params/<i>.bin        raw little-endian f32/i32 initial parameters
+
+The Rust runtime (`rust/src/runtime/`) is entirely manifest-driven: it
+never hard-codes a shape.
+
+Usage:  python -m compile.aot --preset tiny --out ../artifacts
+        python -m compile.aot --all --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import dist_stages, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_names(tree) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [jax.tree_util.keystr(p, simple=True, separator="/") for p, _ in paths]
+
+
+def _dtype_name(x) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+
+
+def _spec(names, leaves):
+    return [
+        {"name": n, "shape": [int(s) for s in l.shape], "dtype": _dtype_name(l)}
+        for n, l in zip(names, leaves)
+    ]
+
+
+def make_batch_spec(cfg: model.ModelConfig, batch_rows: int):
+    """ShapeDtypeStructs for the per-step inputs fed by Rust."""
+    b, l = batch_rows, cfg.max_len
+    f32 = jnp.float32
+    return {
+        "src": jax.ShapeDtypeStruct((b, l), jnp.int32),
+        "tgt_in": jax.ShapeDtypeStruct((b, l), jnp.int32),
+        "tgt_out": jax.ShapeDtypeStruct((b, l), jnp.int32),
+        "local_expert_row": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "drop_flag": jax.ShapeDtypeStruct((), f32),
+        "expert_skip": jax.ShapeDtypeStruct((), f32),
+        "hash_route": jax.ShapeDtypeStruct((), f32),
+        "seed": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# Stable ordering of the batch dict at the HLO interface.
+BATCH_ORDER = [
+    "src", "tgt_in", "tgt_out", "local_expert_row",
+    "drop_flag", "expert_skip", "hash_route", "seed",
+]
+METRIC_ORDER = ["loss", "ce", "balance", "kept_frac", "lr"]
+EVAL_METRIC_ORDER = ["loss", "ce", "balance", "kept_frac"]
+
+
+def export_preset(preset: str, out_root: str, batch_rows: int, write_params: bool,
+                  block_k: int = 4) -> dict:
+    cfg = model.PRESETS[preset]
+    out_dir = os.path.join(out_root, preset)
+    os.makedirs(out_dir, exist_ok=True)
+
+    params = jax.eval_shape(lambda: model.init_params(cfg))
+    pnames = _leaf_names(params)
+    pleaves = jax.tree_util.tree_leaves(params)
+    batch_spec = make_batch_spec(cfg, batch_rows)
+    treedef = jax.tree_util.tree_structure(params)
+
+    def ts_flat(*flat):
+        np_ = len(pleaves)
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        m = jax.tree_util.tree_unflatten(treedef, flat[np_: 2 * np_])
+        v = jax.tree_util.tree_unflatten(treedef, flat[2 * np_: 3 * np_])
+        step = flat[3 * np_]
+        batch = dict(zip(BATCH_ORDER, flat[3 * np_ + 1:]))
+        p2, m2, v2, step2, metrics = model.train_step(p, m, v, step, batch, cfg)
+        return (
+            tuple(jax.tree_util.tree_leaves(p2))
+            + tuple(jax.tree_util.tree_leaves(m2))
+            + tuple(jax.tree_util.tree_leaves(v2))
+            + (step2,)
+            + tuple(metrics[k] for k in METRIC_ORDER)
+        )
+
+    scalar_f32 = jax.ShapeDtypeStruct((), jnp.float32)
+    ts_inputs = (
+        list(pleaves) * 3 + [scalar_f32] + [batch_spec[k] for k in BATCH_ORDER]
+    )
+    print(f"[{preset}] lowering train_step ({len(ts_inputs)} inputs)...")
+    ts_lowered = jax.jit(ts_flat).lower(*ts_inputs)
+    ts_text = to_hlo_text(ts_lowered)
+    with open(os.path.join(out_dir, "train_step.hlo.txt"), "w") as f:
+        f.write(ts_text)
+
+    # ---- train_block: K fused steps per execute (the §Perf optimization:
+    # the params/opt-state tuple crosses the host boundary once per K
+    # steps instead of once per step; see EXPERIMENTS.md §Perf).
+    K = block_k
+
+    def tb_flat(*flat):
+        np_ = len(pleaves)
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        m = jax.tree_util.tree_unflatten(treedef, flat[np_: 2 * np_])
+        v = jax.tree_util.tree_unflatten(treedef, flat[2 * np_: 3 * np_])
+        step = flat[3 * np_]
+        stacked = dict(zip(BATCH_ORDER, flat[3 * np_ + 1:]))
+
+        def body(carry, xs):
+            p, m, v, step = carry
+            p2, m2, v2, step2, metrics = model.train_step(p, m, v, step, xs, cfg)
+            return (p2, m2, v2, step2), metrics["loss"]
+
+        (p2, m2, v2, step2), losses = jax.lax.scan(body, (p, m, v, step), stacked)
+        return (
+            tuple(jax.tree_util.tree_leaves(p2))
+            + tuple(jax.tree_util.tree_leaves(m2))
+            + tuple(jax.tree_util.tree_leaves(v2))
+            + (step2, losses)
+        )
+
+    def stack_spec(s):
+        return jax.ShapeDtypeStruct((K,) + s.shape, s.dtype)
+
+    tb_inputs = (
+        list(pleaves) * 3 + [scalar_f32]
+        + [stack_spec(batch_spec[k]) for k in BATCH_ORDER]
+    )
+    print(f"[{preset}] lowering train_block (K={K})...")
+    tb_text = to_hlo_text(jax.jit(tb_flat).lower(*tb_inputs))
+    with open(os.path.join(out_dir, "train_block.hlo.txt"), "w") as f:
+        f.write(tb_text)
+
+    def ev_flat(*flat):
+        np_ = len(pleaves)
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        batch = dict(zip(BATCH_ORDER[:4], flat[np_:]))
+        metrics = model.eval_step(p, batch, cfg)
+        return tuple(metrics[k] for k in EVAL_METRIC_ORDER)
+
+    ev_inputs = list(pleaves) + [batch_spec[k] for k in BATCH_ORDER[:4]]
+    print(f"[{preset}] lowering eval_step...")
+    ev_text = to_hlo_text(jax.jit(ev_flat).lower(*ev_inputs))
+    with open(os.path.join(out_dir, "eval_step.hlo.txt"), "w") as f:
+        f.write(ev_text)
+
+    bos = 1
+
+    def dec_flat(*flat):
+        np_ = len(pleaves)
+        p = jax.tree_util.tree_unflatten(treedef, flat[:np_])
+        src = flat[np_]
+        return (model.greedy_decode(p, src, bos, cfg),)
+
+    dec_inputs = list(pleaves) + [batch_spec["src"]]
+    print(f"[{preset}] lowering decode_step...")
+    dec_text = to_hlo_text(jax.jit(dec_flat).lower(*dec_inputs))
+    with open(os.path.join(out_dir, "decode_step.hlo.txt"), "w") as f:
+        f.write(dec_text)
+
+    params_manifest = []
+    if write_params:
+        pdir = os.path.join(out_dir, "params")
+        os.makedirs(pdir, exist_ok=True)
+        real = model.init_params(cfg, seed=0)
+        for i, (name, leaf) in enumerate(zip(pnames, jax.tree_util.tree_leaves(real))):
+            fn = f"{i:04d}.bin"
+            np.asarray(leaf).tofile(os.path.join(pdir, fn))
+            params_manifest.append({
+                "name": name, "file": f"params/{fn}",
+                "shape": [int(s) for s in leaf.shape], "dtype": _dtype_name(leaf),
+            })
+
+    batch_leaves = [batch_spec[k] for k in BATCH_ORDER]
+    manifest = {
+        "preset": preset,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "d_ff": cfg.d_ff,
+            "n_heads": cfg.n_heads, "enc_blocks": cfg.enc_blocks,
+            "dec_blocks": cfg.dec_blocks, "n_experts": cfg.n_experts,
+            "max_len": cfg.max_len, "batch_rows": batch_rows, "bos": bos,
+            "warmup": cfg.warmup, "lr": cfg.lr,
+            "param_count": int(model.param_count(cfg)),
+        },
+        "params": _spec(pnames, pleaves),
+        "params_init": params_manifest,
+        "batch": _spec(BATCH_ORDER, batch_leaves),
+        "artifacts": {
+            "train_step": {
+                "file": "train_step.hlo.txt",
+                # inputs: params, m, v (same spec), step, batch (BATCH_ORDER)
+                "n_params": len(pleaves),
+                "inputs": "params*3 + [step] + batch",
+                "outputs": "params*3 + [step] + " + json.dumps(METRIC_ORDER),
+                "metrics": METRIC_ORDER,
+            },
+            "train_block": {
+                "file": "train_block.hlo.txt",
+                "n_params": len(pleaves),
+                "block_k": K,
+                "inputs": "params*3 + [step] + stacked batch [K,...]",
+                "outputs": "params*3 + [step, losses[K]]",
+            },
+            "eval_step": {
+                "file": "eval_step.hlo.txt",
+                "n_params": len(pleaves),
+                "inputs": "params + batch[:4]",
+                "metrics": EVAL_METRIC_ORDER,
+            },
+            "decode_step": {
+                "file": "decode_step.hlo.txt",
+                "n_params": len(pleaves),
+                "inputs": "params + [src]",
+                "outputs": ["tokens"],
+            },
+        },
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[{preset}] wrote manifest ({len(pleaves)} param leaves, "
+          f"{manifest['config']['param_count'] / 1e6:.1f}M params)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=[])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--batch-rows", type=int, default=8)
+    ap.add_argument("--skip-params", action="store_true")
+    ap.add_argument("--dist", action="store_true",
+                    help="also export the distributed-engine stage artifacts")
+    args = ap.parse_args()
+    presets = list(model.PRESETS) if args.all else (args.preset or ["tiny", "wmt10_sim"])
+    for p in presets:
+        export_preset(p, args.out, args.batch_rows, not args.skip_params)
+    if args.dist or args.all:
+        dist_stages.export(os.path.join(args.out, "dist"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,197 @@
+"""Stage artifacts for the Layer-3 *distributed* engine.
+
+The single-process ``train_step`` bakes the all-to-all away (routing happens
+inside one device). To exercise the paper's actual data path -- tokens
+crossing a fabric between machines, and Gating Dropout consensually
+*skipping* that collective -- the Rust distributed engine runs a per-rank
+model split into stages, with the all-to-all (and the gating-dropout
+decision) *between* stages, in Rust:
+
+  rank r:  x --s1_fwd--> h, probs
+           [Rust: top-1 / hash / local routing, capacity bookkeeping,
+            coordinator decision, Fabric::all_to_all of h rows]
+           xe --expert_fwd--> ye            (rank r's resident expert)
+           [Rust: all-to-all back, y = h + gate * ye  (residual combine)]
+           y --head_loss_bwd--> loss, dy, dw_out
+           [Rust: dh += dy ; dye = gate*dy ; dgate = <dy, ye>;
+            all-to-all of dye rows]
+           --expert_bwd--> dxe, dw1, dw2    (expert grads stay local!)
+           [Rust: all-to-all dxe back; dprobs from dgate]
+           --s1_bwd--> dw_in, db_in, dwr
+           [Rust: all_reduce of dense grads (w_in, b_in, wr, w_out);
+            expert grads NOT reduced -- expert parallelism; Adam on host]
+
+When Gate-Drop fires, Rust routes every token to the rank's own expert and
+skips both all-to-alls; when Gate-Expert-Drop fires it also skips
+expert_fwd/expert_bwd entirely -- a *real* wallclock saving, measured by the
+throughput benches.
+
+The per-rank model is a token classifier (2-layer encoder -> MoE FFN with
+one expert per rank -> linear head) -- the smallest model where the MoE
+collective path and its gradients are all genuinely exercised.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import expert_ffn as kffn
+from .kernels import gating as kgate
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    d_in: int = 32
+    d_model: int = 64
+    d_ff: int = 256
+    n_classes: int = 16
+    tokens_per_rank: int = 64     # Tl; also the expert buffer capacity
+    ranks: int = 4                # = number of experts (one expert per rank)
+
+
+def _hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s1_fwd(w_in, b_in, wr, x):
+    """Encoder + gate probs. h = relu(x@w_in+b_in); probs = softmax(h@wr).
+
+    The gate matmul+softmax reuses the L1 Pallas kernel (gate_probs).
+    """
+    h = jnp.maximum(x @ w_in + b_in, 0.0)
+    probs = kgate.gate_probs(h, wr)
+    return h, probs
+
+
+def expert_fwd(w1, w2, xe):
+    """The rank-resident expert FFN, via the L1 Pallas kernel."""
+    ye = kffn.expert_ffn(xe[None, :, :], w1[None], w2[None])[0]
+    return (ye,)
+
+
+def head_loss_bwd(w_out, y, labels):
+    """Head + CE loss; returns (loss, dy, dw_out) in one artifact."""
+
+    def f(w_out, y):
+        logits = y @ w_out
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1))(w_out, y)
+    return loss, grads[1], grads[0]
+
+
+def expert_bwd(w1, w2, xe, dye):
+    """VJP of expert_fwd (recompute-forward formulation)."""
+    pre = xe @ w1
+    h = jnp.maximum(pre, 0.0)
+    dw2 = h.T @ dye
+    dh = dye @ w2.T
+    dpre = dh * (pre > 0.0)
+    dw1 = xe.T @ dpre
+    dxe = dpre @ w1.T
+    return dxe, dw1, dw2
+
+
+def s1_bwd(w_in, b_in, wr, x, dh, dprobs):
+    """VJP of s1_fwd given cotangents for h (residual+expert path) and probs."""
+    pre = x @ w_in + b_in
+    h = jnp.maximum(pre, 0.0)
+    logits = h @ wr
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    inner = jnp.sum(dprobs * probs, axis=-1, keepdims=True)
+    dlogits = probs * (dprobs - inner)
+    dwr = h.T @ dlogits
+    dh_total = dh + dlogits @ wr.T
+    dpre = dh_total * (pre > 0.0)
+    dw_in = x.T @ dpre
+    db_in = jnp.sum(dpre, axis=0)
+    return dw_in, db_in, dwr
+
+
+def export(out_dir: str, cfg: DistConfig = DistConfig()) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    f32 = jnp.float32
+    di, d, f, k, t, r = (
+        cfg.d_in, cfg.d_model, cfg.d_ff, cfg.n_classes, cfg.tokens_per_rank, cfg.ranks,
+    )
+    S = jax.ShapeDtypeStruct
+    specs = {
+        "s1_fwd": (s1_fwd, [S((di, d), f32), S((d,), f32), S((d, r), f32), S((t, di), f32)]),
+        "expert_fwd": (expert_fwd, [S((d, f), f32), S((f, d), f32), S((t, d), f32)]),
+        "head_loss_bwd": (
+            head_loss_bwd, [S((d, k), f32), S((t, d), f32), S((t,), jnp.int32)],
+        ),
+        "expert_bwd": (
+            expert_bwd,
+            [S((d, f), f32), S((f, d), f32), S((t, d), f32), S((t, d), f32)],
+        ),
+        "s1_bwd": (
+            s1_bwd,
+            [S((di, d), f32), S((d,), f32), S((d, r), f32), S((t, di), f32),
+             S((t, d), f32), S((t, r), f32)],
+        ),
+    }
+    arts = {}
+    for name, (fn, ins) in specs.items():
+        text = _hlo_text(jax.jit(fn).lower(*ins))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        arts[name] = {
+            "file": fname,
+            "inputs": [{"shape": list(map(int, s.shape)),
+                        "dtype": "i32" if s.dtype == jnp.int32 else "f32"} for s in ins],
+        }
+        print(f"[dist] wrote {fname}")
+
+    # Deterministic initial parameters (one expert set per rank; dense
+    # params identical across ranks -- Rust replicates them).
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 5 + r)
+    init = {
+        "w_in": jax.random.normal(ks[0], (di, d)) * (1.0 / np.sqrt(di)),
+        "b_in": jnp.zeros((d,)),
+        "wr": jax.random.normal(ks[1], (d, r)) * (1.0 / np.sqrt(d)),
+        "w_out": jax.random.normal(ks[2], (d, k)) * (1.0 / np.sqrt(d)),
+    }
+    for e in range(r):
+        init[f"expert{e}_w1"] = jax.random.normal(ks[5 + e], (d, f)) * (1.0 / np.sqrt(d))
+        init[f"expert{e}_w2"] = (
+            jax.random.normal(jax.random.fold_in(ks[5 + e], 1), (f, d)) * (1.0 / np.sqrt(f))
+        )
+    pdir = os.path.join(out_dir, "params")
+    os.makedirs(pdir, exist_ok=True)
+    params_manifest = []
+    for name, arr in init.items():
+        fn = f"{name}.bin"
+        np.asarray(arr, np.float32).tofile(os.path.join(pdir, fn))
+        params_manifest.append(
+            {"name": name, "file": f"params/{fn}", "shape": list(map(int, arr.shape)),
+             "dtype": "f32"}
+        )
+
+    manifest = {
+        "config": {"d_in": di, "d_model": d, "d_ff": f, "n_classes": k,
+                   "tokens_per_rank": t, "ranks": r},
+        "artifacts": arts,
+        "params_init": params_manifest,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"[dist] wrote manifest ({r} ranks)")
+    return manifest

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the MoE sub-layer (build-time only).
+
+Modules:
+    gating      -- fused gate softmax + capacity position assignment
+    dispatch    -- one-hot-matmul dispatch/combine (MXU formulation)
+    expert_ffn  -- per-expert 2-layer FFN
+    ref         -- pure-jnp oracle defining the semantics
+"""
+
+from . import dispatch, expert_ffn, gating, ref  # noqa: F401
+
+__all__ = ["dispatch", "expert_ffn", "gating", "ref"]

@@ -1,0 +1,119 @@
+"""Pallas kernels for MoE dispatch (scatter) and combine (gather).
+
+The GPU implementations the paper builds on (DeepSpeed MoE) scatter tokens
+with warp-level index shuffles; the TPU-shaped formulation (GShard/Switch)
+expresses the same data movement as *one-hot matmuls* so it runs on the MXU
+systolic array:
+
+    dispatch:  xe[e, c, :]  = sum_t  disp[t, e, c] * x[t, :]
+    combine:   y[t, :]      = sum_ec comb[t, e, c] * out[e, c, :]
+
+DESIGN.md §Hardware-Adaptation: `dispatch` runs one expert per grid step
+(block ``(T, C)`` mask x ``(T, d)`` tokens -> ``(C, d)`` buffer), `combine`
+runs one token tile per grid step against the flattened ``(E*C, d)`` expert
+output. VMEM budget per step: dispatch ``T*C + T*d + C*d`` f32 words;
+combine ``Tb*EC + EC*d + Tb*d``.
+
+Both are linear maps, so the custom VJPs are the transposed matmuls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _tile(n: int, prefer: int = 128) -> int:
+    t = prefer
+    while t > 1 and n % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _dispatch_kernel_wrapped(disp_ref, x_ref, out_ref):
+    # BlockSpec gives (1, T, C); drop the leading unit dim for the matmul.
+    out_ref[0, :, :] = jnp.dot(
+        disp_ref[0, :, :].T, x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.custom_vjp
+def dispatch(x: jnp.ndarray, disp: jnp.ndarray) -> jnp.ndarray:
+    """Scatter tokens to expert buffers: ([T,d],[T,E,C]) -> [E,C,d]."""
+    return _dispatch_fwd(x, disp)[0]
+
+
+def _dispatch_fwd(x, disp):
+    t, d = x.shape
+    _, e, c = disp.shape
+    disp_et = jnp.transpose(disp, (1, 0, 2))
+    out = pl.pallas_call(
+        _dispatch_kernel_wrapped,
+        grid=(e,),
+        in_specs=[
+            pl.BlockSpec((1, t, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+        interpret=INTERPRET,
+    )(disp_et, x.astype(jnp.float32))
+    return out, (x, disp)
+
+
+def _dispatch_bwd(res, g):
+    x, disp = res
+    # out = einsum('tec,td->ecd'); transposes:
+    dx = jnp.einsum("tec,ecd->td", disp, g).astype(x.dtype)
+    ddisp = jnp.einsum("td,ecd->tec", x.astype(jnp.float32), g).astype(disp.dtype)
+    return dx, ddisp
+
+
+dispatch.defvjp(lambda x, d: _dispatch_fwd(x, d), _dispatch_bwd)
+
+
+def _combine_kernel(comb_ref, out_ref, y_ref):
+    """One token tile: y[Tb,d] = comb[Tb,EC] @ out[EC,d]."""
+    y_ref[...] = jnp.dot(
+        comb_ref[...], out_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@jax.custom_vjp
+def combine(expert_out: jnp.ndarray, comb: jnp.ndarray) -> jnp.ndarray:
+    """Gather expert outputs to tokens: ([E,C,d],[T,E,C]) -> [T,d]."""
+    return _combine_fwd(expert_out, comb)[0]
+
+
+def _combine_fwd(expert_out, comb):
+    e, c, d = expert_out.shape
+    t = comb.shape[0]
+    tb = _tile(t)
+    flat_out = expert_out.reshape(e * c, d)
+    flat_comb = comb.reshape(t, e * c).astype(jnp.float32)
+    y = pl.pallas_call(
+        _combine_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, e * c), lambda i: (i, 0)),
+            pl.BlockSpec((e * c, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=INTERPRET,
+    )(flat_comb, flat_out)
+    return y, (expert_out, comb)
+
+
+def _combine_bwd(res, g):
+    expert_out, comb = res
+    # y = einsum('tec,ecd->td')
+    dout = jnp.einsum("tec,td->ecd", comb.astype(jnp.float32), g).astype(expert_out.dtype)
+    dcomb = jnp.einsum("ecd,td->tec", expert_out, g).astype(comb.dtype)
+    return dout, dcomb
+
+
+combine.defvjp(lambda o, c: _combine_fwd(o, c), _combine_bwd)

@@ -1,0 +1,122 @@
+"""Pallas kernel for the expert feed-forward computation.
+
+The per-expert FFN ``relu(x @ w1) @ w2`` over dispatched buffers
+``[E, C, d]`` is the paper's compute hot-spot (each expert is a Transformer
+FFN sub-layer; Section 2.1). Grid = one expert per step so that a single
+``(C, d)`` activation tile plus the expert's ``(d, F)`` and ``(F, d)``
+weight tiles are resident in VMEM together — for the paper's base shape
+(d=512, F=2048, C=128) that is 128*512 + 512*2048 + 2048*512 + 128*2048
+≈ 2.4M f32 words ≈ 9.7 MB, inside the ~16 MB/core VMEM budget; larger F is
+split with ``f_block`` (double-buffered accumulation over F tiles).
+
+Backward is a hand-derived 2-layer-MLP VJP (rematerialises the hidden
+activation, trading FLOPs for not storing ``[E, C, F]``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One expert, full F: o = relu(x @ w1) @ w2."""
+    x = x_ref[0, :, :]
+    h = jnp.maximum(
+        jnp.dot(x, w1_ref[0, :, :], preferred_element_type=jnp.float32), 0.0
+    )
+    o_ref[0, :, :] = jnp.dot(h, w2_ref[0, :, :], preferred_element_type=jnp.float32)
+
+
+def _ffn_kernel_fblock(x_ref, w1_ref, w2_ref, o_ref):
+    """One (expert, F-tile) step: accumulate partial o over F tiles.
+
+    ReLU is elementwise over the hidden dim, so each F tile's contribution
+    ``relu(x @ w1[:, f]) @ w2[f, :]`` sums independently into o.
+    """
+    f_idx = pl.program_id(1)
+    x = x_ref[0, :, :]
+    h = jnp.maximum(
+        jnp.dot(x, w1_ref[0, :, :], preferred_element_type=jnp.float32), 0.0
+    )
+    part = jnp.dot(h, w2_ref[0, :, :], preferred_element_type=jnp.float32)
+
+    @pl.when(f_idx == 0)
+    def _init():
+        o_ref[0, :, :] = part
+
+    @pl.when(f_idx != 0)
+    def _acc():
+        o_ref[0, :, :] += part
+
+
+def _expert_ffn_impl(
+    xe: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, f_block: int | None = None
+) -> jnp.ndarray:
+    e, c, d = xe.shape
+    f = w1.shape[2]
+    if f_block is None or f_block >= f:
+        return pl.pallas_call(
+            _ffn_kernel,
+            grid=(e,),
+            in_specs=[
+                pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, d, f), lambda i: (i, 0, 0)),
+                pl.BlockSpec((1, f, d), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, c, d), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+            interpret=INTERPRET,
+        )(xe.astype(jnp.float32), w1.astype(jnp.float32), w2.astype(jnp.float32))
+    assert f % f_block == 0, f"f_block {f_block} must divide F {f}"
+    return pl.pallas_call(
+        _ffn_kernel_fblock,
+        grid=(e, f // f_block),
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, d, f_block), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, f_block, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, c, d), jnp.float32),
+        interpret=INTERPRET,
+    )(xe.astype(jnp.float32), w1.astype(jnp.float32), w2.astype(jnp.float32))
+
+
+@jax.custom_vjp
+def expert_ffn(xe: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """Per-expert FFN: ([E,C,d],[E,d,F],[E,F,d]) -> [E,C,d]. Pallas fwd."""
+    return _expert_ffn_impl(xe, w1, w2)
+
+
+def _expert_ffn_fwd(xe, w1, w2):
+    return _expert_ffn_impl(xe, w1, w2), (xe, w1, w2)
+
+
+def _expert_ffn_bwd(res, g):
+    xe, w1, w2 = res
+    xf = xe.astype(jnp.float32)
+    w1f = w1.astype(jnp.float32)
+    w2f = w2.astype(jnp.float32)
+    pre = jnp.einsum("ecd,edf->ecf", xf, w1f)
+    h = jnp.maximum(pre, 0.0)                      # remat hidden
+    dw2 = jnp.einsum("ecf,ecd->efd", h, g).astype(w2.dtype)
+    dh = jnp.einsum("ecd,efd->ecf", g, w2f)
+    dpre = dh * (pre > 0.0)
+    dw1 = jnp.einsum("ecd,ecf->edf", xf, dpre).astype(w1.dtype)
+    dx = jnp.einsum("ecf,edf->ecd", dpre, w1f).astype(xe.dtype)
+    return dx, dw1, dw2
+
+
+expert_ffn.defvjp(_expert_ffn_fwd, _expert_ffn_bwd)
+
+
+def expert_ffn_fblocked(
+    xe: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, f_block: int
+) -> jnp.ndarray:
+    """F-tiled forward variant (no VJP) used by kernel tests and the VMEM
+    footprint study in EXPERIMENTS.md §Perf."""
+    return _expert_ffn_impl(xe, w1, w2, f_block=f_block)

@@ -1,0 +1,130 @@
+"""Pallas kernels for the MoE gating network.
+
+Two kernels:
+
+* ``gate_probs`` -- fused ``softmax(x @ w_r)`` over token tiles. This is the
+  gating-network forward of the paper (Section 2.1, eq. 1).
+* ``assign_positions`` -- the capacity-bounded position assignment (the
+  sequential cumsum over the one-hot expert choice). This runs as a single
+  grid step because the scan carries across the whole token group.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``gate_probs`` tiles tokens in
+blocks of up to 128 rows so one ``(Tb, d) x (d, E)`` tile pair sits in VMEM
+and the matmul lands on the MXU; the softmax stays in-register over the
+``E`` lane dimension. VMEM footprint per step is
+``Tb*d + d*E + Tb*E`` f32 words (<2 MB for d=1024, E=128, Tb=128).
+
+All pallas_calls use ``interpret=True``: the CPU PJRT client cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime runs unmodified.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True
+
+
+def _tile(n: int, prefer: int = 128) -> int:
+    """Largest power-of-two tile <= prefer that divides n (>=1)."""
+    t = prefer
+    while t > 1 and n % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+def _gate_probs_kernel(x_ref, wr_ref, out_ref):
+    """One token tile: probs = softmax(x @ w_r) row-wise."""
+    logits = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        wr_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    out_ref[...] = e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _gate_probs_fwd_impl(x: jnp.ndarray, w_r: jnp.ndarray) -> jnp.ndarray:
+    t, d = x.shape
+    n_exp = w_r.shape[1]
+    tb = _tile(t)
+    return pl.pallas_call(
+        _gate_probs_kernel,
+        grid=(t // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, n_exp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, n_exp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, n_exp), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w_r)
+
+
+@jax.custom_vjp
+def gate_probs(x: jnp.ndarray, w_r: jnp.ndarray) -> jnp.ndarray:
+    """softmax(x @ w_r): [T,d],[d,E] -> [T,E]. Pallas fwd, analytic bwd."""
+    return _gate_probs_fwd_impl(x, w_r)
+
+
+def _gate_probs_fwd(x, w_r):
+    probs = _gate_probs_fwd_impl(x, w_r)
+    return probs, (x, w_r, probs)
+
+
+def _gate_probs_bwd(res, dprobs):
+    x, w_r, probs = res
+    # softmax vjp: dlogits = p * (dp - sum(dp * p))
+    inner = jnp.sum(dprobs * probs, axis=-1, keepdims=True)
+    dlogits = probs * (dprobs - inner)
+    dx = jnp.dot(dlogits, w_r.astype(jnp.float32).T).astype(x.dtype)
+    dwr = jnp.dot(x.astype(jnp.float32).T, dlogits).astype(w_r.dtype)
+    return dx, dwr
+
+
+gate_probs.defvjp(_gate_probs_fwd, _gate_probs_bwd)
+
+
+def _assign_kernel(idx_ref, pos_ref, kept_ref, *, num_experts: int, cap: int):
+    """Whole-group capacity scan (single grid step; the cumsum is a carry)."""
+    idx = idx_ref[...]
+    one_hot = (idx[:, None] == jnp.arange(num_experts, dtype=idx.dtype)[None, :]).astype(
+        jnp.int32
+    )
+    pos_in_expert = jnp.cumsum(one_hot, axis=0) - one_hot
+    pos = jnp.sum(pos_in_expert * one_hot, axis=1)
+    pos_ref[...] = pos.astype(jnp.int32)
+    kept_ref[...] = (pos < cap).astype(jnp.int32)
+
+
+def assign_positions(
+    expert_idx: jnp.ndarray, num_experts: int, cap: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded buffer positions. [T] i32 -> ([T] i32 pos, [T] i32 kept).
+
+    Integer-valued (non-differentiable); callers stop_gradient the input.
+    """
+    t = expert_idx.shape[0]
+    kernel = functools.partial(_assign_kernel, num_experts=num_experts, cap=cap)
+    pos, kept = pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+            jax.ShapeDtypeStruct((t,), jnp.int32),
+        ),
+        interpret=INTERPRET,
+    )(expert_idx.astype(jnp.int32))
+    return pos, kept
+
+
+def top1(probs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-1 routing decision from gate probs (thin jnp wrapper; integer out)."""
+    return ref.top1_ref(probs)

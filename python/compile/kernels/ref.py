@@ -1,0 +1,162 @@
+"""Pure-jnp reference oracle for the MoE sub-layer kernels.
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here; pytest/hypothesis assert allclose between the two. The
+reference also defines the *semantics* of the MoE sub-layer we reproduce
+from the paper (Switch-style top-1 routing, capacity factor, balance loss),
+so Layer-2 model tests compare against these functions too.
+
+Shapes use the conventions:
+    T  -- number of tokens in a routing group
+    d  -- model (hidden) dimension
+    E  -- number of experts
+    C  -- per-expert capacity  (ceil(capacity_factor * T / E))
+    F  -- expert feed-forward dimension (d_ff)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+def capacity(num_tokens: int, num_experts: int, capacity_factor: float) -> int:
+    """Per-expert token capacity, Switch Transformer style (Fedus et al. 2021)."""
+    return max(1, math.ceil(capacity_factor * num_tokens / num_experts))
+
+
+def gate_probs_ref(x: jnp.ndarray, w_r: jnp.ndarray) -> jnp.ndarray:
+    """Gating network: logits = x @ w_r, softmax over experts. [T,d]->[T,E]."""
+    logits = jnp.dot(x.astype(jnp.float32), w_r.astype(jnp.float32))
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def top1_ref(probs: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-1 expert index and its gate value. [T,E] -> ([T] i32, [T] f32)."""
+    idx = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    gate = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+    return idx, gate
+
+
+def assign_positions_ref(
+    expert_idx: jnp.ndarray, num_experts: int, cap: int
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded position of each token inside its expert's buffer.
+
+    Tokens are admitted in token order (the paper/Switch tie-break). Returns
+    (position [T] i32, kept [T] bool); tokens overflowing capacity get
+    kept=False and their position is meaningless downstream.
+    """
+    one_hot = jnp.asarray(expert_idx[:, None] == jnp.arange(num_experts)[None, :])
+    one_hot = one_hot.astype(jnp.int32)
+    # Position = how many earlier tokens chose the same expert.
+    pos_in_expert = jnp.cumsum(one_hot, axis=0) - one_hot
+    pos = jnp.take_along_axis(pos_in_expert, expert_idx[:, None].astype(jnp.int32), axis=1)[:, 0]
+    kept = pos < cap
+    return pos.astype(jnp.int32), kept
+
+
+def dispatch_mask_ref(
+    expert_idx: jnp.ndarray,
+    gate: jnp.ndarray,
+    num_experts: int,
+    cap: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Build one-hot dispatch mask [T,E,C] (0/1) and combine weights [T,E,C]."""
+    pos, kept = assign_positions_ref(expert_idx, num_experts, cap)
+    t = expert_idx.shape[0]
+    e_oh = jnp.asarray(expert_idx[:, None] == jnp.arange(num_experts)[None, :], jnp.float32)
+    c_oh = jnp.asarray(
+        jnp.clip(pos, 0, cap - 1)[:, None] == jnp.arange(cap)[None, :], jnp.float32
+    )
+    disp = e_oh[:, :, None] * c_oh[:, None, :] * kept[:, None, None].astype(jnp.float32)
+    comb = disp * gate[:, None, None].astype(jnp.float32)
+    assert disp.shape == (t, num_experts, cap)
+    return disp, comb
+
+
+def dispatch_ref(x: jnp.ndarray, disp: jnp.ndarray) -> jnp.ndarray:
+    """Scatter tokens into per-expert buffers. ([T,d],[T,E,C]) -> [E,C,d]."""
+    return jnp.einsum("tec,td->ecd", disp.astype(jnp.float32), x.astype(jnp.float32))
+
+
+def expert_ffn_ref(xe: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """Per-expert 2-layer FFN with ReLU. ([E,C,d],[E,d,F],[E,F,d]) -> [E,C,d]."""
+    h = jnp.maximum(jnp.einsum("ecd,edf->ecf", xe, w1), 0.0)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+def combine_ref(expert_out: jnp.ndarray, comb: jnp.ndarray) -> jnp.ndarray:
+    """Gather expert outputs back to token order. ([E,C,d],[T,E,C]) -> [T,d]."""
+    return jnp.einsum("tec,ecd->td", comb.astype(jnp.float32), expert_out)
+
+
+def balance_loss_ref(probs: jnp.ndarray, expert_idx: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Switch aux balance loss: E * sum_e f_e * P_e (Fedus et al. 2021 eq.4)."""
+    one_hot = jnp.asarray(expert_idx[:, None] == jnp.arange(num_experts)[None, :], jnp.float32)
+    f = jnp.mean(one_hot, axis=0)          # fraction of tokens per expert
+    p = jnp.mean(probs, axis=0)            # mean router prob per expert
+    return num_experts * jnp.sum(f * p)
+
+
+class MoEOutput(NamedTuple):
+    y: jnp.ndarray             # [T, d] combined expert outputs (no residual)
+    balance_loss: jnp.ndarray  # scalar
+    expert_idx: jnp.ndarray    # [T] i32 routing actually used
+    kept_frac: jnp.ndarray     # scalar, fraction of tokens within capacity
+
+
+def moe_layer_ref(
+    x: jnp.ndarray,
+    w_r: jnp.ndarray,
+    w1: jnp.ndarray,
+    w2: jnp.ndarray,
+    *,
+    capacity_factor: float = 1.0,
+    local_expert_id: jnp.ndarray | None = None,
+    drop_flag: jnp.ndarray | float = 0.0,
+    expert_skip: jnp.ndarray | float = 0.0,
+    hash_route: jnp.ndarray | float = 0.0,
+    hash_ids: jnp.ndarray | None = None,
+) -> MoEOutput:
+    """Full MoE sub-layer semantics, including the paper's routing variants.
+
+    drop_flag=1 (Gating Dropout ON): routing ignores the gate's argmax and
+      uses `local_expert_id` (the expert resident on the token's machine;
+      supplied by the Layer-3 topology). The combine weight is the gate's
+      probability of that local expert, so the gating network still trains.
+    expert_skip=1 AND drop_flag=1 (Gate-Expert-Drop): the expert FFN output
+      is replaced by zero -- the sub-layer contributes nothing beyond the
+      residual connection (LayerDrop-style skip).
+    hash_route=1 (Hash-Layer baseline): routing uses `hash_ids` (a hash of
+      the token id, computed upstream); gate probs only feed balance loss.
+    """
+    t, _ = x.shape
+    e = w_r.shape[1]
+    cap = capacity(t, e, capacity_factor)
+    probs = gate_probs_ref(x, w_r)
+    gated_idx, _ = top1_ref(probs)
+
+    drop_flag = jnp.asarray(drop_flag, jnp.float32)
+    expert_skip = jnp.asarray(expert_skip, jnp.float32)
+    hash_route = jnp.asarray(hash_route, jnp.float32)
+    idx = gated_idx
+    if hash_ids is not None:
+        idx = jnp.where(hash_route > 0.5, hash_ids.astype(jnp.int32), idx)
+    if local_expert_id is not None:
+        idx = jnp.where(drop_flag > 0.5, local_expert_id.astype(jnp.int32), idx)
+    gate = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+
+    disp, comb = dispatch_mask_ref(idx, gate, e, cap)
+    xe = dispatch_ref(x, disp)
+    out = expert_ffn_ref(xe, w1, w2)
+    y = combine_ref(out, comb)
+    # Gate-Expert-Drop: skip the expert computation entirely.
+    y = jnp.where((drop_flag > 0.5) & (expert_skip > 0.5), jnp.zeros_like(y), y)
+    bl = balance_loss_ref(probs, idx, e)
+    kept = jnp.sum(disp) / t
+    return MoEOutput(y=y, balance_loss=bl, expert_idx=idx, kept_frac=kept)

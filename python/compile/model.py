@@ -1,0 +1,486 @@
+"""Layer-2: the paper's MoE encoder-decoder transformer in JAX.
+
+Faithful to the paper's recipe (Section 4.1):
+  * MoE sub-layer replaces every other FFN sub-layer in encoder and decoder
+    (layers come in blocks of [dense layer, MoE layer]).
+  * top-1 gating (k=1), capacity factor 1.0 train / 2.0 eval.
+  * jitter noise on the gate input during training.
+  * auxiliary balance loss with coefficient 0.01.
+  * Adam (beta1=0.9, beta2=0.99), inverse-sqrt LR schedule with warmup.
+
+The routing *variants* of the paper are runtime scalar inputs so that ONE
+AOT-compiled ``train_step`` serves every policy; the Rust coordinator feeds
+the flags each iteration:
+
+  drop_flag    1.0 when Gating Dropout fired this step (consensual across
+               machines -- the Rust coordinator broadcasts it). Tokens are
+               routed to ``local_expert_row`` (their machine's expert).
+  expert_skip  1.0 for Gate-Expert-Drop: the MoE output is additionally
+               zeroed, leaving only the residual path (LayerDrop-style).
+  hash_route   1.0 for the Hash-Layer baseline (Roller et al. 2021):
+               routing is a hash of the token id; the gate net still trains
+               through the balance loss but does not pick experts.
+
+Note on compute skipping: with flags baked in one graph the expert FFN is
+still *computed* then masked -- correct numerics, no wallclock saving. The
+wallclock effect of skipping is exercised by the Layer-3 distributed engine
+(separate stage artifacts, really skipped) and modeled by `simengine`.
+
+Everything here is build-time only; `aot.py` lowers the jitted entry points
+to HLO text for the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dispatch as kdisp
+from .kernels import expert_ffn as kffn
+from .kernels import gating as kgate
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Configuration
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + optimizer hyperparameters (static at trace time)."""
+
+    vocab: int = 4096
+    d_model: int = 256
+    d_ff: int = 1024
+    n_heads: int = 8
+    enc_blocks: int = 2          # each block = 1 dense layer + 1 MoE layer
+    dec_blocks: int = 2
+    n_experts: int = 8
+    max_len: int = 32            # both source and target length
+    capacity_factor_train: float = 1.0
+    capacity_factor_eval: float = 2.0
+    jitter_eps: float = 0.01
+    balance_coeff: float = 0.01
+    # optimizer
+    lr: float = 1e-3
+    warmup: int = 400
+    adam_b1: float = 0.9
+    adam_b2: float = 0.99
+    adam_eps: float = 1e-8
+    label_pad: int = 0           # token id excluded from the loss
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def with_overrides(self, **kw: Any) -> "ModelConfig":
+        d = {**self.__dict__, **kw}
+        return ModelConfig(**d)
+
+
+# Presets referenced by aot.py, configs/*.json and EXPERIMENTS.md.
+PRESETS: dict[str, ModelConfig] = {
+    # CI / unit-test scale.
+    "tiny": ModelConfig(
+        vocab=512, d_model=64, d_ff=128, n_heads=4, enc_blocks=1, dec_blocks=1,
+        n_experts=4, max_len=16, warmup=20,
+    ),
+    # The Table-2 / Fig-5 / Fig-6 comparison runs (transformer-base *shape*,
+    # scaled so four policies x hundreds of steps fit a CPU budget).
+    "wmt10_sim": ModelConfig(
+        vocab=4096, d_model=256, d_ff=1024, n_heads=8, enc_blocks=2,
+        dec_blocks=2, n_experts=8, max_len=32, warmup=400, lr=1e-3,
+    ),
+    # End-to-end validation driver: ~100M parameters.
+    "e2e_100m": ModelConfig(
+        vocab=8192, d_model=512, d_ff=2048, n_heads=8, enc_blocks=3,
+        dec_blocks=3, n_experts=8, max_len=32, warmup=100, lr=6e-4,
+    ),
+    # Table-3/4 analog: wider, 16 experts, 50-language synthetic corpus.
+    "web50_sim": ModelConfig(
+        vocab=4096, d_model=320, d_ff=1280, n_heads=8, enc_blocks=2,
+        dec_blocks=2, n_experts=16, max_len=32, warmup=400, lr=1e-3,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation. Params are dicts of stacked-per-block arrays so
+# the layer stack runs under lax.scan (keeps the HLO small and compile fast).
+
+
+def _norm(key, shape, scale):
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def _init_attn(key, d):
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "wq": _norm(ks[0], (d, d), s),
+        "wk": _norm(ks[1], (d, d), s),
+        "wv": _norm(ks[2], (d, d), s),
+        "wo": _norm(ks[3], (d, d), s),
+    }
+
+
+def _init_dense_ffn(key, d, f):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _norm(k1, (d, f), 1.0 / math.sqrt(d)),
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": _norm(k2, (f, d), 1.0 / math.sqrt(f)),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _init_moe_ffn(key, d, f, e):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wr": _norm(k1, (d, e), 1.0 / math.sqrt(d)),
+        "w1": _norm(k2, (e, d, f), 1.0 / math.sqrt(d)),
+        "w2": _norm(k3, (e, f, d), 1.0 / math.sqrt(f)),
+    }
+
+
+def _ln_params(d):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    ka, kf, kb, km = jax.random.split(key, 4)
+    return {
+        # dense layer
+        "ln_a1": _ln_params(cfg.d_model), "attn_a": _init_attn(ka, cfg.d_model),
+        "ln_a2": _ln_params(cfg.d_model),
+        "ffn_a": _init_dense_ffn(kf, cfg.d_model, cfg.d_ff),
+        # MoE layer
+        "ln_b1": _ln_params(cfg.d_model), "attn_b": _init_attn(kb, cfg.d_model),
+        "ln_b2": _ln_params(cfg.d_model),
+        "moe_b": _init_moe_ffn(km, cfg.d_model, cfg.d_ff, cfg.n_experts),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    ka, kx, kf, kb, ky, km = jax.random.split(key, 6)
+    return {
+        "ln_a1": _ln_params(cfg.d_model), "attn_a": _init_attn(ka, cfg.d_model),
+        "ln_ax": _ln_params(cfg.d_model), "xattn_a": _init_attn(kx, cfg.d_model),
+        "ln_a2": _ln_params(cfg.d_model),
+        "ffn_a": _init_dense_ffn(kf, cfg.d_model, cfg.d_ff),
+        "ln_b1": _ln_params(cfg.d_model), "attn_b": _init_attn(kb, cfg.d_model),
+        "ln_bx": _ln_params(cfg.d_model), "xattn_b": _init_attn(ky, cfg.d_model),
+        "ln_b2": _ln_params(cfg.d_model),
+        "moe_b": _init_moe_ffn(km, cfg.d_model, cfg.d_ff, cfg.n_experts),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Initialise the full parameter tree (per-block arrays stacked)."""
+    key = jax.random.PRNGKey(seed)
+    k_emb, k_pos, k_enc, k_dec, k_out = jax.random.split(key, 5)
+    enc_keys = jax.random.split(k_enc, cfg.enc_blocks)
+    dec_keys = jax.random.split(k_dec, cfg.dec_blocks)
+    enc_blocks = [_init_enc_block(k, cfg) for k in enc_keys]
+    dec_blocks = [_init_dec_block(k, cfg) for k in dec_keys]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    return {
+        "embed": _norm(k_emb, (cfg.vocab, cfg.d_model), 0.02),
+        "pos": _norm(k_pos, (cfg.max_len, cfg.d_model), 0.02),
+        "enc": stack(enc_blocks),
+        "dec": stack(dec_blocks),
+        "ln_enc_out": _ln_params(cfg.d_model),
+        "ln_dec_out": _ln_params(cfg.d_model),
+        # output projection is tied to the embedding; kept separate bias
+        "out_b": jnp.zeros((cfg.vocab,), jnp.float32),
+    }
+
+
+def param_count(cfg: ModelConfig) -> int:
+    params = jax.eval_shape(lambda: init_params(cfg))
+    return sum(int(math.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Model pieces
+
+
+def _layer_norm(x, p, eps=1e-6):
+    m = jnp.mean(x, axis=-1, keepdims=True)
+    v = jnp.mean((x - m) ** 2, axis=-1, keepdims=True)
+    return (x - m) / jnp.sqrt(v + eps) * p["g"] + p["b"]
+
+
+def _mha(q_in, kv_in, p, cfg: ModelConfig, causal: bool):
+    b, lq, d = q_in.shape
+    lk = kv_in.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(x, w, l):
+        return (x @ w).reshape(b, l, h, dh).transpose(0, 2, 1, 3)
+
+    q = split(q_in, p["wq"], lq)
+    k = split(kv_in, p["wk"], lk)
+    v = split(kv_in, p["wv"], lk)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((lq, lk), jnp.bool_))
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, lq, d)
+    return out @ p["wo"]
+
+
+def _dense_ffn(x, p):
+    return jnp.maximum(x @ p["w1"] + p["b1"], 0.0) @ p["w2"] + p["b2"]
+
+
+@dataclass
+class RouteFlags:
+    """Per-step routing control, fed by the Rust coordinator."""
+
+    drop_flag: jnp.ndarray       # f32 scalar in {0,1}
+    expert_skip: jnp.ndarray     # f32 scalar in {0,1}
+    hash_route: jnp.ndarray      # f32 scalar in {0,1}
+    local_expert: jnp.ndarray    # [B*L] i32 expert resident on token's machine
+    hash_ids: jnp.ndarray        # [B*L] i32 hash-layer expert ids
+    jitter_key: jnp.ndarray | None  # PRNG key or None (eval)
+
+
+def _moe_ffn(x, p, cfg: ModelConfig, flags: RouteFlags, cap: int):
+    """MoE sub-layer body over flattened tokens x: [T, d]. Returns (y, aux)."""
+    t, d = x.shape
+    e = cfg.n_experts
+    gate_in = x
+    if flags.jitter_key is not None:
+        eps = cfg.jitter_eps
+        jit = jax.random.uniform(
+            flags.jitter_key, (t, d), jnp.float32, 1.0 - eps, 1.0 + eps
+        )
+        gate_in = x * jit
+
+    probs = kgate.gate_probs(gate_in, p["wr"])              # L1 kernel
+    gated_idx = jnp.argmax(jax.lax.stop_gradient(probs), axis=-1).astype(jnp.int32)
+    idx = jnp.where(flags.hash_route > 0.5, flags.hash_ids, gated_idx)
+    idx = jnp.where(flags.drop_flag > 0.5, flags.local_expert, idx)
+    gate = jnp.take_along_axis(probs, idx[:, None], axis=-1)[:, 0]
+
+    pos, kept = kgate.assign_positions(jax.lax.stop_gradient(idx), e, cap)  # L1
+    e_oh = (idx[:, None] == jnp.arange(e, dtype=jnp.int32)[None, :]).astype(jnp.float32)
+    c_oh = (
+        jnp.clip(pos, 0, cap - 1)[:, None] == jnp.arange(cap, dtype=jnp.int32)[None, :]
+    ).astype(jnp.float32)
+    disp = e_oh[:, :, None] * c_oh[:, None, :] * kept.astype(jnp.float32)[:, None, None]
+    disp = jax.lax.stop_gradient(disp)
+    comb = disp * gate[:, None, None]     # grad reaches the gate through here
+
+    xe = kdisp.dispatch(x, disp)                            # L1 kernel
+    out = kffn.expert_ffn(xe, p["w1"], p["w2"])             # L1 kernel
+    y = kdisp.combine(out, comb)                            # L1 kernel
+    # Gate-Expert-Drop: zero the sub-layer output (residual-only).
+    y = y * (1.0 - flags.drop_flag * flags.expert_skip)
+
+    balance = kref.balance_loss_ref(probs, idx, e)
+    kept_frac = jnp.mean(kept.astype(jnp.float32))
+    return y, (balance, kept_frac)
+
+
+def _enc_block(x, bp, cfg, flags: RouteFlags, cap):
+    b, l, d = x.shape
+    # dense layer
+    x = x + _mha(_layer_norm(x, bp["ln_a1"]), _layer_norm(x, bp["ln_a1"]), bp["attn_a"], cfg, False)
+    x = x + _dense_ffn(_layer_norm(x, bp["ln_a2"]), bp["ffn_a"])
+    # MoE layer
+    x = x + _mha(_layer_norm(x, bp["ln_b1"]), _layer_norm(x, bp["ln_b1"]), bp["attn_b"], cfg, False)
+    y, aux = _moe_ffn(_layer_norm(x, bp["ln_b2"]).reshape(b * l, d), bp["moe_b"], cfg, flags, cap)
+    x = x + y.reshape(b, l, d)
+    return x, aux
+
+
+def _dec_block(x, enc_out, bp, cfg, flags: RouteFlags, cap):
+    b, l, d = x.shape
+    nx = lambda p: _layer_norm(x, p)
+    x = x + _mha(nx(bp["ln_a1"]), nx(bp["ln_a1"]), bp["attn_a"], cfg, True)
+    x = x + _mha(_layer_norm(x, bp["ln_ax"]), enc_out, bp["xattn_a"], cfg, False)
+    x = x + _dense_ffn(_layer_norm(x, bp["ln_a2"]), bp["ffn_a"])
+    x = x + _mha(_layer_norm(x, bp["ln_b1"]), _layer_norm(x, bp["ln_b1"]), bp["attn_b"], cfg, True)
+    x = x + _mha(_layer_norm(x, bp["ln_bx"]), enc_out, bp["xattn_b"], cfg, False)
+    y, aux = _moe_ffn(_layer_norm(x, bp["ln_b2"]).reshape(b * l, d), bp["moe_b"], cfg, flags, cap)
+    x = x + y.reshape(b, l, d)
+    return x, aux
+
+
+def _hash_ids(token_ids: jnp.ndarray, n_experts: int) -> jnp.ndarray:
+    """Hash-Layer routing ids (Roller et al. 2021): Knuth-hash of token id."""
+    h = (token_ids.astype(jnp.uint32) * jnp.uint32(2654435761)) >> jnp.uint32(16)
+    return (h % jnp.uint32(n_experts)).astype(jnp.int32)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    src: jnp.ndarray,            # [B, L] i32
+    tgt_in: jnp.ndarray,         # [B, L] i32 (BOS-shifted)
+    local_expert_row: jnp.ndarray,  # [B] i32
+    drop_flag: jnp.ndarray,
+    expert_skip: jnp.ndarray,
+    hash_route: jnp.ndarray,
+    seed: jnp.ndarray,           # i32 scalar (ignored when train=False)
+    capacity_factor: float,
+    train: bool,
+):
+    """Full encoder-decoder forward. Returns (logits [B,L,V], (balance, kept)).
+
+    `train` is static: it selects jitter-on (training, capacity factor 1.0
+    presets) vs jitter-off (eval/decode). Layer stacks run under lax.scan
+    over the per-block stacked params, keeping the lowered HLO compact.
+    """
+    b, l = src.shape
+    cap = kref.capacity(b * l, cfg.n_experts, capacity_factor)
+    emb = params["embed"]
+    x_e = emb[src] * math.sqrt(cfg.d_model) + params["pos"][None, :l, :]
+    x_d = emb[tgt_in] * math.sqrt(cfg.d_model) + params["pos"][None, :l, :]
+
+    local_tok = jnp.repeat(local_expert_row, l)          # [B*L]
+
+    def mk_flags(ids, key):
+        return RouteFlags(
+            drop_flag, expert_skip, hash_route, local_tok,
+            _hash_ids(ids.reshape(-1), cfg.n_experts),
+            key if train else None,
+        )
+
+    root = jax.random.fold_in(jax.random.PRNGKey(0), seed)
+    keys_e = jax.random.split(jax.random.fold_in(root, 1), cfg.enc_blocks)
+    keys_d = jax.random.split(jax.random.fold_in(root, 2), cfg.dec_blocks)
+    zero = (jnp.float32(0.0), jnp.float32(0.0))
+
+    def enc_step(carry, inp):
+        bp, key = inp
+        x, (bl, kf) = carry
+        x, (b2, k2) = _enc_block(x, bp, cfg, mk_flags(src, key), cap)
+        return (x, (bl + b2, kf + k2)), None
+
+    (x_e_out, aux_e), _ = jax.lax.scan(enc_step, (x_e, zero), (params["enc"], keys_e))
+    enc_out = _layer_norm(x_e_out, params["ln_enc_out"])
+
+    def dec_step(carry, inp):
+        bp, key = inp
+        x, (bl, kf) = carry
+        x, (b2, k2) = _dec_block(x, enc_out, bp, cfg, mk_flags(tgt_in, key), cap)
+        return (x, (bl + b2, kf + k2)), None
+
+    (x_d_out, aux_d), _ = jax.lax.scan(dec_step, (x_d, zero), (params["dec"], keys_d))
+    x_d_out = _layer_norm(x_d_out, params["ln_dec_out"])
+
+    logits = x_d_out @ emb.T + params["out_b"]
+    n_moe = cfg.enc_blocks + cfg.dec_blocks
+    balance = (aux_e[0] + aux_d[0]) / n_moe
+    kept = (aux_e[1] + aux_d[1]) / n_moe
+    return logits, (balance, kept)
+
+
+# ---------------------------------------------------------------------------
+# Loss / optimizer / entry points
+
+
+def loss_fn(
+    params, cfg: ModelConfig, src, tgt_in, tgt_out, local_expert_row,
+    drop_flag, expert_skip, hash_route, seed, *, capacity_factor, train,
+):
+    """Token-mean cross entropy + balance_coeff * balance loss."""
+    logits, (balance, kept) = forward(
+        params, cfg, src, tgt_in, local_expert_row, drop_flag, expert_skip,
+        hash_route, seed, capacity_factor, train,
+    )
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt_out[..., None], axis=-1)[..., 0]
+    mask = (tgt_out != cfg.label_pad).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = ce + cfg.balance_coeff * balance
+    return total, (ce, balance, kept)
+
+
+def lr_schedule(cfg: ModelConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Inverse-sqrt with linear warmup (Raffel et al. 2019 as in the paper)."""
+    s = jnp.maximum(step, 1.0)
+    w = jnp.float32(cfg.warmup)
+    return cfg.lr * jnp.minimum(s / w, jnp.sqrt(w) / jnp.sqrt(s))
+
+
+def train_step(params, m, v, step, batch, cfg: ModelConfig):
+    """One fused fwd+bwd+Adam update. `batch` is the dict of step inputs.
+
+    Returns (params', m', v', step', metrics dict). All pytrees keep their
+    structure so aot.py can flatten them with stable names.
+    """
+    (total, (ce, balance, kept)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        params, cfg, batch["src"], batch["tgt_in"], batch["tgt_out"],
+        batch["local_expert_row"], batch["drop_flag"], batch["expert_skip"],
+        batch["hash_route"], batch["seed"],
+        capacity_factor=cfg.capacity_factor_train, train=True,
+    )
+    step1 = step + 1.0
+    lr = lr_schedule(cfg, step1)
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    bc1 = 1.0 - b1 ** step1
+    bc2 = 1.0 - b2 ** step1
+
+    def upd(p, g, mi, vi):
+        mn = b1 * mi + (1.0 - b1) * g
+        vn = b2 * vi + (1.0 - b2) * g * g
+        phat = p - lr * (mn / bc1) / (jnp.sqrt(vn / bc2) + eps)
+        return phat, mn, vn
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    params2 = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    m2 = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    v2 = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"loss": total, "ce": ce, "balance": balance, "kept_frac": kept, "lr": lr}
+    return params2, m2, v2, step1, metrics
+
+
+def eval_step(params, batch, cfg: ModelConfig):
+    """Holdout loss with eval capacity factor, no jitter, no dropout."""
+    zero = jnp.float32(0.0)
+    total, (ce, balance, kept) = loss_fn(
+        params, cfg, batch["src"], batch["tgt_in"], batch["tgt_out"],
+        batch["local_expert_row"], zero, zero, zero, jnp.int32(0),
+        capacity_factor=cfg.capacity_factor_eval, train=False,
+    )
+    return {"loss": total, "ce": ce, "balance": balance, "kept_frac": kept}
+
+
+def greedy_decode(params, src, bos: int, cfg: ModelConfig):
+    """Greedy decode `max_len` tokens via lax.scan (recomputes the decoder
+    each position; no KV cache -- L is small in our presets).
+
+    Gating Dropout is OFF at inference (paper Section 3), capacity 2.0.
+    """
+    b, l = src.shape
+    zero = jnp.float32(0.0)
+    rows = jnp.zeros((b,), jnp.int32)
+
+    def body(tgt_in, i):
+        logits, _ = forward(
+            params, cfg, src, tgt_in, rows, zero, zero, zero, jnp.int32(0),
+            cfg.capacity_factor_eval, train=False,
+        )
+        nxt = jnp.argmax(logits[:, i, :], axis=-1).astype(jnp.int32)
+        # write position i+1 (position 0 is BOS)
+        tgt_in = jax.lax.cond(
+            i + 1 < l,
+            lambda t: t.at[:, i + 1].set(nxt),
+            lambda t: t,
+            tgt_in,
+        )
+        return tgt_in, nxt
+
+    tgt0 = jnp.full((b, l), bos, jnp.int32)
+    _, toks = jax.lax.scan(body, tgt0, jnp.arange(l))
+    return jnp.transpose(toks)  # [B, L]

@@ -1,0 +1,111 @@
+"""L1/L2 performance report: VMEM footprint + MXU-utilization *estimates*
+for the Pallas kernels (interpret=True gives CPU-numpy timing only, which
+is not a TPU proxy -- DESIGN.md §Hardware-Adaptation), plus HLO op-mix
+stats for the lowered artifacts.
+
+Usage:  python -m compile.perf_report [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import re
+
+from . import model
+from .kernels import ref
+
+VMEM_BYTES = 16 * 2**20  # ~16 MB/core budget (TPU v4-ish)
+MXU_FLOPS = 275e12       # bf16 peak per core (v4)
+HBM_BW = 1.2e12          # bytes/s
+
+
+def kernel_vmem_rows(cfg: model.ModelConfig, batch_rows: int):
+    """Per-kernel VMEM residency and arithmetic intensity at one grid step.
+
+    Mirrors the BlockSpecs in kernels/*.py exactly.
+    """
+    t = batch_rows * cfg.max_len
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    cap = ref.capacity(t, e, cfg.capacity_factor_train)
+    tb = min(128, t)
+    rows = []
+
+    def row(name, words, flops, note):
+        bytes_ = words * 4
+        # arithmetic intensity vs HBM traffic for this block
+        ai = flops / max(bytes_, 1)
+        mxu_bound = flops / MXU_FLOPS
+        mem_bound = bytes_ / HBM_BW
+        util = mxu_bound / max(mxu_bound, mem_bound)
+        rows.append((name, bytes_ / 2**20, bytes_ / VMEM_BYTES, ai, util, note))
+
+    # gate_probs: (Tb,d) x (d,E) -> (Tb,E)
+    row("gate_probs", tb * d + d * e + tb * e, 2 * tb * d * e, f"Tb={tb}")
+    # dispatch: (T,C) mask x (T,d) -> (C,d), one expert/step
+    row("dispatch", t * cap + t * d + cap * d, 2 * t * cap * d, f"C={cap}")
+    # expert_ffn full-F: (C,d)+(d,F)+(F,d)+(C,F)
+    row("expert_ffn", cap * d + d * f + f * d + cap * f, 2 * cap * d * f * 2, "full F")
+    fb = 512 if f >= 1024 else f
+    row(
+        "expert_ffn fB",
+        cap * d + d * fb + fb * d + cap * fb + cap * d,
+        2 * cap * d * fb * 2,
+        f"f_block={fb}",
+    )
+    # combine: (Tb, E*C) x (E*C, d)
+    row("combine", tb * e * cap + e * cap * d + tb * d, 2 * tb * e * cap * d, f"Tb={tb}")
+    return rows
+
+
+def hlo_stats(path: str):
+    text = open(path).read()
+    ops = {}
+    for m in re.finditer(r"= \w[\w\[\]<>,{}/ ]* (\w[\w-]*)\(", text):
+        ops[m.group(1)] = ops.get(m.group(1), 0) + 1
+    interesting = ["dot", "fusion", "while", "convolution", "custom-call", "all-to-all"]
+    return {k: ops.get(k, 0) for k in interesting} | {
+        "total_instructions": sum(ops.values()),
+        "size_kb": len(text) // 1024,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    for preset in ["wmt10_sim", "e2e_100m"]:
+        cfg = model.PRESETS[preset]
+        print(f"\n== L1 kernel VMEM/MXU estimates — preset {preset} "
+              f"(d={cfg.d_model}, F={cfg.d_ff}, E={cfg.n_experts}) ==")
+        print(f"{'kernel':<14} {'VMEM MB':>8} {'of 16MB':>8} {'AI f/B':>8} {'MXU util est':>13}  note")
+        for name, mb, frac, ai, util, note in kernel_vmem_rows(cfg, 8):
+            print(f"{name:<14} {mb:>8.2f} {frac:>7.1%} {ai:>8.1f} {util:>12.1%}  {note}")
+
+    # paper-shape check: does the base-config expert tile fit VMEM?
+    paper = model.ModelConfig(vocab=32000, d_model=512, d_ff=2048, n_heads=8,
+                              enc_blocks=6, dec_blocks=3, n_experts=128, max_len=1024)
+    t = 128 * 1024 // 128  # tokens per expert group at 128-way expert parallelism
+    cap = ref.capacity(t, 1, 1.0)
+    words = cap * 512 + 512 * 2048 + 2048 * 512 + cap * 2048
+    fits = words * 4 <= VMEM_BYTES
+    verdict = "fits" if fits else "does NOT fit -> use expert_ffn_fblocked (f_block=512: "
+    if not fits:
+        wb = cap * 512 + 512 * 512 + 512 * 512 + cap * 512 + cap * 512
+        verdict += f"{wb * 4 / 2**20:.1f} MB)"
+    print(f"\npaper base shape, per-expert tile: {words * 4 / 2**20:.1f} MB of 16 MB "
+          f"(C={cap}) -> {verdict}")
+
+    for preset in ["tiny", "wmt10_sim", "e2e_100m"]:
+        mpath = os.path.join(args.artifacts, preset, "train_step.hlo.txt")
+        if os.path.exists(mpath):
+            print(f"\n== L2 HLO op mix — {preset}/train_step ==")
+            for k, v in hlo_stats(mpath).items():
+                print(f"  {k:<20} {v}")
+    del math
+
+
+if __name__ == "__main__":
+    main()

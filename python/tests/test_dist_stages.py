@@ -1,0 +1,130 @@
+"""Distributed-engine stage algebra: each hand-derived bwd stage must equal
+jax.grad of the composed forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dist_stages as ds
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ds.DistConfig(d_in=8, d_model=16, d_ff=32, n_classes=6, tokens_per_rank=12, ranks=4)
+
+
+@pytest.fixture(scope="module")
+def tensors():
+    rng = np.random.default_rng(0)
+    r = lambda *s, sc=0.3: jnp.asarray(rng.normal(size=s) * sc, jnp.float32)
+    return {
+        "w_in": r(CFG.d_in, CFG.d_model),
+        "b_in": r(CFG.d_model, sc=0.1),
+        "wr": r(CFG.d_model, CFG.ranks),
+        "w1": r(CFG.d_model, CFG.d_ff),
+        "w2": r(CFG.d_ff, CFG.d_model),
+        "w_out": r(CFG.d_model, CFG.n_classes),
+        "x": r(CFG.tokens_per_rank, CFG.d_in, sc=1.0),
+        "labels": jnp.asarray(rng.integers(0, CFG.n_classes, CFG.tokens_per_rank), jnp.int32),
+    }
+
+
+def test_s1_fwd_shapes(tensors):
+    h, probs = ds.s1_fwd(tensors["w_in"], tensors["b_in"], tensors["wr"], tensors["x"])
+    assert h.shape == (CFG.tokens_per_rank, CFG.d_model)
+    assert probs.shape == (CFG.tokens_per_rank, CFG.ranks)
+    np.testing.assert_allclose(np.sum(probs, axis=-1), 1.0, rtol=1e-5)
+
+
+def test_head_loss_bwd_matches_autodiff(tensors):
+    y = jnp.asarray(np.random.default_rng(1).normal(size=(CFG.tokens_per_rank, CFG.d_model)), jnp.float32)
+    loss, dy, dw_out = ds.head_loss_bwd(tensors["w_out"], y, tensors["labels"])
+
+    def f(w_out, y):
+        logits = y @ w_out
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, tensors["labels"][:, None], axis=-1))
+
+    lr = f(tensors["w_out"], y)
+    gw, gy = jax.grad(f, argnums=(0, 1))(tensors["w_out"], y)
+    np.testing.assert_allclose(float(loss), float(lr), rtol=1e-6)
+    np.testing.assert_allclose(dy, gy, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dw_out, gw, rtol=1e-5, atol=1e-6)
+
+
+def test_expert_bwd_matches_autodiff(tensors):
+    rng = np.random.default_rng(2)
+    xe = jnp.asarray(rng.normal(size=(CFG.tokens_per_rank, CFG.d_model)), jnp.float32)
+    dye = jnp.asarray(rng.normal(size=(CFG.tokens_per_rank, CFG.d_model)), jnp.float32)
+
+    def f(w1, w2, xe):
+        (ye,) = ds.expert_fwd(w1, w2, xe)
+        return jnp.sum(ye * dye)
+
+    g1, g2, gx = jax.grad(f, argnums=(0, 1, 2))(tensors["w1"], tensors["w2"], xe)
+    dxe, dw1, dw2 = ds.expert_bwd(tensors["w1"], tensors["w2"], xe, dye)
+    np.testing.assert_allclose(dxe, gx, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dw1, g1, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dw2, g2, rtol=1e-4, atol=1e-5)
+
+
+def test_s1_bwd_matches_autodiff(tensors):
+    rng = np.random.default_rng(3)
+    dh = jnp.asarray(rng.normal(size=(CFG.tokens_per_rank, CFG.d_model)), jnp.float32)
+    dprobs = jnp.asarray(rng.normal(size=(CFG.tokens_per_rank, CFG.ranks)) * 0.1, jnp.float32)
+
+    def f(w_in, b_in, wr):
+        h, probs = ds.s1_fwd(w_in, b_in, wr, tensors["x"])
+        return jnp.sum(h * dh) + jnp.sum(probs * dprobs)
+
+    gw, gb, gr = jax.grad(f, argnums=(0, 1, 2))(tensors["w_in"], tensors["b_in"], tensors["wr"])
+    dw_in, db_in, dwr = ds.s1_bwd(
+        tensors["w_in"], tensors["b_in"], tensors["wr"], tensors["x"], dh, dprobs
+    )
+    np.testing.assert_allclose(dw_in, gw, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(db_in, gb, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dwr, gr, rtol=1e-4, atol=1e-5)
+
+
+def test_end_to_end_composed_gradient(tensors):
+    """Compose all stages the way the Rust engine does (single rank, all
+    tokens local) and check against jax.grad of the monolithic model."""
+    t, d = CFG.tokens_per_rank, CFG.d_model
+    gate_expert = 0  # all tokens routed to expert 0 == this rank's expert
+
+    def full(w_in, b_in, wr, w1, w2, w_out):
+        h = jnp.maximum(tensors["x"] @ w_in + b_in, 0.0)
+        logits = h @ wr
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate = probs[:, gate_expert]
+        ye = jnp.maximum(h @ w1, 0.0) @ w2
+        y = h + gate[:, None] * ye
+        out = y @ w_out
+        logp = jax.nn.log_softmax(out, axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, tensors["labels"][:, None], axis=-1))
+
+    names = ["w_in", "b_in", "wr", "w1", "w2", "w_out"]
+    args = [tensors[n] for n in names]
+    ref_grads = jax.grad(full, argnums=tuple(range(6)))(*args)
+
+    # staged computation (mirrors WorkerState::step with drop=True)
+    w_in, b_in, wr, w1, w2, w_out = args
+    h, probs = ds.s1_fwd(w_in, b_in, wr, tensors["x"])
+    gate = probs[:, gate_expert]
+    (ye,) = ds.expert_fwd(w1, w2, h)
+    y = h + gate[:, None] * ye
+    loss, dy, dw_out = ds.head_loss_bwd(w_out, y, tensors["labels"])
+    np.testing.assert_allclose(float(loss), float(full(*args)), rtol=1e-6)
+
+    dh = dy.copy()
+    dgate = jnp.sum(dy * ye, axis=1)
+    dprobs = jnp.zeros((t, CFG.ranks)).at[:, gate_expert].set(dgate)
+    dye = gate[:, None] * dy
+    dxe, dw1, dw2 = ds.expert_bwd(w1, w2, h, dye)
+    dh = dh + dxe
+    dw_in, db_in, dwr = ds.s1_bwd(w_in, b_in, wr, tensors["x"], dh, dprobs)
+
+    staged = [dw_in, db_in, dwr, dw1, dw2, dw_out]
+    for name, got, want in zip(names, staged, ref_grads):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5, err_msg=name)
+    del d

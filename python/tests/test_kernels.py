@@ -1,0 +1,273 @@
+"""L1 correctness: every Pallas kernel against the pure-jnp oracle.
+
+Hypothesis sweeps shapes (token counts, d_model, expert counts, capacity
+factors) and dtypes; fixed-seed numpy drives the data. This is the core
+correctness signal for the compute layer -- the AOT artifacts embed exactly
+these kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dispatch, expert_ffn, gating, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# gate_probs
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    t=st.sampled_from([1, 3, 8, 64, 96]),
+    d=st.sampled_from([4, 32, 33]),
+    e=st.sampled_from([2, 8, 13]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gate_probs_matches_ref(t, d, e, seed):
+    rng = np.random.default_rng(seed)
+    x, wr = rnd(rng, t, d), rnd(rng, d, e, scale=0.3)
+    got = gating.gate_probs(x, wr)
+    want = ref.gate_probs_ref(x, wr)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    # softmax invariants
+    np.testing.assert_allclose(np.sum(got, axis=-1), np.ones(t), rtol=1e-5)
+    assert np.all(got >= 0)
+
+
+def test_gate_probs_bf16_input():
+    rng = np.random.default_rng(0)
+    x = rnd(rng, 16, 8).astype(jnp.bfloat16)
+    wr = rnd(rng, 8, 4).astype(jnp.bfloat16)
+    got = gating.gate_probs(x, wr)
+    want = ref.gate_probs_ref(x, wr)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_gate_probs_grad_matches_ref():
+    rng = np.random.default_rng(1)
+    x, wr = rnd(rng, 32, 16), rnd(rng, 16, 8, scale=0.3)
+
+    def f_kernel(x, wr):
+        return jnp.sum(gating.gate_probs(x, wr) ** 2)
+
+    def f_ref(x, wr):
+        return jnp.sum(ref.gate_probs_ref(x, wr) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(x, wr)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, wr)
+    np.testing.assert_allclose(gk[0], gr[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gk[1], gr[1], rtol=1e-4, atol=1e-5)
+
+
+def test_gate_probs_extreme_logits_stable():
+    x = jnp.asarray([[1000.0, -1000.0]], jnp.float32)
+    wr = jnp.eye(2, dtype=jnp.float32)
+    p = gating.gate_probs(x, wr)
+    assert np.all(np.isfinite(np.asarray(p)))
+    np.testing.assert_allclose(np.sum(p), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# assign_positions
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t=st.integers(1, 200),
+    e=st.sampled_from([1, 2, 8, 16]),
+    cf=st.sampled_from([0.5, 1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_positions_matches_ref(t, e, cf, seed):
+    rng = np.random.default_rng(seed)
+    idx = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+    cap = ref.capacity(t, e, cf)
+    pos, kept = gating.assign_positions(idx, e, cap)
+    pos_r, kept_r = ref.assign_positions_ref(idx, e, cap)
+    np.testing.assert_array_equal(pos, pos_r)
+    np.testing.assert_array_equal(kept, kept_r.astype(np.int32))
+    # invariant: within each expert, admitted positions are 0..k-1 unique
+    for ei in range(e):
+        mine = np.asarray(pos)[np.asarray(idx) == ei]
+        kept_mine = np.sort(mine[mine < cap])
+        np.testing.assert_array_equal(kept_mine, np.arange(len(kept_mine)))
+
+
+def test_assign_positions_all_same_expert():
+    idx = jnp.zeros(10, jnp.int32)
+    pos, kept = gating.assign_positions(idx, 4, 3)
+    np.testing.assert_array_equal(pos, np.arange(10))
+    np.testing.assert_array_equal(kept, (np.arange(10) < 3).astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.sampled_from([4, 32, 64]),
+    d=st.sampled_from([8, 32]),
+    e=st.sampled_from([2, 4, 8]),
+    cf=st.sampled_from([1.0, 2.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dispatch_combine_match_ref(t, d, e, cf, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, t, d)
+    probs = ref.gate_probs_ref(x, rnd(rng, d, e, scale=0.3))
+    idx, gate = ref.top1_ref(probs)
+    cap = ref.capacity(t, e, cf)
+    disp, comb = ref.dispatch_mask_ref(idx, gate, e, cap)
+    xe = dispatch.dispatch(x, disp)
+    np.testing.assert_allclose(xe, ref.dispatch_ref(x, disp), rtol=1e-5, atol=1e-5)
+    out = rnd(rng, e, cap, d)
+    y = dispatch.combine(out, comb)
+    np.testing.assert_allclose(y, ref.combine_ref(out, comb), rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_preserves_tokens_exactly():
+    # with cf large enough every token lands in some slot, exactly once
+    rng = np.random.default_rng(3)
+    t, d, e = 16, 8, 4
+    x = rnd(rng, t, d)
+    idx = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+    gate = jnp.ones(t, jnp.float32)
+    disp, comb = ref.dispatch_mask_ref(idx, gate, e, t)  # cap = t, no drops
+    xe = dispatch.dispatch(x, disp)
+    # total mass preserved
+    np.testing.assert_allclose(np.sum(xe), np.sum(np.asarray(x)), rtol=1e-5)
+    # combine with identity expert returns x exactly
+    y = dispatch.combine(xe, comb)
+    np.testing.assert_allclose(y, x, rtol=1e-5, atol=1e-6)
+
+
+def test_combine_gradients_flow_to_gate():
+    rng = np.random.default_rng(5)
+    t, d, e, cap = 8, 4, 2, 8
+    x = rnd(rng, t, d)
+    idx = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+
+    def loss(gate):
+        disp, _ = ref.dispatch_mask_ref(idx, jax.lax.stop_gradient(gate), e, cap)
+        comb = disp * gate[:, None, None]
+        xe = dispatch.dispatch(x, disp)
+        return jnp.sum(dispatch.combine(xe, comb) ** 2)
+
+    g = jax.grad(loss)(jnp.full((t,), 0.5, jnp.float32))
+    assert np.all(np.abs(np.asarray(g)) > 0), "gate must receive gradient"
+
+
+# ---------------------------------------------------------------------------
+# expert_ffn
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e=st.sampled_from([1, 4, 8]),
+    c=st.sampled_from([1, 8, 32]),
+    d=st.sampled_from([8, 32]),
+    f=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_expert_ffn_matches_ref(e, c, d, f, seed):
+    rng = np.random.default_rng(seed)
+    xe, w1, w2 = rnd(rng, e, c, d), rnd(rng, e, d, f, scale=0.2), rnd(rng, e, f, d, scale=0.2)
+    got = expert_ffn.expert_ffn(xe, w1, w2)
+    want = ref.expert_ffn_ref(xe, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("f_block", [8, 16, 32])
+def test_expert_ffn_fblocked_equals_full(f_block):
+    rng = np.random.default_rng(7)
+    xe, w1, w2 = rnd(rng, 4, 16, 8), rnd(rng, 4, 8, 64, scale=0.2), rnd(rng, 4, 64, 8, scale=0.2)
+    full = expert_ffn.expert_ffn(xe, w1, w2)
+    blocked = expert_ffn.expert_ffn_fblocked(xe, w1, w2, f_block)
+    np.testing.assert_allclose(blocked, full, rtol=2e-5, atol=1e-5)
+
+
+def test_expert_ffn_grads_match_ref():
+    rng = np.random.default_rng(9)
+    xe, w1, w2 = rnd(rng, 2, 8, 4), rnd(rng, 2, 4, 16, scale=0.3), rnd(rng, 2, 16, 4, scale=0.3)
+
+    def f_k(xe, w1, w2):
+        return jnp.sum(expert_ffn.expert_ffn(xe, w1, w2) ** 2)
+
+    def f_r(xe, w1, w2):
+        return jnp.sum(ref.expert_ffn_ref(xe, w1, w2) ** 2)
+
+    gk = jax.grad(f_k, argnums=(0, 1, 2))(xe, w1, w2)
+    gr = jax.grad(f_r, argnums=(0, 1, 2))(xe, w1, w2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_expert_ffn_relu_kills_negative_paths():
+    # all-negative preactivations => zero output and zero w2 gradient
+    xe = -jnp.ones((1, 4, 3), jnp.float32)
+    w1 = jnp.ones((1, 3, 5), jnp.float32)
+    w2 = jnp.ones((1, 5, 3), jnp.float32)
+    out = expert_ffn.expert_ffn(xe, w1, w2)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((1, 4, 3)))
+
+
+# ---------------------------------------------------------------------------
+# full MoE layer vs ref (the integration of all kernels)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    drop=st.sampled_from([0.0, 1.0]),
+    skip=st.sampled_from([0.0, 1.0]),
+    hashr=st.sampled_from([0.0, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moe_layer_ref_variants(drop, skip, hashr, seed):
+    """The oracle moe_layer_ref honors every routing-variant flag."""
+    rng = np.random.default_rng(seed)
+    t, d, e, f = 32, 16, 4, 32
+    x = rnd(rng, t, d)
+    wr = rnd(rng, d, e, scale=0.3)
+    w1, w2 = rnd(rng, e, d, f, scale=0.2), rnd(rng, e, f, d, scale=0.2)
+    local = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+    hash_ids = jnp.asarray(rng.integers(0, e, t), jnp.int32)
+    out = ref.moe_layer_ref(
+        x, wr, w1, w2, local_expert_id=local, drop_flag=drop,
+        expert_skip=skip, hash_route=hashr, hash_ids=hash_ids,
+    )
+    if drop > 0.5:
+        np.testing.assert_array_equal(out.expert_idx, local)
+        if skip > 0.5:
+            np.testing.assert_array_equal(np.asarray(out.y), np.zeros((t, d)))
+    elif hashr > 0.5:
+        np.testing.assert_array_equal(out.expert_idx, hash_ids)
+    assert np.isfinite(float(out.balance_loss))
+    assert 0.0 <= float(out.kept_frac) <= 1.0 + 1e-6
+
+
+def test_balance_loss_uniform_is_one():
+    # perfectly uniform routing + uniform probs => loss == 1.0 (E * E*(1/E^2))
+    e, t = 4, 64
+    probs = jnp.full((t, e), 1.0 / e, jnp.float32)
+    idx = jnp.asarray(np.arange(t) % e, jnp.int32)
+    bl = ref.balance_loss_ref(probs, idx, e)
+    np.testing.assert_allclose(float(bl), 1.0, rtol=1e-6)
+
+
+def test_balance_loss_collapse_is_e():
+    # everything to expert 0 with prob 1 => loss == E (the max penalty)
+    e, t = 4, 64
+    probs = jnp.zeros((t, e), jnp.float32).at[:, 0].set(1.0)
+    idx = jnp.zeros(t, jnp.int32)
+    bl = ref.balance_loss_ref(probs, idx, e)
+    np.testing.assert_allclose(float(bl), float(e), rtol=1e-6)

@@ -1,0 +1,194 @@
+"""L2 correctness: the MoE transformer model and its routing variants.
+
+These tests run on the `tiny` preset shapes (trace-time only, no AOT) and
+pin the semantics the Rust coordinator relies on: the runtime flags select
+routing exactly as Section 3 of the paper specifies.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = model.PRESETS["tiny"]
+B, L = 4, CFG.max_len
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+def mk_batch(seed=0, drop=0.0, skip=0.0, hashr=0.0):
+    rng = np.random.default_rng(seed)
+    return {
+        "src": jnp.asarray(rng.integers(3, CFG.vocab, (B, L)), jnp.int32),
+        "tgt_in": jnp.asarray(rng.integers(3, CFG.vocab, (B, L)), jnp.int32),
+        "tgt_out": jnp.asarray(rng.integers(3, CFG.vocab, (B, L)), jnp.int32),
+        "local_expert_row": jnp.asarray(rng.integers(0, CFG.n_experts, (B,)), jnp.int32),
+        "drop_flag": jnp.float32(drop),
+        "expert_skip": jnp.float32(skip),
+        "hash_route": jnp.float32(hashr),
+        "seed": jnp.int32(seed),
+    }
+
+
+def fwd_logits(params, batch, train=False):
+    return model.forward(
+        params, CFG, batch["src"], batch["tgt_in"], batch["local_expert_row"],
+        batch["drop_flag"], batch["expert_skip"], batch["hash_route"],
+        batch["seed"], CFG.capacity_factor_eval if not train else CFG.capacity_factor_train,
+        train,
+    )
+
+
+def test_param_count_in_expected_band():
+    # tiny ~0.3M; e2e preset must be ~100M (the e2e driver's contract)
+    assert 2e5 < model.param_count(CFG) < 5e5
+    assert 0.7e8 < model.param_count(model.PRESETS["e2e_100m"]) < 1.6e8
+
+
+def test_forward_shapes_and_finite(params):
+    logits, (bal, kept) = fwd_logits(params, mk_batch())
+    assert logits.shape == (B, L, CFG.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+    assert np.isfinite(float(bal)) and 0.0 < float(kept) <= 1.0 + 1e-6
+
+
+def test_eval_deterministic(params):
+    b = mk_batch(1)
+    l1, _ = fwd_logits(params, b)
+    l2, _ = fwd_logits(params, b)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_jitter_changes_training_forward(params):
+    b1, b2 = mk_batch(1), mk_batch(1)
+    b2["seed"] = jnp.int32(999)
+    l1, _ = fwd_logits(params, b1, train=True)
+    l2, _ = fwd_logits(params, b2, train=True)
+    assert not np.allclose(np.asarray(l1), np.asarray(l2)), "jitter seed must matter"
+
+
+def test_gate_drop_changes_routing_but_expert_skip_zeroes_moe(params):
+    """drop_flag reroutes (different logits); GED must equal a model whose
+    MoE output contribution is removed -- check via expert_skip invariance
+    to the local_expert_row (no expert is consulted at all)."""
+    base = mk_batch(3)
+    dropped = mk_batch(3, drop=1.0)
+    l_base, _ = fwd_logits(params, base)
+    l_drop, _ = fwd_logits(params, dropped)
+    assert not np.allclose(np.asarray(l_base), np.asarray(l_drop)), "gate-drop must reroute"
+
+    ged_a = mk_batch(3, drop=1.0, skip=1.0)
+    ged_b = mk_batch(3, drop=1.0, skip=1.0)
+    ged_b["local_expert_row"] = (ged_b["local_expert_row"] + 1) % CFG.n_experts
+    la, _ = fwd_logits(params, ged_a)
+    lb, _ = fwd_logits(params, ged_b)
+    np.testing.assert_allclose(
+        np.asarray(la), np.asarray(lb), rtol=1e-5, atol=1e-5,
+    )  # GED ignores which local expert would have been used
+
+
+def test_gate_drop_routes_to_local_expert_row(params):
+    """With drop_flag=1, changing local_expert_row changes the output
+    (tokens really go to the designated expert)."""
+    a = mk_batch(4, drop=1.0)
+    b = mk_batch(4, drop=1.0)
+    b["local_expert_row"] = (b["local_expert_row"] + 1) % CFG.n_experts
+    la, _ = fwd_logits(params, a)
+    lb, _ = fwd_logits(params, b)
+    assert not np.allclose(np.asarray(la), np.asarray(lb))
+
+
+def test_hash_route_ignores_gate_but_not_tokens(params):
+    """hash_route=1: output is driven by token-id hashes; two identical
+    batches agree, and hash routing differs from gated routing."""
+    a = mk_batch(5, hashr=1.0)
+    l_hash, _ = fwd_logits(params, a)
+    l_gate, _ = fwd_logits(params, mk_batch(5))
+    assert not np.allclose(np.asarray(l_hash), np.asarray(l_gate))
+
+
+def test_hash_ids_match_rust_implementation():
+    """model._hash_ids must equal moe.rs::hash_expert bit-for-bit."""
+    ids = jnp.asarray([0, 1, 2, 17, 511, 4095, 65535], jnp.int32)
+    got = np.asarray(model._hash_ids(ids, 8))
+    expect = [((i * 2654435761) % (2**32)) >> 16 for i in [0, 1, 2, 17, 511, 4095, 65535]]
+    expect = np.array([e % 8 for e in expect], np.int32)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_loss_fn_masks_pad(params):
+    b = mk_batch(6)
+    total_a, _ = model.loss_fn(
+        params, CFG, b["src"], b["tgt_in"], b["tgt_out"], b["local_expert_row"],
+        b["drop_flag"], b["expert_skip"], b["hash_route"], b["seed"],
+        capacity_factor=2.0, train=False,
+    )
+    # padding the last half of targets changes the mask denominator --
+    # loss must remain finite and differ
+    b2 = dict(b)
+    padded = np.asarray(b["tgt_out"]).copy()
+    padded[:, L // 2:] = 0
+    b2["tgt_out"] = jnp.asarray(padded)
+    total_b, _ = model.loss_fn(
+        params, CFG, b2["src"], b2["tgt_in"], b2["tgt_out"], b2["local_expert_row"],
+        b2["drop_flag"], b2["expert_skip"], b2["hash_route"], b2["seed"],
+        capacity_factor=2.0, train=False,
+    )
+    assert np.isfinite(float(total_a)) and np.isfinite(float(total_b))
+    assert float(total_a) != float(total_b)
+
+
+def test_lr_schedule_warmup_then_decay():
+    s = model.lr_schedule(CFG, jnp.float32(1.0))
+    w = model.lr_schedule(CFG, jnp.float32(CFG.warmup))
+    after = model.lr_schedule(CFG, jnp.float32(CFG.warmup * 4))
+    assert float(s) < float(w)
+    assert float(after) < float(w)
+    np.testing.assert_allclose(float(after), float(w) / 2.0, rtol=1e-5)
+
+
+def test_train_step_decreases_loss(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    f = jax.jit(lambda p, m, v, s, b: model.train_step(p, m, v, s, b, CFG))
+    p, m, v, s = params, zeros, zeros, jnp.float32(0.0)
+    first = None
+    for i in range(8):
+        b = mk_batch(100)  # same batch -> loss must drop fast
+        b["seed"] = jnp.int32(i)
+        p, m, v, s, metrics = f(p, m, v, s, b)
+        if first is None:
+            first = float(metrics["loss"])
+    assert float(metrics["loss"]) < first, f"{first} -> {float(metrics['loss'])}"
+    assert float(s) == 8.0
+
+
+def test_train_step_balance_loss_positive(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    _, _, _, _, metrics = model.train_step(
+        params, zeros, zeros, jnp.float32(0.0), mk_batch(0), CFG
+    )
+    assert float(metrics["balance"]) > 0.5  # ~1 for near-uniform routing
+
+
+def test_greedy_decode_shape_and_determinism(params):
+    src = mk_batch(8)["src"]
+    out1 = model.greedy_decode(params, src, 1, CFG)
+    out2 = model.greedy_decode(params, src, 1, CFG)
+    assert out1.shape == (B, L)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert np.all((np.asarray(out1) >= 0) & (np.asarray(out1) < CFG.vocab))
+
+
+def test_capacity_matches_switch_formula():
+    assert ref.capacity(64, 4, 1.0) == 16
+    assert ref.capacity(64, 4, 2.0) == 32
+    assert ref.capacity(65, 4, 1.0) == 17  # ceil
+    assert ref.capacity(1, 64, 1.0) == 1   # floor of 1

@@ -1,0 +1,37 @@
+//! Bench: regenerate Fig 3 + Table 1 (throughput scaling, V100 cluster)
+//! and time the sim engine itself.
+
+use gating_dropout::benchkit::{bench, fmt_tps, report, Table};
+use gating_dropout::coordinator::Policy;
+use gating_dropout::netmodel::{MoeWorkload, V100_IB100};
+use gating_dropout::simengine;
+
+fn main() {
+    let gpus = [8usize, 16, 32, 64, 128];
+
+    println!("== Fig 3 / Table 1 regeneration (V100+IB100) ==");
+    let mut t = Table::new(&["GPUs", "baseline tok/s", "no-alltoall tok/s", "impr", "paper"]);
+    let paper = ["11.8%", "46.5%", "79.1%", "88.5%", "93.8%"];
+    for (&n, p) in gpus.iter().zip(paper) {
+        let w = MoeWorkload::wmt10(n);
+        let b = simengine::simulate_run(&V100_IB100, n, &w, Policy::Baseline, 500, 1);
+        let o = simengine::simulate_run(&V100_IB100, n, &w, Policy::NoAllToAll, 500, 1);
+        t.row(&[
+            n.to_string(),
+            fmt_tps(b.tokens_per_sec),
+            fmt_tps(o.tokens_per_sec),
+            format!("{:+.1}%", (o.tokens_per_sec / b.tokens_per_sec - 1.0) * 100.0),
+            p.to_string(),
+        ]);
+    }
+    t.print();
+
+    // micro: how fast is one simulated step decision+cost
+    let w = MoeWorkload::wmt10(64);
+    let s = bench(3, 30, || {
+        std::hint::black_box(simengine::simulate_run(
+            &V100_IB100, 64, &w, Policy::GateDrop { p: 0.3 }, 1000, 1,
+        ));
+    });
+    report("simengine: 1000-step gate-drop run", &s);
+}

@@ -1,0 +1,46 @@
+//! Bench: Fig 5 — BLEU vs training time curves at reduced scale.
+//!
+//! Full-scale curves come from `examples/train_wmt10_sim` (see
+//! EXPERIMENTS.md); this bench runs the tiny preset so `cargo bench`
+//! stays fast while still exercising the whole real pipeline: it prints
+//! the virtual-time-to-loss-target for each policy.
+
+use gating_dropout::benchkit::Table;
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::train::Trainer;
+
+fn main() {
+    let mut cfg = RunConfig::preset_named("tiny").unwrap();
+    cfg.steps = std::env::var("FIG5_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(40);
+    cfg.eval_every = 10;
+    cfg.out_dir = "runs/bench_fig5".into();
+    println!("== Fig 5 (reduced scale: tiny preset, {} steps/policy) ==", cfg.steps);
+    let mut trainer = match Trainer::new(cfg, false) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("(skipping: {e})");
+            return;
+        }
+    };
+    // target = baseline's final train-loss EMA; report virtual time to reach it
+    let mut results = Vec::new();
+    for policy in ["baseline", "hash-layer", "gate-drop:0.3", "gate-expert-drop:0.2"] {
+        trainer.reset_with_policy(Policy::parse(policy).unwrap()).unwrap();
+        let res = trainer.run(true).unwrap();
+        results.push((policy, res));
+    }
+    let target = results[0].1.history.last().unwrap().loss_ema;
+    let mut t = Table::new(&["Method", "loss EMA @end", "virt secs to baseline-final", "steps"]);
+    for (name, res) in &results {
+        let hit = res.history.iter().find(|h| h.loss_ema <= target);
+        t.row(&[
+            name.to_string(),
+            format!("{:.4}", res.history.last().unwrap().loss_ema),
+            hit.map(|h| format!("{:.2}", h.virtual_secs)).unwrap_or("-".into()),
+            hit.map(|h| (h.step + 1).to_string()).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    println!("(loss EMA is the quality proxy at this scale; BLEU needs longer runs — see EXPERIMENTS.md)");
+}

@@ -1,0 +1,19 @@
+//! Bench: Fig 6 throughput axis — Gate-Expert-Drop dropout-rate sweep.
+
+use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::netmodel::{MoeWorkload, V100_IB100};
+use gating_dropout::simengine;
+
+fn main() {
+    println!("== Fig 6 (throughput axis): Gate-Expert-Drop rate sweep, 16 GPUs ==");
+    let w = MoeWorkload::wmt10(16);
+    let rates = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5];
+    let pts = simengine::fig6_throughput(&V100_IB100, 16, &w, &rates, 8000, 1);
+    let base = pts[0].1;
+    let mut t = Table::new(&["rate p", "tok/s", "vs p=0"]);
+    for (p, tps) in pts {
+        t.row(&[format!("{p:.1}"), fmt_tps(tps), format!("{:+.1}%", (tps / base - 1.0) * 100.0)]);
+    }
+    t.print();
+    println!("(BLEU axis: examples/dropout_rate_sweep trains per rate and reports BLEU Δ)");
+}

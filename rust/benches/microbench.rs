@@ -1,0 +1,75 @@
+//! Microbenchmarks of the Layer-3 hot paths: collectives, routing
+//! bookkeeping, BLEU, coordinator decisions. These guard the §Perf
+//! targets in EXPERIMENTS.md (L3 must not bottleneck the step).
+
+use std::sync::Arc;
+
+use gating_dropout::benchkit::{bench, report};
+use gating_dropout::collective::{Collective, ThreadFabric};
+use gating_dropout::coordinator::{Coordinator, Policy};
+use gating_dropout::metrics::corpus_bleu;
+use gating_dropout::moe;
+use gating_dropout::topology::Topology;
+use gating_dropout::util::rng::Rng;
+
+fn main() {
+    // coordinator decision stream
+    let mut c = Coordinator::new(Policy::GateDrop { p: 0.3 }, 1);
+    let mut step = 0u64;
+    let s = bench(10, 100, || {
+        for _ in 0..1000 {
+            std::hint::black_box(c.decide(step));
+            step += 1;
+        }
+    });
+    report("coordinator: 1000 decisions", &s);
+
+    // routing pack/admit/return round trip, 4 ranks x 256 tokens x d=64
+    let topo = Topology::new(4, 4);
+    let (t, d) = (256usize, 64usize);
+    let mut rng = Rng::new(3);
+    let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+    let experts: Vec<usize> = (0..t).map(|_| rng.below(4) as usize).collect();
+    let gates = vec![0.5f32; t];
+    let s = bench(5, 50, || {
+        let packed = moe::route_pack(0, &topo, &x, d, &experts, &gates);
+        std::hint::black_box(&packed);
+        // simulate self-arrivals (single-rank view of admit cost)
+        let (xe, adm) = moe::route_admit(0, &topo, &packed[..1], d, t);
+        let back = moe::return_pack(&topo, &adm, &xe, d);
+        std::hint::black_box(moe::return_unpack(&back, t, d));
+    });
+    report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
+
+    // fabric all-to-all, 4 threads x 64KB each
+    let s = bench(3, 20, || {
+        let fab = Arc::new(ThreadFabric::new(4));
+        let mut hs = Vec::new();
+        for r in 0..4 {
+            let fab = fab.clone();
+            hs.push(std::thread::spawn(move || {
+                let out: Vec<Vec<f32>> = (0..4).map(|_| vec![r as f32; 4096]).collect();
+                std::hint::black_box(fab.all_to_all(r, out));
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    });
+    report("fabric all-to-all (4 ranks x 64KB incl. thread spawn)", &s);
+
+    // BLEU over 64 pairs of len 30
+    let mut rng = Rng::new(5);
+    let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..64)
+        .map(|_| {
+            let r: Vec<i32> = (0..30).map(|_| rng.below(100) as i32).collect();
+            let mut h = r.clone();
+            h[3] = 999;
+            (h, r)
+        })
+        .collect();
+    let s = bench(5, 100, || {
+        std::hint::black_box(corpus_bleu(&pairs));
+    });
+    report("corpus BLEU (64 pairs x 30 tokens)", &s);
+}

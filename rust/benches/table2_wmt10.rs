@@ -1,0 +1,54 @@
+//! Bench: Table 2 throughput column (virtual cluster, 16 GPUs, WMT-10
+//! workload) + timing of the real single-process train_step on the tiny
+//! artifacts (the PJRT hot path).
+
+use gating_dropout::benchkit::{bench, fmt_tps, report, Table};
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::netmodel::{MoeWorkload, V100_IB100};
+use gating_dropout::simengine;
+use gating_dropout::train::Trainer;
+
+fn main() {
+    println!("== Table 2 throughput column (paper: 129k/135k/143k/150k => +0/+4.7/+10.9/+16.3%) ==");
+    let w = MoeWorkload::wmt10(16);
+    let rows = simengine::policy_throughputs(&V100_IB100, 16, &w, 4000, 1);
+    let base = rows[0].tokens_per_sec;
+    let mut t = Table::new(&["Method", "tok/s", "vs baseline", "paper"]);
+    let paper = ["129k (+0%)", "135k (+4.7%)", "143k (+10.9%)", "150k (+16.3%)"];
+    for (row, p) in rows.iter().zip(paper) {
+        t.row(&[
+            row.policy.to_string(),
+            fmt_tps(row.tokens_per_sec),
+            format!("{:+.1}%", (row.tokens_per_sec / base - 1.0) * 100.0),
+            p.to_string(),
+        ]);
+    }
+    t.print();
+
+    // real PJRT step timing under each decision (tiny artifacts)
+    match Trainer::new(RunConfig::preset_named("tiny").unwrap(), false) {
+        Ok(mut trainer) => {
+            let topo = gating_dropout::topology::Topology::new(4, 4);
+            let corpus = gating_dropout::data::Corpus::new(
+                gating_dropout::data::CorpusConfig::for_preset(4, 512, 16, 7),
+            );
+            let mut b = gating_dropout::data::Batcher::new(corpus, 7);
+            let batch = b.next_batch(8, &topo);
+            for (name, flags) in [
+                ("train_step baseline", (0.0f32, 0.0f32, 0.0f32)),
+                ("train_step gate-drop", (1.0, 0.0, 0.0)),
+                ("train_step gate-expert-drop", (1.0, 1.0, 0.0)),
+            ] {
+                let mut i = 0i32;
+                let s = bench(2, 10, || {
+                    trainer.engine.train_step(&batch, flags, i).unwrap();
+                    i += 1;
+                });
+                report(name, &s);
+            }
+            let _ = trainer.reset_with_policy(Policy::Baseline);
+        }
+        Err(e) => println!("(skipping PJRT timing: {e})"),
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: Table 3 — Web-50 throughput on the V100 vs A100 clusters.
+
+use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::netmodel::{MoeWorkload, A100_IB1600, V100_IB100};
+use gating_dropout::simengine;
+
+fn main() {
+    println!("== Table 3: Web-50 throughput, 64 GPUs (paper: V100 126/140/146k, A100 362/372/384k) ==");
+    let w = MoeWorkload::web50(64);
+    let v = simengine::policy_throughputs(&V100_IB100, 64, &w, 4000, 1);
+    let a = simengine::policy_throughputs(&A100_IB1600, 64, &w, 4000, 1);
+    let mut t = Table::new(&["Method", "V100 Cluster", "A100 Cluster", "V100 gain", "A100 gain"]);
+    for i in [0usize, 2, 3] {
+        // baseline, gate-drop, gate-expert-drop (skip hash for the paper's table)
+        t.row(&[
+            v[i].policy.to_string(),
+            fmt_tps(v[i].tokens_per_sec),
+            fmt_tps(a[i].tokens_per_sec),
+            format!("{:+.1}%", (v[i].tokens_per_sec / v[0].tokens_per_sec - 1.0) * 100.0),
+            format!("{:+.1}%", (a[i].tokens_per_sec / a[0].tokens_per_sec - 1.0) * 100.0),
+        ]);
+    }
+    t.print();
+    println!("expected shape: relative gains larger on the V100 cluster (slower fabric).");
+}

@@ -1,0 +1,48 @@
+//! Bench: Table 4 — per-direction BLEU splits. Reduced scale for
+//! `cargo bench` (tiny preset, few steps); the full web50_sim run lives in
+//! `examples/web50_quality` and EXPERIMENTS.md.
+
+use gating_dropout::benchkit::Table;
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::train::{DirectionBleu, Trainer};
+
+fn agg(by: &[DirectionBleu], e2x: bool, low: Option<bool>) -> f64 {
+    let sel: Vec<f64> = by
+        .iter()
+        .filter(|d| d.e_to_x == e2x && low.map(|l| d.low_resource == l).unwrap_or(true))
+        .map(|d| d.bleu)
+        .collect();
+    sel.iter().sum::<f64>() / sel.len().max(1) as f64
+}
+
+fn main() {
+    let mut cfg = RunConfig::preset_named("tiny").unwrap();
+    cfg.steps = std::env::var("T4_STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(30);
+    cfg.eval_every = 0;
+    cfg.out_dir = "runs/bench_t4".into();
+    println!("== Table 4 (reduced scale: tiny preset, {} steps/policy) ==", cfg.steps);
+    let mut trainer = match Trainer::new(cfg, true) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("(skipping: {e})");
+            return;
+        }
+    };
+    let mut t = Table::new(&["Method", "BLEU (avg)", "E→X", "E→X (low)", "X→E", "X→E (low)"]);
+    for policy in ["baseline", "gate-drop:0.3", "gate-expert-drop:0.2"] {
+        trainer.reset_with_policy(Policy::parse(policy).unwrap()).unwrap();
+        let res = trainer.run(false).unwrap();
+        let by = &res.bleu_by_direction;
+        t.row(&[
+            policy.to_string(),
+            format!("{:.2}", res.final_bleu),
+            format!("{:.2}", agg(by, true, None)),
+            format!("{:.2}", agg(by, true, Some(true))),
+            format!("{:.2}", agg(by, false, None)),
+            format!("{:.2}", agg(by, false, Some(true))),
+        ]);
+    }
+    t.print();
+    println!("(full-scale: cargo run --release --example web50_quality)");
+}

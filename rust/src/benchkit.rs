@@ -1,0 +1,142 @@
+//! Tiny benchmark harness (offline crate set has no criterion).
+//!
+//! `cargo bench` binaries use `harness = false` and drive this: warmup,
+//! N timed iterations, median / p10 / p90 reporting, and table-style
+//! output helpers so every paper table/figure bench prints rows in the
+//! paper's own format.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    Stats { median_ns: q(0.5), p10_ns: q(0.1), p90_ns: q(0.9), iters }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub fn report(name: &str, s: &Stats) {
+    println!(
+        "{name:<44} median {:>10}   p10 {:>10}   p90 {:>10}   ({} iters)",
+        fmt_ns(s.median_ns),
+        fmt_ns(s.p10_ns),
+        fmt_ns(s.p90_ns),
+        s.iters
+    );
+}
+
+/// Simple aligned table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            println!("{s}");
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format tokens/sec the way the paper does ("129k").
+pub fn fmt_tps(tps: f64) -> String {
+    if tps >= 1e6 {
+        format!("{:.2}M", tps / 1e6)
+    } else if tps >= 1e3 {
+        format!("{:.0}k", tps / 1e3)
+    } else {
+        format!("{tps:.0}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(2, 20, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.p10_ns <= s.median_ns && s.median_ns <= s.p90_ns);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_tps(129_000.0), "129k");
+        assert_eq!(fmt_tps(1_500_000.0), "1.50M");
+        assert_eq!(fmt_tps(420.0), "420");
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["Method", "Throughput"]);
+        t.row(&["Baseline".into(), "129k".into()]);
+        t.print(); // smoke: no panic
+    }
+}

@@ -1,0 +1,311 @@
+//! Mailbox-based fabric implementation with byte/time accounting.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::Collective;
+use crate::netmodel::Cluster;
+
+/// One point-to-point mailbox (src -> dst).
+#[derive(Default)]
+struct Mailbox {
+    q: Mutex<VecDeque<Vec<u8>>>,
+    cv: Condvar,
+}
+
+impl Mailbox {
+    fn send(&self, msg: Vec<u8>) {
+        self.q.lock().unwrap().push_back(msg);
+        self.cv.notify_all();
+    }
+
+    fn recv(&self) -> Vec<u8> {
+        let mut q = self.q.lock().unwrap();
+        loop {
+            if let Some(m) = q.pop_front() {
+                return m;
+            }
+            q = self.cv.wait(q).unwrap();
+        }
+    }
+}
+
+/// Accumulated fabric accounting (whole fabric, all ranks).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FabricStats {
+    pub a2a_ops: u64,
+    pub a2a_bytes: u64,
+    pub allreduce_ops: u64,
+    pub allreduce_bytes: u64,
+    pub broadcast_ops: u64,
+    pub broadcast_bytes: u64,
+    /// Modeled wall time (seconds) these collectives would take on the
+    /// configured cluster. Zero when no cluster model is attached.
+    pub modeled_time: f64,
+}
+
+/// In-memory fabric for `n` worker threads.
+pub struct ThreadFabric {
+    n: usize,
+    boxes: Vec<Mailbox>, // n*n, index src*n+dst
+    stats: Mutex<FabricStats>,
+    cluster: Option<Cluster>,
+    barrier: std::sync::Barrier,
+}
+
+impl ThreadFabric {
+    pub fn new(n_ranks: usize) -> Self {
+        Self::with_cluster(n_ranks, None)
+    }
+
+    /// Attach a cluster model: collectives will also accumulate the time
+    /// they would cost on that hardware (per-op, charged once per
+    /// collective, not per rank).
+    pub fn with_cluster(n_ranks: usize, cluster: Option<Cluster>) -> Self {
+        assert!(n_ranks > 0);
+        ThreadFabric {
+            n: n_ranks,
+            boxes: (0..n_ranks * n_ranks).map(|_| Mailbox::default()).collect(),
+            stats: Mutex::new(FabricStats::default()),
+            cluster,
+            barrier: std::sync::Barrier::new(n_ranks),
+        }
+    }
+
+    fn mb(&self, src: usize, dst: usize) -> &Mailbox {
+        &self.boxes[src * self.n + dst]
+    }
+
+    pub fn stats(&self) -> FabricStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = FabricStats::default();
+    }
+
+    fn account(&self, f: impl FnOnce(&mut FabricStats, Option<&Cluster>)) {
+        let mut s = self.stats.lock().unwrap();
+        f(&mut s, self.cluster.as_ref());
+    }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+impl Collective for ThreadFabric {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        assert_eq!(out.len(), self.n, "all_to_all needs one chunk per rank");
+        let bytes_sent: usize = out
+            .iter()
+            .enumerate()
+            .filter(|(d, _)| *d != rank)
+            .map(|(_, v)| v.len() * 4)
+            .sum();
+        let mut mine = Vec::with_capacity(self.n);
+        let mut chunks: Vec<Option<Vec<f32>>> = out.into_iter().map(Some).collect();
+        // deposit: keep own chunk, mail the rest
+        for d in 0..self.n {
+            let chunk = chunks[d].take().unwrap();
+            if d == rank {
+                mine.push((rank, chunk));
+            } else {
+                self.mb(rank, d).send(f32s_to_bytes(&chunk));
+            }
+        }
+        // collect from everyone else
+        let mut result: Vec<Vec<f32>> = vec![Vec::new(); self.n];
+        for (r, c) in mine {
+            result[r] = c;
+        }
+        for s in 0..self.n {
+            if s != rank {
+                result[s] = bytes_to_f32s(&self.mb(s, rank).recv());
+            }
+        }
+        self.account(|st, cl| {
+            st.a2a_bytes += bytes_sent as u64;
+            // charge op count + modeled time once per collective (rank 0)
+            if rank == 0 {
+                st.a2a_ops += 1;
+                if let Some(c) = cl {
+                    // bytes_sent is per-rank; the model wants per-rank volume
+                    st.modeled_time += c.all_to_all_time(self.n, bytes_sent as f64);
+                }
+            }
+        });
+        result
+    }
+
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) {
+        // gather-to-root + broadcast; accounting models a ring all-reduce.
+        let bytes = data.len() * 4;
+        if rank == 0 {
+            for s in 1..self.n {
+                let part = bytes_to_f32s(&self.mb(s, 0).recv());
+                assert_eq!(part.len(), data.len(), "all_reduce length mismatch");
+                for (a, b) in data.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+            let payload = f32s_to_bytes(data);
+            for d in 1..self.n {
+                self.mb(0, d).send(payload.clone());
+            }
+        } else {
+            self.mb(rank, 0).send(f32s_to_bytes(data));
+            data.copy_from_slice(&bytes_to_f32s(&self.mb(0, rank).recv()));
+        }
+        self.account(|st, cl| {
+            st.allreduce_bytes += bytes as u64;
+            if rank == 0 {
+                st.allreduce_ops += 1;
+                if let Some(c) = cl {
+                    // ring all-reduce: 2*(n-1)/n of the buffer over the
+                    // slowest link + latency rounds.
+                    let n = self.n as f64;
+                    let vol = 2.0 * (n - 1.0) / n * bytes as f64;
+                    let link = c.node_net_bw / c.gpus_per_node as f64;
+                    st.modeled_time += vol / link + 2.0 * (n - 1.0) * c.alpha;
+                }
+            }
+        });
+    }
+
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+        let out = if rank == root {
+            let payload = data.expect("root must supply broadcast payload");
+            for d in 0..self.n {
+                if d != root {
+                    self.mb(root, d).send(payload.clone());
+                }
+            }
+            payload
+        } else {
+            self.mb(root, rank).recv()
+        };
+        self.account(|st, cl| {
+            if rank == root {
+                st.broadcast_ops += 1;
+                st.broadcast_bytes += out.len() as u64;
+                if let Some(c) = cl {
+                    // tree broadcast: log2(n) alpha rounds (payloads here
+                    // are tiny -- the paper's 1-bit decision).
+                    let rounds = (self.n as f64).log2().ceil();
+                    st.modeled_time += rounds * c.alpha;
+                }
+            }
+        });
+        out
+    }
+
+    fn barrier(&self, _rank: usize) {
+        self.barrier.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn run_ranks<F>(n: usize, f: F)
+    where
+        F: Fn(usize, &ThreadFabric) + Send + Sync + 'static,
+    {
+        let fab = Arc::new(ThreadFabric::new(n));
+        let f = Arc::new(f);
+        let mut hs = Vec::new();
+        for r in 0..n {
+            let fab = fab.clone();
+            let f = f.clone();
+            hs.push(std::thread::spawn(move || f(r, &fab)));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_to_all_routes_correctly() {
+        run_ranks(4, |rank, fab| {
+            // rank r sends [r*10 + d] to rank d
+            let out: Vec<Vec<f32>> = (0..4).map(|d| vec![(rank * 10 + d) as f32]).collect();
+            let got = fab.all_to_all(rank, out);
+            for (s, chunk) in got.iter().enumerate() {
+                assert_eq!(chunk, &vec![(s * 10 + rank) as f32]);
+            }
+        });
+    }
+
+    #[test]
+    fn all_to_all_preserves_total_payload() {
+        run_ranks(3, |rank, fab| {
+            let out: Vec<Vec<f32>> =
+                (0..3).map(|d| vec![rank as f32; d + 1]).collect();
+            let got = fab.all_to_all(rank, out);
+            let total: usize = got.iter().map(|c| c.len()).sum();
+            assert_eq!(total, 3 * (rank + 1)); // each src sends rank+1 floats to me
+        });
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        run_ranks(4, |rank, fab| {
+            let mut data = vec![rank as f32, 1.0];
+            fab.all_reduce_sum(rank, &mut data);
+            assert_eq!(data, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
+        });
+    }
+
+    #[test]
+    fn broadcast_delivers_root_payload() {
+        run_ranks(4, |rank, fab| {
+            let payload = if rank == 2 { Some(vec![42u8, 7]) } else { None };
+            let got = fab.broadcast(rank, 2, payload);
+            assert_eq!(got, vec![42, 7]);
+        });
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(crate::netmodel::V100_IB100)));
+        let f2 = fab.clone();
+        let h = std::thread::spawn(move || {
+            let _ = f2.all_to_all(1, vec![vec![1.0; 100], vec![2.0; 100]]);
+            let _ = f2.broadcast(1, 0, None);
+        });
+        let _ = fab.all_to_all(0, vec![vec![0.0; 100], vec![3.0; 100]]);
+        let _ = fab.broadcast(0, 0, Some(vec![1]));
+        h.join().unwrap();
+        let s = fab.stats();
+        assert_eq!(s.a2a_ops, 1);
+        assert_eq!(s.a2a_bytes, 2 * 400); // each rank mailed 100 floats off-rank
+        assert_eq!(s.broadcast_ops, 1);
+        assert!(s.modeled_time > 0.0);
+    }
+
+    #[test]
+    fn barrier_synchronises() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        run_ranks(4, |rank, fab| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+            fab.barrier(rank);
+            assert_eq!(COUNT.load(Ordering::SeqCst), 4);
+        });
+    }
+}

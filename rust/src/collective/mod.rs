@@ -1,0 +1,37 @@
+//! In-memory collective fabric: the communication substrate the paper's
+//! DeepSpeed/NCCL stack provides on real clusters.
+//!
+//! `ThreadFabric` connects N worker threads through per-(src,dst) mailboxes
+//! and implements the collectives the MoE training path needs:
+//! `all_to_all`, `all_reduce_sum`, `broadcast` (the coordinator's 1-bit
+//! decision rides this) and `barrier`.
+//!
+//! Every operation is *accounted*: byte counts per collective type and the
+//! modeled wall time it would take on a configured [`Cluster`]
+//! (`netmodel`), so the thread engine can report virtual cluster
+//! throughput while running real data movement on CPU threads.
+
+mod fabric;
+
+pub use fabric::{FabricStats, ThreadFabric};
+
+/// Collective operations as seen by one rank. All calls are collective:
+/// every rank must call the same op in the same order (SPMD), exactly like
+/// NCCL. Deadlocks on misuse are prevented by unbounded sends; receives
+/// block.
+pub trait Collective {
+    fn n_ranks(&self) -> usize;
+
+    /// Personalised exchange: `out[d]` goes to rank `d`; returns `inp[s]`
+    /// received from rank `s`. `out.len()` must equal `n_ranks()`.
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>>;
+
+    /// Element-wise sum across ranks; result replicated to every rank.
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]);
+
+    /// Root's payload is delivered to every rank (root passes Some).
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8>;
+
+    /// Rendezvous of all ranks.
+    fn barrier(&self, rank: usize);
+}

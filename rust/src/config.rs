@@ -1,0 +1,250 @@
+//! Run configuration: JSON files under `configs/` + CLI overrides.
+//!
+//! A `RunConfig` fully describes one training/benchmark run: which AOT
+//! artifact preset to load, the routing policy, cluster model, topology,
+//! dataset shape and schedule. Presets mirror the paper's experimental
+//! settings scaled to this testbed (DESIGN.md §4).
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Policy;
+use crate::netmodel::{Cluster, A100_IB1600, V100_IB100};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// AOT artifact preset directory under `artifacts/`.
+    pub preset: String,
+    pub policy: Policy,
+    pub steps: u64,
+    pub batch_rows: usize,
+    pub n_ranks: usize,
+    pub n_langs: usize,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub eval_pairs_per_dir: usize,
+    /// Cluster used to convert measured steps into virtual cluster time
+    /// (Fig 5 x-axis) and for the simengine sweeps.
+    pub cluster: Cluster,
+    /// Simulated GPU count for the virtual-time conversion.
+    pub sim_gpus: usize,
+    pub out_dir: String,
+    /// Optional linear-decay dropout schedule `p -> p1 over N steps`.
+    pub decay_to: Option<(f64, u64)>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            preset: "wmt10_sim".into(),
+            policy: Policy::Baseline,
+            steps: 300,
+            batch_rows: 8,
+            n_ranks: 8,
+            n_langs: 10,
+            seed: 42,
+            eval_every: 25,
+            eval_pairs_per_dir: 8,
+            cluster: V100_IB100,
+            sim_gpus: 16,
+            out_dir: "runs".into(),
+            decay_to: None,
+        }
+    }
+}
+
+pub fn cluster_by_name(name: &str) -> Result<Cluster> {
+    match name {
+        "v100" | "V100+IB100" => Ok(V100_IB100),
+        "a100" | "A100+IB1600" => Ok(A100_IB1600),
+        _ => bail!("unknown cluster '{name}' (v100|a100)"),
+    }
+}
+
+impl RunConfig {
+    /// Named run presets, mirroring the paper's Section 4.1 settings.
+    pub fn preset_named(name: &str) -> Result<RunConfig> {
+        let base = RunConfig::default();
+        Ok(match name {
+            // Table 2 / Fig 5 setting: 16 GPUs, WMT-10.
+            "wmt10" => RunConfig {
+                preset: "wmt10_sim".into(),
+                n_langs: 10,
+                sim_gpus: 16,
+                ..base
+            },
+            // Table 3/4 setting: 64 GPUs, Web-50, 16 experts.
+            "web50" => RunConfig {
+                preset: "web50_sim".into(),
+                n_langs: 50,
+                n_ranks: 16,
+                sim_gpus: 64,
+                steps: 200,
+                ..base
+            },
+            // End-to-end ~100M validation driver.
+            "e2e" => RunConfig {
+                preset: "e2e_100m".into(),
+                n_langs: 10,
+                sim_gpus: 16,
+                steps: 300,
+                eval_every: 50,
+                ..base
+            },
+            "tiny" | "ci" => RunConfig {
+                preset: "tiny".into(),
+                n_langs: 4,
+                n_ranks: 4,
+                steps: 20,
+                eval_every: 10,
+                eval_pairs_per_dir: 2,
+                sim_gpus: 8,
+                ..base
+            },
+            _ => bail!("unknown run preset '{name}'"),
+        })
+    }
+
+    /// Load from a JSON config file (all keys optional over the preset).
+    pub fn from_json_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let mut cfg = match j.get("run_preset").and_then(Json::as_str) {
+            Some(p) => RunConfig::preset_named(p)?,
+            None => RunConfig::default(),
+        };
+        cfg.apply_json(&j)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        if let Some(v) = j.get("preset").and_then(Json::as_str) {
+            self.preset = v.to_string();
+        }
+        if let Some(v) = j.get("policy").and_then(Json::as_str) {
+            self.policy =
+                Policy::parse(v).with_context(|| format!("bad policy '{v}'"))?;
+        }
+        if let Some(v) = j.get("steps").and_then(Json::as_i64) {
+            self.steps = v as u64;
+        }
+        if let Some(v) = j.get("batch_rows").and_then(Json::as_usize) {
+            self.batch_rows = v;
+        }
+        if let Some(v) = j.get("n_ranks").and_then(Json::as_usize) {
+            self.n_ranks = v;
+        }
+        if let Some(v) = j.get("n_langs").and_then(Json::as_usize) {
+            self.n_langs = v;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            self.seed = v as u64;
+        }
+        if let Some(v) = j.get("eval_every").and_then(Json::as_i64) {
+            self.eval_every = v as u64;
+        }
+        if let Some(v) = j.get("eval_pairs_per_dir").and_then(Json::as_usize) {
+            self.eval_pairs_per_dir = v;
+        }
+        if let Some(v) = j.get("cluster").and_then(Json::as_str) {
+            self.cluster = cluster_by_name(v)?;
+        }
+        if let Some(v) = j.get("sim_gpus").and_then(Json::as_usize) {
+            self.sim_gpus = v;
+        }
+        if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
+            self.out_dir = v.to_string();
+        }
+        Ok(())
+    }
+
+    /// CLI overrides on top of whatever is loaded.
+    pub fn apply_args(&mut self, a: &Args) -> Result<()> {
+        if let Some(p) = a.get("policy") {
+            self.policy = Policy::parse(p).with_context(|| format!("bad policy '{p}'"))?;
+        }
+        if let Some(p) = a.get("preset") {
+            self.preset = p.to_string();
+        }
+        self.steps = a.u64("steps", self.steps);
+        self.batch_rows = a.usize("batch-rows", self.batch_rows);
+        self.n_ranks = a.usize("ranks", self.n_ranks);
+        self.n_langs = a.usize("langs", self.n_langs);
+        self.seed = a.u64("seed", self.seed);
+        self.eval_every = a.u64("eval-every", self.eval_every);
+        self.sim_gpus = a.usize("sim-gpus", self.sim_gpus);
+        if let Some(c) = a.get("cluster") {
+            self.cluster = cluster_by_name(c)?;
+        }
+        if let Some(o) = a.get("out-dir") {
+            self.out_dir = o.to_string();
+        }
+        if let Some(d) = a.get("decay-to") {
+            // "--decay-to 0.0@2000"
+            let (p1, over) = d
+                .split_once('@')
+                .context("--decay-to wants P1@STEPS")?;
+            self.decay_to = Some((p1.parse()?, over.parse()?));
+        }
+        Ok(())
+    }
+
+    pub fn artifact_dir(&self) -> String {
+        format!("artifacts/{}", self.preset)
+    }
+
+    pub fn run_name(&self) -> String {
+        format!("{}_{}", self.preset, self.policy.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for p in ["wmt10", "web50", "e2e", "tiny"] {
+            let c = RunConfig::preset_named(p).unwrap();
+            assert!(c.steps > 0);
+            assert!(c.n_ranks > 0);
+        }
+        assert!(RunConfig::preset_named("nope").is_err());
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut c = RunConfig::default();
+        let j = Json::parse(
+            r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4}"#,
+        )
+        .unwrap();
+        c.apply_json(&j).unwrap();
+        assert_eq!(c.policy, Policy::GateDrop { p: 0.4 });
+        assert_eq!(c.steps, 77);
+        assert_eq!(c.cluster.name, "A100+IB1600");
+        assert_eq!(c.n_ranks, 4);
+    }
+
+    #[test]
+    fn args_overrides() {
+        let mut c = RunConfig::default();
+        let a = Args::parse(
+            "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.policy, Policy::GateExpertDrop { p: 0.2 });
+        assert_eq!(c.steps, 5);
+        assert_eq!(c.decay_to, Some((0.0, 100)));
+    }
+
+    #[test]
+    fn bad_policy_is_error() {
+        let mut c = RunConfig::default();
+        let a = Args::parse(["--policy".to_string(), "bogus".to_string()]);
+        assert!(c.apply_args(&a).is_err());
+    }
+}

@@ -1,0 +1,138 @@
+//! Distributed decision protocol: leader samples, everyone obeys.
+//!
+//! This is the literal mechanism from Section 3 of the paper: "we appoint
+//! one machine as the coordinator, responsible for making the randomized
+//! decision, and broadcasting the decision to all the machines at each
+//! iteration. The overhead of broadcasting the decision is negligible,
+//! because the decision can be represented by a binary value."
+//!
+//! Each rank holds a `DistCoordinator`; `decide(step)` performs the
+//! broadcast collective (root = rank 0 = leader) and returns the identical
+//! [`Decision`] on every rank. A per-rank audit log records the decoded
+//! stream so tests can assert consensus.
+
+use std::sync::Arc;
+
+use crate::collective::Collective;
+
+use super::{Coordinator, Decision, DropSchedule, Policy};
+
+pub struct DistCoordinator<C: Collective> {
+    rank: usize,
+    fabric: Arc<C>,
+    /// Only the leader's sampler is ever consulted.
+    leader: Option<Coordinator>,
+    audit: Vec<u8>,
+}
+
+impl<C: Collective> DistCoordinator<C> {
+    pub const LEADER: usize = 0;
+
+    pub fn new(rank: usize, fabric: Arc<C>, policy: Policy, seed: u64) -> Self {
+        let leader =
+            (rank == Self::LEADER).then(|| Coordinator::new(policy, seed));
+        DistCoordinator { rank, fabric, leader, audit: Vec::new() }
+    }
+
+    pub fn with_schedule(mut self, schedule: DropSchedule) -> Self {
+        if let Some(l) = self.leader.take() {
+            self.leader = Some(l.with_schedule(schedule));
+        }
+        self
+    }
+
+    /// Collective call: every rank must call it with the same step.
+    pub fn decide(&mut self, step: u64) -> Decision {
+        let payload = self.leader.as_mut().map(|l| vec![l.decide(step).encode()]);
+        let got = self.fabric.broadcast(self.rank, Self::LEADER, payload);
+        let d = Decision::decode(got[0]);
+        self.audit.push(d.encode());
+        d
+    }
+
+    /// The decoded decision stream this rank observed (consensus audits).
+    pub fn audit_log(&self) -> &[u8] {
+        &self.audit
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::ThreadFabric;
+    use std::sync::Mutex;
+
+    /// The paper's consensus requirement: every rank decodes the identical
+    /// decision stream, for any policy and seed.
+    #[test]
+    fn all_ranks_agree_for_all_policies() {
+        for policy in [
+            Policy::Baseline,
+            Policy::GateDrop { p: 0.4 },
+            Policy::GateExpertDrop { p: 0.2 },
+            Policy::HashLayer,
+            Policy::NoAllToAll,
+        ] {
+            let n = 4;
+            let fabric = Arc::new(ThreadFabric::new(n));
+            let logs: Arc<Mutex<Vec<Vec<u8>>>> = Arc::new(Mutex::new(vec![Vec::new(); n]));
+            let mut hs = Vec::new();
+            for rank in 0..n {
+                let fabric = fabric.clone();
+                let logs = logs.clone();
+                hs.push(std::thread::spawn(move || {
+                    let mut c = DistCoordinator::new(rank, fabric, policy, 1234);
+                    for s in 0..200 {
+                        c.decide(s);
+                    }
+                    logs.lock().unwrap()[rank] = c.audit_log().to_vec();
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            let logs = logs.lock().unwrap();
+            for r in 1..n {
+                assert_eq!(logs[0], logs[r], "rank {r} diverged under {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_stream_matches_local_coordinator() {
+        // The broadcast must not change the decision stream: a single-rank
+        // DistCoordinator replays exactly the local Coordinator.
+        let fabric = Arc::new(ThreadFabric::new(1));
+        let mut dist = DistCoordinator::new(0, fabric, Policy::GateDrop { p: 0.3 }, 77);
+        let mut local = Coordinator::new(Policy::GateDrop { p: 0.3 }, 77);
+        for s in 0..500 {
+            assert_eq!(dist.decide(s), local.decide(s));
+        }
+    }
+
+    #[test]
+    fn broadcast_bytes_are_negligible() {
+        // Paper: "the overhead of broadcasting the decision is negligible".
+        let n = 4;
+        let fabric = Arc::new(ThreadFabric::new(n));
+        let mut hs = Vec::new();
+        for rank in 0..n {
+            let fabric = fabric.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut c =
+                    DistCoordinator::new(rank, fabric.clone(), Policy::GateDrop { p: 0.3 }, 5);
+                for s in 0..100 {
+                    c.decide(s);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(fabric.stats().broadcast_bytes, 100); // one byte per step
+    }
+}

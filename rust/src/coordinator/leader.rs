@@ -1,0 +1,173 @@
+//! The leader-side decision stream.
+//!
+//! A [`Coordinator`] owns the policy, the (optional) rate schedule, and a
+//! seeded RNG; `decide(step)` yields the per-iteration [`Decision`]. In
+//! single-process training the trainer calls this directly; in the
+//! distributed engine, only rank 0 samples and the bit travels through the
+//! fabric (`DistCoordinator`).
+
+use crate::util::rng::Rng;
+
+use super::{Decision, DropSchedule, Policy};
+
+#[derive(Debug, Clone)]
+pub struct Coordinator {
+    policy: Policy,
+    schedule: DropSchedule,
+    rng: Rng,
+    // audit counters
+    steps: u64,
+    dropped: u64,
+}
+
+impl Coordinator {
+    pub fn new(policy: Policy, seed: u64) -> Self {
+        let schedule = DropSchedule::Constant(policy.rate());
+        Coordinator { policy, schedule, rng: Rng::new(seed).fork(0xC0DE), steps: 0, dropped: 0 }
+    }
+
+    /// Override the rate schedule (the future-work ablation).
+    pub fn with_schedule(mut self, schedule: DropSchedule) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Sample the consensual decision for `step`.
+    ///
+    /// NOTE the RNG draw happens for every policy (even Baseline, where the
+    /// outcome is discarded): the decision *stream* is thereby aligned
+    /// across policies run from the same seed, which removes one source of
+    /// run-to-run variance in the comparison benches.
+    pub fn decide(&mut self, step: u64) -> Decision {
+        let p = self.schedule.rate_at(step);
+        let coin = self.rng.bernoulli(p);
+        let d = match self.policy {
+            Policy::Baseline => Decision { drop: false, expert_skip: false, hash_route: false },
+            Policy::HashLayer => Decision { drop: false, expert_skip: false, hash_route: true },
+            Policy::NoAllToAll => Decision { drop: true, expert_skip: false, hash_route: false },
+            Policy::GateDrop { .. } => {
+                Decision { drop: coin, expert_skip: false, hash_route: false }
+            }
+            Policy::GateExpertDrop { .. } => {
+                Decision { drop: coin, expert_skip: coin, hash_route: false }
+            }
+        };
+        self.steps += 1;
+        self.dropped += d.drop as u64;
+        d
+    }
+
+    /// Fraction of steps on which the dropout fired so far.
+    pub fn observed_rate(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.steps as f64
+        }
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+
+    #[test]
+    fn baseline_never_drops() {
+        let mut c = Coordinator::new(Policy::Baseline, 1);
+        for s in 0..1000 {
+            let d = c.decide(s);
+            assert!(!d.drop && !d.hash_route && !d.expert_skip);
+        }
+        assert_eq!(c.observed_rate(), 0.0);
+    }
+
+    #[test]
+    fn noalltoall_always_drops() {
+        let mut c = Coordinator::new(Policy::NoAllToAll, 1);
+        for s in 0..100 {
+            assert!(c.decide(s).drop);
+        }
+        assert_eq!(c.observed_rate(), 1.0);
+    }
+
+    #[test]
+    fn hash_layer_routes_by_hash_and_keeps_alltoall() {
+        let mut c = Coordinator::new(Policy::HashLayer, 1);
+        let d = c.decide(0);
+        assert!(d.hash_route && d.needs_alltoall());
+    }
+
+    #[test]
+    fn gate_drop_rate_converges_to_p() {
+        for &p in &[0.1, 0.2, 0.3, 0.5] {
+            let mut c = Coordinator::new(Policy::GateDrop { p }, 99);
+            for s in 0..20_000 {
+                c.decide(s);
+            }
+            let r = c.observed_rate();
+            assert!((r - p).abs() < 0.02, "p={p} observed={r}");
+        }
+    }
+
+    #[test]
+    fn ged_drop_implies_expert_skip() {
+        let mut c = Coordinator::new(Policy::GateExpertDrop { p: 0.5 }, 5);
+        let mut saw_drop = false;
+        for s in 0..200 {
+            let d = c.decide(s);
+            assert_eq!(d.drop, d.expert_skip, "GED couples the two skips");
+            saw_drop |= d.drop;
+        }
+        assert!(saw_drop);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = Coordinator::new(Policy::GateDrop { p: 0.3 }, 7);
+        let mut b = Coordinator::new(Policy::GateDrop { p: 0.3 }, 7);
+        for s in 0..500 {
+            assert_eq!(a.decide(s), b.decide(s));
+        }
+    }
+
+    #[test]
+    fn decision_stream_aligned_across_policies() {
+        // The same seed must fire Gate-Drop and Gate-Expert-Drop on the
+        // same steps (the RNG draw is policy-independent).
+        let mut gd = Coordinator::new(Policy::GateDrop { p: 0.3 }, 11)
+            .with_schedule(DropSchedule::Constant(0.3));
+        let mut ged = Coordinator::new(Policy::GateExpertDrop { p: 0.3 }, 11)
+            .with_schedule(DropSchedule::Constant(0.3));
+        for s in 0..500 {
+            assert_eq!(gd.decide(s).drop, ged.decide(s).drop);
+        }
+    }
+
+    #[test]
+    fn prop_schedule_rate_tracks_decay() {
+        run_prop("decay-rate", 10, 13, |rng| {
+            let p0 = rng.uniform() * 0.5 + 0.2;
+            let mut c = Coordinator::new(Policy::GateDrop { p: p0 }, rng.next_u64())
+                .with_schedule(DropSchedule::LinearDecay { p0, p1: 0.0, over: 4000 });
+            for s in 0..4000 {
+                c.decide(s);
+            }
+            let expect = p0 / 2.0;
+            let got = c.observed_rate();
+            if (got - expect).abs() < 0.05 {
+                Ok(())
+            } else {
+                Err(format!("expected ~{expect}, got {got}"))
+            }
+        });
+    }
+}

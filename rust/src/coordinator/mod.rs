@@ -1,0 +1,28 @@
+//! The paper's system contribution: the Gating Dropout coordinator.
+//!
+//! At every training iteration the coordinator decides -- *consensually
+//! across all machines* -- whether this step skips the all-to-all (Gating
+//! Dropout ON) or routes normally (OFF). Section 3 of the paper: one
+//! machine is appointed coordinator; it samples Bernoulli(p) and
+//! broadcasts the one-bit decision; all machines obey it, because
+//! all-to-all is a collective that every rank must enter together.
+//!
+//! Modules:
+//!   policy    -- the routing policies under comparison (Baseline,
+//!                Gate-Drop, Gate-Expert-Drop, Hash-Layer, NoAllToAll)
+//!                and the per-step [`Decision`] they produce
+//!   schedule  -- dropout-rate schedules (constant, and the paper's
+//!                future-work linear decay)
+//!   leader    -- the decision source (seeded RNG stream)
+//!   dist      -- the distributed protocol: leader broadcast + consensus
+//!                audit over a [`Collective`] fabric
+
+mod dist;
+mod leader;
+mod policy;
+mod schedule;
+
+pub use dist::DistCoordinator;
+pub use leader::Coordinator;
+pub use policy::{Decision, Policy};
+pub use schedule::DropSchedule;

@@ -1,0 +1,151 @@
+//! Routing policies and the per-step decision they induce.
+
+/// Routing policy under comparison in the paper's evaluation (Table 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// Gated top-1 routing with all-to-all every step (Kim et al. 2021
+    /// baseline, with input jitter + balance loss).
+    Baseline,
+    /// The paper's Gate-Drop: with prob `p`, all tokens stay on their
+    /// local experts and the all-to-all is skipped.
+    GateDrop { p: f64 },
+    /// The paper's Gate-Expert-Drop: as Gate-Drop, but dropped steps also
+    /// skip the expert FFN entirely (LayerDrop-style).
+    GateExpertDrop { p: f64 },
+    /// Hash-Layer baseline (Roller et al. 2021): routing by token-id hash;
+    /// still pays the all-to-all.
+    HashLayer,
+    /// Upper-bound variant from Fig 3: all-to-all always skipped (p = 1).
+    /// "it is not possible to achieve this upper-bound [in quality] since
+    /// the model will not be able to learn any gating".
+    NoAllToAll,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Baseline => "baseline",
+            Policy::GateDrop { .. } => "gate-drop",
+            Policy::GateExpertDrop { .. } => "gate-expert-drop",
+            Policy::HashLayer => "hash-layer",
+            Policy::NoAllToAll => "no-alltoall",
+        }
+    }
+
+    /// The dropout rate this policy samples with (0 when not applicable).
+    pub fn rate(&self) -> f64 {
+        match self {
+            Policy::GateDrop { p } | Policy::GateExpertDrop { p } => *p,
+            Policy::NoAllToAll => 1.0,
+            _ => 0.0,
+        }
+    }
+
+    /// Parse "gate-drop:0.3"-style CLI/config strings.
+    pub fn parse(s: &str) -> Option<Policy> {
+        let (name, rate) = match s.split_once(':') {
+            Some((n, r)) => (n, r.parse::<f64>().ok()?),
+            None => (s, f64::NAN),
+        };
+        let default = |d: f64| if rate.is_nan() { d } else { rate };
+        match name {
+            "baseline" => Some(Policy::Baseline),
+            // defaults from Section 4.1: p=0.3 Gate-Drop, p=0.2 GED
+            "gate-drop" => Some(Policy::GateDrop { p: default(0.3) }),
+            "gate-expert-drop" => Some(Policy::GateExpertDrop { p: default(0.2) }),
+            "hash-layer" => Some(Policy::HashLayer),
+            "no-alltoall" => Some(Policy::NoAllToAll),
+            _ => None,
+        }
+    }
+}
+
+/// The consensual per-iteration decision, as broadcast to every rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Decision {
+    /// Gating Dropout fired: tokens route to their local experts.
+    pub drop: bool,
+    /// Dropped step also skips the expert FFN (Gate-Expert-Drop).
+    pub expert_skip: bool,
+    /// Routing comes from the token-id hash (Hash-Layer policy).
+    pub hash_route: bool,
+}
+
+impl Decision {
+    /// Does this step need the all-to-all collective? (The whole point:
+    /// a dropped step does not.)
+    pub fn needs_alltoall(&self) -> bool {
+        !self.drop
+    }
+
+    /// Does this step run the expert FFN?
+    pub fn runs_expert(&self) -> bool {
+        !(self.drop && self.expert_skip)
+    }
+
+    /// Wire format for the coordinator broadcast: one byte (the paper
+    /// notes the decision "can be represented by a binary value"; we spend
+    /// three bits to carry the policy variant for the audit log).
+    pub fn encode(&self) -> u8 {
+        (self.drop as u8) | (self.expert_skip as u8) << 1 | (self.hash_route as u8) << 2
+    }
+
+    pub fn decode(b: u8) -> Decision {
+        Decision {
+            drop: b & 1 != 0,
+            expert_skip: b & 2 != 0,
+            hash_route: b & 4 != 0,
+        }
+    }
+
+    /// The flag values fed to the AOT `train_step` artifact.
+    pub fn as_flags(&self) -> (f32, f32, f32) {
+        (
+            self.drop as u8 as f32,
+            self.expert_skip as u8 as f32,
+            self.hash_route as u8 as f32,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Policy::parse("baseline"), Some(Policy::Baseline));
+        assert_eq!(Policy::parse("gate-drop:0.5"), Some(Policy::GateDrop { p: 0.5 }));
+        assert_eq!(Policy::parse("gate-drop"), Some(Policy::GateDrop { p: 0.3 }));
+        assert_eq!(
+            Policy::parse("gate-expert-drop"),
+            Some(Policy::GateExpertDrop { p: 0.2 })
+        );
+        assert_eq!(Policy::parse("hash-layer"), Some(Policy::HashLayer));
+        assert_eq!(Policy::parse("no-alltoall"), Some(Policy::NoAllToAll));
+        assert_eq!(Policy::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn encode_decode_all_combos() {
+        for drop in [false, true] {
+            for es in [false, true] {
+                for h in [false, true] {
+                    let d = Decision { drop, expert_skip: es, hash_route: h };
+                    assert_eq!(Decision::decode(d.encode()), d);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_skipped_iff_dropped() {
+        let on = Decision { drop: true, expert_skip: false, hash_route: false };
+        let off = Decision { drop: false, expert_skip: false, hash_route: false };
+        assert!(!on.needs_alltoall());
+        assert!(off.needs_alltoall());
+        assert!(on.runs_expert());
+        let ged = Decision { drop: true, expert_skip: true, hash_route: false };
+        assert!(!ged.runs_expert());
+    }
+}

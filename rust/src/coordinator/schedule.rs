@@ -1,0 +1,88 @@
+//! Dropout-rate schedules.
+//!
+//! The paper trains with a constant rate (0.3 Gate-Drop / 0.2 GED) and
+//! names *varying the rate over training* as future work ("exploration
+//! might be much more important at the early stage"). `LinearDecay` and
+//! `CosineDecay` implement that extension; the ablation bench
+//! `fig6_rate_sweep --schedule` compares them.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DropSchedule {
+    /// The paper's setting: rate `p` at every step.
+    Constant(f64),
+    /// Rate decays linearly from `p0` (step 0) to `p1` (step `over`),
+    /// constant `p1` afterwards.
+    LinearDecay { p0: f64, p1: f64, over: u64 },
+    /// Cosine ramp from `p0` to `p1` over `over` steps.
+    CosineDecay { p0: f64, p1: f64, over: u64 },
+}
+
+impl DropSchedule {
+    pub fn rate_at(&self, step: u64) -> f64 {
+        match *self {
+            DropSchedule::Constant(p) => p,
+            DropSchedule::LinearDecay { p0, p1, over } => {
+                if over == 0 || step >= over {
+                    p1
+                } else {
+                    p0 + (p1 - p0) * step as f64 / over as f64
+                }
+            }
+            DropSchedule::CosineDecay { p0, p1, over } => {
+                if over == 0 || step >= over {
+                    p1
+                } else {
+                    let t = step as f64 / over as f64;
+                    p1 + (p0 - p1) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+                }
+            }
+        }
+    }
+
+    /// Mean rate over the first `steps` steps (used by the sim engine to
+    /// convert a schedule into expected step time).
+    pub fn mean_rate(&self, steps: u64) -> f64 {
+        if steps == 0 {
+            return self.rate_at(0);
+        }
+        (0..steps).map(|s| self.rate_at(s)).sum::<f64>() / steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = DropSchedule::Constant(0.3);
+        assert_eq!(s.rate_at(0), 0.3);
+        assert_eq!(s.rate_at(1_000_000), 0.3);
+    }
+
+    #[test]
+    fn linear_decays_and_clamps() {
+        let s = DropSchedule::LinearDecay { p0: 0.5, p1: 0.1, over: 100 };
+        assert_eq!(s.rate_at(0), 0.5);
+        assert!((s.rate_at(50) - 0.3).abs() < 1e-12);
+        assert_eq!(s.rate_at(100), 0.1);
+        assert_eq!(s.rate_at(5000), 0.1);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let s = DropSchedule::CosineDecay { p0: 0.4, p1: 0.0, over: 10 };
+        assert!((s.rate_at(0) - 0.4).abs() < 1e-12);
+        assert_eq!(s.rate_at(10), 0.0);
+        // monotone decreasing
+        let rates: Vec<f64> = (0..=10).map(|i| s.rate_at(i)).collect();
+        assert!(rates.windows(2).all(|w| w[1] <= w[0] + 1e-12));
+    }
+
+    #[test]
+    fn mean_rate_of_linear() {
+        let s = DropSchedule::LinearDecay { p0: 0.4, p1: 0.0, over: 100 };
+        let m = s.mean_rate(100);
+        assert!((m - 0.2).abs() < 0.01, "mean={m}");
+    }
+}

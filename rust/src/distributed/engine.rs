@@ -1,0 +1,483 @@
+//! Worker threads + the full distributed training step.
+//!
+//! Forward/backward dataflow per rank (see dist_stages.py for the stage
+//! algebra and mod.rs for the step diagram):
+//!
+//!   s1_fwd -> route (gated / hash / LOCAL on dropped steps)
+//!          -> [all-to-all]            (skipped when the decision drops)
+//!          -> expert_fwd              (skipped on Gate-Expert-Drop)
+//!          -> [all-to-all back] -> y = h + gate*ye
+//!          -> head_loss_bwd -> dy
+//!          -> [all-to-all dye] -> expert_bwd -> [all-to-all dxe]
+//!          -> s1_bwd -> all_reduce(dense grads) -> host Adam
+//!
+//! Expert parameters never leave their rank (expert parallelism); dense
+//! parameters stay bit-identical across ranks because they see identical
+//! all-reduced gradients -- asserted after every run.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::collective::{Collective, FabricStats, ThreadFabric};
+use crate::coordinator::{Decision, DistCoordinator, Policy};
+use crate::moe;
+use crate::topology::Topology;
+use crate::util::rng::Rng;
+
+use super::optim::Adam;
+use super::stages::{lit1, lit1_i32, lit2, DistManifest, StageRunner};
+use super::task::ClusterTask;
+
+#[derive(Debug, Clone)]
+pub struct DistRunConfig {
+    pub artifact_dir: String,
+    pub n_ranks: usize,
+    pub steps: u64,
+    pub policy: Policy,
+    pub seed: u64,
+    pub lr: f32,
+}
+
+impl Default for DistRunConfig {
+    fn default() -> Self {
+        DistRunConfig {
+            artifact_dir: "artifacts/dist".into(),
+            n_ranks: 4,
+            steps: 30,
+            policy: Policy::Baseline,
+            seed: 7,
+            lr: 2e-3,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DistRunResult {
+    /// Rank-mean loss per step.
+    pub losses: Vec<f32>,
+    pub fabric: FabricStats,
+    pub wall_secs: f64,
+    /// (decision.drop, rank-0 measured step seconds) per step.
+    pub step_wall: Vec<(bool, f64)>,
+    /// Dense parameters bit-identical across ranks at the end?
+    pub dense_consistent: bool,
+    pub observed_drop_rate: f64,
+}
+
+struct WorkerState {
+    rank: usize,
+    topo: Topology,
+    runner: StageRunner,
+    // dense (replicated)
+    w_in: Vec<f32>,
+    b_in: Vec<f32>,
+    wr: Vec<f32>,
+    w_out: Vec<f32>,
+    // resident expert
+    w1: Vec<f32>,
+    w2: Vec<f32>,
+    // host optimizers
+    o_win: Adam,
+    o_bin: Adam,
+    o_wr: Adam,
+    o_wout: Adam,
+    o_w1: Adam,
+    o_w2: Adam,
+}
+
+impl WorkerState {
+    fn new(rank: usize, m: DistManifest, lr: f32) -> Result<WorkerState> {
+        let topo = Topology::new(m.ranks, m.ranks); // one expert per rank
+        let w_in = m.load_init("w_in")?;
+        let b_in = m.load_init("b_in")?;
+        let wr = m.load_init("wr")?;
+        let w_out = m.load_init("w_out")?;
+        let w1 = m.load_init(&format!("expert{rank}_w1"))?;
+        let w2 = m.load_init(&format!("expert{rank}_w2"))?;
+        let runner = StageRunner::new(m)?;
+        Ok(WorkerState {
+            rank,
+            topo,
+            o_win: Adam::new(w_in.len(), lr),
+            o_bin: Adam::new(b_in.len(), lr),
+            o_wr: Adam::new(wr.len(), lr),
+            o_wout: Adam::new(w_out.len(), lr),
+            o_w1: Adam::new(w1.len(), lr),
+            o_w2: Adam::new(w2.len(), lr),
+            w_in,
+            b_in,
+            wr,
+            w_out,
+            w1,
+            w2,
+            runner,
+        })
+    }
+
+    /// One full training step; returns this rank's loss.
+    fn step(
+        &mut self,
+        fabric: &ThreadFabric,
+        decision: Decision,
+        x: &[f32],
+        labels: &[i32],
+        global_step: u64,
+    ) -> Result<f32> {
+        let m = &self.runner.manifest;
+        let (din, d, t, r) = (m.d_in, m.d_model, m.tokens_per_rank, m.ranks);
+        let cap = t; // expert buffer rows = tokens_per_rank (one expert/rank)
+
+        // ---- stage 1 forward -------------------------------------------------
+        let out = self.runner.run(
+            "s1_fwd",
+            &[
+                lit2(&self.w_in, din, d)?,
+                lit1(&self.b_in),
+                lit2(&self.wr, d, r)?,
+                lit2(x, t, din)?,
+            ],
+        )?;
+        let (h, probs) = (&out[0], &out[1]);
+
+        // ---- routing ---------------------------------------------------------
+        let (experts, gates): (Vec<usize>, Vec<f32>) = if decision.drop {
+            // Gating Dropout: every token to the rank's own expert.
+            let e: Vec<usize> = (0..t).map(|_| self.rank).collect();
+            let g: Vec<f32> =
+                (0..t).map(|i| moe::gate_of(probs, r, i, self.rank)).collect();
+            (e, g)
+        } else if decision.hash_route {
+            let e: Vec<usize> = (0..t)
+                .map(|i| {
+                    moe::hash_expert((self.rank * t + i) as u32 ^ (global_step as u32) << 10, r)
+                })
+                .collect();
+            let g: Vec<f32> =
+                e.iter().enumerate().map(|(i, &ei)| moe::gate_of(probs, r, i, ei)).collect();
+            (e, g)
+        } else {
+            moe::top1(probs, t, r)
+        };
+
+        // ---- dispatch (+all-to-all unless dropped) ---------------------------
+        let (xe, admitted) = if decision.drop {
+            if decision.expert_skip {
+                (Vec::new(), Vec::new())
+            } else {
+                // local-only: xe = h rows in token order, slot = token idx
+                let admitted: Vec<moe::Admitted> = (0..t)
+                    .map(|i| moe::Admitted {
+                        src_rank: self.rank,
+                        src_idx: i,
+                        gate: gates[i],
+                        slot: i,
+                        local_expert: 0,
+                    })
+                    .collect();
+                (h.clone(), admitted)
+            }
+        } else {
+            let packed = moe::route_pack(self.rank, &self.topo, h, d, &experts, &gates);
+            let arrivals = fabric.all_to_all(self.rank, packed);
+            moe::route_admit(self.rank, &self.topo, &arrivals, d, cap)
+        };
+
+        // ---- expert forward (skipped on Gate-Expert-Drop) --------------------
+        let ye: Option<Vec<f32>> = if decision.runs_expert() {
+            let out = self.runner.run(
+                "expert_fwd",
+                &[
+                    lit2(&self.w1, d, m.d_ff)?,
+                    lit2(&self.w2, m.d_ff, d)?,
+                    lit2(&xe, cap, d)?,
+                ],
+            )?;
+            Some(out.into_iter().next().unwrap())
+        } else {
+            None
+        };
+
+        // ---- combine (+return all-to-all unless dropped) ---------------------
+        // ret: per-token combined/raw/slot/gate view on the home rank.
+        let ret: moe::Returned = match (&ye, decision.drop) {
+            (None, _) => moe::Returned {
+                combined: vec![0.0; t * d],
+                raw: vec![0.0; t * d],
+                slot: vec![-1; t],
+                gate: vec![0.0; t],
+            },
+            (Some(ye), true) => {
+                // local: token i <-> slot i
+                let mut out = moe::Returned {
+                    combined: vec![0.0; t * d],
+                    raw: ye.clone(),
+                    slot: (0..t as i32).collect(),
+                    gate: gates.clone(),
+                };
+                for i in 0..t {
+                    for j in 0..d {
+                        out.combined[i * d + j] = gates[i] * ye[i * d + j];
+                    }
+                }
+                out
+            }
+            (Some(ye), false) => {
+                let back = moe::return_pack(&self.topo, &admitted, ye, d);
+                let arrivals = fabric.all_to_all(self.rank, back);
+                moe::return_unpack(&arrivals, t, d)
+            }
+        };
+        let mut y = vec![0f32; t * d];
+        for i in 0..t * d {
+            y[i] = h[i] + ret.combined[i];
+        }
+
+        // ---- head + loss + dy -------------------------------------------------
+        let out = self.runner.run(
+            "head_loss_bwd",
+            &[
+                lit2(&self.w_out, d, m.n_classes)?,
+                lit2(&y, t, d)?,
+                lit1_i32(labels),
+            ],
+        )?;
+        let loss = out[0][0];
+        let dy = &out[1];
+        let dw_out = out[2].clone();
+
+        // ---- backward through combine / expert / dispatch --------------------
+        let mut dh: Vec<f32> = dy.clone(); // residual path
+        let mut dprobs = vec![0f32; t * r];
+        let (dw1, dw2): (Vec<f32>, Vec<f32>) = if decision.runs_expert() {
+            // cotangents for expert outputs, per token
+            let mut dgate = vec![0f32; t];
+            for i in 0..t {
+                if ret.slot[i] >= 0 {
+                    let mut acc = 0f32;
+                    for j in 0..d {
+                        acc += dy[i * d + j] * ret.raw[i * d + j];
+                    }
+                    dgate[i] = acc;
+                    // gate gradient flows into the chosen expert's prob
+                    dprobs[i * r + experts[i]] = dgate[i];
+                }
+            }
+            // dye rows to expert ranks
+            let dye_buf: Vec<f32> = if decision.drop {
+                // local: slot i = token i
+                let mut buf = vec![0f32; cap * d];
+                for i in 0..t {
+                    for j in 0..d {
+                        buf[i * d + j] = ret.gate[i] * dy[i * d + j];
+                    }
+                }
+                buf
+            } else {
+                // ship [slot, src_idx, gate, gate*dy_row] to the expert owner
+                let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
+                for i in 0..t {
+                    if ret.slot[i] < 0 {
+                        continue;
+                    }
+                    let dest = self.topo.owner_of(experts[i]);
+                    let msg = &mut msgs[dest];
+                    msg.push(ret.slot[i] as f32);
+                    msg.push(i as f32);
+                    msg.push(ret.gate[i]);
+                    for j in 0..d {
+                        msg.push(ret.gate[i] * dy[i * d + j]);
+                    }
+                }
+                let arrivals = fabric.all_to_all(self.rank, msgs);
+                let mut buf = vec![0f32; cap * d];
+                let stride = moe::HEADER + d;
+                for msg in &arrivals {
+                    for tok in msg.chunks_exact(stride) {
+                        let slot = tok[0] as usize;
+                        buf[slot * d..(slot + 1) * d].copy_from_slice(&tok[moe::HEADER..]);
+                    }
+                }
+                buf
+            };
+            let out = self.runner.run(
+                "expert_bwd",
+                &[
+                    lit2(&self.w1, d, m.d_ff)?,
+                    lit2(&self.w2, m.d_ff, d)?,
+                    lit2(&xe, cap, d)?,
+                    lit2(&dye_buf, cap, d)?,
+                ],
+            )?;
+            let dxe = &out[0];
+            let dw1 = out[1].clone();
+            let dw2 = out[2].clone();
+            // route dxe rows back to token home ranks -> dh += dxe
+            if decision.drop {
+                for i in 0..t * d {
+                    dh[i] += dxe[i];
+                }
+            } else {
+                let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
+                for a in &admitted {
+                    let msg = &mut msgs[a.src_rank];
+                    msg.push(a.slot as f32);
+                    msg.push(a.src_idx as f32);
+                    msg.push(a.gate);
+                    msg.extend_from_slice(&dxe[a.slot * d..(a.slot + 1) * d]);
+                }
+                let arrivals = fabric.all_to_all(self.rank, msgs);
+                let stride = moe::HEADER + d;
+                for msg in &arrivals {
+                    for tok in msg.chunks_exact(stride) {
+                        let i = tok[1] as usize;
+                        for j in 0..d {
+                            dh[i * d + j] += tok[moe::HEADER + j];
+                        }
+                    }
+                }
+            }
+            (dw1, dw2)
+        } else {
+            (vec![0f32; self.w1.len()], vec![0f32; self.w2.len()])
+        };
+
+        // ---- stage-1 backward -------------------------------------------------
+        let out = self.runner.run(
+            "s1_bwd",
+            &[
+                lit2(&self.w_in, din, d)?,
+                lit1(&self.b_in),
+                lit2(&self.wr, d, r)?,
+                lit2(x, t, din)?,
+                lit2(&dh, t, d)?,
+                lit2(&dprobs, t, r)?,
+            ],
+        )?;
+        let (mut dw_in, mut db_in, mut dwr) = (out[0].clone(), out[1].clone(), out[2].clone());
+
+        // ---- dense all-reduce + host Adam -------------------------------------
+        let mut dw_out = dw_out;
+        fabric.all_reduce_sum(self.rank, &mut dw_in);
+        fabric.all_reduce_sum(self.rank, &mut db_in);
+        fabric.all_reduce_sum(self.rank, &mut dwr);
+        fabric.all_reduce_sum(self.rank, &mut dw_out);
+        let scale = 1.0 / r as f32;
+        for g in [&mut dw_in, &mut db_in, &mut dwr, &mut dw_out] {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+        self.o_win.step(&mut self.w_in, &dw_in);
+        self.o_bin.step(&mut self.b_in, &db_in);
+        self.o_wr.step(&mut self.wr, &dwr);
+        self.o_wout.step(&mut self.w_out, &dw_out);
+        if decision.runs_expert() {
+            self.o_w1.step(&mut self.w1, &dw1);
+            self.o_w2.step(&mut self.w2, &dw2);
+        }
+        Ok(loss)
+    }
+}
+
+pub struct DistEngine;
+
+impl DistEngine {
+    /// Run `cfg.steps` of distributed training; returns losses + fabric
+    /// accounting + per-step wallclock split by decision.
+    pub fn run(cfg: &DistRunConfig) -> Result<DistRunResult> {
+        let manifest = DistManifest::load(&cfg.artifact_dir)?;
+        anyhow::ensure!(
+            cfg.n_ranks == manifest.ranks,
+            "artifact exported for {} ranks, requested {}",
+            manifest.ranks,
+            cfg.n_ranks
+        );
+        let n = manifest.ranks;
+        let fabric = Arc::new(ThreadFabric::new(n));
+        let task = Arc::new(ClusterTask::new(
+            manifest.d_in,
+            manifest.n_classes,
+            n,
+            cfg.seed,
+        ));
+        let started = Instant::now();
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let fabric = fabric.clone();
+            let task = task.clone();
+            let manifest = manifest.clone();
+            let cfg = cfg.clone();
+            handles.push(std::thread::spawn(move || -> Result<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64)> {
+                let mut w = WorkerState::new(rank, manifest, cfg.lr)?;
+                let mut coord =
+                    DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
+                let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
+                let mut losses = Vec::new();
+                let mut walls = Vec::new();
+                let t = w.runner.manifest.tokens_per_rank;
+                for step in 0..cfg.steps {
+                    let decision = coord.decide(step);
+                    let (x, labels) = task.sample(rank, t, &mut rng);
+                    let t0 = Instant::now();
+                    let mut loss = w.step(&fabric, decision, &x, &labels, step)?;
+                    walls.push((decision.drop, t0.elapsed().as_secs_f64()));
+                    // rank-mean loss for reporting
+                    let mut lbuf = vec![loss];
+                    fabric.all_reduce_sum(rank, &mut lbuf);
+                    loss = lbuf[0] / cfg.n_ranks as f32;
+                    losses.push(loss);
+                }
+                let drop_rate = coord
+                    .audit_log()
+                    .iter()
+                    .filter(|&&b| crate::coordinator::Decision::decode(b).drop)
+                    .count() as f64
+                    / cfg.steps.max(1) as f64;
+                // dense-param fingerprint for the consistency check
+                let mut fp = w.w_in.clone();
+                fp.extend_from_slice(&w.wr);
+                fp.extend_from_slice(&w.w_out);
+                Ok((losses, walls, fp, drop_rate))
+            }));
+        }
+        let mut all: Vec<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64)> = Vec::new();
+        for h in handles {
+            all.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        }
+        let dense_consistent = all.windows(2).all(|w| w[0].2 == w[1].2);
+        let losses = all[0].0.clone();
+        let step_wall = all[0].1.clone();
+        let observed_drop_rate = all[0].3;
+        Ok(DistRunResult {
+            losses,
+            fabric: fabric.stats(),
+            wall_secs: started.elapsed().as_secs_f64(),
+            step_wall,
+            dense_consistent,
+            observed_drop_rate,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests live in rust/tests/distributed.rs (they need the
+    // AOT artifacts); unit coverage for the pieces is in moe/optim/task.
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = DistRunConfig::default();
+        assert_eq!(c.n_ranks, 4);
+        assert!(c.steps > 0);
+    }
+
+    #[test]
+    fn missing_artifacts_is_clean_error() {
+        let cfg = DistRunConfig { artifact_dir: "/nonexistent".into(), ..Default::default() };
+        let err = DistEngine::run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("manifest"), "got: {err}");
+    }
+}

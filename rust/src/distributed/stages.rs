@@ -1,0 +1,125 @@
+//! Stage-artifact runner: manifest + per-worker compiled executables.
+//!
+//! Every worker owns a `StageRunner` (its own PJRT client + compiled
+//! stage executables): workers are real independent "machines" that share
+//! nothing but the fabric.
+
+use anyhow::{Context, Result};
+use xla::Literal;
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/dist/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct DistManifest {
+    pub dir: std::path::PathBuf,
+    pub d_in: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub tokens_per_rank: usize,
+    pub ranks: usize,
+    pub files: std::collections::BTreeMap<String, String>,
+    pub init_files: std::collections::BTreeMap<String, (Vec<usize>, String)>,
+}
+
+impl DistManifest {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<DistManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("{}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("dist manifest: {e}"))?;
+        let c = j.get("config").context("dist manifest: config")?;
+        let g = |k: &str| c.get(k).and_then(Json::as_usize).context(k.to_string());
+        let mut files = std::collections::BTreeMap::new();
+        for (name, art) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
+            files.insert(
+                name.clone(),
+                art.get("file").and_then(Json::as_str).context("file")?.to_string(),
+            );
+        }
+        let mut init_files = std::collections::BTreeMap::new();
+        for e in j.get("params_init").and_then(Json::as_arr).context("params_init")? {
+            let name = e.get("name").and_then(Json::as_str).context("name")?;
+            let shape: Vec<usize> = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .context("shape")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let file = e.get("file").and_then(Json::as_str).context("file")?;
+            init_files.insert(name.to_string(), (shape, file.to_string()));
+        }
+        Ok(DistManifest {
+            d_in: g("d_in")?,
+            d_model: g("d_model")?,
+            d_ff: g("d_ff")?,
+            n_classes: g("n_classes")?,
+            tokens_per_rank: g("tokens_per_rank")?,
+            ranks: g("ranks")?,
+            files,
+            init_files,
+            dir,
+        })
+    }
+
+    pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
+        let (shape, file) =
+            self.init_files.get(name).with_context(|| format!("no init param '{name}'"))?;
+        let path = self.dir.join(file);
+        let bytes = std::fs::read(&path).with_context(|| path.display().to_string())?;
+        let expect: usize = shape.iter().product::<usize>() * 4;
+        anyhow::ensure!(bytes.len() == expect, "{name}: {} != {expect}", bytes.len());
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// One worker's compiled stage executables.
+pub struct StageRunner {
+    pub manifest: DistManifest,
+    client: xla::PjRtClient,
+    exes: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl StageRunner {
+    pub fn new(manifest: DistManifest) -> Result<StageRunner> {
+        let client = xla::PjRtClient::cpu()?;
+        let mut exes = std::collections::BTreeMap::new();
+        for (name, file) in &manifest.files {
+            let path = manifest.dir.join(file);
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("path")?)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(name.clone(), client.compile(&comp).context(name.clone())?);
+        }
+        Ok(StageRunner { manifest, client, exes })
+    }
+
+    /// Execute stage `name`; returns the flattened tuple outputs as f32
+    /// vecs (i32 outputs are not used by any stage).
+    pub fn run(&self, name: &str, args: &[Literal]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exes.get(name).with_context(|| format!("no stage '{name}'"))?;
+        // leak-free path: execute() leaks its input device buffers (see
+        // runtime::engine::exec_leakfree); upload via owned buffers.
+        let mut bufs = Vec::with_capacity(args.len());
+        for lit in args {
+            bufs.push(self.client.buffer_from_host_literal(None, lit)?);
+        }
+        let res = exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
+        let parts = res[0][0].to_literal_sync()?.to_tuple()?;
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+}
+
+pub fn lit2(data: &[f32], r: usize, c: usize) -> Result<Literal> {
+    Ok(Literal::vec1(data).reshape(&[r as i64, c as i64])?)
+}
+
+pub fn lit1(data: &[f32]) -> Literal {
+    Literal::vec1(data)
+}
+
+pub fn lit1_i32(data: &[i32]) -> Literal {
+    Literal::vec1(data)
+}

@@ -1,0 +1,43 @@
+//! # gating-dropout
+//!
+//! A production-shaped reproduction of *Gating Dropout:
+//! Communication-efficient Regularization for Sparsely Activated
+//! Transformers* (Liu, Kim, Muzio, Awadalla -- ICML 2022) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): the MoE sub-layer hot-spot as
+//!   Pallas kernels (gate softmax, one-hot-matmul dispatch/combine, expert
+//!   FFN), validated against a pure-jnp oracle.
+//! * **Layer 2** (`python/compile/model.py`): the paper's MoE
+//!   encoder-decoder transformer with fused fwd+bwd+Adam `train_step`,
+//!   AOT-lowered to HLO text.
+//! * **Layer 3** (this crate): the paper's system contribution -- the
+//!   consensual Gating Dropout [`coordinator`] -- plus every substrate it
+//!   needs: the collective [`collective::ThreadFabric`], expert
+//!   [`topology`], the PJRT [`runtime`], the synthetic multilingual
+//!   [`data`] corpus, [`metrics`] (corpus BLEU, throughput), the
+//!   [`netmodel`] cluster cost model, the [`simengine`] scaling sweeps,
+//!   the single-process [`train`] loop and the real-data-movement
+//!   [`distributed`] engine.
+//!
+//! Python never runs on the training path: `make artifacts` lowers the
+//! model once; the `repro` binary (and all examples/benches) are
+//! self-contained afterwards.
+//!
+//! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
+//! reproductions of every table and figure in the paper.
+
+pub mod benchkit;
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distributed;
+pub mod metrics;
+pub mod moe;
+pub mod netmodel;
+pub mod runtime;
+pub mod simengine;
+pub mod topology;
+pub mod train;
+pub mod util;

@@ -1,0 +1,241 @@
+//! `repro` -- the gating-dropout CLI launcher.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §4):
+//!   train     one training run (policy x preset), CSV history
+//!   scaling   Fig 3 / Table 1 / Table 3 virtual-cluster sweeps
+//!   sweep     Fig 6 dropout-rate sweep (throughput axis)
+//!   dist      the real-data-movement distributed engine
+//!   eval      holdout BLEU/loss of a checkpoint
+
+use anyhow::{bail, Result};
+use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::config::{cluster_by_name, RunConfig};
+use gating_dropout::coordinator::Policy;
+use gating_dropout::distributed::{DistEngine, DistRunConfig};
+use gating_dropout::netmodel::MoeWorkload;
+use gating_dropout::simengine;
+use gating_dropout::train::Trainer;
+use gating_dropout::util::cli::Args;
+
+const USAGE: &str = "\
+repro -- Gating Dropout (ICML 2022) reproduction
+
+USAGE: repro <COMMAND> [flags]
+
+COMMANDS:
+  train    --run-preset wmt10|web50|e2e|tiny [--policy P] [--steps N]
+           [--config FILE] [--out-dir DIR] [--decay-to P1@STEPS] [--no-decode]
+  scaling  --cluster v100|a100 [--gpus 8,16,32,64,128] [--workload wmt10|web50]
+  sweep    [--rates 0,0.1,...] [--gpus 16] (Fig 6 throughput axis)
+  dist     [--policy P] [--steps N] [--seed S] (real multi-worker engine)
+  eval     --run-preset P --checkpoint DIR
+
+Policies: baseline | gate-drop[:p] | gate-expert-drop[:p] | hash-layer | no-alltoall
+";
+
+fn main() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv);
+    match cmd.as_str() {
+        "train" => cmd_train(&args),
+        "scaling" => cmd_scaling(&args),
+        "sweep" => cmd_sweep(&args),
+        "dist" => cmd_dist(&args),
+        "eval" => cmd_eval(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get("config") {
+        Some(f) => RunConfig::from_json_file(f)?,
+        None => RunConfig::preset_named(args.get_or("run-preset", "wmt10"))?,
+    };
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let with_decode = !args.flag("no-decode");
+    eprintln!(
+        "[train] preset={} policy={} steps={} ranks={} (compiling artifacts...)",
+        cfg.preset,
+        cfg.policy.name(),
+        cfg.steps,
+        cfg.n_ranks
+    );
+    let mut trainer = Trainer::new(cfg, with_decode)?;
+    let res = trainer.run(true)?;
+    println!(
+        "[train] done: final_bleu={:.2} best_bleu={:.2} virt_tps={} wall_tps={} drop_rate={:.3}",
+        res.final_bleu,
+        res.best_bleu,
+        fmt_tps(res.virtual_tps),
+        fmt_tps(res.wall_tps),
+        res.observed_drop_rate
+    );
+    if !res.bleu_by_direction.is_empty() {
+        let agg = |e2x: bool, low: Option<bool>| -> f64 {
+            let sel: Vec<f64> = res
+                .bleu_by_direction
+                .iter()
+                .filter(|d| d.e_to_x == e2x && low.map(|l| d.low_resource == l).unwrap_or(true))
+                .map(|d| d.bleu)
+                .collect();
+            sel.iter().sum::<f64>() / sel.len().max(1) as f64
+        };
+        println!(
+            "[train] BLEU splits: avg={:.2} E→X={:.2} E→X(low)={:.2} X→E={:.2} X→E(low)={:.2}",
+            res.final_bleu,
+            agg(true, None),
+            agg(true, Some(true)),
+            agg(false, None),
+            agg(false, Some(true))
+        );
+    }
+    Ok(())
+}
+
+fn parse_list<T: std::str::FromStr>(s: &str) -> Vec<T> {
+    s.split(',').filter_map(|x| x.trim().parse().ok()).collect()
+}
+
+fn cmd_scaling(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(args.get_or("cluster", "v100"))?;
+    let gpus: Vec<usize> = parse_list(args.get_or("gpus", "8,16,32,64,128"));
+    let steps = args.u64("steps", 500);
+    let seed = args.u64("seed", 1);
+    let workload_name = args.get_or("workload", "wmt10");
+
+    println!("== Fig 3: throughput vs #GPUs ({}, {workload_name}) ==", cluster.name);
+    let mut fig3 = Table::new(&["GPUs", "baseline tok/s", "no-alltoall tok/s"]);
+    for &n in &gpus {
+        let w = match workload_name {
+            "web50" => MoeWorkload::web50(n),
+            _ => MoeWorkload::wmt10(n),
+        };
+        let base = simengine::simulate_run(&cluster, n, &w, Policy::Baseline, steps, seed);
+        let noa = simengine::simulate_run(&cluster, n, &w, Policy::NoAllToAll, steps, seed);
+        fig3.row(&[
+            n.to_string(),
+            fmt_tps(base.tokens_per_sec),
+            fmt_tps(noa.tokens_per_sec),
+        ]);
+    }
+    fig3.print();
+
+    println!("\n== Table 1: relative throughput improvement of no-alltoall ==");
+    let mut t1 = Table::new(&["Number of GPUs", "Throughput Impr."]);
+    for (n, impr) in simengine::table1(&cluster, &gpus, steps, seed) {
+        t1.row(&[n.to_string(), format!("{:.1}%", impr * 100.0)]);
+    }
+    t1.print();
+
+    let n = args.usize("policy-gpus", if workload_name == "web50" { 64 } else { 16 });
+    let w = match workload_name {
+        "web50" => MoeWorkload::web50(n),
+        _ => MoeWorkload::wmt10(n),
+    };
+    println!("\n== Policy throughputs at {n} GPUs (Table 2/3 throughput columns) ==");
+    let mut t2 = Table::new(&["Method", "tok/s", "vs baseline"]);
+    let rows = simengine::policy_throughputs(&cluster, n, &w, steps.max(2000), seed);
+    let base_tps = rows[0].tokens_per_sec;
+    for row in &rows {
+        t2.row(&[
+            row.policy.to_string(),
+            fmt_tps(row.tokens_per_sec),
+            format!("{:+.1}%", (row.tokens_per_sec / base_tps - 1.0) * 100.0),
+        ]);
+    }
+    t2.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cluster = cluster_by_name(args.get_or("cluster", "v100"))?;
+    let rates: Vec<f64> = parse_list(args.get_or("rates", "0,0.1,0.2,0.3,0.4,0.5"));
+    let gpus = args.usize("gpus", 16);
+    let steps = args.u64("steps", 4000);
+    let w = MoeWorkload::wmt10(gpus);
+    println!("== Fig 6 (throughput axis): Gate-Expert-Drop rate sweep, {gpus} GPUs ==");
+    let mut t = Table::new(&["dropout rate", "tok/s"]);
+    for (p, tps) in simengine::fig6_throughput(&cluster, gpus, &w, &rates, steps, 1) {
+        t.row(&[format!("{p:.1}"), fmt_tps(tps)]);
+    }
+    t.print();
+    println!("(BLEU axis: run `repro train --policy gate-expert-drop:<p>` per rate,\n or examples/dropout_rate_sweep)");
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> Result<()> {
+    let policy = Policy::parse(args.get_or("policy", "gate-drop:0.3"))
+        .ok_or_else(|| anyhow::anyhow!("bad policy"))?;
+    let cfg = DistRunConfig {
+        artifact_dir: args.get_or("artifacts", "artifacts/dist").to_string(),
+        n_ranks: args.usize("ranks", 4),
+        steps: args.u64("steps", 30),
+        policy,
+        seed: args.u64("seed", 7),
+        lr: args.f64("lr", 2e-3) as f32,
+    };
+    eprintln!("[dist] policy={} ranks={} steps={}", policy.name(), cfg.n_ranks, cfg.steps);
+    let res = DistEngine::run(&cfg)?;
+    let first = res.losses.first().copied().unwrap_or(f32::NAN);
+    let last = res.losses.last().copied().unwrap_or(f32::NAN);
+    let dropped: Vec<f64> =
+        res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| *s).collect();
+    let full: Vec<f64> =
+        res.step_wall.iter().filter(|(d, _)| !*d).map(|(_, s)| *s).collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    println!(
+        "[dist] loss {first:.4} -> {last:.4} | dense consistent: {} | observed drop rate {:.2}",
+        res.dense_consistent, res.observed_drop_rate
+    );
+    println!(
+        "[dist] a2a ops={} bytes={} | mean step: full={:.1}ms dropped={:.1}ms",
+        res.fabric.a2a_ops,
+        res.fabric.a2a_bytes,
+        mean(&full) * 1e3,
+        mean(&dropped) * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut trainer = Trainer::new(cfg, true)?;
+    if let Some(ckpt) = args.get("checkpoint") {
+        trainer.engine.load_checkpoint(ckpt)?;
+    }
+    let loss = trainer.eval_loss(8)?;
+    let (bleu, by_dir) = trainer.bleu_eval()?;
+    println!("eval: loss={loss:.4} BLEU={bleu:.2}");
+    let agg = |e2x: bool, low: Option<bool>| -> f64 {
+        let sel: Vec<f64> = by_dir
+            .iter()
+            .filter(|d| d.e_to_x == e2x && low.map(|l| d.low_resource == l).unwrap_or(true))
+            .map(|d| d.bleu)
+            .collect();
+        sel.iter().sum::<f64>() / sel.len().max(1) as f64
+    };
+    let mut t = Table::new(&["BLEU (avg)", "E→X", "E→X (low)", "X→E", "X→E (low)"]);
+    t.row(&[
+        format!("{bleu:.2}"),
+        format!("{:.2}", agg(true, None)),
+        format!("{:.2}", agg(true, Some(true))),
+        format!("{:.2}", agg(false, None)),
+        format!("{:.2}", agg(false, Some(true))),
+    ]);
+    t.print();
+    Ok(())
+}

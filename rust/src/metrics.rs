@@ -1,0 +1,253 @@
+//! Evaluation metrics: corpus BLEU (the paper's quality metric), the
+//! throughput meter (its speed metric), and run-record writers.
+//!
+//! BLEU is the standard case-sensitive corpus BLEU-4: clipped n-gram
+//! precisions (n=1..4) geometric-mean'd, with brevity penalty, computed
+//! over token-id sequences (the synthetic task is pre-tokenised, so the
+//! sacreBLEU tokenisation question does not arise -- DESIGN.md §2).
+//! Smoothing: add-one on higher-order precisions when a count is zero
+//! (Lin & Och 2004 smoothing-1, what sacrebleu calls `smooth-method=add-k`
+//! with k=1 on zero counts), so short synthetic corpora don't collapse
+//! to 0.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Cut a decoded sequence at the first EOS (exclusive); drop PAD/BOS.
+pub fn clean_tokens(seq: &[i32], eos: i32, pad: i32, bos: i32) -> Vec<i32> {
+    let mut out = Vec::new();
+    for &t in seq {
+        if t == eos {
+            break;
+        }
+        if t != pad && t != bos {
+            out.push(t);
+        }
+    }
+    out
+}
+
+fn ngram_counts(seq: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if seq.len() >= n {
+        for w in seq.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU-4 in percent (0..100) over (hypothesis, reference) pairs.
+pub fn corpus_bleu(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let max_n = 4;
+    let mut match_n = [0usize; 4];
+    let mut total_n = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, rf) in pairs {
+        hyp_len += hyp.len();
+        ref_len += rf.len();
+        for n in 1..=max_n {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(rf, n);
+            let total: usize = h.values().sum();
+            let matched: usize =
+                h.iter().map(|(g, c)| (*c).min(r.get(g).copied().unwrap_or(0))).sum();
+            match_n[n - 1] += matched;
+            total_n[n - 1] += total;
+        }
+    }
+    let mut log_p = 0.0;
+    for n in 0..max_n {
+        if total_n[n] == 0 {
+            return 0.0;
+        }
+        // smoothing-1: add one to zero match counts for n >= 2
+        let m = if match_n[n] == 0 && n > 0 { 1.0 } else { match_n[n] as f64 };
+        if m == 0.0 {
+            return 0.0;
+        }
+        log_p += (m / total_n[n] as f64).ln();
+    }
+    let gm = (log_p / max_n as f64).exp();
+    let bp = if hyp_len >= ref_len || hyp_len == 0 {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    100.0 * bp * gm
+}
+
+/// Throughput meter: tokens/second, over both real wallclock and a
+/// caller-supplied virtual clock (the simulated cluster time).
+#[derive(Debug)]
+pub struct ThroughputMeter {
+    started: Instant,
+    tokens: u64,
+    virtual_secs: f64,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> Self {
+        ThroughputMeter { started: Instant::now(), tokens: 0, virtual_secs: 0.0 }
+    }
+
+    pub fn record(&mut self, tokens: u64, virtual_step_secs: f64) {
+        self.tokens += tokens;
+        self.virtual_secs += virtual_step_secs;
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn wall_tps(&self) -> f64 {
+        self.tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn virtual_tps(&self) -> f64 {
+        self.tokens as f64 / self.virtual_secs.max(1e-12)
+    }
+
+    pub fn virtual_secs(&self) -> f64 {
+        self.virtual_secs
+    }
+}
+
+/// Exponential moving average (loss smoothing in the run logs).
+#[derive(Debug, Clone, Copy)]
+pub struct Ema {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Self {
+        Ema { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// CSV run-record writer (one file per run; consumed by EXPERIMENTS.md).
+pub struct CsvWriter {
+    file: std::fs::File,
+}
+
+impl CsvWriter {
+    pub fn create(path: &str, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        use std::io::Write;
+        let mut file = std::fs::File::create(path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        use std::io::Write;
+        writeln!(self.file, "{}", values.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bleu_perfect_match_is_100() {
+        let pairs = vec![(vec![1, 2, 3, 4, 5], vec![1, 2, 3, 4, 5])];
+        assert!((corpus_bleu(&pairs) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bleu_no_overlap_is_0() {
+        let pairs = vec![(vec![1, 2, 3, 4], vec![5, 6, 7, 8])];
+        assert_eq!(corpus_bleu(&pairs), 0.0);
+    }
+
+    #[test]
+    fn bleu_known_value() {
+        // hyp shares all unigrams/bigrams but one: hand-computable.
+        // hyp = [1,2,3,4], ref = [1,2,3,5]
+        // p1 = 3/4, p2 = 2/3, p3 = 1/2 (smoothed from 1/2: match "1,2,3"), p4 = 1/1... let's compute:
+        // 3-grams hyp: (1,2,3),(2,3,4) -> match 1 of 2; 4-grams: (1,2,3,4) -> 0 of 1 -> smoothed 1.
+        let pairs = vec![(vec![1, 2, 3, 4], vec![1, 2, 3, 5])];
+        let b = corpus_bleu(&pairs);
+        // p1=3/4, p2=2/3, p3=1/2, p4=1/1 (4-gram match 0 smoothed to 1)
+        let expect = 100.0 * ((3.0f64 / 4.0 * 2.0 / 3.0 * 0.5 * 1.0).ln() / 4.0).exp();
+        assert!((b - expect).abs() < 1e-6, "got {b}, expect {expect}");
+    }
+
+    #[test]
+    fn bleu_brevity_penalty_applies() {
+        // identical prefix but hypothesis shorter than reference
+        let long = vec![(vec![1, 2, 3], vec![1, 2, 3, 4, 5, 6])];
+        let full = vec![(vec![1, 2, 3, 4, 5, 6], vec![1, 2, 3, 4, 5, 6])];
+        assert!(corpus_bleu(&long) < corpus_bleu(&full));
+    }
+
+    #[test]
+    fn bleu_corpus_pools_counts() {
+        // corpus BLEU != mean of sentence BLEUs; pooled counts must be used
+        let pairs = vec![
+            (vec![1, 2, 3, 4, 5], vec![1, 2, 3, 4, 5]),
+            (vec![9, 9, 9, 9, 9], vec![1, 2, 3, 4, 5]),
+        ];
+        let b = corpus_bleu(&pairs);
+        assert!(b > 0.0 && b < 100.0);
+    }
+
+    #[test]
+    fn bleu_more_overlap_scores_higher() {
+        let r = vec![10, 11, 12, 13, 14, 15, 16, 17];
+        let good = vec![(vec![10, 11, 12, 13, 14, 15, 99, 17], r.clone())];
+        let bad = vec![(vec![10, 99, 12, 99, 14, 99, 16, 99], r.clone())];
+        assert!(corpus_bleu(&good) > corpus_bleu(&bad));
+    }
+
+    #[test]
+    fn clean_cuts_at_eos() {
+        assert_eq!(clean_tokens(&[1, 5, 6, 2, 7, 8], 2, 0, 1), vec![5, 6]);
+        assert_eq!(clean_tokens(&[5, 0, 6], 2, 0, 1), vec![5, 6]);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..20 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn throughput_meter_virtual() {
+        let mut m = ThroughputMeter::new();
+        m.record(1000, 0.5);
+        m.record(1000, 0.5);
+        assert_eq!(m.tokens(), 2000);
+        assert!((m.virtual_tps() - 2000.0).abs() < 1e-9);
+    }
+}

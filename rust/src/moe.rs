@@ -1,0 +1,316 @@
+//! Host-side MoE routing bookkeeping for the distributed engine.
+//!
+//! On a real MoE stack this logic lives in the framework's dispatch layer
+//! (DeepSpeed MoE for the paper): decide each token's expert, group tokens
+//! by the *rank that owns* the expert, ship them through the all-to-all,
+//! admit arrivals up to the expert's capacity, run the expert, and ship
+//! results back to the token's home rank.
+//!
+//! Wire format for a routed token: `[expert_id, src_idx, gate, x_0..x_{d-1}]`
+//! (three f32 header words + the token row). f32 encodes the small integer
+//! headers exactly.
+
+use crate::topology::Topology;
+
+pub const HEADER: usize = 3;
+
+/// Top-1 choice from a row-major probs matrix [t, e].
+pub fn top1(probs: &[f32], t: usize, e: usize) -> (Vec<usize>, Vec<f32>) {
+    assert_eq!(probs.len(), t * e);
+    let mut idx = Vec::with_capacity(t);
+    let mut gate = Vec::with_capacity(t);
+    for row in probs.chunks_exact(e) {
+        let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+        for (i, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                bi = i;
+            }
+        }
+        idx.push(bi);
+        gate.push(bv);
+    }
+    (idx, gate)
+}
+
+/// Gate value of a *forced* expert choice (local routing / hash routing):
+/// the gating network's probability of that expert, so its gradient path
+/// stays alive (model.py does the same on the single-process path).
+pub fn gate_of(probs: &[f32], e: usize, token: usize, expert: usize) -> f32 {
+    probs[token * e + expert]
+}
+
+/// Hash-Layer routing (Roller et al. 2021): Knuth multiplicative hash of
+/// the token *id* (vocabulary id), matching `model._hash_ids`.
+pub fn hash_expert(token_id: u32, n_experts: usize) -> usize {
+    ((token_id.wrapping_mul(2654435761) >> 16) % n_experts as u32) as usize
+}
+
+/// Pack this rank's tokens into per-destination-rank messages.
+///
+/// `x` is row-major [t, d]; `experts[i]` the token's expert; `gates[i]` its
+/// combine weight. Tokens whose expert is local to `rank` are *also*
+/// packed (into the self-chunk) so the unpack path is uniform.
+pub fn route_pack(
+    rank: usize,
+    topo: &Topology,
+    x: &[f32],
+    d: usize,
+    experts: &[usize],
+    gates: &[f32],
+) -> Vec<Vec<f32>> {
+    let t = experts.len();
+    assert_eq!(x.len(), t * d);
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); topo.n_ranks];
+    let _ = rank;
+    for i in 0..t {
+        let e = experts[i];
+        let dest = topo.owner_of(e);
+        let msg = &mut out[dest];
+        msg.push(e as f32);
+        msg.push(i as f32);
+        msg.push(gates[i]);
+        msg.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Where an admitted token came from, for the return trip and backward.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admitted {
+    pub src_rank: usize,
+    pub src_idx: usize,
+    pub gate: f32,
+    /// Slot in the expert input buffer (row of `xe`).
+    pub slot: usize,
+    /// The (local) expert index on this rank that the token targets.
+    pub local_expert: usize,
+}
+
+/// Unpack arrivals (one message per source rank, in rank order), admitting
+/// tokens per *expert* up to `cap` in (src_rank, src_idx) order -- the
+/// Switch/paper tie-break. Returns the expert input buffer `xe`
+/// (row-major [n_local_experts * cap, d], zero-padded) and the admission
+/// records. Overflowing tokens are dropped (they keep only the residual
+/// path, like the single-process model).
+pub fn route_admit(
+    rank: usize,
+    topo: &Topology,
+    arrivals: &[Vec<f32>],
+    d: usize,
+    cap: usize,
+) -> (Vec<f32>, Vec<Admitted>) {
+    let per = topo.experts_per_rank();
+    let stride = HEADER + d;
+    let mut xe = vec![0f32; per * cap * d];
+    let mut admitted = Vec::new();
+    let mut fill = vec![0usize; per];
+    let base = topo.local_experts(rank).start;
+    for (src_rank, msg) in arrivals.iter().enumerate() {
+        assert_eq!(msg.len() % stride, 0, "corrupt routed message");
+        for tok in msg.chunks_exact(stride) {
+            let e = tok[0] as usize;
+            assert!(topo.is_local(rank, e), "token routed to wrong rank");
+            let le = e - base;
+            if fill[le] >= cap {
+                continue; // capacity overflow: token dropped
+            }
+            let slot = le * cap + fill[le];
+            fill[le] += 1;
+            xe[slot * d..(slot + 1) * d].copy_from_slice(&tok[HEADER..]);
+            admitted.push(Admitted {
+                src_rank,
+                src_idx: tok[1] as usize,
+                gate: tok[2],
+                slot,
+                local_expert: le,
+            });
+        }
+    }
+    (xe, admitted)
+}
+
+/// Pack expert outputs for the return all-to-all: rows of
+/// `[slot, src_idx, gate, y_0..]` grouped by the token's home rank. The
+/// slot rides along so the home rank can address the backward all-to-all
+/// (cotangents must land back in the same expert buffer rows).
+pub fn return_pack(
+    topo: &Topology,
+    admitted: &[Admitted],
+    ye: &[f32],
+    d: usize,
+) -> Vec<Vec<f32>> {
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); topo.n_ranks];
+    for a in admitted {
+        let msg = &mut out[a.src_rank];
+        msg.push(a.slot as f32);
+        msg.push(a.src_idx as f32);
+        msg.push(a.gate);
+        msg.extend_from_slice(&ye[a.slot * d..(a.slot + 1) * d]);
+    }
+    out
+}
+
+/// Per-token outcome of the return trip, kept by the home rank for the
+/// backward pass.
+#[derive(Debug, Clone)]
+pub struct Returned {
+    /// `gate * ye` rows in token order (zeros where the token was dropped).
+    pub combined: Vec<f32>,
+    /// Raw `ye` rows in token order (zeros where dropped) -- needed for
+    /// d(gate) = <dy, ye>.
+    pub raw: Vec<f32>,
+    /// Expert-buffer slot on the owning rank, -1 if dropped.
+    pub slot: Vec<i32>,
+    /// Gate used for each token (0 where dropped).
+    pub gate: Vec<f32>,
+}
+
+/// Unpack returned expert outputs into token order.
+pub fn return_unpack(arrivals: &[Vec<f32>], t: usize, d: usize) -> Returned {
+    let stride = HEADER + d;
+    let mut out = Returned {
+        combined: vec![0f32; t * d],
+        raw: vec![0f32; t * d],
+        slot: vec![-1; t],
+        gate: vec![0f32; t],
+    };
+    for msg in arrivals {
+        assert_eq!(msg.len() % stride, 0, "corrupt return message");
+        for tok in msg.chunks_exact(stride) {
+            let i = tok[1] as usize;
+            let gate = tok[2];
+            assert!(i < t);
+            out.slot[i] = tok[0] as i32;
+            out.gate[i] = gate;
+            for (j, &v) in tok[HEADER..].iter().enumerate() {
+                out.raw[i * d + j] = v;
+                out.combined[i * d + j] = gate * v;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn top1_picks_max() {
+        let probs = vec![0.1, 0.7, 0.2, /* row 2 */ 0.5, 0.2, 0.3];
+        let (idx, gate) = top1(&probs, 2, 3);
+        assert_eq!(idx, vec![1, 0]);
+        assert_eq!(gate, vec![0.7, 0.5]);
+    }
+
+    #[test]
+    fn hash_expert_in_range_and_spread() {
+        let e = 8;
+        let mut seen = vec![0usize; e];
+        for id in 0..10_000u32 {
+            seen[hash_expert(id, e)] += 1;
+        }
+        for (i, &c) in seen.iter().enumerate() {
+            assert!(c > 500, "expert {i} starved: {c}");
+        }
+    }
+
+    /// Single-rank round trip: pack -> admit -> return -> unpack restores
+    /// every token (identity expert), scaled by its gate.
+    #[test]
+    fn round_trip_identity() {
+        let topo = Topology::new(1, 2);
+        let d = 4;
+        let t = 6;
+        let x: Vec<f32> = (0..t * d).map(|i| i as f32).collect();
+        let experts = vec![0, 1, 0, 1, 0, 1];
+        let gates = vec![0.5; t];
+        let packed = route_pack(0, &topo, &x, d, &experts, &gates);
+        let (xe, adm) = route_admit(0, &topo, &packed, d, 3);
+        assert_eq!(adm.len(), t);
+        let ret = return_pack(&topo, &adm, &xe, d);
+        let r = return_unpack(&ret, t, d);
+        assert!(r.slot.iter().all(|&s| s >= 0));
+        for i in 0..t * d {
+            assert_eq!(r.combined[i], 0.5 * x[i]);
+            assert_eq!(r.raw[i], x[i]);
+        }
+    }
+
+    #[test]
+    fn capacity_drops_overflow_in_arrival_order() {
+        let topo = Topology::new(1, 1);
+        let d = 2;
+        let x = vec![1.0; 5 * d];
+        let experts = vec![0; 5];
+        let gates = vec![1.0; 5];
+        let packed = route_pack(0, &topo, &x, d, &experts, &gates);
+        let (_, adm) = route_admit(0, &topo, &packed, d, 3);
+        assert_eq!(adm.len(), 3);
+        let kept: Vec<usize> = adm.iter().map(|a| a.src_idx).collect();
+        assert_eq!(kept, vec![0, 1, 2], "earliest tokens admitted first");
+        let ret = return_pack(&topo, &adm, &vec![1.0; 3 * d], d);
+        let r = return_unpack(&ret, 5, d);
+        let got: Vec<bool> = r.slot.iter().map(|&s| s >= 0).collect();
+        assert_eq!(got, vec![true, true, true, false, false]);
+    }
+
+    /// Property: across any topology/routing, no token is duplicated, every
+    /// admitted token lands on the rank owning its expert, and per-expert
+    /// admissions never exceed capacity.
+    #[test]
+    fn prop_routing_conservation() {
+        run_prop("routing-conservation", 60, 42, |rng: &mut Rng| {
+            let n_ranks = [1usize, 2, 4][rng.below(3) as usize];
+            let per = 1 + rng.below(3) as usize;
+            let topo = Topology::new(n_ranks, n_ranks * per);
+            let d = 1 + rng.below(6) as usize;
+            let t = 1 + rng.below(32) as usize;
+            let cap = 1 + rng.below(16) as usize;
+            // every rank routes t tokens to random experts
+            let mut all_packed: Vec<Vec<Vec<f32>>> = Vec::new();
+            for r in 0..n_ranks {
+                let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+                let experts: Vec<usize> =
+                    (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
+                let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
+                all_packed.push(route_pack(r, &topo, &x, d, &experts, &gates));
+            }
+            // simulate the all-to-all: arrivals[dst][src] = all_packed[src][dst]
+            for dst in 0..n_ranks {
+                let arrivals: Vec<Vec<f32>> =
+                    (0..n_ranks).map(|src| all_packed[src][dst].clone()).collect();
+                let (xe, adm) = route_admit(dst, &topo, &arrivals, d, cap);
+                if xe.len() != per * cap * d {
+                    return Err("xe buffer size".into());
+                }
+                // no slot reused
+                let mut slots: Vec<usize> = adm.iter().map(|a| a.slot).collect();
+                slots.sort_unstable();
+                slots.dedup();
+                if slots.len() != adm.len() {
+                    return Err("slot reused".into());
+                }
+                // per-expert cap respected
+                for le in 0..per {
+                    let c = adm.iter().filter(|a| a.local_expert == le).count();
+                    if c > cap {
+                        return Err(format!("expert {le} over capacity: {c}"));
+                    }
+                }
+                // no (src,idx) duplicated
+                let mut ids: Vec<(usize, usize)> =
+                    adm.iter().map(|a| (a.src_rank, a.src_idx)).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                if ids.len() != adm.len() {
+                    return Err("token duplicated".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,412 @@
+//! The PJRT execution engine: compiled artifacts + resident model state.
+//!
+//! One `TrainEngine` holds the CPU PJRT client, the compiled `train_step`
+//! / `eval_step` / `decode_step` executables, and the parameter +
+//! optimizer-state literals that flow through `train_step` every
+//! iteration. The HLO root is a tuple (return_tuple=True at lowering), so
+//! each execute yields one tuple literal we split back into state.
+
+use anyhow::{bail, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::data::Batch;
+
+use super::manifest::{DType, Manifest, TensorSpec};
+
+/// Per-step training metrics, in the artifact's METRIC_ORDER.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub balance: f32,
+    pub kept_frac: f32,
+    pub lr: f32,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub balance: f32,
+    pub kept_frac: f32,
+}
+
+pub struct TrainEngine {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    train_exe: PjRtLoadedExecutable,
+    train_block_exe: Option<PjRtLoadedExecutable>,
+    eval_exe: PjRtLoadedExecutable,
+    decode_exe: Option<PjRtLoadedExecutable>,
+    params: Vec<Literal>,
+    m: Vec<Literal>,
+    v: Vec<Literal>,
+    step: f32,
+}
+
+fn lit_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+fn load_bin_f32(path: &std::path::Path, expect_elems: usize) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() != expect_elems * 4 {
+        bail!("{}: {} bytes, expected {}", path.display(), bytes.len(), expect_elems * 4);
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+
+/// Leak-free execute: the `xla` crate's `execute()` uploads every input
+/// literal to a device buffer and then RELEASES it without freeing
+/// (xla_rs.cc `input_buffer_ptrs.push_back(buffer.release())`) -- ~one
+/// full model-state copy leaked per step, OOM-killing long runs. We
+/// upload through Rust-owned `PjRtBuffer`s (freed on drop) and call
+/// `execute_b`, which borrows the buffers instead. See EXPERIMENTS.md
+/// §Perf.
+fn exec_leakfree(
+    client: &PjRtClient,
+    exe: &PjRtLoadedExecutable,
+    args: &[&Literal],
+) -> Result<Literal> {
+    let mut bufs = Vec::with_capacity(args.len());
+    for lit in args {
+        bufs.push(client.buffer_from_host_literal(None, lit)?);
+    }
+    let result = exe.execute_b::<PjRtBuffer>(&bufs)?;
+    Ok(result[0][0].to_literal_sync()?)
+}
+
+impl TrainEngine {
+    /// Load the manifest, compile all artifacts, initialise state from the
+    /// exported initial parameters. `with_decode=false` skips compiling the
+    /// decode artifact (it is the slowest compile; benches that never
+    /// decode save minutes).
+    pub fn load(artifact_dir: &str, with_decode: bool) -> Result<TrainEngine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()?;
+        let compile = |file: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.artifact_path(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let train_exe = compile("train_step.hlo.txt").context("compiling train_step")?;
+        // train_block is optional: older artifact dirs may lack it.
+        let train_block_exe = if manifest.block_k.is_some()
+            && manifest.artifact_path("train_block.hlo.txt").exists()
+        {
+            Some(compile("train_block.hlo.txt").context("compiling train_block")?)
+        } else {
+            None
+        };
+        let eval_exe = compile("eval_step.hlo.txt").context("compiling eval_step")?;
+        let decode_exe = if with_decode {
+            Some(compile("decode_step.hlo.txt").context("compiling decode_step")?)
+        } else {
+            None
+        };
+
+        // Initial parameters from the exported bins; Adam state zeroed.
+        let mut params = Vec::with_capacity(manifest.params.len());
+        let mut m = Vec::with_capacity(manifest.params.len());
+        let mut v = Vec::with_capacity(manifest.params.len());
+        if manifest.params_init.is_empty() {
+            bail!("manifest has no params_init (re-run aot.py without --skip-params)");
+        }
+        for spec in &manifest.params_init {
+            let file = spec.file.as_ref().context("params_init entry without file")?;
+            let data = load_bin_f32(&manifest.artifact_path(file), spec.elements())?;
+            params.push(lit_f32(&data, &spec.dims_i64())?);
+            let zeros = vec![0f32; spec.elements()];
+            m.push(lit_f32(&zeros, &spec.dims_i64())?);
+            v.push(lit_f32(&zeros, &spec.dims_i64())?);
+        }
+        Ok(TrainEngine {
+            manifest,
+            client,
+            train_exe,
+            train_block_exe,
+            eval_exe,
+            decode_exe,
+            params,
+            m,
+            v,
+            step: 0.0,
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn step_count(&self) -> f32 {
+        self.step
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<[Literal; 4]> {
+        let d = &self.manifest.dims;
+        if batch.rows != d.batch_rows || batch.len != d.max_len {
+            bail!(
+                "batch shape ({}, {}) does not match artifact ({}, {})",
+                batch.rows, batch.len, d.batch_rows, d.max_len
+            );
+        }
+        let dims = [batch.rows as i64, batch.len as i64];
+        Ok([
+            lit_i32(&batch.src, &dims)?,
+            lit_i32(&batch.tgt_in, &dims)?,
+            lit_i32(&batch.tgt_out, &dims)?,
+            lit_i32(&batch.local_expert_row, &[batch.rows as i64])?,
+        ])
+    }
+
+    /// Run one training step. `flags` = (drop_flag, expert_skip,
+    /// hash_route) from the coordinator's [`Decision`]; `seed` drives the
+    /// jitter noise inside the artifact.
+    pub fn train_step(&mut self, batch: &Batch, flags: (f32, f32, f32), seed: i32) -> Result<TrainMetrics> {
+        let np = self.params.len();
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * np + 9);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        let step_lit = Literal::scalar(self.step);
+        args.push(&step_lit);
+        let batch_lits = self.batch_literals(batch)?;
+        args.extend(batch_lits.iter());
+        let f0 = Literal::scalar(flags.0);
+        let f1 = Literal::scalar(flags.1);
+        let f2 = Literal::scalar(flags.2);
+        let sl = Literal::scalar(seed);
+        args.push(&f0);
+        args.push(&f1);
+        args.push(&f2);
+        args.push(&sl);
+
+        let tuple = exec_leakfree(&self.client, &self.train_exe, &args)?;
+        let mut parts = tuple.to_tuple()?;
+        let expected = 3 * np + 1 + self.manifest.train_metrics.len();
+        if parts.len() != expected {
+            bail!("train_step returned {} outputs, expected {expected}", parts.len());
+        }
+        // split back (drain from the tail to avoid shifting)
+        let metrics_parts: Vec<Literal> = parts.drain(3 * np + 1..).collect();
+        let step_part = parts.pop().unwrap();
+        let v_new: Vec<Literal> = parts.drain(2 * np..).collect();
+        let m_new: Vec<Literal> = parts.drain(np..).collect();
+        let p_new: Vec<Literal> = parts;
+        self.params = p_new;
+        self.m = m_new;
+        self.v = v_new;
+        self.step = step_part.to_vec::<f32>()?[0];
+
+        let get = |i: usize| -> Result<f32> { Ok(metrics_parts[i].to_vec::<f32>()?[0]) };
+        let names = &self.manifest.train_metrics;
+        let mut out = TrainMetrics::default();
+        for (i, n) in names.iter().enumerate() {
+            let v = get(i)?;
+            match n.as_str() {
+                "loss" => out.loss = v,
+                "ce" => out.ce = v,
+                "balance" => out.balance = v,
+                "kept_frac" => out.kept_frac = v,
+                "lr" => out.lr = v,
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Whether the K-step fused artifact is available (and its K).
+    pub fn block_k(&self) -> Option<usize> {
+        self.train_block_exe.as_ref().and(self.manifest.block_k)
+    }
+
+    /// Run K fused training steps in ONE execute (the §Perf optimization:
+    /// the parameter/optimizer tuple crosses the host boundary once per
+    /// block instead of once per step). `batches`, `flags`, `seeds` must
+    /// each have exactly K entries. Returns the K per-step losses.
+    pub fn train_block(
+        &mut self,
+        batches: &[Batch],
+        flags: &[(f32, f32, f32)],
+        seeds: &[i32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.train_block_exe.as_ref().context("no train_block artifact")?;
+        let k = self.manifest.block_k.context("manifest lacks block_k")?;
+        if batches.len() != k || flags.len() != k || seeds.len() != k {
+            bail!("train_block wants exactly K={k} batches/flags/seeds");
+        }
+        let d = &self.manifest.dims;
+        let (rows, len) = (d.batch_rows, d.max_len);
+        // stack the K batches along a leading axis
+        let mut src = Vec::with_capacity(k * rows * len);
+        let mut tgt_in = Vec::with_capacity(k * rows * len);
+        let mut tgt_out = Vec::with_capacity(k * rows * len);
+        let mut ler = Vec::with_capacity(k * rows);
+        for b in batches {
+            if b.rows != rows || b.len != len {
+                bail!("batch shape mismatch in train_block");
+            }
+            src.extend_from_slice(&b.src);
+            tgt_in.extend_from_slice(&b.tgt_in);
+            tgt_out.extend_from_slice(&b.tgt_out);
+            ler.extend_from_slice(&b.local_expert_row);
+        }
+        let kl = [k as i64, rows as i64, len as i64];
+        let np = self.params.len();
+        let mut args: Vec<&Literal> = Vec::with_capacity(3 * np + 9);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        let step_lit = Literal::scalar(self.step);
+        args.push(&step_lit);
+        let l_src = lit_i32(&src, &kl)?;
+        let l_ti = lit_i32(&tgt_in, &kl)?;
+        let l_to = lit_i32(&tgt_out, &kl)?;
+        let l_ler = lit_i32(&ler, &[k as i64, rows as i64])?;
+        let f0: Vec<f32> = flags.iter().map(|f| f.0).collect();
+        let f1: Vec<f32> = flags.iter().map(|f| f.1).collect();
+        let f2: Vec<f32> = flags.iter().map(|f| f.2).collect();
+        let l_f0 = lit_f32(&f0, &[k as i64])?;
+        let l_f1 = lit_f32(&f1, &[k as i64])?;
+        let l_f2 = lit_f32(&f2, &[k as i64])?;
+        let l_seed = lit_i32(seeds, &[k as i64])?;
+        for l in [&l_src, &l_ti, &l_to, &l_ler, &l_f0, &l_f1, &l_f2, &l_seed] {
+            args.push(l);
+        }
+        let mut parts = exec_leakfree(&self.client, exe, &args)?.to_tuple()?;
+        let expected = 3 * np + 2; // + step + losses[K]
+        if parts.len() != expected {
+            bail!("train_block returned {} outputs, expected {expected}", parts.len());
+        }
+        let losses = parts.pop().unwrap().to_vec::<f32>()?;
+        let step_part = parts.pop().unwrap();
+        let v_new: Vec<Literal> = parts.drain(2 * np..).collect();
+        let m_new: Vec<Literal> = parts.drain(np..).collect();
+        self.params = parts;
+        self.m = m_new;
+        self.v = v_new;
+        self.step = step_part.to_vec::<f32>()?[0];
+        Ok(losses)
+    }
+
+    /// Holdout loss (no dropout, eval capacity factor -- baked in the
+    /// artifact).
+    pub fn eval(&self, batch: &Batch) -> Result<EvalMetrics> {
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.params.len() + 4);
+        args.extend(self.params.iter());
+        let batch_lits = self.batch_literals(batch)?;
+        args.extend(batch_lits.iter());
+        let parts = exec_leakfree(&self.client, &self.eval_exe, &args)?.to_tuple()?;
+        let get = |i: usize| -> Result<f32> { Ok(parts[i].to_vec::<f32>()?[0]) };
+        let mut out = EvalMetrics::default();
+        for (i, n) in self.manifest.eval_metrics.iter().enumerate() {
+            let v = get(i)?;
+            match n.as_str() {
+                "loss" => out.loss = v,
+                "ce" => out.ce = v,
+                "balance" => out.balance = v,
+                "kept_frac" => out.kept_frac = v,
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+
+    /// Greedy-decode a source batch (row-major [batch_rows, max_len]).
+    pub fn decode(&self, src: &[i32]) -> Result<Vec<i32>> {
+        let exe = self
+            .decode_exe
+            .as_ref()
+            .context("engine loaded with with_decode=false")?;
+        let d = &self.manifest.dims;
+        if src.len() != d.batch_rows * d.max_len {
+            bail!("decode src length {} != {}", src.len(), d.batch_rows * d.max_len);
+        }
+        let mut args: Vec<&Literal> = Vec::with_capacity(self.params.len() + 1);
+        args.extend(self.params.iter());
+        let src_lit = lit_i32(src, &[d.batch_rows as i64, d.max_len as i64])?;
+        args.push(&src_lit);
+        let parts = exec_leakfree(&self.client, exe, &args)?.to_tuple()?;
+        Ok(parts[0].to_vec::<i32>()?)
+    }
+
+    /// Reset model + optimizer state to the exported initial parameters
+    /// (lets one compiled engine serve several policy runs -- compilation
+    /// dominates load time).
+    pub fn reset(&mut self) -> Result<()> {
+        let mut params = Vec::with_capacity(self.manifest.params.len());
+        let mut m = Vec::with_capacity(self.manifest.params.len());
+        let mut v = Vec::with_capacity(self.manifest.params.len());
+        for spec in &self.manifest.params_init {
+            let file = spec.file.as_ref().context("params_init entry without file")?;
+            let data = load_bin_f32(&self.manifest.artifact_path(file), spec.elements())?;
+            params.push(lit_f32(&data, &spec.dims_i64())?);
+            let zeros = vec![0f32; spec.elements()];
+            m.push(lit_f32(&zeros, &spec.dims_i64())?);
+            v.push(lit_f32(&zeros, &spec.dims_i64())?);
+        }
+        self.params = params;
+        self.m = m;
+        self.v = v;
+        self.step = 0.0;
+        Ok(())
+    }
+
+    // ---- checkpointing -----------------------------------------------------
+
+    /// Write current parameters (not optimizer state) as raw f32 bins.
+    pub fn save_checkpoint(&self, dir: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        for (i, (lit, spec)) in self.params.iter().zip(&self.manifest.params).enumerate() {
+            let data = lit.to_vec::<f32>()?;
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for x in &data {
+                bytes.extend_from_slice(&x.to_le_bytes());
+            }
+            std::fs::write(format!("{dir}/{i:04}.bin"), bytes)
+                .with_context(|| format!("writing checkpoint leaf {} ({})", i, spec.name))?;
+        }
+        std::fs::write(format!("{dir}/STEP"), format!("{}", self.step))?;
+        Ok(())
+    }
+
+    pub fn load_checkpoint(&mut self, dir: &str) -> Result<()> {
+        for (i, spec) in self.manifest.params.iter().enumerate() {
+            let data = load_bin_f32(
+                std::path::Path::new(dir).join(format!("{i:04}.bin")).as_path(),
+                spec.elements(),
+            )?;
+            self.params[i] = lit_f32(&data, &spec.dims_i64())?;
+        }
+        if let Ok(s) = std::fs::read_to_string(format!("{dir}/STEP")) {
+            self.step = s.trim().parse().unwrap_or(0.0);
+        }
+        Ok(())
+    }
+
+    /// Host copy of one named parameter (tests / debugging).
+    pub fn param_by_name(&self, name: &str) -> Result<(TensorSpec, Vec<f32>)> {
+        let idx = self
+            .manifest
+            .params
+            .iter()
+            .position(|p| p.name == name)
+            .with_context(|| format!("no param '{name}'"))?;
+        let spec = self.manifest.params[idx].clone();
+        if spec.dtype != DType::F32 {
+            bail!("param '{name}' is not f32");
+        }
+        Ok((spec, self.params[idx].to_vec::<f32>()?))
+    }
+}

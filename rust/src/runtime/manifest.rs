@@ -1,0 +1,167 @@
+//! Typed view of `artifacts/<preset>/manifest.json`.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            _ => bail!("unsupported dtype '{s}'"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// Init file relative to the artifact dir (params_init entries only).
+    pub file: Option<String>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Model dimensions recorded by aot.py (used by data gen and the trainer).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub enc_blocks: usize,
+    pub dec_blocks: usize,
+    pub max_len: usize,
+    pub batch_rows: usize,
+    pub bos: i32,
+    pub param_count: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub preset: String,
+    pub dims: ModelDims,
+    pub params: Vec<TensorSpec>,
+    pub params_init: Vec<TensorSpec>,
+    pub batch: Vec<TensorSpec>,
+    pub train_metrics: Vec<String>,
+    /// K of the fused K-step train_block artifact, when exported.
+    pub block_k: Option<usize>,
+    pub eval_metrics: Vec<String>,
+}
+
+fn specs_from(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().with_context(|| format!("{what} not an array"))?;
+    arr.iter()
+        .map(|e| {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("{what}: missing name"))?
+                .to_string();
+            let shape = e
+                .get("shape")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("{what}/{name}: missing shape"))?
+                .iter()
+                .map(|s| s.as_usize().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?;
+            let dtype = DType::parse(
+                e.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
+            )?;
+            let file = e.get("file").and_then(Json::as_str).map(str::to_string);
+            Ok(TensorSpec { name, shape, dtype, file })
+        })
+        .collect()
+}
+
+fn metric_names(j: &Json, art: &str) -> Result<Vec<String>> {
+    Ok(j.path(&["artifacts", art, "metrics"])
+        .and_then(Json::as_arr)
+        .with_context(|| format!("manifest: no metrics for {art}"))?
+        .iter()
+        .filter_map(|m| m.as_str().map(str::to_string))
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let c = j.get("config").context("manifest: no config")?;
+        let g = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            d_ff: g("d_ff")?,
+            n_experts: g("n_experts")?,
+            enc_blocks: g("enc_blocks")?,
+            dec_blocks: g("dec_blocks")?,
+            max_len: g("max_len")?,
+            batch_rows: g("batch_rows")?,
+            bos: g("bos")? as i32,
+            param_count: g("param_count")? as u64,
+        };
+        let m = Manifest {
+            preset: j.get("preset").and_then(Json::as_str).unwrap_or("?").to_string(),
+            dims,
+            params: specs_from(j.get("params").context("manifest: params")?, "params")?,
+            params_init: specs_from(
+                j.get("params_init").context("manifest: params_init")?,
+                "params_init",
+            )?,
+            batch: specs_from(j.get("batch").context("manifest: batch")?, "batch")?,
+            train_metrics: metric_names(&j, "train_step")?,
+            block_k: j
+                .path(&["artifacts", "train_block", "block_k"])
+                .and_then(Json::as_usize),
+            eval_metrics: metric_names(&j, "eval_step")?,
+            dir,
+        };
+        if !m.params_init.is_empty() && m.params_init.len() != m.params.len() {
+            bail!(
+                "manifest: params_init has {} entries but params has {}",
+                m.params_init.len(),
+                m.params.len()
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Total parameter bytes (one copy).
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.elements() * p.dtype.bytes()).sum()
+    }
+}

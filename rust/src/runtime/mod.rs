@@ -1,0 +1,13 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them on the request path with zero Python.
+//!
+//! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes/dtypes
+//! are manifest-driven -- nothing is hard-coded); `engine` owns the
+//! PjRtClient, the compiled executables and the parameter/optimizer-state
+//! literals that round-trip through `train_step` each iteration.
+
+mod engine;
+mod manifest;
+
+pub use engine::{EvalMetrics, TrainEngine, TrainMetrics};
+pub use manifest::{DType, Manifest, TensorSpec};

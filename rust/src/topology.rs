@@ -1,0 +1,113 @@
+//! Device mesh and expert placement.
+//!
+//! The paper's parallelism layout (Section 2.2): dense parameters are
+//! replicated across ranks (data parallelism); the `E` experts of every MoE
+//! sub-layer are split across the `R` ranks (expert parallelism), so rank
+//! `r` owns experts `[r*E/R, (r+1)*E/R)`. Gating Dropout's "local expert"
+//! is an expert resident on the token's own rank; when a rank owns several
+//! experts we round-robin tokens across them (keeps local routing balanced
+//! and within capacity when `E % R == 0`).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub n_ranks: usize,
+    pub n_experts: usize,
+}
+
+impl Topology {
+    pub fn new(n_ranks: usize, n_experts: usize) -> Self {
+        assert!(n_ranks > 0 && n_experts > 0);
+        assert!(
+            n_experts % n_ranks == 0,
+            "experts ({n_experts}) must divide evenly across ranks ({n_ranks})"
+        );
+        Topology { n_ranks, n_experts }
+    }
+
+    pub fn experts_per_rank(&self) -> usize {
+        self.n_experts / self.n_ranks
+    }
+
+    /// Which rank holds the parameters of `expert`?
+    pub fn owner_of(&self, expert: usize) -> usize {
+        assert!(expert < self.n_experts);
+        expert / self.experts_per_rank()
+    }
+
+    /// The experts resident on `rank`.
+    pub fn local_experts(&self, rank: usize) -> std::ops::Range<usize> {
+        assert!(rank < self.n_ranks);
+        let per = self.experts_per_rank();
+        rank * per..(rank + 1) * per
+    }
+
+    /// Gating Dropout's local assignment for the `i`-th token/row of `rank`:
+    /// round-robin over the rank's resident experts.
+    pub fn local_expert_for(&self, rank: usize, i: usize) -> usize {
+        let r = self.local_experts(rank);
+        r.start + i % self.experts_per_rank()
+    }
+
+    /// Is `expert` resident on `rank` (i.e. reaching it needs no fabric hop)?
+    pub fn is_local(&self, rank: usize, expert: usize) -> bool {
+        self.local_experts(rank).contains(&expert)
+    }
+
+    /// Rank of batch row `row` when `batch_rows` rows are split evenly
+    /// across ranks (the data-parallel shard layout of the trainer).
+    pub fn rank_of_row(&self, row: usize, batch_rows: usize) -> usize {
+        assert!(row < batch_rows);
+        row * self.n_ranks / batch_rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_partitions_experts() {
+        let t = Topology::new(4, 16);
+        let mut owned = vec![0usize; 16];
+        for r in 0..4 {
+            for e in t.local_experts(r) {
+                owned[e] += 1;
+                assert_eq!(t.owner_of(e), r);
+                assert!(t.is_local(r, e));
+            }
+        }
+        assert!(owned.iter().all(|&c| c == 1), "each expert owned exactly once");
+    }
+
+    #[test]
+    fn local_round_robin_is_balanced() {
+        let t = Topology::new(2, 8);
+        let mut counts = vec![0usize; 8];
+        for i in 0..100 {
+            counts[t.local_expert_for(0, i)] += 1;
+        }
+        assert_eq!(&counts[0..4], &[25, 25, 25, 25]);
+        assert_eq!(&counts[4..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn one_expert_per_rank() {
+        let t = Topology::new(8, 8);
+        for r in 0..8 {
+            assert_eq!(t.local_expert_for(r, 3), r);
+        }
+    }
+
+    #[test]
+    fn row_sharding_even() {
+        let t = Topology::new(4, 4);
+        let ranks: Vec<usize> = (0..8).map(|r| t.rank_of_row(r, 8)).collect();
+        assert_eq!(ranks, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_uneven_split() {
+        Topology::new(3, 8);
+    }
+}

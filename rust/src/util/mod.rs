@@ -1,0 +1,8 @@
+//! Substrate utilities: deterministic RNG, JSON, CLI parsing, property
+//! testing, and a small bench harness -- all std-only (the offline crate
+//! set carries no rand/serde/clap/criterion/proptest).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

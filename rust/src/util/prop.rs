@@ -1,0 +1,64 @@
+//! Minimal property-testing harness (offline crate set has no proptest).
+//!
+//! `run_prop` drives a closure over N randomly generated cases from a
+//! seeded [`Rng`]; on failure it reports the case index and seed so the
+//! case replays deterministically. Generators are plain functions over
+//! `&mut Rng` -- composition is ordinary Rust.
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of property `f`. `f` returns Err(msg) on
+/// violation. Panics with the seed + case index for replay.
+pub fn run_prop<F>(name: &str, cases: usize, seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = Rng::new(seed).fork(case as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Generate a vector of length in [min_len, max_len] via `g`.
+pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+    let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
+    (0..len).map(|_| g(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run_prop("sum-commutes", 50, 1, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a}+{b}"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failure() {
+        run_prop("always-fails", 10, 2, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        run_prop("vec-bounds", 100, 3, |rng| {
+            let v = vec_of(rng, 2, 9, |r| r.below(10));
+            if (2..=9).contains(&v.len()) {
+                Ok(())
+            } else {
+                Err(format!("len={}", v.len()))
+            }
+        });
+    }
+}

@@ -1,0 +1,88 @@
+//! Integration tests for the distributed engine against `artifacts/dist`.
+//!
+//! These prove the paper's mechanism end to end with real data movement:
+//! the consensual decision, the skipped all-to-alls, expert parallelism
+//! (dense params replicated bit-exactly, expert params local), and
+//! learning progress under every policy.
+
+use gating_dropout::coordinator::Policy;
+use gating_dropout::distributed::{DistEngine, DistRunConfig};
+
+fn run(policy: Policy, steps: u64, seed: u64) -> gating_dropout::distributed::DistRunResult {
+    let cfg = DistRunConfig { policy, steps, seed, ..Default::default() };
+    DistEngine::run(&cfg).expect("artifacts/dist missing — run `make artifacts`")
+}
+
+#[test]
+fn baseline_learns_and_pays_four_a2a_per_step() {
+    let res = run(Policy::Baseline, 12, 1);
+    assert!(res.dense_consistent, "dense replicas diverged");
+    assert_eq!(res.fabric.a2a_ops, 12 * 4, "fwd x2 + bwd x2 per step");
+    let first: f32 = res.losses[..3].iter().sum::<f32>() / 3.0;
+    let last: f32 = res.losses[9..].iter().sum::<f32>() / 3.0;
+    assert!(last < first, "loss should fall: {first} -> {last}");
+    assert_eq!(res.observed_drop_rate, 0.0);
+}
+
+#[test]
+fn no_alltoall_never_touches_fabric_a2a() {
+    let res = run(Policy::NoAllToAll, 10, 2);
+    assert_eq!(res.fabric.a2a_ops, 0, "p=1 must skip every all-to-all");
+    assert!(res.dense_consistent);
+    assert_eq!(res.observed_drop_rate, 1.0);
+    // still learns (local experts only)
+    assert!(res.losses.last().unwrap() < res.losses.first().unwrap());
+}
+
+#[test]
+fn gate_drop_skips_proportionally() {
+    let steps = 40;
+    let res = run(Policy::GateDrop { p: 0.5 }, steps, 3);
+    assert!(res.dense_consistent);
+    let full_steps = steps - (res.observed_drop_rate * steps as f64).round() as u64;
+    assert_eq!(res.fabric.a2a_ops, full_steps * 4, "a2a only on non-dropped steps");
+    assert!(res.observed_drop_rate > 0.2 && res.observed_drop_rate < 0.8);
+    assert!(res.losses.last().unwrap() < res.losses.first().unwrap());
+}
+
+#[test]
+fn gate_expert_drop_learns_too() {
+    let res = run(Policy::GateExpertDrop { p: 0.3 }, 30, 4);
+    assert!(res.dense_consistent);
+    assert!(res.losses.last().unwrap() < res.losses.first().unwrap());
+}
+
+#[test]
+fn hash_layer_pays_alltoall_but_learns() {
+    let res = run(Policy::HashLayer, 12, 5);
+    assert_eq!(res.fabric.a2a_ops, 12 * 4, "hash routing still needs all-to-all");
+    assert!(res.dense_consistent);
+    assert!(res.losses.last().unwrap() < res.losses.first().unwrap());
+}
+
+#[test]
+fn decision_stream_is_seed_deterministic() {
+    let a = run(Policy::GateDrop { p: 0.4 }, 15, 42);
+    let b = run(Policy::GateDrop { p: 0.4 }, 15, 42);
+    assert_eq!(a.losses, b.losses, "same seed must replay the identical run");
+    assert_eq!(a.fabric.a2a_ops, b.fabric.a2a_ops);
+}
+
+#[test]
+fn broadcast_overhead_is_one_byte_per_step() {
+    let res = run(Policy::GateDrop { p: 0.3 }, 25, 6);
+    assert_eq!(res.fabric.broadcast_ops, 25);
+    assert_eq!(res.fabric.broadcast_bytes, 25, "the paper's 1-byte decision");
+}
+
+#[test]
+fn dropped_bytes_less_than_baseline() {
+    let base = run(Policy::Baseline, 20, 7);
+    let gd = run(Policy::GateDrop { p: 0.5 }, 20, 7);
+    assert!(
+        gd.fabric.a2a_bytes < base.fabric.a2a_bytes,
+        "gating dropout must reduce communicated bytes: {} vs {}",
+        gd.fabric.a2a_bytes,
+        base.fabric.a2a_bytes
+    );
+}

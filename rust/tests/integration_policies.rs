@@ -1,0 +1,45 @@
+//! Cross-cutting policy comparison on the tiny preset: the qualitative
+//! Table-2 ordering at miniature scale (same seed, same batches).
+
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::train::Trainer;
+
+#[test]
+fn policies_share_batches_and_produce_distinct_runs() {
+    let mut cfg = RunConfig::preset_named("tiny").unwrap();
+    cfg.steps = 12;
+    cfg.eval_every = 0; // no eval in-loop
+    let mut trainer =
+        Trainer::new(cfg, false).expect("artifacts/tiny missing — run `make artifacts`");
+    let mut finals = Vec::new();
+    for policy in ["baseline", "gate-drop:0.5", "gate-expert-drop:0.5", "hash-layer"] {
+        trainer.reset_with_policy(Policy::parse(policy).unwrap()).unwrap();
+        let res = trainer.run(false).unwrap();
+        assert_eq!(res.history.len(), 12);
+        assert!(res.history.iter().all(|h| h.loss.is_finite()));
+        finals.push((policy, res.history.last().unwrap().loss_ema));
+    }
+    // distinct policies must actually change training
+    for w in finals.windows(2) {
+        assert_ne!(w[0].1, w[1].1, "{:?} vs {:?}", w[0], w[1]);
+    }
+}
+
+#[test]
+fn gate_drop_throughput_beats_baseline_in_virtual_time() {
+    let mut cfg = RunConfig::preset_named("tiny").unwrap();
+    cfg.steps = 20;
+    cfg.eval_every = 0;
+    let mut trainer =
+        Trainer::new(cfg, false).expect("artifacts/tiny missing — run `make artifacts`");
+    let mut tps = Vec::new();
+    for policy in ["baseline", "gate-drop:0.5", "gate-expert-drop:0.5", "no-alltoall"] {
+        trainer.reset_with_policy(Policy::parse(policy).unwrap()).unwrap();
+        let res = trainer.run(false).unwrap();
+        tps.push((policy, res.virtual_tps));
+    }
+    assert!(tps[1].1 > tps[0].1, "gate-drop > baseline: {tps:?}");
+    assert!(tps[2].1 > tps[1].1, "GED > gate-drop: {tps:?}");
+    assert!(tps[3].1 > tps[2].1, "no-alltoall upper-bounds: {tps:?}");
+}

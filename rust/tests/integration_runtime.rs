@@ -1,0 +1,224 @@
+//! Integration tests over the PJRT runtime + trainer, against the `tiny`
+//! AOT artifacts (built by `make artifacts`). One engine is compiled per
+//! process and shared across tests (compilation dominates).
+
+use gating_dropout::config::RunConfig;
+use gating_dropout::coordinator::Policy;
+use gating_dropout::data::{Batcher, Corpus, CorpusConfig};
+use gating_dropout::topology::Topology;
+use gating_dropout::train::Trainer;
+
+/// PjRtClient is not Send, so the engine cannot live in a shared static;
+/// instead ONE test compiles ONE engine and runs every check sequentially
+/// (compilation dominates the suite's cost). Each check resets state.
+#[test]
+fn runtime_suite() {
+    let cfg = RunConfig::preset_named("tiny").unwrap();
+    let mut t =
+        Trainer::new(cfg, true).expect("artifacts/tiny missing — run `make artifacts`");
+    let mut fresh = |t: &mut Trainer, policy: &str| {
+        t.reset_with_policy(Policy::parse(policy).unwrap()).unwrap();
+    };
+
+    manifest_dims_sane(&mut t, &mut fresh);
+    train_loss_decreases_on_repeated_batch(&mut t, &mut fresh);
+    step_counter_advances(&mut t, &mut fresh);
+    flags_change_the_step(&mut t, &mut fresh);
+    eval_is_deterministic_and_uses_no_dropout(&mut t, &mut fresh);
+    decode_produces_valid_tokens(&mut t, &mut fresh);
+    checkpoint_round_trip_preserves_params_and_eval(&mut t, &mut fresh);
+    short_run_records_history_and_csv(&mut t, &mut fresh);
+    gate_drop_virtual_time_cheaper_than_baseline(&mut t, &mut fresh);
+    param_by_name_reads_embedding(&mut t, &mut fresh);
+}
+
+type Fresh<'a> = &'a mut dyn FnMut(&mut Trainer, &str);
+
+fn manifest_dims_sane(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let d = &t.engine.manifest.dims;
+    assert_eq!(d.n_experts, 4);
+    assert_eq!(d.max_len, 16);
+    assert!(d.param_count > 100_000);
+    assert_eq!(t.engine.manifest.params.len(), t.engine.manifest.params_init.len());
+}
+
+fn train_loss_decreases_on_repeated_batch(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let topo = Topology::new(4, 4);
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 7));
+    let mut b = Batcher::new(corpus, 7);
+    let batch = b.next_batch(8, &topo);
+    let first = t.engine.train_step(&batch, (0.0, 0.0, 0.0), 0).unwrap().loss;
+    let mut last = first;
+    for s in 1..12 {
+        last = t.engine.train_step(&batch, (0.0, 0.0, 0.0), s).unwrap().loss;
+    }
+    assert!(
+        last < first - 0.2,
+        "loss should fall on a repeated batch: {first} -> {last}"
+    );
+}
+
+fn step_counter_advances(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    assert_eq!(t.engine.step_count(), 0.0);
+    let topo = Topology::new(4, 4);
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 8));
+    let mut b = Batcher::new(corpus, 8);
+    let batch = b.next_batch(8, &topo);
+    t.engine.train_step(&batch, (0.0, 0.0, 0.0), 0).unwrap();
+    t.engine.train_step(&batch, (0.0, 0.0, 0.0), 1).unwrap();
+    assert_eq!(t.engine.step_count(), 2.0);
+}
+
+fn flags_change_the_step(t: &mut Trainer, fresh: Fresh) {
+    // same params + same batch, different decision flags => different loss
+    fresh(t, "baseline");
+    let topo = Topology::new(4, 4);
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 9));
+    let mut b = Batcher::new(corpus, 9);
+    let batch = b.next_batch(8, &topo);
+    let l_base = t.engine.train_step(&batch, (0.0, 0.0, 0.0), 0).unwrap().loss;
+    t.reset_with_policy(Policy::Baseline).unwrap();
+    let l_drop = t.engine.train_step(&batch, (1.0, 0.0, 0.0), 0).unwrap().loss;
+    t.reset_with_policy(Policy::Baseline).unwrap();
+    let l_ged = t.engine.train_step(&batch, (1.0, 1.0, 0.0), 0).unwrap().loss;
+    t.reset_with_policy(Policy::Baseline).unwrap();
+    let l_hash = t.engine.train_step(&batch, (0.0, 0.0, 1.0), 0).unwrap().loss;
+    assert_ne!(l_base, l_drop);
+    assert_ne!(l_drop, l_ged);
+    assert_ne!(l_base, l_hash);
+}
+
+fn eval_is_deterministic_and_uses_no_dropout(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let a = t.eval_loss(2).unwrap();
+    let b = t.eval_loss(2).unwrap();
+    assert_eq!(a, b);
+    assert!(a.is_finite() && a > 0.0);
+}
+
+fn decode_produces_valid_tokens(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let dims = t.engine.manifest.dims.clone();
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, dims.vocab, dims.max_len, 7));
+    let pairs = corpus.holdout(2);
+    let mut src = Vec::new();
+    for p in pairs.iter().take(dims.batch_rows) {
+        src.extend(&p.src);
+    }
+    let toks = t.engine.decode(&src).unwrap();
+    assert_eq!(toks.len(), dims.batch_rows * dims.max_len);
+    assert!(toks.iter().all(|&x| x >= 0 && (x as usize) < dims.vocab));
+}
+
+fn checkpoint_round_trip_preserves_params_and_eval(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let topo = Topology::new(4, 4);
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 10));
+    let mut b = Batcher::new(corpus, 10);
+    for s in 0..3 {
+        let batch = b.next_batch(8, &topo);
+        t.engine.train_step(&batch, (0.0, 0.0, 0.0), s).unwrap();
+    }
+    let before = t.eval_loss(2).unwrap();
+    let dir = "/tmp/gd_ckpt_test";
+    t.engine.save_checkpoint(dir).unwrap();
+    // clobber, then restore
+    t.engine.reset().unwrap();
+    let reset_loss = t.eval_loss(2).unwrap();
+    assert_ne!(before, reset_loss);
+    t.engine.load_checkpoint(dir).unwrap();
+    let after = t.eval_loss(2).unwrap();
+    assert_eq!(before, after, "checkpoint must restore eval exactly");
+}
+
+fn short_run_records_history_and_csv(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "gate-drop:0.5");
+    t.cfg.steps = 8;
+    t.cfg.eval_every = 4;
+    t.cfg.out_dir = "/tmp/gd_run_test".into();
+    let res = t.run(true).unwrap();
+    assert_eq!(res.history.len(), 8);
+    assert!(res.history.iter().any(|h| h.dropped), "p=0.5 over 8 steps should drop");
+    assert!(res.history.iter().any(|h| h.eval_loss.is_some()));
+    assert!(res.virtual_tps > 0.0);
+    let csv = std::fs::read_to_string("/tmp/gd_run_test/tiny_gate-drop.csv").unwrap();
+    assert_eq!(csv.lines().count(), 9); // header + 8 rows
+    // virtual time monotonically increases
+    let mut prev = -1.0;
+    for h in &res.history {
+        assert!(h.virtual_secs > prev);
+        prev = h.virtual_secs;
+    }
+}
+
+fn gate_drop_virtual_time_cheaper_than_baseline(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let full = t.virtual_step_time(gating_dropout::coordinator::Decision {
+        drop: false,
+        expert_skip: false,
+        hash_route: false,
+    });
+    let dropped = t.virtual_step_time(gating_dropout::coordinator::Decision {
+        drop: true,
+        expert_skip: false,
+        hash_route: false,
+    });
+    let ged = t.virtual_step_time(gating_dropout::coordinator::Decision {
+        drop: true,
+        expert_skip: true,
+        hash_route: false,
+    });
+    assert!(dropped < full);
+    assert!(ged < dropped);
+}
+
+fn param_by_name_reads_embedding(t: &mut Trainer, fresh: Fresh) {
+    fresh(t, "baseline");
+    let (spec, data) = t.engine.param_by_name("embed").unwrap();
+    assert_eq!(spec.shape, vec![512, 64]);
+    assert_eq!(data.len(), 512 * 64);
+    assert!(data.iter().any(|&x| x != 0.0));
+}
+
+/// train_block(K) must replay exactly K singles (bitwise step parity) —
+/// separate #[test] so it gets its own engine (compile is the cost).
+#[test]
+fn train_block_matches_k_single_steps() {
+    let cfg = RunConfig::preset_named("tiny").unwrap();
+    let mut t =
+        Trainer::new(cfg, false).expect("artifacts/tiny missing — run `make artifacts`");
+    let k = t.engine.block_k().expect("tiny artifacts lack train_block — re-run make artifacts");
+    let topo = Topology::new(4, 4);
+    let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 21));
+    let mut b = Batcher::new(corpus, 21);
+    let batches: Vec<_> = (0..k).map(|_| b.next_batch(8, &topo)).collect();
+    let flags: Vec<(f32, f32, f32)> =
+        (0..k).map(|i| if i % 2 == 0 { (0.0, 0.0, 0.0) } else { (1.0, 0.0, 0.0) }).collect();
+    let seeds: Vec<i32> = (0..k as i32).collect();
+
+    // singles
+    t.reset_with_policy(Policy::Baseline).unwrap();
+    let mut single_losses = Vec::new();
+    for i in 0..k {
+        single_losses.push(t.engine.train_step(&batches[i], flags[i], seeds[i]).unwrap().loss);
+    }
+    let single_eval = t.eval_loss(2).unwrap();
+
+    // fused block
+    t.reset_with_policy(Policy::Baseline).unwrap();
+    let block_losses = t.engine.train_block(&batches, &flags, &seeds).unwrap();
+    let block_eval = t.eval_loss(2).unwrap();
+
+    assert_eq!(block_losses.len(), k);
+    for (a, b) in single_losses.iter().zip(&block_losses) {
+        assert!((a - b).abs() < 1e-5, "per-step loss parity: {single_losses:?} vs {block_losses:?}");
+    }
+    assert!(
+        (single_eval - block_eval).abs() < 1e-5,
+        "end-state parity: {single_eval} vs {block_eval}"
+    );
+    assert_eq!(t.engine.step_count(), k as f32);
+}
