@@ -1,16 +1,131 @@
 //! Microbenchmarks of the Layer-3 hot paths: collectives, routing
 //! bookkeeping, BLEU, coordinator decisions. These guard the §Perf
 //! targets in EXPERIMENTS.md (L3 must not bottleneck the step).
+//!
+//! `bench_dispatch` is the acceptance gate for the flat-buffer wire
+//! format: the seed path (growable per-destination vecs + the old
+//! fabric's f32->bytes->f32 wire copy) vs the two-phase flat path
+//! (counts-first exact-size buffers, zero-copy fabric). Target: >= 2x on
+//! the pack/unpack hot loop at t=4096, d=512, 4 ranks.
 
 use std::sync::Arc;
 
-use gating_dropout::benchkit::{bench, report};
+use gating_dropout::benchkit::{bench, fmt_ns, report};
 use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::metrics::corpus_bleu;
 use gating_dropout::moe;
 use gating_dropout::topology::Topology;
 use gating_dropout::util::rng::Rng;
+
+/// What the seed fabric did to every off-rank chunk: serialize f32s to
+/// little-endian bytes at the send mailbox, deserialize at the receive.
+fn wire_copy_seed(v: &[f32]) -> Vec<f32> {
+    let mut bytes = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// One full SPMD dispatch round trip (all ranks, single thread):
+/// pack -> all-to-all -> admit -> return-pack -> all-to-all -> unpack.
+/// `flat` selects the new counts-first path; otherwise the seed path with
+/// its wire copies is replayed faithfully.
+fn dispatch_round_trip(
+    topo: &Topology,
+    xs: &[Vec<f32>],
+    experts: &[Vec<usize>],
+    gates: &[Vec<f32>],
+    d: usize,
+    cap: usize,
+    flat: bool,
+) {
+    let n = topo.n_ranks;
+    // ---- dispatch leg ----
+    let mut packed: Vec<Vec<Vec<f32>>> = (0..n)
+        .map(|r| {
+            if flat {
+                let counts = topo.owner_counts(&experts[r]);
+                moe::route_pack(topo, &xs[r], d, &experts[r], &gates[r], &counts)
+            } else {
+                moe::route_pack_naive(topo, &xs[r], d, &experts[r], &gates[r])
+            }
+        })
+        .collect();
+    let mut returned: Vec<Vec<Vec<f32>>> = vec![Vec::new(); n]; // [home][owner]
+    for dst in 0..n {
+        let arrivals: Vec<Vec<f32>> = (0..n)
+            .map(|src| {
+                let chunk = std::mem::take(&mut packed[src][dst]);
+                if flat || src == dst {
+                    chunk // zero-copy move (the seed kept self-chunks raw too)
+                } else {
+                    wire_copy_seed(&chunk)
+                }
+            })
+            .collect();
+        let (xe, adm) = moe::route_admit(dst, topo, &arrivals, d, cap);
+        // ---- return leg (identity expert output) ----
+        let back = if flat {
+            let rc = moe::return_counts(topo, &adm);
+            moe::return_pack(topo, &adm, &xe, d, &rc)
+        } else {
+            moe::return_pack_naive(topo, &adm, &xe, d)
+        };
+        for (home, chunk) in back.into_iter().enumerate() {
+            let chunk =
+                if flat || home == dst { chunk } else { wire_copy_seed(&chunk) };
+            returned[home].push(chunk);
+        }
+    }
+    for home in 0..n {
+        std::hint::black_box(moe::return_unpack(
+            &returned[home],
+            xs[home].len() / d,
+            d,
+        ));
+    }
+}
+
+fn bench_dispatch() {
+    println!("-- bench_dispatch: seed wire path vs flat-buffer two-phase path --");
+    for (t, d, n_ranks, warmup, iters) in
+        [(1024usize, 128usize, 4usize, 3, 20), (4096, 512, 4, 2, 10), (2048, 256, 8, 2, 10)]
+    {
+        let topo = Topology::new(n_ranks, n_ranks);
+        let cap = t;
+        let mut rng = Rng::new(11);
+        let mut xs = Vec::new();
+        let mut experts = Vec::new();
+        let mut gates = Vec::new();
+        for _ in 0..n_ranks {
+            xs.push((0..t * d).map(|_| rng.uniform() as f32).collect::<Vec<f32>>());
+            experts.push(
+                (0..t).map(|_| rng.below(n_ranks as u64) as usize).collect::<Vec<usize>>(),
+            );
+            gates.push((0..t).map(|_| rng.uniform() as f32).collect::<Vec<f32>>());
+        }
+        let seed = bench(warmup, iters, || {
+            dispatch_round_trip(&topo, &xs, &experts, &gates, d, cap, false);
+        });
+        let flat = bench(warmup, iters, || {
+            dispatch_round_trip(&topo, &xs, &experts, &gates, d, cap, true);
+        });
+        let name = format!("dispatch t={t} d={d} ranks={n_ranks}");
+        report(&format!("{name} [seed]"), &seed);
+        report(&format!("{name} [flat]"), &flat);
+        println!(
+            "{name:<44} speedup {:.2}x  (median {} -> {}; target >= 2x at t=4096 d=512 ranks=4)",
+            seed.median_ns / flat.median_ns,
+            fmt_ns(seed.median_ns),
+            fmt_ns(flat.median_ns),
+        );
+    }
+}
 
 fn main() {
     // coordinator decision stream
@@ -32,31 +147,36 @@ fn main() {
     let experts: Vec<usize> = (0..t).map(|_| rng.below(4) as usize).collect();
     let gates = vec![0.5f32; t];
     let s = bench(5, 50, || {
-        let packed = moe::route_pack(0, &topo, &x, d, &experts, &gates);
+        let counts = topo.owner_counts(&experts);
+        let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
         std::hint::black_box(&packed);
         // simulate self-arrivals (single-rank view of admit cost)
         let (xe, adm) = moe::route_admit(0, &topo, &packed[..1], d, t);
-        let back = moe::return_pack(&topo, &adm, &xe, d);
+        let rc = moe::return_counts(&topo, &adm);
+        let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
         std::hint::black_box(moe::return_unpack(&back, t, d));
     });
     report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
 
-    // fabric all-to-all, 4 threads x 64KB each
+    bench_dispatch();
+
+    // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
     let s = bench(3, 20, || {
         let fab = Arc::new(ThreadFabric::new(4));
         let mut hs = Vec::new();
         for r in 0..4 {
             let fab = fab.clone();
             hs.push(std::thread::spawn(move || {
+                let counts = fab.all_to_all_counts(r, &[4096usize; 4]);
                 let out: Vec<Vec<f32>> = (0..4).map(|_| vec![r as f32; 4096]).collect();
-                std::hint::black_box(fab.all_to_all(r, out));
+                std::hint::black_box(fab.all_to_all_f32(r, out, &counts));
             }));
         }
         for h in hs {
             h.join().unwrap();
         }
     });
-    report("fabric all-to-all (4 ranks x 64KB incl. thread spawn)", &s);
+    report("fabric a2a_f32 (4 ranks x 64KB incl. thread spawn)", &s);
 
     // BLEU over 64 pairs of len 30
     let mut rng = Rng::new(5);

@@ -1,25 +1,42 @@
 //! Mailbox-based fabric implementation with byte/time accounting.
+//!
+//! Three mailbox planes, all FIFO per (src,dst) pair:
+//!   * `f32` payloads -- all-to-all and all-reduce move `Vec<f32>` by
+//!     ownership transfer, zero serialization, zero copies in the fabric;
+//!   * `usize` counts -- the fixed-size counts phase of the two-phase
+//!     dispatch;
+//!   * bytes -- the control plane (the coordinator's broadcast decision).
+//!
+//! SPMD ordering (every rank issues the same collectives in the same
+//! order) keeps the planes coherent: within one plane each (src,dst)
+//! queue is FIFO, so the k-th receive always pairs with the k-th send.
 
+use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
 use super::Collective;
 use crate::netmodel::Cluster;
 
-/// One point-to-point mailbox (src -> dst).
-#[derive(Default)]
-struct Mailbox {
-    q: Mutex<VecDeque<Vec<u8>>>,
+/// One point-to-point mailbox (src -> dst) carrying messages of type `T`.
+struct Mailbox<T> {
+    q: Mutex<VecDeque<T>>,
     cv: Condvar,
 }
 
-impl Mailbox {
-    fn send(&self, msg: Vec<u8>) {
+impl<T> Default for Mailbox<T> {
+    fn default() -> Self {
+        Mailbox { q: Mutex::new(VecDeque::new()), cv: Condvar::new() }
+    }
+}
+
+impl<T> Mailbox<T> {
+    fn send(&self, msg: T) {
         self.q.lock().unwrap().push_back(msg);
         self.cv.notify_all();
     }
 
-    fn recv(&self) -> Vec<u8> {
+    fn recv(&self) -> T {
         let mut q = self.q.lock().unwrap();
         loop {
             if let Some(m) = q.pop_front() {
@@ -35,6 +52,11 @@ impl Mailbox {
 pub struct FabricStats {
     pub a2a_ops: u64,
     pub a2a_bytes: u64,
+    /// Counts-phase exchanges (one per two-phase all-to-all pass). Kept
+    /// separate from `a2a_ops`/`a2a_bytes` so payload accounting stays
+    /// comparable with the single-phase wire format.
+    pub counts_ops: u64,
+    pub counts_bytes: u64,
     pub allreduce_ops: u64,
     pub allreduce_bytes: u64,
     pub broadcast_ops: u64,
@@ -44,11 +66,25 @@ pub struct FabricStats {
     pub modeled_time: f64,
 }
 
+/// Per-collective rendezvous for the all-to-all time model: each rank
+/// reports its send volume for its k-th all-to-all; the op is charged
+/// once, from the MAX per-rank volume, when the last rank reports.
+#[derive(Default)]
+struct A2aLedger {
+    /// Next all-to-all sequence number, per rank.
+    seq: Vec<u64>,
+    /// seq -> (ranks reported, max per-rank bytes so far).
+    pending: HashMap<u64, (usize, u64)>,
+}
+
 /// In-memory fabric for `n` worker threads.
 pub struct ThreadFabric {
     n: usize,
-    boxes: Vec<Mailbox>, // n*n, index src*n+dst
+    f32_boxes: Vec<Mailbox<Vec<f32>>>, // n*n, index src*n+dst
+    count_boxes: Vec<Mailbox<usize>>,  // n*n
+    byte_boxes: Vec<Mailbox<Vec<u8>>>, // n*n
     stats: Mutex<FabricStats>,
+    ledger: Mutex<A2aLedger>,
     cluster: Option<Cluster>,
     barrier: std::sync::Barrier,
 }
@@ -65,15 +101,26 @@ impl ThreadFabric {
         assert!(n_ranks > 0);
         ThreadFabric {
             n: n_ranks,
-            boxes: (0..n_ranks * n_ranks).map(|_| Mailbox::default()).collect(),
+            f32_boxes: (0..n_ranks * n_ranks).map(|_| Mailbox::default()).collect(),
+            count_boxes: (0..n_ranks * n_ranks).map(|_| Mailbox::default()).collect(),
+            byte_boxes: (0..n_ranks * n_ranks).map(|_| Mailbox::default()).collect(),
             stats: Mutex::new(FabricStats::default()),
+            ledger: Mutex::new(A2aLedger { seq: vec![0; n_ranks], pending: HashMap::new() }),
             cluster,
             barrier: std::sync::Barrier::new(n_ranks),
         }
     }
 
-    fn mb(&self, src: usize, dst: usize) -> &Mailbox {
-        &self.boxes[src * self.n + dst]
+    fn fb(&self, src: usize, dst: usize) -> &Mailbox<Vec<f32>> {
+        &self.f32_boxes[src * self.n + dst]
+    }
+
+    fn cb(&self, src: usize, dst: usize) -> &Mailbox<usize> {
+        &self.count_boxes[src * self.n + dst]
+    }
+
+    fn bb(&self, src: usize, dst: usize) -> &Mailbox<Vec<u8>> {
+        &self.byte_boxes[src * self.n + dst]
     }
 
     pub fn stats(&self) -> FabricStats {
@@ -88,18 +135,73 @@ impl ThreadFabric {
         let mut s = self.stats.lock().unwrap();
         f(&mut s, self.cluster.as_ref());
     }
-}
 
-fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
-    let mut out = Vec::with_capacity(v.len() * 4);
-    for x in v {
-        out.extend_from_slice(&x.to_le_bytes());
+    /// Move one chunk per destination through the f32 plane; returns one
+    /// chunk per source. Zero-copy: `Vec<f32>` ownership transfers through
+    /// the mailbox, the self-chunk never leaves this thread.
+    ///
+    /// Returns (arrivals, wire bytes = off-rank only, total bytes = whole
+    /// contributed buffer). Wire bytes feed `a2a_bytes` (what actually
+    /// crossed the fabric, the seed convention); total bytes feed the
+    /// cluster model, whose `all_to_all_time(n, bytes_per_rank)` takes a
+    /// rank's *whole* buffer and applies the (n-1)/n off-rank fraction
+    /// itself -- passing off-rank bytes would discount twice.
+    fn exchange_f32(
+        &self,
+        rank: usize,
+        out: Vec<Vec<f32>>,
+    ) -> (Vec<Vec<f32>>, usize, usize) {
+        assert_eq!(out.len(), self.n, "all_to_all needs one chunk per rank");
+        let total_bytes: usize = out.iter().map(|v| v.len() * 4).sum();
+        let bytes_sent: usize = total_bytes - out[rank].len() * 4;
+        let mut own: Option<Vec<f32>> = None;
+        for (d, chunk) in out.into_iter().enumerate() {
+            if d == rank {
+                own = Some(chunk);
+            } else {
+                self.fb(rank, d).send(chunk);
+            }
+        }
+        let mut result: Vec<Vec<f32>> = Vec::with_capacity(self.n);
+        for s in 0..self.n {
+            if s == rank {
+                result.push(own.take().unwrap());
+            } else {
+                result.push(self.fb(s, rank).recv());
+            }
+        }
+        (result, bytes_sent, total_bytes)
     }
-    out
-}
 
-fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
-    b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    /// Report this rank's volumes for its next all-to-all; charge the op
+    /// (count + modeled time from the max per-rank total volume) when the
+    /// last rank of the collective reports.
+    fn account_a2a(&self, rank: usize, bytes_sent: usize, total_bytes: usize) {
+        let (done, max_bytes) = {
+            let mut led = self.ledger.lock().unwrap();
+            let s = led.seq[rank];
+            led.seq[rank] += 1;
+            let e = led.pending.entry(s).or_insert((0, 0));
+            e.0 += 1;
+            e.1 = e.1.max(total_bytes as u64);
+            let snapshot = *e;
+            if snapshot.0 == self.n {
+                led.pending.remove(&s);
+            }
+            (snapshot.0 == self.n, snapshot.1)
+        };
+        self.account(|st, cl| {
+            st.a2a_bytes += bytes_sent as u64;
+            if done {
+                st.a2a_ops += 1;
+                if let Some(c) = cl {
+                    // the slowest rank paces the collective: charge the
+                    // max per-rank volume, not rank 0's.
+                    st.modeled_time += c.all_to_all_time(self.n, max_bytes as f64);
+                }
+            }
+        });
+    }
 }
 
 impl Collective for ThreadFabric {
@@ -108,81 +210,64 @@ impl Collective for ThreadFabric {
     }
 
     fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
-        assert_eq!(out.len(), self.n, "all_to_all needs one chunk per rank");
-        let bytes_sent: usize = out
-            .iter()
-            .enumerate()
-            .filter(|(d, _)| *d != rank)
-            .map(|(_, v)| v.len() * 4)
-            .sum();
-        let mut mine = Vec::with_capacity(self.n);
-        let mut chunks: Vec<Option<Vec<f32>>> = out.into_iter().map(Some).collect();
-        // deposit: keep own chunk, mail the rest
-        for d in 0..self.n {
-            let chunk = chunks[d].take().unwrap();
-            if d == rank {
-                mine.push((rank, chunk));
-            } else {
-                self.mb(rank, d).send(f32s_to_bytes(&chunk));
-            }
-        }
-        // collect from everyone else
-        let mut result: Vec<Vec<f32>> = vec![Vec::new(); self.n];
-        for (r, c) in mine {
-            result[r] = c;
-        }
-        for s in 0..self.n {
-            if s != rank {
-                result[s] = bytes_to_f32s(&self.mb(s, rank).recv());
-            }
-        }
-        self.account(|st, cl| {
-            st.a2a_bytes += bytes_sent as u64;
-            // charge op count + modeled time once per collective (rank 0)
-            if rank == 0 {
-                st.a2a_ops += 1;
-                if let Some(c) = cl {
-                    // bytes_sent is per-rank; the model wants per-rank volume
-                    st.modeled_time += c.all_to_all_time(self.n, bytes_sent as f64);
-                }
-            }
-        });
+        let (result, bytes_sent, total_bytes) = self.exchange_f32(rank, out);
+        self.account_a2a(rank, bytes_sent, total_bytes);
         result
     }
 
-    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) {
-        // gather-to-root + broadcast; accounting models a ring all-reduce.
-        let bytes = data.len() * 4;
-        if rank == 0 {
-            for s in 1..self.n {
-                let part = bytes_to_f32s(&self.mb(s, 0).recv());
-                assert_eq!(part.len(), data.len(), "all_reduce length mismatch");
-                for (a, b) in data.iter_mut().zip(part) {
-                    *a += b;
-                }
-            }
-            let payload = f32s_to_bytes(data);
-            for d in 1..self.n {
-                self.mb(0, d).send(payload.clone());
-            }
-        } else {
-            self.mb(rank, 0).send(f32s_to_bytes(data));
-            data.copy_from_slice(&bytes_to_f32s(&self.mb(0, rank).recv()));
+    fn all_to_all_f32(
+        &self,
+        rank: usize,
+        bufs: Vec<Vec<f32>>,
+        counts: &[usize],
+    ) -> Vec<Vec<f32>> {
+        assert_eq!(counts.len(), self.n, "one expected count per source rank");
+        let (result, bytes_sent, total_bytes) = self.exchange_f32(rank, bufs);
+        for (s, chunk) in result.iter().enumerate() {
+            assert_eq!(
+                chunk.len(),
+                counts[s],
+                "rank {rank}: arrival from {s} disagrees with counts phase"
+            );
         }
+        self.account_a2a(rank, bytes_sent, total_bytes);
+        result
+    }
+
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Vec<usize> {
+        assert_eq!(counts.len(), self.n, "one count per destination rank");
+        for d in 0..self.n {
+            if d != rank {
+                self.cb(rank, d).send(counts[d]);
+            }
+        }
+        let mut got = Vec::with_capacity(self.n);
+        for s in 0..self.n {
+            got.push(if s == rank { counts[rank] } else { self.cb(s, rank).recv() });
+        }
+        // one u32-sized word per off-rank peer on the wire; fixed size, so
+        // symmetric: charge op + modeled time once, from rank 0. The model
+        // takes the whole contributed buffer (one word per peer incl.
+        // self) and applies the off-rank fraction itself.
+        let bytes = 4 * (self.n - 1);
         self.account(|st, cl| {
-            st.allreduce_bytes += bytes as u64;
+            st.counts_bytes += bytes as u64;
             if rank == 0 {
-                st.allreduce_ops += 1;
+                st.counts_ops += 1;
                 if let Some(c) = cl {
-                    // ring all-reduce: 2*(n-1)/n of the buffer over the
-                    // slowest link + latency rounds.
-                    let n = self.n as f64;
-                    let vol = 2.0 * (n - 1.0) / n * bytes as f64;
-                    let link = c.node_net_bw / c.gpus_per_node as f64;
-                    st.modeled_time += vol / link + 2.0 * (n - 1.0) * c.alpha;
+                    st.modeled_time += c.all_to_all_time(self.n, (4 * self.n) as f64);
                 }
             }
         });
+        got
+    }
+
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) {
+        self.all_reduce_impl(rank, data, true);
+    }
+
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) {
+        self.all_reduce_impl(rank, data, false);
     }
 
     fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
@@ -190,12 +275,12 @@ impl Collective for ThreadFabric {
             let payload = data.expect("root must supply broadcast payload");
             for d in 0..self.n {
                 if d != root {
-                    self.mb(root, d).send(payload.clone());
+                    self.bb(root, d).send(payload.clone());
                 }
             }
             payload
         } else {
-            self.mb(root, rank).recv()
+            self.bb(root, rank).recv()
         };
         self.account(|st, cl| {
             if rank == root {
@@ -214,6 +299,47 @@ impl Collective for ThreadFabric {
 
     fn barrier(&self, _rank: usize) {
         self.barrier.wait();
+    }
+}
+
+impl ThreadFabric {
+    /// gather-to-root + broadcast on the f32 plane; accounting models a
+    /// ring all-reduce. `accounted = false` keeps diagnostics (loss
+    /// reporting) out of the training-communication stats entirely.
+    fn all_reduce_impl(&self, rank: usize, data: &mut [f32], accounted: bool) {
+        let bytes = data.len() * 4;
+        if rank == 0 {
+            for s in 1..self.n {
+                let part = self.fb(s, 0).recv();
+                assert_eq!(part.len(), data.len(), "all_reduce length mismatch");
+                for (a, b) in data.iter_mut().zip(part) {
+                    *a += b;
+                }
+            }
+            for d in 1..self.n {
+                self.fb(0, d).send(data.to_vec());
+            }
+        } else {
+            self.fb(rank, 0).send(data.to_vec());
+            data.copy_from_slice(&self.fb(0, rank).recv());
+        }
+        if !accounted {
+            return;
+        }
+        self.account(|st, cl| {
+            st.allreduce_bytes += bytes as u64;
+            if rank == 0 {
+                st.allreduce_ops += 1;
+                if let Some(c) = cl {
+                    // ring all-reduce: 2*(n-1)/n of the buffer over the
+                    // slowest link + latency rounds.
+                    let n = self.n as f64;
+                    let vol = 2.0 * (n - 1.0) / n * bytes as f64;
+                    let link = c.node_net_bw / c.gpus_per_node as f64;
+                    st.modeled_time += vol / link + 2.0 * (n - 1.0) * c.alpha;
+                }
+            }
+        });
     }
 }
 
@@ -263,12 +389,61 @@ mod tests {
     }
 
     #[test]
+    fn typed_all_to_all_routes_and_checks_counts() {
+        run_ranks(4, |rank, fab| {
+            // rank r sends r+1 copies of (r*10+d) to rank d; counts phase
+            // first, then the flat exchange sized from it.
+            let send_rows: Vec<usize> = vec![rank + 1; 4];
+            let recv_rows = fab.all_to_all_counts(rank, &send_rows);
+            assert_eq!(recv_rows, vec![1, 2, 3, 4]);
+            let bufs: Vec<Vec<f32>> =
+                (0..4).map(|d| vec![(rank * 10 + d) as f32; rank + 1]).collect();
+            let got = fab.all_to_all_f32(rank, bufs, &recv_rows);
+            for (s, chunk) in got.iter().enumerate() {
+                assert_eq!(chunk, &vec![(s * 10 + rank) as f32; s + 1]);
+            }
+        });
+    }
+
+    #[test]
+    fn counts_exchange_accounted_separately() {
+        let fab = Arc::new(ThreadFabric::new(2));
+        let f2 = fab.clone();
+        let h = std::thread::spawn(move || {
+            let _ = f2.all_to_all_counts(1, &[5, 0]);
+        });
+        let _ = fab.all_to_all_counts(0, &[0, 7]);
+        h.join().unwrap();
+        let s = fab.stats();
+        assert_eq!(s.counts_ops, 1);
+        assert_eq!(s.counts_bytes, 2 * 4); // one u32 word per rank off-rank
+        assert_eq!(s.a2a_ops, 0, "counts phase must not inflate payload a2a ops");
+        assert_eq!(s.a2a_bytes, 0);
+    }
+
+    #[test]
     fn all_reduce_sums() {
         run_ranks(4, |rank, fab| {
             let mut data = vec![rank as f32, 1.0];
             fab.all_reduce_sum(rank, &mut data);
             assert_eq!(data, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
         });
+    }
+
+    #[test]
+    fn unaccounted_all_reduce_sums_but_leaves_no_trace() {
+        let fab = Arc::new(ThreadFabric::new(2));
+        let f2 = fab.clone();
+        let h = std::thread::spawn(move || {
+            let mut d = vec![2.0f32];
+            f2.all_reduce_sum_unaccounted(1, &mut d);
+            assert_eq!(d, vec![3.0]);
+        });
+        let mut d = vec![1.0f32];
+        fab.all_reduce_sum_unaccounted(0, &mut d);
+        assert_eq!(d, vec![3.0]);
+        h.join().unwrap();
+        assert_eq!(fab.stats(), FabricStats::default());
     }
 
     #[test]
@@ -299,6 +474,54 @@ mod tests {
     }
 
     #[test]
+    fn modeled_time_charges_max_rank_volume() {
+        // rank 0 sends nothing off-rank, rank 1 sends 1000 floats: the
+        // collective must be charged as if every rank moved 4000 bytes
+        // (the slowest rank paces the op), not rank 0's zero.
+        let cluster = crate::netmodel::V100_IB100;
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(cluster)));
+        let f2 = fab.clone();
+        let h = std::thread::spawn(move || {
+            let _ = f2.all_to_all(1, vec![vec![1.0; 1000], vec![]]);
+        });
+        let _ = fab.all_to_all(0, vec![vec![], vec![]]);
+        h.join().unwrap();
+        let s = fab.stats();
+        assert_eq!(s.a2a_ops, 1);
+        let expect = cluster.all_to_all_time(2, 4000.0);
+        assert!(
+            (s.modeled_time - expect).abs() < 1e-12,
+            "modeled {} != max-volume {}",
+            s.modeled_time,
+            expect
+        );
+    }
+
+    #[test]
+    fn modeled_time_takes_total_buffer_not_off_rank_bytes() {
+        // all_to_all_time(n, bytes_per_rank) applies the (n-1)/n off-rank
+        // fraction itself, so the fabric must hand it the WHOLE per-rank
+        // buffer (self chunk included) or comm time is discounted twice.
+        let cluster = crate::netmodel::V100_IB100;
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(cluster)));
+        let f2 = fab.clone();
+        let h = std::thread::spawn(move || {
+            let _ = f2.all_to_all(1, vec![vec![1.0; 100], vec![2.0; 100]]);
+        });
+        let _ = fab.all_to_all(0, vec![vec![0.0; 100], vec![3.0; 100]]);
+        h.join().unwrap();
+        let s = fab.stats();
+        assert_eq!(s.a2a_bytes, 2 * 400, "wire bytes stay off-rank only");
+        let expect = cluster.all_to_all_time(2, 800.0); // 200 floats total/rank
+        assert!(
+            (s.modeled_time - expect).abs() < 1e-12,
+            "modeled {} != total-volume {}",
+            s.modeled_time,
+            expect
+        );
+    }
+
+    #[test]
     fn barrier_synchronises() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         static COUNT: AtomicUsize = AtomicUsize::new(0);
@@ -308,4 +531,5 @@ mod tests {
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
         });
     }
+
 }

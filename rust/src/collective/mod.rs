@@ -3,13 +3,20 @@
 //!
 //! `ThreadFabric` connects N worker threads through per-(src,dst) mailboxes
 //! and implements the collectives the MoE training path needs:
-//! `all_to_all`, `all_reduce_sum`, `broadcast` (the coordinator's 1-bit
-//! decision rides this) and `barrier`.
+//! the flat-buffer `all_to_all_f32` (with its `all_to_all_counts`
+//! companion -- the counts-first phase of the dispatch wire format, see
+//! `moe`), the legacy `all_to_all`, `all_reduce_sum`, `broadcast` (the
+//! coordinator's 1-bit decision rides this) and `barrier`.
 //!
 //! Every operation is *accounted*: byte counts per collective type and the
 //! modeled wall time it would take on a configured [`Cluster`]
 //! (`netmodel`), so the thread engine can report virtual cluster
-//! throughput while running real data movement on CPU threads.
+//! throughput while running real data movement on CPU threads. The
+//! modeled all-to-all time is charged from the **max per-rank send
+//! volume** of the collective (the slowest rank paces everyone under
+//! skewed routing), not rank 0's volume.
+//!
+//! [`Cluster`]: crate::netmodel::Cluster
 
 mod fabric;
 
@@ -24,10 +31,46 @@ pub trait Collective {
 
     /// Personalised exchange: `out[d]` goes to rank `d`; returns `inp[s]`
     /// received from rank `s`. `out.len()` must equal `n_ranks()`.
+    ///
+    /// Legacy variably-sized exchange: the receiver learns chunk sizes
+    /// only on arrival. Prefer [`Collective::all_to_all_f32`] with a
+    /// preceding [`Collective::all_to_all_counts`] on hot paths.
     fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>>;
+
+    /// Typed flat-buffer exchange (phase 2 of the two-phase dispatch).
+    ///
+    /// `bufs[d]` is one contiguous f32 payload for rank `d`, moved through
+    /// the fabric without serialization. `counts[s]` is the f32 element
+    /// count this rank expects FROM rank `s` (known from the counts
+    /// phase); the fabric asserts every arrival matches, so a routing /
+    /// sizing desync fails loudly at the wire instead of corrupting the
+    /// expert buffers downstream. Byte accounting is identical to
+    /// [`Collective::all_to_all`]: 4 bytes per off-rank element.
+    fn all_to_all_f32(
+        &self,
+        rank: usize,
+        bufs: Vec<Vec<f32>>,
+        counts: &[usize],
+    ) -> Vec<Vec<f32>>;
+
+    /// Phase 1 of the two-phase dispatch: exchange per-destination element
+    /// counts. `counts[d]` is how many payload rows this rank will send to
+    /// rank `d`; returns how many each source rank will send to us. Fixed
+    /// size (one word per peer), accounted separately from payload
+    /// all-to-alls (`counts_ops` / `counts_bytes`) so the paper's
+    /// comm-savings numbers stay comparable with the seed.
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Vec<usize>;
 
     /// Element-wise sum across ranks; result replicated to every rank.
     fn all_reduce_sum(&self, rank: usize, data: &mut [f32]);
+
+    /// [`Collective::all_reduce_sum`] that stays OUT of the fabric stats:
+    /// for diagnostics (per-step loss reporting) that a real training job
+    /// would not pay for on the training path. Default implementation
+    /// falls back to the accounted variant.
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) {
+        self.all_reduce_sum(rank, data);
+    }
 
     /// Root's payload is delivered to every rank (root passes Some).
     fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8>;

@@ -123,11 +123,12 @@ impl WorkerState {
         decision: Decision,
         x: &[f32],
         labels: &[i32],
-        global_step: u64,
+        token_ids: &[u32],
     ) -> Result<f32> {
         let m = &self.runner.manifest;
         let (din, d, t, r) = (m.d_in, m.d_model, m.tokens_per_rank, m.ranks);
         let cap = t; // expert buffer rows = tokens_per_rank (one expert/rank)
+        let stride = moe::HEADER + d;
 
         // ---- stage 1 forward -------------------------------------------------
         let out = self.runner.run(
@@ -149,14 +150,9 @@ impl WorkerState {
                 (0..t).map(|i| moe::gate_of(probs, r, i, self.rank)).collect();
             (e, g)
         } else if decision.hash_route {
-            let e: Vec<usize> = (0..t)
-                .map(|i| {
-                    moe::hash_expert((self.rank * t + i) as u32 ^ (global_step as u32) << 10, r)
-                })
-                .collect();
-            let g: Vec<f32> =
-                e.iter().enumerate().map(|(i, &ei)| moe::gate_of(probs, r, i, ei)).collect();
-            (e, g)
+            // Hash-Layer routing hashes the token's VOCAB id (the
+            // `model._hash_ids` convention), not its batch position.
+            moe::hash_route(token_ids, probs, r)
         } else {
             moe::top1(probs, t, r)
         };
@@ -179,8 +175,13 @@ impl WorkerState {
                 (h.clone(), admitted)
             }
         } else {
-            let packed = moe::route_pack(self.rank, &self.topo, h, d, &experts, &gates);
-            let arrivals = fabric.all_to_all(self.rank, packed);
+            // two-phase flat dispatch: counts first, then exactly-sized
+            // contiguous buffers through the typed all-to-all.
+            let counts = self.topo.owner_counts(&experts);
+            let recv_tokens = fabric.all_to_all_counts(self.rank, &counts);
+            let packed = moe::route_pack(&self.topo, h, d, &experts, &gates, &counts);
+            let expect: Vec<usize> = recv_tokens.iter().map(|&c| c * stride).collect();
+            let arrivals = fabric.all_to_all_f32(self.rank, packed, &expect);
             moe::route_admit(self.rank, &self.topo, &arrivals, d, cap)
         };
 
@@ -200,6 +201,17 @@ impl WorkerState {
         };
 
         // ---- combine (+return all-to-all unless dropped) ---------------------
+        // admitted tokens per home rank: shared by the return leg and both
+        // backward wire legs (they all ride the admission edges).
+        let ret_counts: Vec<usize> = if decision.drop {
+            Vec::new()
+        } else {
+            moe::return_counts(&self.topo, &admitted)
+        };
+        // own tokens admitted per owner rank: the return-leg counts phase
+        // delivers exactly this, and both backward wire legs reuse it
+        // (empty on dropped / expert-skipped steps, where no wire runs).
+        let mut surviving: Vec<usize> = Vec::new();
         // ret: per-token combined/raw/slot/gate view on the home rank.
         let ret: moe::Returned = match (&ye, decision.drop) {
             (None, _) => moe::Returned {
@@ -224,8 +236,14 @@ impl WorkerState {
                 out
             }
             (Some(ye), false) => {
-                let back = moe::return_pack(&self.topo, &admitted, ye, d);
-                let arrivals = fabric.all_to_all(self.rank, back);
+                // counts phase again: the home rank cannot predict how
+                // many of its tokens survived capacity admission here.
+                let recv_tokens = fabric.all_to_all_counts(self.rank, &ret_counts);
+                let back = moe::return_pack(&self.topo, &admitted, ye, d, &ret_counts);
+                let expect: Vec<usize> =
+                    recv_tokens.iter().map(|&c| c * stride).collect();
+                let arrivals = fabric.all_to_all_f32(self.rank, back, &expect);
+                surviving = recv_tokens;
                 moe::return_unpack(&arrivals, t, d)
             }
         };
@@ -264,6 +282,12 @@ impl WorkerState {
                     dprobs[i * r + experts[i]] = dgate[i];
                 }
             }
+            // Both backward wire legs ride the admission edges, so no
+            // counts phase goes on the wire: this rank *receives* one dye
+            // row / *sends* one dxe row per token it admitted
+            // (`ret_counts`), and *sends* one dye row / *receives* one
+            // dxe row per own token that survived admission (`surviving`,
+            // already delivered by the return-leg counts phase).
             // dye rows to expert ranks
             let dye_buf: Vec<f32> = if decision.drop {
                 // local: slot i = token i
@@ -275,24 +299,25 @@ impl WorkerState {
                 }
                 buf
             } else {
-                // ship [slot, src_idx, gate, gate*dy_row] to the expert owner
-                let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
+                // ship [slot, src_idx, gate, gate*dy_row] to the expert
+                // owner
+                let mut msgs: Vec<Vec<f32>> = surviving
+                    .iter()
+                    .map(|&c| Vec::with_capacity(c * stride))
+                    .collect();
                 for i in 0..t {
                     if ret.slot[i] < 0 {
                         continue;
                     }
                     let dest = self.topo.owner_of(experts[i]);
                     let msg = &mut msgs[dest];
-                    msg.push(ret.slot[i] as f32);
-                    msg.push(i as f32);
-                    msg.push(ret.gate[i]);
-                    for j in 0..d {
-                        msg.push(ret.gate[i] * dy[i * d + j]);
-                    }
+                    msg.extend_from_slice(&[ret.slot[i] as f32, i as f32, ret.gate[i]]);
+                    msg.extend(dy[i * d..(i + 1) * d].iter().map(|&v| ret.gate[i] * v));
                 }
-                let arrivals = fabric.all_to_all(self.rank, msgs);
+                let expect: Vec<usize> =
+                    ret_counts.iter().map(|&c| c * stride).collect();
+                let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
                 let mut buf = vec![0f32; cap * d];
-                let stride = moe::HEADER + d;
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
                         let slot = tok[0] as usize;
@@ -319,16 +344,20 @@ impl WorkerState {
                     dh[i] += dxe[i];
                 }
             } else {
-                let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
+                // dxe retraces the admission edges in reverse: sender
+                // sizes from `ret_counts`, home ranks expect `surviving`
+                let mut msgs: Vec<Vec<f32>> = ret_counts
+                    .iter()
+                    .map(|&c| Vec::with_capacity(c * stride))
+                    .collect();
                 for a in &admitted {
                     let msg = &mut msgs[a.src_rank];
-                    msg.push(a.slot as f32);
-                    msg.push(a.src_idx as f32);
-                    msg.push(a.gate);
+                    msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
                     msg.extend_from_slice(&dxe[a.slot * d..(a.slot + 1) * d]);
                 }
-                let arrivals = fabric.all_to_all(self.rank, msgs);
-                let stride = moe::HEADER + d;
+                let expect: Vec<usize> =
+                    surviving.iter().map(|&c| c * stride).collect();
+                let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
                         let i = tok[1] as usize;
@@ -419,13 +448,14 @@ impl DistEngine {
                 let t = w.runner.manifest.tokens_per_rank;
                 for step in 0..cfg.steps {
                     let decision = coord.decide(step);
-                    let (x, labels) = task.sample(rank, t, &mut rng);
+                    let (x, labels, token_ids) = task.sample(rank, t, &mut rng);
                     let t0 = Instant::now();
-                    let mut loss = w.step(&fabric, decision, &x, &labels, step)?;
+                    let mut loss = w.step(&fabric, decision, &x, &labels, &token_ids)?;
                     walls.push((decision.drop, t0.elapsed().as_secs_f64()));
-                    // rank-mean loss for reporting
+                    // rank-mean loss for reporting: diagnostics only, so it
+                    // must stay OUT of the training-communication stats
                     let mut lbuf = vec![loss];
-                    fabric.all_reduce_sum(rank, &mut lbuf);
+                    fabric.all_reduce_sum_unaccounted(rank, &mut lbuf);
                     loss = lbuf[0] / cfg.n_ranks as f32;
                     losses.push(loss);
                 }

@@ -4,7 +4,9 @@
 //! resident expert's parameters and a full replica of the dense
 //! parameters, runs the AOT stage artifacts (`artifacts/dist/`) on its own
 //! PJRT client, and exchanges *actual token tensors* with the other
-//! workers through a [`ThreadFabric`] all-to-all. The
+//! workers through a [`ThreadFabric`] two-phase flat-buffer all-to-all
+//! (counts first, then exactly-sized zero-copy payloads -- see the wire
+//! format in `moe`). The
 //! [`DistCoordinator`] broadcasts the per-step Gating Dropout decision;
 //! on a dropped step the all-to-alls are genuinely not executed (and on a
 //! Gate-Expert-Drop step the expert stage isn't either), so wallclock

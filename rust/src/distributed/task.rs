@@ -13,6 +13,9 @@ pub struct ClusterTask {
     pub d_in: usize,
     pub n_classes: usize,
     pub n_langs: usize,
+    /// Vocabulary size for the per-token ids (Hash-Layer routing hashes
+    /// these, matching `model._hash_ids` on the single-process path).
+    pub vocab: usize,
     centroids: Vec<f32>, // [n_langs, d_in]
     teacher_w: Vec<f32>, // [d_in, n_classes]
     teacher_b: Vec<f32>, // [n_langs, n_classes]
@@ -24,12 +27,18 @@ impl ClusterTask {
         let centroids = (0..n_langs * d_in).map(|_| rng.normal() as f32 * 0.8).collect();
         let teacher_w = (0..d_in * n_classes).map(|_| rng.normal() as f32).collect();
         let teacher_b = (0..n_langs * n_classes).map(|_| rng.normal() as f32 * 0.5).collect();
-        ClusterTask { d_in, n_classes, n_langs, centroids, teacher_w, teacher_b }
+        ClusterTask { d_in, n_classes, n_langs, vocab: 32_768, centroids, teacher_w, teacher_b }
     }
 
     /// Sample `t` tokens for `rank` (language = rank % n_langs).
-    /// Returns (x row-major [t, d_in], labels [t]).
-    pub fn sample(&self, rank: usize, t: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>) {
+    /// Returns (x row-major [t, d_in], labels [t], vocab ids [t]).
+    ///
+    /// Ids ride a *forked* stream (`fork` reads, never advances, the
+    /// caller's rng), so the x/label streams are bit-identical to what
+    /// they were before ids existed -- fixed-seed runs reproduce the seed
+    /// losses exactly on every policy that ignores ids.
+    pub fn sample(&self, rank: usize, t: usize, rng: &mut Rng) -> (Vec<f32>, Vec<i32>, Vec<u32>) {
+        let mut id_rng = rng.fork(0x1D5);
         let lang = rank % self.n_langs;
         let mut x = Vec::with_capacity(t * self.d_in);
         let mut labels = Vec::with_capacity(t);
@@ -40,7 +49,9 @@ impl ClusterTask {
             }
             labels.push(self.label_of(&x[start..], lang));
         }
-        (x, labels)
+        let ids: Vec<u32> =
+            (0..t).map(|_| id_rng.below(self.vocab as u64) as u32).collect();
+        (x, labels, ids)
     }
 
     fn label_of(&self, row: &[f32], lang: usize) -> i32 {
@@ -67,19 +78,21 @@ mod tests {
         let task = ClusterTask::new(8, 4, 2, 3);
         let mut r1 = Rng::new(5);
         let mut r2 = Rng::new(5);
-        let (x1, l1) = task.sample(0, 32, &mut r1);
-        let (x2, l2) = task.sample(0, 32, &mut r2);
+        let (x1, l1, i1) = task.sample(0, 32, &mut r1);
+        let (x2, l2, i2) = task.sample(0, 32, &mut r2);
         assert_eq!(x1, x2);
         assert_eq!(l1, l2);
+        assert_eq!(i1, i2);
         assert!(l1.iter().all(|&l| (0..4).contains(&l)));
+        assert!(i1.iter().all(|&id| (id as usize) < task.vocab));
     }
 
     #[test]
     fn ranks_have_distinct_clusters() {
         let task = ClusterTask::new(8, 4, 4, 3);
         let mut rng = Rng::new(7);
-        let (x0, _) = task.sample(0, 64, &mut rng);
-        let (x1, _) = task.sample(1, 64, &mut rng);
+        let (x0, _, _) = task.sample(0, 64, &mut rng);
+        let (x1, _, _) = task.sample(1, 64, &mut rng);
         let mean = |x: &[f32]| x.iter().sum::<f32>() / x.len() as f32;
         // different centroids shift the means; extremely unlikely to match
         assert!((mean(&x0) - mean(&x1)).abs() > 1e-3);
@@ -89,8 +102,22 @@ mod tests {
     fn labels_not_constant() {
         let task = ClusterTask::new(8, 8, 2, 11);
         let mut rng = Rng::new(1);
-        let (_, labels) = task.sample(0, 128, &mut rng);
+        let (_, labels, _) = task.sample(0, 128, &mut rng);
         let first = labels[0];
         assert!(labels.iter().any(|&l| l != first), "teacher degenerate");
+    }
+
+    #[test]
+    fn ids_do_not_perturb_the_x_stream() {
+        // the id stream is forked off, so consecutive samples from one rng
+        // produce the same x/labels that a two-sample sequence always did;
+        // in particular sampling twice gives different x (rng advanced by
+        // x/labels only, deterministically).
+        let task = ClusterTask::new(8, 4, 2, 3);
+        let mut rng = Rng::new(5);
+        let (xa, _, ia) = task.sample(0, 16, &mut rng);
+        let (xb, _, ib) = task.sample(0, 16, &mut rng);
+        assert_ne!(xa, xb, "rng must advance across samples");
+        assert_ne!(ia, ib, "id stream must advance with the rng state");
     }
 }

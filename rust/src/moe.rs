@@ -6,9 +6,35 @@
 //! admit arrivals up to the expert's capacity, run the expert, and ship
 //! results back to the token's home rank.
 //!
-//! Wire format for a routed token: `[expert_id, src_idx, gate, x_0..x_{d-1}]`
-//! (three f32 header words + the token row). f32 encodes the small integer
-//! headers exactly.
+//! # Wire format: two-phase flat-buffer all-to-all
+//!
+//! The dispatch/return wire is the dominant cost of MoE training (the
+//! paper's whole premise), so it is built the way Switch Transformers and
+//! the sparsely-gated MoE layer build theirs -- counts first, then one
+//! exactly-sized contiguous buffer per destination:
+//!
+//! 1. **Counts phase.** Each rank computes per-destination token counts in
+//!    one O(t) sweep ([`Topology::owner_counts`] on dispatch,
+//!    [`return_counts`] on the way back) and exchanges them through the
+//!    fixed-size `Collective::all_to_all_counts`. After this phase every
+//!    rank knows exactly how many rows arrive from every peer.
+//! 2. **Payload phase.** [`route_pack`] / [`return_pack`] allocate one
+//!    `Vec<f32>` per destination with its *final* capacity up front and
+//!    fill it with slice copies -- no growable-vec reallocation, no
+//!    per-element pushes -- then `Collective::all_to_all_f32` moves the
+//!    buffers through the fabric by ownership transfer (zero
+//!    serialization). The receiver checks every arrival against the
+//!    counts phase, so sizing desyncs fail at the wire.
+//!
+//! The flat row layout inside a buffer is unchanged from the seed wire
+//! format, so numerics are bit-identical to the old path: a routed token
+//! is `[expert_id, src_idx, gate, x_0..x_{d-1}]` (three f32 header words +
+//! the token row; f32 encodes the small integer headers exactly), and a
+//! returned token is `[slot, src_idx, gate, y_0..y_{d-1}]`.
+//!
+//! The seed's growable-vec packers survive as [`route_pack_naive`] /
+//! [`return_pack_naive`] so `bench_dispatch` (rust/benches/microbench.rs)
+//! can keep measuring the win of the flat path over the seed path.
 
 use crate::topology::Topology;
 
@@ -46,13 +72,64 @@ pub fn hash_expert(token_id: u32, n_experts: usize) -> usize {
     ((token_id.wrapping_mul(2654435761) >> 16) % n_experts as u32) as usize
 }
 
-/// Pack this rank's tokens into per-destination-rank messages.
+/// Hash-Layer routing for a whole batch: expert = [`hash_expert`] of the
+/// token's vocabulary id; the gate is the gating network's probability of
+/// that forced choice (keeps the gate-net gradient alive, exactly like the
+/// single-process `model._hash_ids` path).
+pub fn hash_route(
+    token_ids: &[u32],
+    probs: &[f32],
+    n_experts: usize,
+) -> (Vec<usize>, Vec<f32>) {
+    let experts: Vec<usize> =
+        token_ids.iter().map(|&id| hash_expert(id, n_experts)).collect();
+    let gates: Vec<f32> = experts
+        .iter()
+        .enumerate()
+        .map(|(i, &e)| gate_of(probs, n_experts, i, e))
+        .collect();
+    (experts, gates)
+}
+
+/// Pack this rank's tokens into per-destination-rank flat buffers.
 ///
 /// `x` is row-major [t, d]; `experts[i]` the token's expert; `gates[i]` its
-/// combine weight. Tokens whose expert is local to `rank` are *also*
-/// packed (into the self-chunk) so the unpack path is uniform.
+/// combine weight; `counts` the per-destination token counts from the
+/// counts phase (`topo.owner_counts(&experts)`). Buffers are allocated at
+/// final size and filled append-only, so no reallocation ever happens.
+/// Tokens whose expert is local are *also* packed (into the self-chunk) so
+/// the unpack path is uniform.
 pub fn route_pack(
-    rank: usize,
+    topo: &Topology,
+    x: &[f32],
+    d: usize,
+    experts: &[usize],
+    gates: &[f32],
+    counts: &[usize],
+) -> Vec<Vec<f32>> {
+    let t = experts.len();
+    assert_eq!(x.len(), t * d);
+    assert_eq!(counts.len(), topo.n_ranks);
+    let stride = HEADER + d;
+    let mut out: Vec<Vec<f32>> =
+        counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
+    for i in 0..t {
+        let e = experts[i];
+        let msg = &mut out[topo.owner_of(e)];
+        msg.extend_from_slice(&[e as f32, i as f32, gates[i]]);
+        msg.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    debug_assert!(
+        out.iter().zip(counts).all(|(m, &c)| m.len() == c * stride),
+        "counts phase disagrees with pack"
+    );
+    out
+}
+
+/// The seed's growable-vec packer (one `Vec` per destination grown by
+/// per-token pushes). Kept only as the `bench_dispatch` baseline and the
+/// byte-for-byte oracle for [`route_pack`].
+pub fn route_pack_naive(
     topo: &Topology,
     x: &[f32],
     d: usize,
@@ -62,11 +139,9 @@ pub fn route_pack(
     let t = experts.len();
     assert_eq!(x.len(), t * d);
     let mut out: Vec<Vec<f32>> = vec![Vec::new(); topo.n_ranks];
-    let _ = rank;
     for i in 0..t {
         let e = experts[i];
-        let dest = topo.owner_of(e);
-        let msg = &mut out[dest];
+        let msg = &mut out[topo.owner_of(e)];
         msg.push(e as f32);
         msg.push(i as f32);
         msg.push(gates[i]);
@@ -103,7 +178,8 @@ pub fn route_admit(
     let per = topo.experts_per_rank();
     let stride = HEADER + d;
     let mut xe = vec![0f32; per * cap * d];
-    let mut admitted = Vec::new();
+    let incoming: usize = arrivals.iter().map(|m| m.len() / stride).sum();
+    let mut admitted = Vec::with_capacity(incoming);
     let mut fill = vec![0usize; per];
     let base = topo.local_experts(rank).start;
     for (src_rank, msg) in arrivals.iter().enumerate() {
@@ -130,11 +206,47 @@ pub fn route_admit(
     (xe, admitted)
 }
 
-/// Pack expert outputs for the return all-to-all: rows of
-/// `[slot, src_idx, gate, y_0..]` grouped by the token's home rank. The
-/// slot rides along so the home rank can address the backward all-to-all
-/// (cotangents must land back in the same expert buffer rows).
+/// Admitted tokens per *home* rank: the counts-phase sweep for the return
+/// trip (and for the dxe backward all-to-all, which ships one row per
+/// admitted token along the same edges).
+pub fn return_counts(topo: &Topology, admitted: &[Admitted]) -> Vec<usize> {
+    let mut counts = vec![0usize; topo.n_ranks];
+    for a in admitted {
+        counts[a.src_rank] += 1;
+    }
+    counts
+}
+
+/// Pack expert outputs for the return all-to-all into flat per-home-rank
+/// buffers (sized by `counts` = [`return_counts`]): rows of
+/// `[slot, src_idx, gate, y_0..]`. The slot rides along so the home rank
+/// can address the backward all-to-all (cotangents must land back in the
+/// same expert buffer rows).
 pub fn return_pack(
+    topo: &Topology,
+    admitted: &[Admitted],
+    ye: &[f32],
+    d: usize,
+    counts: &[usize],
+) -> Vec<Vec<f32>> {
+    assert_eq!(counts.len(), topo.n_ranks);
+    let stride = HEADER + d;
+    let mut out: Vec<Vec<f32>> =
+        counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
+    for a in admitted {
+        let msg = &mut out[a.src_rank];
+        msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
+        msg.extend_from_slice(&ye[a.slot * d..(a.slot + 1) * d]);
+    }
+    debug_assert!(
+        out.iter().zip(counts).all(|(m, &c)| m.len() == c * stride),
+        "counts phase disagrees with return pack"
+    );
+    out
+}
+
+/// Seed growable-vec return packer; see [`route_pack_naive`].
+pub fn return_pack_naive(
     topo: &Topology,
     admitted: &[Admitted],
     ye: &[f32],
@@ -183,9 +295,11 @@ pub fn return_unpack(arrivals: &[Vec<f32>], t: usize, d: usize) -> Returned {
             assert!(i < t);
             out.slot[i] = tok[0] as i32;
             out.gate[i] = gate;
-            for (j, &v) in tok[HEADER..].iter().enumerate() {
-                out.raw[i * d + j] = v;
-                out.combined[i * d + j] = gate * v;
+            out.raw[i * d..(i + 1) * d].copy_from_slice(&tok[HEADER..]);
+            for (c, &v) in
+                out.combined[i * d..(i + 1) * d].iter_mut().zip(&tok[HEADER..])
+            {
+                *c = gate * v;
             }
         }
     }
@@ -218,6 +332,27 @@ mod tests {
         }
     }
 
+    /// The distributed engine and the single-process model must agree on
+    /// Hash-Layer routing: expert = Knuth-hash of the token's VOCAB id
+    /// (`model._hash_ids`), never of its batch position.
+    #[test]
+    fn hash_route_matches_model_hash_ids_convention() {
+        let e = 4;
+        let t = 16;
+        let ids: Vec<u32> = (0..t as u32).map(|i| i * 977 + 13).collect();
+        let probs = vec![1.0 / e as f32; t * e];
+        let (experts, gates) = hash_route(&ids, &probs, e);
+        for (i, &id) in ids.iter().enumerate() {
+            // the python oracle: (uint32(id) * 2654435761) >> 16 % e
+            let oracle = ((id.wrapping_mul(2654435761) >> 16) % e as u32) as usize;
+            assert_eq!(experts[i], oracle, "token {i} (id {id})");
+            assert_eq!(gates[i], probs[i * e + experts[i]]);
+        }
+        // same id => same expert, wherever it appears in the batch
+        let (again, _) = hash_route(&ids, &probs, e);
+        assert_eq!(experts, again);
+    }
+
     /// Single-rank round trip: pack -> admit -> return -> unpack restores
     /// every token (identity expert), scaled by its gate.
     #[test]
@@ -228,10 +363,11 @@ mod tests {
         let x: Vec<f32> = (0..t * d).map(|i| i as f32).collect();
         let experts = vec![0, 1, 0, 1, 0, 1];
         let gates = vec![0.5; t];
-        let packed = route_pack(0, &topo, &x, d, &experts, &gates);
+        let counts = topo.owner_counts(&experts);
+        let packed = route_pack(&topo, &x, d, &experts, &gates, &counts);
         let (xe, adm) = route_admit(0, &topo, &packed, d, 3);
         assert_eq!(adm.len(), t);
-        let ret = return_pack(&topo, &adm, &xe, d);
+        let ret = return_pack(&topo, &adm, &xe, d, &return_counts(&topo, &adm));
         let r = return_unpack(&ret, t, d);
         assert!(r.slot.iter().all(|&s| s >= 0));
         for i in 0..t * d {
@@ -247,15 +383,51 @@ mod tests {
         let x = vec![1.0; 5 * d];
         let experts = vec![0; 5];
         let gates = vec![1.0; 5];
-        let packed = route_pack(0, &topo, &x, d, &experts, &gates);
+        let counts = topo.owner_counts(&experts);
+        let packed = route_pack(&topo, &x, d, &experts, &gates, &counts);
         let (_, adm) = route_admit(0, &topo, &packed, d, 3);
         assert_eq!(adm.len(), 3);
         let kept: Vec<usize> = adm.iter().map(|a| a.src_idx).collect();
         assert_eq!(kept, vec![0, 1, 2], "earliest tokens admitted first");
-        let ret = return_pack(&topo, &adm, &vec![1.0; 3 * d], d);
+        let ret =
+            return_pack(&topo, &adm, &vec![1.0; 3 * d], d, &return_counts(&topo, &adm));
         let r = return_unpack(&ret, 5, d);
         let got: Vec<bool> = r.slot.iter().map(|&s| s >= 0).collect();
         assert_eq!(got, vec![true, true, true, false, false]);
+    }
+
+    /// The flat packers must produce byte-identical buffers to the seed's
+    /// growable packers: that is what makes per-step losses bit-for-bit
+    /// reproducible across the wire-format change.
+    #[test]
+    fn prop_flat_pack_matches_naive() {
+        run_prop("flat-pack-oracle", 60, 7, |rng: &mut Rng| {
+            let n_ranks = [1usize, 2, 4][rng.below(3) as usize];
+            let per = 1 + rng.below(3) as usize;
+            let topo = Topology::new(n_ranks, n_ranks * per);
+            let d = 1 + rng.below(8) as usize;
+            let t = 1 + rng.below(48) as usize;
+            let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+            let experts: Vec<usize> =
+                (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
+            let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
+            let counts = topo.owner_counts(&experts);
+            let flat = route_pack(&topo, &x, d, &experts, &gates, &counts);
+            let naive = route_pack_naive(&topo, &x, d, &experts, &gates);
+            if flat != naive {
+                return Err("route_pack != route_pack_naive".into());
+            }
+            let cap = 1 + rng.below(16) as usize;
+            // admit on rank 0 with its own chunk to exercise return packers
+            let (xe, adm) = route_admit(0, &topo, &flat[..1], d, cap);
+            let rc = return_counts(&topo, &adm);
+            if return_pack(&topo, &adm, &xe, d, &rc)
+                != return_pack_naive(&topo, &adm, &xe, d)
+            {
+                return Err("return_pack != return_pack_naive".into());
+            }
+            Ok(())
+        });
     }
 
     /// Property: across any topology/routing, no token is duplicated, every
@@ -272,12 +444,13 @@ mod tests {
             let cap = 1 + rng.below(16) as usize;
             // every rank routes t tokens to random experts
             let mut all_packed: Vec<Vec<Vec<f32>>> = Vec::new();
-            for r in 0..n_ranks {
+            for _ in 0..n_ranks {
                 let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
                 let experts: Vec<usize> =
                     (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
                 let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
-                all_packed.push(route_pack(r, &topo, &x, d, &experts, &gates));
+                let counts = topo.owner_counts(&experts);
+                all_packed.push(route_pack(&topo, &x, d, &experts, &gates, &counts));
             }
             // simulate the all-to-all: arrivals[dst][src] = all_packed[src][dst]
             for dst in 0..n_ranks {
@@ -309,6 +482,129 @@ mod tests {
                 if ids.len() != adm.len() {
                     return Err("token duplicated".into());
                 }
+            }
+            Ok(())
+        });
+    }
+
+    /// Property: full multi-rank round trip over the flat wire format with
+    /// UNEVEN per-rank token counts and capacity-overflow drops. The
+    /// counts phase must agree with the packed buffer sizes on every edge,
+    /// tokens must be conserved (admitted somewhere xor dropped), and for
+    /// every surviving token `combined == gate * raw` with `raw` equal to
+    /// the expert output (identity expert => the original token row).
+    #[test]
+    fn prop_flat_wire_round_trip_uneven() {
+        run_prop("flat-wire-round-trip", 50, 1234, |rng: &mut Rng| {
+            let n_ranks = [2usize, 4][rng.below(2) as usize];
+            let per = 1 + rng.below(2) as usize;
+            let topo = Topology::new(n_ranks, n_ranks * per);
+            let d = 1 + rng.below(5) as usize;
+            let cap = 1 + rng.below(6) as usize; // small: force overflow drops
+            let stride = HEADER + d;
+
+            // uneven chunk sizes: each rank routes a different token count
+            let ts: Vec<usize> = (0..n_ranks).map(|_| 1 + rng.below(24) as usize).collect();
+            let mut xs: Vec<Vec<f32>> = Vec::new();
+            let mut experts_all: Vec<Vec<usize>> = Vec::new();
+            let mut gates_all: Vec<Vec<f32>> = Vec::new();
+            let mut packed: Vec<Vec<Vec<f32>>> = Vec::new();
+            let mut send_counts: Vec<Vec<usize>> = Vec::new();
+            for r in 0..n_ranks {
+                let t = ts[r];
+                let x: Vec<f32> =
+                    (0..t * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let experts: Vec<usize> =
+                    (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
+                let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
+                let counts = topo.owner_counts(&experts);
+                let bufs = route_pack(&topo, &x, d, &experts, &gates, &counts);
+                // phase-1 invariant: counts size the buffers exactly
+                for (dst, buf) in bufs.iter().enumerate() {
+                    if buf.len() != counts[dst] * stride {
+                        return Err(format!("rank {r}->{dst}: counts != buffer"));
+                    }
+                }
+                xs.push(x);
+                experts_all.push(experts);
+                gates_all.push(gates);
+                packed.push(bufs);
+                send_counts.push(counts);
+            }
+
+            // simulated counts + payload all-to-alls (transpose)
+            let mut total_admitted = 0usize;
+            let mut returned_bufs: Vec<Vec<Vec<f32>>> =
+                vec![vec![Vec::new(); n_ranks]; n_ranks]; // [home][owner]
+            for dst in 0..n_ranks {
+                let recv_counts: Vec<usize> =
+                    (0..n_ranks).map(|src| send_counts[src][dst]).collect();
+                let arrivals: Vec<Vec<f32>> =
+                    (0..n_ranks).map(|src| packed[src][dst].clone()).collect();
+                for (src, a) in arrivals.iter().enumerate() {
+                    if a.len() != recv_counts[src] * stride {
+                        return Err(format!("{src}->{dst}: arrival != counts phase"));
+                    }
+                }
+                let (xe, adm) = route_admit(dst, &topo, &arrivals, d, cap);
+                total_admitted += adm.len();
+                // identity expert: ye = xe
+                let rc = return_counts(&topo, &adm);
+                let back = return_pack(&topo, &adm, &xe, d, &rc);
+                for (home, buf) in back.iter().enumerate() {
+                    if buf.len() != rc[home] * stride {
+                        return Err(format!("return {dst}->{home}: counts != buffer"));
+                    }
+                    returned_bufs[home][dst] = buf.clone();
+                }
+            }
+
+            // unpack on every home rank and check conservation + combine
+            let mut total_survived = 0usize;
+            for home in 0..n_ranks {
+                let t = ts[home];
+                let ret = return_unpack(&returned_bufs[home], t, d);
+                for i in 0..t {
+                    if ret.slot[i] >= 0 {
+                        total_survived += 1;
+                        let g = ret.gate[i];
+                        if (g - gates_all[home][i]).abs() > 0.0 {
+                            return Err(format!("rank {home} tok {i}: gate mangled"));
+                        }
+                        for j in 0..d {
+                            let raw = ret.raw[i * d + j];
+                            if raw != xs[home][i * d + j] {
+                                return Err(format!(
+                                    "rank {home} tok {i}: raw row mangled"
+                                ));
+                            }
+                            if ret.combined[i * d + j] != g * raw {
+                                return Err(format!(
+                                    "rank {home} tok {i}: combined != gate*raw"
+                                ));
+                            }
+                        }
+                    } else {
+                        // dropped: residual only -- zero rows, zero gate
+                        if ret.gate[i] != 0.0 {
+                            return Err("dropped token kept a gate".into());
+                        }
+                        if ret.raw[i * d..(i + 1) * d].iter().any(|&v| v != 0.0) {
+                            return Err("dropped token kept a row".into());
+                        }
+                    }
+                }
+            }
+            // token conservation: every admitted token came home, every
+            // token was admitted somewhere xor dropped
+            if total_survived != total_admitted {
+                return Err(format!(
+                    "admitted {total_admitted} != survived {total_survived}"
+                ));
+            }
+            let total_tokens: usize = ts.iter().sum();
+            if total_admitted > total_tokens {
+                return Err("token duplicated across ranks".into());
             }
             Ok(())
         });

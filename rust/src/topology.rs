@@ -59,6 +59,17 @@ impl Topology {
         assert!(row < batch_rows);
         row * self.n_ranks / batch_rows
     }
+
+    /// Tokens per destination rank for a routing assignment: the O(t)
+    /// counts sweep that sizes the flat dispatch buffers (phase 1 of the
+    /// two-phase all-to-all, see `moe`).
+    pub fn owner_counts(&self, experts: &[usize]) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_ranks];
+        for &e in experts {
+            counts[self.owner_of(e)] += 1;
+        }
+        counts
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +120,14 @@ mod tests {
     #[should_panic]
     fn rejects_uneven_split() {
         Topology::new(3, 8);
+    }
+
+    #[test]
+    fn owner_counts_sums_to_tokens() {
+        let t = Topology::new(4, 8);
+        let experts = vec![0, 1, 7, 6, 2, 2, 3, 5];
+        let counts = t.owner_counts(&experts);
+        assert_eq!(counts, vec![2, 3, 1, 2]); // experts {0,1},{2,3},{4,5},{6,7}
+        assert_eq!(counts.iter().sum::<usize>(), experts.len());
     }
 }

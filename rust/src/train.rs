@@ -198,8 +198,6 @@ impl Trainer {
         let mut history = Vec::new();
         let mut best_bleu: f64 = 0.0;
         let started = std::time::Instant::now();
-        let with_decode = self.engine.manifest.dims.batch_rows > 0; // decode availability checked at call
-        let _ = with_decode;
         for step in 0..self.cfg.steps {
             let decision = self.coordinator.decide(step);
             let batch = self.batcher.next_batch(rows, &self.topo);

@@ -76,6 +76,30 @@ fn broadcast_overhead_is_one_byte_per_step() {
 }
 
 #[test]
+fn counts_phase_two_per_full_step_and_tiny() {
+    // the two-phase wire format pays one counts exchange per payload
+    // all-to-all on the forward path (dispatch + return); the backward
+    // legs derive their counts locally. Counts traffic must stay
+    // negligible next to payloads and out of the a2a payload stats.
+    let res = run(Policy::Baseline, 10, 8);
+    assert_eq!(res.fabric.counts_ops, 10 * 2, "dispatch + return counts phases");
+    assert!(
+        res.fabric.counts_bytes < res.fabric.a2a_bytes / 100,
+        "counts phase should be negligible: {} vs {}",
+        res.fabric.counts_bytes,
+        res.fabric.a2a_bytes
+    );
+}
+
+#[test]
+fn loss_reporting_stays_out_of_allreduce_stats() {
+    // exactly the 4 dense-grad all-reduces per step (w_in, b_in, wr,
+    // w_out); the per-step loss report rides the unaccounted variant.
+    let res = run(Policy::Baseline, 5, 9);
+    assert_eq!(res.fabric.allreduce_ops, 5 * 4, "only training all-reduces counted");
+}
+
+#[test]
 fn dropped_bytes_less_than_baseline() {
     let base = run(Policy::Baseline, 20, 7);
     let gd = run(Policy::GateDrop { p: 0.5 }, 20, 7);
