@@ -4,11 +4,11 @@
 //!
 //!   cargo run --release --example distributed_train -- [--steps 60]
 
-use anyhow::Result;
 use gating_dropout::benchkit::Table;
 use gating_dropout::coordinator::Policy;
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -17,7 +17,8 @@ fn main() -> Result<()> {
 
     println!("== distributed engine: 4 workers, 1 expert each, real all-to-all ==");
     let mut t = Table::new(&[
-        "policy", "loss first→last", "a2a ops", "a2a MB", "bcast B", "full ms", "drop ms", "dense ok",
+        "policy", "loss first→last", "a2a ops", "a2a MB", "bcast B", "full ms", "drop ms",
+        "dense ok",
     ]);
     for policy in [
         Policy::Baseline,
@@ -29,7 +30,11 @@ fn main() -> Result<()> {
         let cfg = DistRunConfig { policy, steps, seed, ..Default::default() };
         let res = DistEngine::run(&cfg)?;
         let mean = |v: Vec<f64>| {
-            if v.is_empty() { f64::NAN } else { v.iter().sum::<f64>() / v.len() as f64 }
+            if v.is_empty() {
+                f64::NAN
+            } else {
+                v.iter().sum::<f64>() / v.len() as f64
+            }
         };
         let full = mean(res.step_wall.iter().filter(|(d, _)| !d).map(|(_, s)| s * 1e3).collect());
         let drop = mean(res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| s * 1e3).collect());
@@ -39,8 +44,16 @@ fn main() -> Result<()> {
             res.fabric.a2a_ops.to_string(),
             format!("{:.2}", res.fabric.a2a_bytes as f64 / 1e6),
             res.fabric.broadcast_bytes.to_string(),
-            if full.is_nan() { "-".into() } else { format!("{full:.1}") },
-            if drop.is_nan() { "-".into() } else { format!("{drop:.1}") },
+            if full.is_nan() {
+                "-".into()
+            } else {
+                format!("{full:.1}")
+            },
+            if drop.is_nan() {
+                "-".into()
+            } else {
+                format!("{drop:.1}")
+            },
             res.dense_consistent.to_string(),
         ]);
     }

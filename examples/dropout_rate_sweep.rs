@@ -5,7 +5,6 @@
 //!   cargo run --release --example dropout_rate_sweep -- \
 //!       [--steps 120] [--rates 0,0.1,0.2,0.3,0.4,0.5] [--run-preset wmt10]
 
-use anyhow::Result;
 use gating_dropout::benchkit::{fmt_tps, Table};
 use gating_dropout::config::RunConfig;
 use gating_dropout::coordinator::Policy;
@@ -13,6 +12,7 @@ use gating_dropout::netmodel::MoeWorkload;
 use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -32,7 +32,11 @@ fn main() -> Result<()> {
     let mut rows = Vec::new();
     let mut baseline_bleu = None;
     for &p in &rates {
-        let policy = if p == 0.0 { Policy::Baseline } else { Policy::GateExpertDrop { p } };
+        let policy = if p == 0.0 {
+            Policy::Baseline
+        } else {
+            Policy::GateExpertDrop { p }
+        };
         trainer.reset_with_policy(policy)?;
         eprintln!("[fig6] training p={p} ...");
         let res = trainer.run(true)?;
@@ -55,6 +59,9 @@ fn main() -> Result<()> {
         ]);
     }
     t.print();
-    println!("\nexpected shape: throughput rises with p; BLEU Δ peaks near p≈0.2 and goes negative by p=0.5");
+    println!(
+        "\nexpected shape: throughput rises with p; BLEU Δ peaks near p≈0.2 and goes negative \
+         by p=0.5"
+    );
     Ok(())
 }

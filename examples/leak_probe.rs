@@ -1,6 +1,7 @@
 // RSS growth probe: is the per-step memory growth ~= output tuple size?
 use gating_dropout::config::RunConfig;
 use gating_dropout::data::{Batcher, Corpus, CorpusConfig};
+use gating_dropout::runtime::Backend;
 use gating_dropout::topology::Topology;
 use gating_dropout::train::Trainer;
 
@@ -17,11 +18,20 @@ fn main() {
     let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 3));
     let mut b = Batcher::new(corpus, 3);
     let batch = b.next_batch(8, &topo);
-    for i in 0..5 { t.engine.train_step(&batch, (0.0,0.0,0.0), i).unwrap(); }
+    for i in 0..5 {
+        t.engine.train_step(&batch, (0.0, 0.0, 0.0), i).unwrap();
+    }
     let r0 = rss_mb();
     let n = 100;
-    for i in 0..n { t.engine.train_step(&batch, (0.0,0.0,0.0), i).unwrap(); }
+    for i in 0..n {
+        t.engine.train_step(&batch, (0.0, 0.0, 0.0), i).unwrap();
+    }
     let r1 = rss_mb();
-    println!("RSS {:.1} -> {:.1} MB; growth/step = {:.3} MB (state size = {:.1} MB)",
-        r0, r1, (r1-r0)/n as f64, 3.0 * 0.3 * 4.0);
+    println!(
+        "RSS {:.1} -> {:.1} MB; growth/step = {:.3} MB (state size = {:.1} MB)",
+        r0,
+        r1,
+        (r1 - r0) / n as f64,
+        3.0 * 0.3 * 4.0
+    );
 }

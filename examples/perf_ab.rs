@@ -1,13 +1,20 @@
 // §Perf A/B: single train_step x K vs fused train_block(K) on tiny.
 use gating_dropout::config::RunConfig;
 use gating_dropout::data::{Batcher, Corpus, CorpusConfig};
+use gating_dropout::runtime::Backend;
 use gating_dropout::topology::Topology;
 use gating_dropout::train::Trainer;
 
 fn main() {
     let cfg = RunConfig::preset_named("tiny").unwrap();
     let mut t = Trainer::new(cfg, false).unwrap();
-    let k = t.engine.block_k().unwrap();
+    let Some(k) = t.engine.block_k() else {
+        println!(
+            "no fused train_block on the '{}' backend (XLA artifact only) — skipping A/B",
+            t.engine.name()
+        );
+        return;
+    };
     let topo = Topology::new(4, 4);
     let corpus = Corpus::new(CorpusConfig::for_preset(4, 512, 16, 3));
     let mut b = Batcher::new(corpus, 3);
@@ -15,17 +22,27 @@ fn main() {
     let flags = vec![(0.0f32, 0.0f32, 0.0f32); k];
     let seeds: Vec<i32> = (0..k as i32).collect();
     // warmup
-    for i in 0..k { t.engine.train_step(&batches[i], flags[i], seeds[i]).unwrap(); }
+    for i in 0..k {
+        t.engine.train_step(&batches[i], flags[i], seeds[i]).unwrap();
+    }
     t.engine.train_block(&batches, &flags, &seeds).unwrap();
     let n = 12;
     let t0 = std::time::Instant::now();
     for _ in 0..n {
-        for i in 0..k { t.engine.train_step(&batches[i], flags[i], seeds[i]).unwrap(); }
+        for i in 0..k {
+            t.engine.train_step(&batches[i], flags[i], seeds[i]).unwrap();
+        }
     }
     let single = t0.elapsed().as_secs_f64() / (n * k) as f64;
     let t1 = std::time::Instant::now();
-    for _ in 0..n { t.engine.train_block(&batches, &flags, &seeds).unwrap(); }
+    for _ in 0..n {
+        t.engine.train_block(&batches, &flags, &seeds).unwrap();
+    }
     let block = t1.elapsed().as_secs_f64() / (n * k) as f64;
-    println!("tiny per-step: single={:.1}ms block(K={k})={:.1}ms speedup={:.2}x",
-             single * 1e3, block * 1e3, single / block);
+    println!(
+        "tiny per-step: single={:.1}ms block(K={k})={:.1}ms speedup={:.2}x",
+        single * 1e3,
+        block * 1e3,
+        single / block
+    );
 }

@@ -6,10 +6,11 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use anyhow::Result;
 use gating_dropout::config::RunConfig;
 use gating_dropout::coordinator::Policy;
+use gating_dropout::runtime::Backend;
 use gating_dropout::train::Trainer;
+use gating_dropout::util::error::Result;
 
 fn main() -> Result<()> {
     let mut cfg = RunConfig::preset_named("tiny")?;
@@ -19,11 +20,12 @@ fn main() -> Result<()> {
     cfg.out_dir = "runs/quickstart".into();
 
     println!("== gating-dropout quickstart ==");
-    println!("preset={} policy={} (compiling AOT artifacts ...)", cfg.preset, cfg.policy.name());
+    println!("preset={} policy={} (loading backend ...)", cfg.preset, cfg.policy.name());
     let mut trainer = Trainer::new(cfg, true)?;
-    let dims = &trainer.engine.manifest.dims;
+    let dims = &trainer.engine.manifest().dims;
     println!(
-        "model: {:.1}M params, {} experts, d={} (manifest-driven)",
+        "backend: {} | model: {:.1}M params, {} experts, d={} (manifest-driven)",
+        trainer.engine.name(),
         dims.param_count as f64 / 1e6,
         dims.n_experts,
         dims.d_model
@@ -36,7 +38,11 @@ fn main() -> Result<()> {
             "{:>4}  {:.4}  {}",
             h.step,
             h.loss,
-            if h.dropped { "DROP (no all-to-all)" } else { "-" }
+            if h.dropped {
+                "DROP (no all-to-all)"
+            } else {
+                "-"
+            }
         );
     }
     println!(

@@ -3,13 +3,13 @@
 //!
 //!   cargo run --release --example throughput_scaling -- [--cluster v100|a100]
 
-use anyhow::Result;
 use gating_dropout::benchkit::{fmt_tps, Table};
 use gating_dropout::config::cluster_by_name;
 use gating_dropout::coordinator::Policy;
 use gating_dropout::netmodel::MoeWorkload;
 use gating_dropout::simengine;
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();

@@ -12,12 +12,13 @@
 //! "train a ~100M transformer for a few hundred steps and log the loss
 //! curve" deliverable. Results land in EXPERIMENTS.md.
 
-use anyhow::Result;
 use gating_dropout::benchkit::{fmt_tps, Table};
 use gating_dropout::config::RunConfig;
 use gating_dropout::coordinator::Policy;
+use gating_dropout::runtime::Backend;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -38,7 +39,7 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(cfg.clone(), true)?;
     println!(
         "model: {:.1}M params | sim cluster: {} x{} GPUs",
-        trainer.engine.manifest.dims.param_count as f64 / 1e6,
+        trainer.engine.manifest().dims.param_count as f64 / 1e6,
         cfg.cluster.name,
         cfg.sim_gpus
     );
@@ -64,7 +65,9 @@ fn main() -> Result<()> {
         .map(|(_, r)| r.best_bleu)
         .unwrap_or(0.0);
 
-    println!("\n== Table 2 (synthetic-WMT10 analog; target BLEU = baseline best = {target_bleu:.2}) ==");
+    println!(
+        "\n== Table 2 (synthetic-WMT10 analog; target BLEU = baseline best = {target_bleu:.2}) =="
+    );
     let mut t = Table::new(&[
         "Method", "Throughput (virt)", "BLEU@end", "Time to target (virt s)", "Steps to target",
     ]);

@@ -4,14 +4,15 @@
 //!
 //!   cargo run --release --example web50_quality -- [--steps 150]
 
-use anyhow::Result;
 use gating_dropout::benchkit::{fmt_tps, Table};
 use gating_dropout::config::{cluster_by_name, RunConfig};
 use gating_dropout::coordinator::Policy;
 use gating_dropout::netmodel::MoeWorkload;
+use gating_dropout::runtime::Backend;
 use gating_dropout::simengine;
 use gating_dropout::train::{DirectionBleu, Trainer};
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 fn agg(by: &[DirectionBleu], e2x: bool, low: Option<bool>) -> f64 {
     let sel: Vec<f64> = by
@@ -46,8 +47,8 @@ fn main() -> Result<()> {
     let mut trainer = Trainer::new(cfg.clone(), true)?;
     println!(
         "model: {:.1}M params, {} experts, 50 synthetic languages (Zipf sizes)",
-        trainer.engine.manifest.dims.param_count as f64 / 1e6,
-        trainer.engine.manifest.dims.n_experts
+        trainer.engine.manifest().dims.param_count as f64 / 1e6,
+        trainer.engine.manifest().dims.n_experts
     );
     let mut t4 = Table::new(&["Method", "BLEU (avg)", "E→X", "E→X (low)", "X→E", "X→E (low)"]);
     for p in policies {

@@ -42,5 +42,8 @@ fn main() {
         ]);
     }
     t.print();
-    println!("(loss EMA is the quality proxy at this scale; BLEU needs longer runs — see EXPERIMENTS.md)");
+    println!(
+        "(loss EMA is the quality proxy at this scale; BLEU needs longer runs — see \
+         EXPERIMENTS.md)"
+    );
 }

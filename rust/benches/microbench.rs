@@ -77,8 +77,11 @@ fn dispatch_round_trip(
             moe::return_pack_naive(topo, &adm, &xe, d)
         };
         for (home, chunk) in back.into_iter().enumerate() {
-            let chunk =
-                if flat || home == dst { chunk } else { wire_copy_seed(&chunk) };
+            let chunk = if flat || home == dst {
+                chunk
+            } else {
+                wire_copy_seed(&chunk)
+            };
             returned[home].push(chunk);
         }
     }

@@ -6,11 +6,14 @@ use gating_dropout::benchkit::{bench, fmt_tps, report, Table};
 use gating_dropout::config::RunConfig;
 use gating_dropout::coordinator::Policy;
 use gating_dropout::netmodel::{MoeWorkload, V100_IB100};
+use gating_dropout::runtime::Backend;
 use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 
 fn main() {
-    println!("== Table 2 throughput column (paper: 129k/135k/143k/150k => +0/+4.7/+10.9/+16.3%) ==");
+    println!(
+        "== Table 2 throughput column (paper: 129k/135k/143k/150k => +0/+4.7/+10.9/+16.3%) =="
+    );
     let w = MoeWorkload::wmt10(16);
     let rows = simengine::policy_throughputs(&V100_IB100, 16, &w, 4000, 1);
     let base = rows[0].tokens_per_sec;

@@ -5,7 +5,9 @@ use gating_dropout::netmodel::{MoeWorkload, A100_IB1600, V100_IB100};
 use gating_dropout::simengine;
 
 fn main() {
-    println!("== Table 3: Web-50 throughput, 64 GPUs (paper: V100 126/140/146k, A100 362/372/384k) ==");
+    println!(
+        "== Table 3: Web-50 throughput, 64 GPUs (paper: V100 126/140/146k, A100 362/372/384k) =="
+    );
     let w = MoeWorkload::web50(64);
     let v = simengine::policy_throughputs(&V100_IB100, 64, &w, 4000, 1);
     let a = simengine::policy_throughputs(&A100_IB1600, 64, &w, 4000, 1);

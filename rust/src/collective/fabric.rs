@@ -243,7 +243,11 @@ impl Collective for ThreadFabric {
         }
         let mut got = Vec::with_capacity(self.n);
         for s in 0..self.n {
-            got.push(if s == rank { counts[rank] } else { self.cb(s, rank).recv() });
+            got.push(if s == rank {
+                counts[rank]
+            } else {
+                self.cb(s, rank).recv()
+            });
         }
         // one u32-sized word per off-rank peer on the wire; fixed size, so
         // symmetric: charge op + modeled time once, from rank 0. The model

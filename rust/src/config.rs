@@ -5,7 +5,8 @@
 //! dataset shape and schedule. Presets mirror the paper's experimental
 //! settings scaled to this testbed (DESIGN.md §4).
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::coordinator::Policy;
 use crate::netmodel::{Cluster, A100_IB1600, V100_IB100};
@@ -109,7 +110,7 @@ impl RunConfig {
     /// Load from a JSON config file (all keys optional over the preset).
     pub fn from_json_file(path: &str) -> Result<RunConfig> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("{path}: {e}"))?;
         let mut cfg = match j.get("run_preset").and_then(Json::as_str) {
             Some(p) => RunConfig::preset_named(p)?,
             None => RunConfig::default(),

@@ -110,8 +110,12 @@ impl Corpus {
 
     /// One tag token per (language, direction) pair.
     pub fn tag(&self, lang: usize, dir: Direction) -> i32 {
-        TAG0 + lang as i32
-            + if dir == Direction::XtoE { self.cfg.n_langs as i32 } else { 0 }
+        let dir_off = if dir == Direction::XtoE {
+            self.cfg.n_langs as i32
+        } else {
+            0
+        };
+        TAG0 + lang as i32 + dir_off
     }
 
     /// Is `lang` in the low-resource tail (by sampling weight)?
@@ -148,7 +152,11 @@ impl Corpus {
     /// Sample one pair. `rng` drives language/direction/content choice.
     pub fn sample_pair(&self, rng: &mut Rng) -> Pair {
         let lang = rng.weighted(&self.weights);
-        let dir = if rng.bernoulli(0.5) { Direction::EtoX } else { Direction::XtoE };
+        let dir = if rng.bernoulli(0.5) {
+            Direction::EtoX
+        } else {
+            Direction::XtoE
+        };
         self.sample_pair_for(rng, lang, dir)
     }
 
@@ -194,7 +202,8 @@ impl Corpus {
         let mut out = Vec::new();
         for lang in 0..self.cfg.n_langs {
             for dir in [Direction::EtoX, Direction::XtoE] {
-                let mut rng = Rng::new(self.cfg.seed ^ 0xE0E0).fork((lang * 2 + (dir == Direction::XtoE) as usize) as u64);
+                let stream = (lang * 2 + (dir == Direction::XtoE) as usize) as u64;
+                let mut rng = Rng::new(self.cfg.seed ^ 0xE0E0).fork(stream);
                 for _ in 0..n_per {
                     out.push(self.sample_pair_for(&mut rng, lang, dir));
                 }

@@ -18,7 +18,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::collective::{Collective, FabricStats, ThreadFabric};
 use crate::coordinator::{Decision, DistCoordinator, Policy};
@@ -42,8 +42,15 @@ pub struct DistRunConfig {
 
 impl Default for DistRunConfig {
     fn default() -> Self {
+        // Without the XLA stage artifacts compiled in, default to the
+        // deterministic synthetic dist model (pure-Rust stage runner).
+        let artifact_dir = if cfg!(feature = "backend-xla") {
+            "artifacts/dist"
+        } else {
+            "synthetic"
+        };
         DistRunConfig {
-            artifact_dir: "artifacts/dist".into(),
+            artifact_dir: artifact_dir.into(),
             n_ranks: 4,
             steps: 30,
             policy: Policy::Baseline,
@@ -417,7 +424,7 @@ impl DistEngine {
     /// accounting + per-step wallclock split by decision.
     pub fn run(cfg: &DistRunConfig) -> Result<DistRunResult> {
         let manifest = DistManifest::load(&cfg.artifact_dir)?;
-        anyhow::ensure!(
+        crate::ensure!(
             cfg.n_ranks == manifest.ranks,
             "artifact exported for {} ranks, requested {}",
             manifest.ranks,
@@ -438,7 +445,8 @@ impl DistEngine {
             let task = task.clone();
             let manifest = manifest.clone();
             let cfg = cfg.clone();
-            handles.push(std::thread::spawn(move || -> Result<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64)> {
+            type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64);
+            handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
                 let mut w = WorkerState::new(rank, manifest, cfg.lr)?;
                 let mut coord =
                     DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
@@ -474,7 +482,7 @@ impl DistEngine {
         }
         let mut all: Vec<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64)> = Vec::new();
         for h in handles {
-            all.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+            all.push(h.join().map_err(|_| crate::err!("worker panicked"))??);
         }
         let dense_consistent = all.windows(2).all(|w| w[0].2 == w[1].2);
         let losses = all[0].0.clone();

@@ -1,15 +1,36 @@
-//! Stage-artifact runner: manifest + per-worker compiled executables.
+//! Stage runner: manifest + per-worker stage execution, behind the same
+//! backend split as the single-process runtime.
 //!
-//! Every worker owns a `StageRunner` (its own PJRT client + compiled
-//! stage executables): workers are real independent "machines" that share
-//! nothing but the fabric.
+//! Every worker owns a `StageRunner`: workers are real independent
+//! "machines" that share nothing but the fabric. Under `backend-xla` the
+//! runner compiles the per-stage HLO artifacts on its own PJRT client;
+//! otherwise it executes the same stage algebra in pure Rust on the
+//! cache-blocked [`tensor`](crate::runtime::tensor) kernels -- the exact
+//! math of `python/compile/dist_stages.py` (`s1_fwd`, `expert_fwd`,
+//! `head_loss_bwd`, `expert_bwd`, `s1_bwd`), so the distributed engine,
+//! its collectives, and the Gating Dropout skip path all run on a stock
+//! toolchain with no artifacts on disk.
+//!
+//! `DistManifest::load("synthetic")` yields a deterministic generated
+//! model (the `dist_stages.py` default config with seeded init) for
+//! exactly that artifact-free mode.
 
-use anyhow::{Context, Result};
-use xla::Literal;
-
+use crate::runtime::tensor::{matmul, matmul_at, matmul_bt, relu, softmax_rows, softmax_vjp_rows};
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::{bail, ensure};
 
-/// Parsed `artifacts/dist/manifest.json`.
+/// The default `dist_stages.py` DistConfig, used by the synthetic model.
+const SYN_D_IN: usize = 32;
+const SYN_D_MODEL: usize = 64;
+const SYN_D_FF: usize = 256;
+const SYN_N_CLASSES: usize = 16;
+const SYN_TOKENS_PER_RANK: usize = 64;
+const SYN_RANKS: usize = 4;
+const SYN_SEED: u64 = 7;
+
+/// Parsed `artifacts/dist/manifest.json`, or the synthetic equivalent.
 #[derive(Debug, Clone)]
 pub struct DistManifest {
     pub dir: std::path::PathBuf,
@@ -21,14 +42,20 @@ pub struct DistManifest {
     pub ranks: usize,
     pub files: std::collections::BTreeMap<String, String>,
     pub init_files: std::collections::BTreeMap<String, (Vec<usize>, String)>,
+    /// When set, `load_init` generates parameters deterministically from
+    /// this seed instead of reading `.bin` files.
+    pub synthetic_seed: Option<u64>,
 }
 
 impl DistManifest {
     pub fn load(dir: impl AsRef<std::path::Path>) -> Result<DistManifest> {
         let dir = dir.as_ref().to_path_buf();
+        if dir == std::path::Path::new("synthetic") {
+            return Ok(DistManifest::synthetic());
+        }
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("{}/manifest.json (run `make artifacts`)", dir.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("dist manifest: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("dist manifest: {e}"))?;
         let c = j.get("config").context("dist manifest: config")?;
         let g = |k: &str| c.get(k).and_then(Json::as_usize).context(k.to_string());
         let mut files = std::collections::BTreeMap::new();
@@ -60,30 +87,151 @@ impl DistManifest {
             ranks: g("ranks")?,
             files,
             init_files,
+            synthetic_seed: None,
             dir,
         })
+    }
+
+    /// The artifact-free model: `dist_stages.py` default dims, seeded
+    /// deterministic init, pure-Rust stage execution.
+    pub fn synthetic() -> DistManifest {
+        let (d, f) = (SYN_D_MODEL, SYN_D_FF);
+        let mut init_files = std::collections::BTreeMap::new();
+        let mut add = |name: String, shape: Vec<usize>| {
+            init_files.insert(name, (shape, String::new()));
+        };
+        add("w_in".into(), vec![SYN_D_IN, d]);
+        add("b_in".into(), vec![d]);
+        add("wr".into(), vec![d, SYN_RANKS]);
+        add("w_out".into(), vec![d, SYN_N_CLASSES]);
+        for e in 0..SYN_RANKS {
+            add(format!("expert{e}_w1"), vec![d, f]);
+            add(format!("expert{e}_w2"), vec![f, d]);
+        }
+        DistManifest {
+            dir: std::path::PathBuf::from("synthetic"),
+            d_in: SYN_D_IN,
+            d_model: d,
+            d_ff: f,
+            n_classes: SYN_N_CLASSES,
+            tokens_per_rank: SYN_TOKENS_PER_RANK,
+            ranks: SYN_RANKS,
+            files: std::collections::BTreeMap::new(),
+            init_files,
+            synthetic_seed: Some(SYN_SEED),
+        }
     }
 
     pub fn load_init(&self, name: &str) -> Result<Vec<f32>> {
         let (shape, file) =
             self.init_files.get(name).with_context(|| format!("no init param '{name}'"))?;
+        if let Some(seed) = self.synthetic_seed {
+            return Ok(synth_init(name, shape, seed, self.d_in, self.d_model, self.d_ff));
+        }
         let path = self.dir.join(file);
         let bytes = std::fs::read(&path).with_context(|| path.display().to_string())?;
         let expect: usize = shape.iter().product::<usize>() * 4;
-        anyhow::ensure!(bytes.len() == expect, "{name}: {} != {expect}", bytes.len());
+        ensure!(bytes.len() == expect, "{name}: {} != {expect}", bytes.len());
         Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
     }
 }
 
-/// One worker's compiled stage executables.
+/// Deterministic synthetic init, `dist_stages.py` scales: normal times
+/// 1/sqrt(fan_in), biases zero. Streams are keyed by parameter name so
+/// every rank generates identical dense parameters.
+fn synth_init(name: &str, shape: &[usize], seed: u64, d_in: usize, d: usize, f: usize) -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    if name == "b_in" {
+        return vec![0.0; n];
+    }
+    let scale = if name == "w_in" {
+        1.0 / (d_in as f32).sqrt()
+    } else if name.ends_with("_w2") {
+        1.0 / (f as f32).sqrt()
+    } else {
+        1.0 / (d as f32).sqrt() // wr, w_out, expert w1
+    };
+    // FNV-1a over the name keys the stream.
+    let mut key: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        key = (key ^ b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    let mut rng = Rng::new(seed ^ 0xD157).fork(key);
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// One stage input: a shaped f32 matrix, an f32 vector, or an i32 vector.
+/// (The XLA runner turns these into PJRT literals; the reference runner
+/// consumes the slices directly.)
+pub enum StageArg<'a> {
+    F2(&'a [f32], usize, usize),
+    F1(&'a [f32]),
+    I1(&'a [i32]),
+}
+
+pub fn lit2(data: &[f32], r: usize, c: usize) -> Result<StageArg<'_>> {
+    ensure!(data.len() == r * c, "lit2: {} elements for {r}x{c}", data.len());
+    Ok(StageArg::F2(data, r, c))
+}
+
+pub fn lit1(data: &[f32]) -> StageArg<'_> {
+    StageArg::F1(data)
+}
+
+pub fn lit1_i32(data: &[i32]) -> StageArg<'_> {
+    StageArg::I1(data)
+}
+
+/// One worker's stage executor.
 pub struct StageRunner {
     pub manifest: DistManifest,
+    #[cfg(feature = "backend-xla")]
+    xla: XlaStages,
+}
+
+impl StageRunner {
+    #[cfg(feature = "backend-xla")]
+    pub fn new(manifest: DistManifest) -> Result<StageRunner> {
+        let xla = XlaStages::new(&manifest)?;
+        Ok(StageRunner { manifest, xla })
+    }
+
+    #[cfg(not(feature = "backend-xla"))]
+    pub fn new(manifest: DistManifest) -> Result<StageRunner> {
+        Ok(StageRunner { manifest })
+    }
+
+    /// Execute stage `name`; returns the flattened tuple outputs as f32
+    /// vecs (i32 outputs are not used by any stage). A synthetic manifest
+    /// has no HLO files, so it always runs the pure-Rust stages -- even
+    /// on `backend-xla` builds.
+    pub fn run(&self, name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
+        if self.manifest.synthetic_seed.is_some() {
+            return ref_stage(name, args);
+        }
+        #[cfg(feature = "backend-xla")]
+        {
+            self.xla.run(name, args)
+        }
+        #[cfg(not(feature = "backend-xla"))]
+        {
+            ref_stage(name, args)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// XLA stage execution (compiled HLO artifacts, one PJRT client per worker)
+
+#[cfg(feature = "backend-xla")]
+struct XlaStages {
     client: xla::PjRtClient,
     exes: std::collections::BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
-impl StageRunner {
-    pub fn new(manifest: DistManifest) -> Result<StageRunner> {
+#[cfg(feature = "backend-xla")]
+impl XlaStages {
+    fn new(manifest: &DistManifest) -> Result<XlaStages> {
         let client = xla::PjRtClient::cpu()?;
         let mut exes = std::collections::BTreeMap::new();
         for (name, file) in &manifest.files {
@@ -93,17 +241,27 @@ impl StageRunner {
             let comp = xla::XlaComputation::from_proto(&proto);
             exes.insert(name.clone(), client.compile(&comp).context(name.clone())?);
         }
-        Ok(StageRunner { manifest, client, exes })
+        Ok(XlaStages { client, exes })
     }
 
-    /// Execute stage `name`; returns the flattened tuple outputs as f32
-    /// vecs (i32 outputs are not used by any stage).
-    pub fn run(&self, name: &str, args: &[Literal]) -> Result<Vec<Vec<f32>>> {
+    fn run(&self, name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
         let exe = self.exes.get(name).with_context(|| format!("no stage '{name}'"))?;
+        let lits = args
+            .iter()
+            .map(|a| {
+                Ok(match a {
+                    StageArg::F2(d, r, c) => {
+                        xla::Literal::vec1(d).reshape(&[*r as i64, *c as i64])?
+                    }
+                    StageArg::F1(d) => xla::Literal::vec1(d),
+                    StageArg::I1(d) => xla::Literal::vec1(d),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
         // leak-free path: execute() leaks its input device buffers (see
         // runtime::engine::exec_leakfree); upload via owned buffers.
-        let mut bufs = Vec::with_capacity(args.len());
-        for lit in args {
+        let mut bufs = Vec::with_capacity(lits.len());
+        for lit in &lits {
             bufs.push(self.client.buffer_from_host_literal(None, lit)?);
         }
         let res = exe.execute_b::<xla::PjRtBuffer>(&bufs)?;
@@ -112,14 +270,360 @@ impl StageRunner {
     }
 }
 
-pub fn lit2(data: &[f32], r: usize, c: usize) -> Result<Literal> {
-    Ok(Literal::vec1(data).reshape(&[r as i64, c as i64])?)
+// ---------------------------------------------------------------------------
+// Reference stage execution (pure Rust, the dist_stages.py math verbatim)
+
+fn f2<'a>(args: &'a [StageArg], i: usize, stage: &str) -> Result<(&'a [f32], usize, usize)> {
+    match args.get(i) {
+        Some(StageArg::F2(d, r, c)) => Ok((*d, *r, *c)),
+        _ => bail!("{stage}: arg {i} must be an f32 matrix"),
+    }
 }
 
-pub fn lit1(data: &[f32]) -> Literal {
-    Literal::vec1(data)
+fn f1<'a>(args: &'a [StageArg], i: usize, stage: &str) -> Result<&'a [f32]> {
+    match args.get(i) {
+        Some(StageArg::F1(d)) => Ok(*d),
+        _ => bail!("{stage}: arg {i} must be an f32 vector"),
+    }
 }
 
-pub fn lit1_i32(data: &[i32]) -> Literal {
-    Literal::vec1(data)
+fn i1<'a>(args: &'a [StageArg], i: usize, stage: &str) -> Result<&'a [i32]> {
+    match args.get(i) {
+        Some(StageArg::I1(d)) => Ok(*d),
+        _ => bail!("{stage}: arg {i} must be an i32 vector"),
+    }
+}
+
+/// Pure-Rust execution of one stage (see `dist_stages.py` for the exact
+/// formulas this mirrors).
+pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
+    match name {
+        // h = relu(x@w_in + b_in); probs = softmax(h@wr)
+        "s1_fwd" => {
+            let (w_in, din, d) = f2(args, 0, name)?;
+            let b_in = f1(args, 1, name)?;
+            let (wr, _, r) = f2(args, 2, name)?;
+            let (x, t, _) = f2(args, 3, name)?;
+            let mut h = vec![0f32; t * d];
+            matmul(&mut h, x, w_in, t, din, d);
+            for row in h.chunks_exact_mut(d) {
+                for (hv, &bv) in row.iter_mut().zip(b_in) {
+                    *hv += bv;
+                }
+            }
+            relu(&mut h);
+            let mut probs = vec![0f32; t * r];
+            matmul(&mut probs, &h, wr, t, d, r);
+            softmax_rows(&mut probs, t, r);
+            Ok(vec![h, probs])
+        }
+        // ye = relu(xe@w1) @ w2
+        "expert_fwd" => {
+            let (w1, d, f) = f2(args, 0, name)?;
+            let (w2, _, _) = f2(args, 1, name)?;
+            let (xe, t, _) = f2(args, 2, name)?;
+            let mut hid = vec![0f32; t * f];
+            matmul(&mut hid, xe, w1, t, d, f);
+            relu(&mut hid);
+            let mut ye = vec![0f32; t * d];
+            matmul(&mut ye, &hid, w2, t, f, d);
+            Ok(vec![ye])
+        }
+        // logits = y@w_out; loss = -mean(logp[label]); (loss, dy, dw_out)
+        "head_loss_bwd" => {
+            let (w_out, d, k) = f2(args, 0, name)?;
+            let (y, t, _) = f2(args, 1, name)?;
+            let labels = i1(args, 2, name)?;
+            ensure!(labels.len() == t, "{name}: {} labels for {t} tokens", labels.len());
+            let mut p = vec![0f32; t * k];
+            matmul(&mut p, y, w_out, t, d, k);
+            softmax_rows(&mut p, t, k);
+            let mut loss = 0f32;
+            let inv_t = 1.0 / t as f32;
+            for (i, &lab) in labels.iter().enumerate() {
+                ensure!((lab as usize) < k, "{name}: label {lab} out of range");
+                loss -= p[i * k + lab as usize].max(1e-30).ln();
+                // dlogits = (softmax - onehot) / t, folded in place
+                for v in p[i * k..(i + 1) * k].iter_mut() {
+                    *v *= inv_t;
+                }
+                p[i * k + lab as usize] -= inv_t;
+            }
+            let mut dy = vec![0f32; t * d];
+            matmul_bt(&mut dy, &p, w_out, t, k, d);
+            let mut dw_out = vec![0f32; d * k];
+            matmul_at(&mut dw_out, y, &p, t, d, k);
+            Ok(vec![vec![loss * inv_t], dy, dw_out])
+        }
+        // VJP of expert_fwd (recompute-forward): (dxe, dw1, dw2)
+        "expert_bwd" => {
+            let (w1, d, f) = f2(args, 0, name)?;
+            let (w2, _, _) = f2(args, 1, name)?;
+            let (xe, t, _) = f2(args, 2, name)?;
+            let (dye, _, _) = f2(args, 3, name)?;
+            let mut pre = vec![0f32; t * f];
+            matmul(&mut pre, xe, w1, t, d, f);
+            let mut hid = pre.clone();
+            relu(&mut hid);
+            let mut dw2 = vec![0f32; f * d];
+            matmul_at(&mut dw2, &hid, dye, t, f, d);
+            let mut dpre = vec![0f32; t * f];
+            matmul_bt(&mut dpre, dye, w2, t, d, f);
+            for (dp, &pr) in dpre.iter_mut().zip(&pre) {
+                if pr <= 0.0 {
+                    *dp = 0.0;
+                }
+            }
+            let mut dw1 = vec![0f32; d * f];
+            matmul_at(&mut dw1, xe, &dpre, t, d, f);
+            let mut dxe = vec![0f32; t * d];
+            matmul_bt(&mut dxe, &dpre, w1, t, f, d);
+            Ok(vec![dxe, dw1, dw2])
+        }
+        // VJP of s1_fwd given cotangents for h and probs: (dw_in, db_in, dwr)
+        "s1_bwd" => {
+            let (w_in, din, d) = f2(args, 0, name)?;
+            let b_in = f1(args, 1, name)?;
+            let (wr, _, r) = f2(args, 2, name)?;
+            let (x, t, _) = f2(args, 3, name)?;
+            let (dh, _, _) = f2(args, 4, name)?;
+            let (dprobs, _, _) = f2(args, 5, name)?;
+            let mut pre = vec![0f32; t * d];
+            matmul(&mut pre, x, w_in, t, din, d);
+            for row in pre.chunks_exact_mut(d) {
+                for (pv, &bv) in row.iter_mut().zip(b_in) {
+                    *pv += bv;
+                }
+            }
+            let mut h = pre.clone();
+            relu(&mut h);
+            let mut probs = vec![0f32; t * r];
+            matmul(&mut probs, &h, wr, t, d, r);
+            softmax_rows(&mut probs, t, r);
+            let mut dlogits = vec![0f32; t * r];
+            softmax_vjp_rows(&mut dlogits, &probs, dprobs, t, r);
+            let mut dwr = vec![0f32; d * r];
+            matmul_at(&mut dwr, &h, &dlogits, t, d, r);
+            let mut dh_total = vec![0f32; t * d];
+            matmul_bt(&mut dh_total, &dlogits, wr, t, r, d);
+            for (dv, &hv) in dh_total.iter_mut().zip(dh) {
+                *dv += hv;
+            }
+            for (dv, &pv) in dh_total.iter_mut().zip(&pre) {
+                if pv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            let mut dw_in = vec![0f32; din * d];
+            matmul_at(&mut dw_in, x, &dh_total, t, din, d);
+            let mut db_in = vec![0f32; d];
+            for row in dh_total.chunks_exact(d) {
+                for (bv, &dv) in db_in.iter_mut().zip(row) {
+                    *bv += dv;
+                }
+            }
+            Ok(vec![dw_in, db_in, dwr])
+        }
+        other => bail!("unknown stage '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_manifest_is_deterministic_and_shaped() {
+        let a = DistManifest::load("synthetic").unwrap();
+        let b = DistManifest::synthetic();
+        assert_eq!(a.ranks, SYN_RANKS);
+        assert_eq!(a.d_model, SYN_D_MODEL);
+        let wa = a.load_init("w_in").unwrap();
+        let wb = b.load_init("w_in").unwrap();
+        assert_eq!(wa, wb, "synthetic init must be reproducible");
+        assert_eq!(wa.len(), SYN_D_IN * SYN_D_MODEL);
+        assert!(b.load_init("b_in").unwrap().iter().all(|&v| v == 0.0));
+        // per-expert weights differ between experts
+        assert_ne!(a.load_init("expert0_w1").unwrap(), a.load_init("expert1_w1").unwrap());
+        assert!(a.load_init("nope").is_err());
+    }
+
+    /// Finite-difference check of the hand-written stage VJPs: the
+    /// reference dist stages must implement the dist_stages.py gradients,
+    /// not merely plausible ones.
+    #[test]
+    fn ref_stage_gradients_match_finite_differences() {
+        let (t, din, d, r, f, k) = (6usize, 5usize, 8usize, 4usize, 7usize, 3usize);
+        let mut rng = Rng::new(42);
+        let rand_vec = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+        };
+        let w_in = rand_vec(&mut rng, din * d);
+        let b_in = rand_vec(&mut rng, d);
+        let wr = rand_vec(&mut rng, d * r);
+        let x = rand_vec(&mut rng, t * din);
+        let w_out = rand_vec(&mut rng, d * k);
+        let labels: Vec<i32> = (0..t).map(|i| (i % k) as i32).collect();
+
+        // scalar objective: head loss on y = h (s1 output), so the chain
+        // s1_fwd -> head_loss_bwd -> s1_bwd is exercised end to end.
+        let loss_of = |w_in_: &[f32], b_in_: &[f32], wr_: &[f32]| -> f32 {
+            let out = ref_stage(
+                "s1_fwd",
+                &[
+                    lit2(w_in_, din, d).unwrap(),
+                    lit1(b_in_),
+                    lit2(wr_, d, r).unwrap(),
+                    lit2(&x, t, din).unwrap(),
+                ],
+            )
+            .unwrap();
+            let h = &out[0];
+            let probs = &out[1];
+            let head = ref_stage(
+                "head_loss_bwd",
+                &[lit2(&w_out, d, k).unwrap(), lit2(h, t, d).unwrap(), lit1_i32(&labels)],
+            )
+            .unwrap();
+            // add a probs-dependent term so dwr is exercised: sum(probs^2)
+            head[0][0] + probs.iter().map(|&p| p * p).sum::<f32>()
+        };
+
+        // analytic grads via the stages
+        let out = ref_stage(
+            "s1_fwd",
+            &[
+                lit2(&w_in, din, d).unwrap(),
+                lit1(&b_in),
+                lit2(&wr, d, r).unwrap(),
+                lit2(&x, t, din).unwrap(),
+            ],
+        )
+        .unwrap();
+        let (h, probs) = (&out[0], &out[1]);
+        let head = ref_stage(
+            "head_loss_bwd",
+            &[lit2(&w_out, d, k).unwrap(), lit2(h, t, d).unwrap(), lit1_i32(&labels)],
+        )
+        .unwrap();
+        let dh = &head[1];
+        let dprobs: Vec<f32> = probs.iter().map(|&p| 2.0 * p).collect();
+        let grads = ref_stage(
+            "s1_bwd",
+            &[
+                lit2(&w_in, din, d).unwrap(),
+                lit1(&b_in),
+                lit2(&wr, d, r).unwrap(),
+                lit2(&x, t, din).unwrap(),
+                lit2(dh, t, d).unwrap(),
+                lit2(&dprobs, t, r).unwrap(),
+            ],
+        )
+        .unwrap();
+
+        let check = |name: &str, analytic: &[f32], param: &[f32], which: usize| {
+            let mut checked = 0usize;
+            for probe in [0usize, param.len() / 2, param.len() - 1] {
+                let fd_at = |eps: f32| -> f32 {
+                    let mut plus = param.to_vec();
+                    plus[probe] += eps;
+                    let mut minus = param.to_vec();
+                    minus[probe] -= eps;
+                    let (lp, lm) = match which {
+                        0 => (loss_of(&plus, &b_in, &wr), loss_of(&minus, &b_in, &wr)),
+                        1 => (loss_of(&w_in, &plus, &wr), loss_of(&w_in, &minus, &wr)),
+                        _ => (loss_of(&w_in, &b_in, &plus), loss_of(&w_in, &b_in, &minus)),
+                    };
+                    (lp - lm) / (2.0 * eps)
+                };
+                let (fd1, fd2) = (fd_at(1e-2), fd_at(5e-3));
+                if (fd1 - fd2).abs() > 0.1 * fd1.abs().max(fd2.abs()).max(1e-2) {
+                    continue; // a ReLU kink inside the probe interval
+                }
+                let diff = (fd2 - analytic[probe]).abs();
+                let scale = fd2.abs().max(analytic[probe].abs()).max(1e-2);
+                assert!(diff / scale < 0.15, "{name}[{probe}]: fd {fd2} vs {}", analytic[probe]);
+                checked += 1;
+            }
+            assert!(checked > 0, "{name}: every probe hit a kink (suspicious)");
+        };
+        check("dw_in", &grads[0], &w_in, 0);
+        check("db_in", &grads[1], &b_in, 1);
+        check("dwr", &grads[2], &wr, 2);
+    }
+
+    #[test]
+    fn expert_bwd_matches_finite_differences() {
+        let (t, d, f) = (5usize, 6usize, 9usize);
+        let mut rng = Rng::new(3);
+        let rand_vec = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+        };
+        let w1 = rand_vec(&mut rng, d * f);
+        let w2 = rand_vec(&mut rng, f * d);
+        let xe = rand_vec(&mut rng, t * d);
+        // objective: 0.5 * ||ye||^2  =>  dye = ye
+        let fwd = |w1_: &[f32], xe_: &[f32]| -> f32 {
+            let out = ref_stage(
+                "expert_fwd",
+                &[
+                    lit2(w1_, d, f).unwrap(),
+                    lit2(&w2, f, d).unwrap(),
+                    lit2(xe_, t, d).unwrap(),
+                ],
+            )
+            .unwrap();
+            0.5 * out[0].iter().map(|&v| v * v).sum::<f32>()
+        };
+        let out = ref_stage(
+            "expert_fwd",
+            &[lit2(&w1, d, f).unwrap(), lit2(&w2, f, d).unwrap(), lit2(&xe, t, d).unwrap()],
+        )
+        .unwrap();
+        let ye = &out[0];
+        let grads = ref_stage(
+            "expert_bwd",
+            &[
+                lit2(&w1, d, f).unwrap(),
+                lit2(&w2, f, d).unwrap(),
+                lit2(&xe, t, d).unwrap(),
+                lit2(ye, t, d).unwrap(),
+            ],
+        )
+        .unwrap();
+        let mut checked = 0usize;
+        for (name, analytic, param, is_w1) in
+            [("dxe", &grads[0], &xe, false), ("dw1", &grads[1], &w1, true)]
+        {
+            for probe in [0usize, param.len() - 1] {
+                let fd_at = |eps: f32| -> f32 {
+                    let mut plus = param.clone();
+                    plus[probe] += eps;
+                    let mut minus = param.clone();
+                    minus[probe] -= eps;
+                    let (lp, lm) = if is_w1 {
+                        (fwd(&plus, &xe), fwd(&minus, &xe))
+                    } else {
+                        (fwd(&w1, &plus), fwd(&w1, &minus))
+                    };
+                    (lp - lm) / (2.0 * eps)
+                };
+                let (fd1, fd2) = (fd_at(1e-2), fd_at(5e-3));
+                if (fd1 - fd2).abs() > 0.1 * fd1.abs().max(fd2.abs()).max(1e-2) {
+                    continue; // ReLU kink inside the probe interval
+                }
+                let diff = (fd2 - analytic[probe]).abs();
+                let scale = fd2.abs().max(analytic[probe].abs()).max(1e-2);
+                assert!(diff / scale < 0.15, "{name}[{probe}]: fd {fd2} vs {}", analytic[probe]);
+                checked += 1;
+            }
+        }
+        assert!(checked > 0, "every probe hit a kink (suspicious)");
+    }
+
+    #[test]
+    fn unknown_stage_and_bad_args_error() {
+        assert!(ref_stage("nope", &[]).is_err());
+        assert!(ref_stage("s1_fwd", &[lit1(&[1.0])]).is_err());
+    }
 }

@@ -7,15 +7,17 @@
 //!   dist      the real-data-movement distributed engine
 //!   eval      holdout BLEU/loss of a checkpoint
 
-use anyhow::{bail, Result};
+use gating_dropout::bail;
 use gating_dropout::benchkit::{fmt_tps, Table};
 use gating_dropout::config::{cluster_by_name, RunConfig};
 use gating_dropout::coordinator::Policy;
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::netmodel::MoeWorkload;
+use gating_dropout::runtime::Backend;
 use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
+use gating_dropout::util::error::Result;
 
 const USAGE: &str = "\
 repro -- Gating Dropout (ICML 2022) reproduction
@@ -68,13 +70,18 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let with_decode = !args.flag("no-decode");
     eprintln!(
-        "[train] preset={} policy={} steps={} ranks={} (compiling artifacts...)",
+        "[train] preset={} policy={} steps={} ranks={} (loading backend...)",
         cfg.preset,
         cfg.policy.name(),
         cfg.steps,
         cfg.n_ranks
     );
     let mut trainer = Trainer::new(cfg, with_decode)?;
+    eprintln!(
+        "[train] backend={} ({:.1}M params)",
+        trainer.engine.name(),
+        trainer.engine.manifest().dims.param_count as f64 / 1e6
+    );
     let res = trainer.run(true)?;
     println!(
         "[train] done: final_bleu={:.2} best_bleu={:.2} virt_tps={} wall_tps={} drop_rate={:.3}",
@@ -173,15 +180,19 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         t.row(&[format!("{p:.1}"), fmt_tps(tps)]);
     }
     t.print();
-    println!("(BLEU axis: run `repro train --policy gate-expert-drop:<p>` per rate,\n or examples/dropout_rate_sweep)");
+    println!(
+        "(BLEU axis: run `repro train --policy gate-expert-drop:<p>` per rate,\n \
+         or examples/dropout_rate_sweep)"
+    );
     Ok(())
 }
 
 fn cmd_dist(args: &Args) -> Result<()> {
     let policy = Policy::parse(args.get_or("policy", "gate-drop:0.3"))
-        .ok_or_else(|| anyhow::anyhow!("bad policy"))?;
+        .ok_or_else(|| gating_dropout::err!("bad policy"))?;
+    let default_artifacts = DistRunConfig::default().artifact_dir;
     let cfg = DistRunConfig {
-        artifact_dir: args.get_or("artifacts", "artifacts/dist").to_string(),
+        artifact_dir: args.get_or("artifacts", &default_artifacts).to_string(),
         n_ranks: args.usize("ranks", 4),
         steps: args.u64("steps", 30),
         policy,

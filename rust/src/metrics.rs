@@ -66,7 +66,11 @@ pub fn corpus_bleu(pairs: &[(Vec<i32>, Vec<i32>)]) -> f64 {
             return 0.0;
         }
         // smoothing-1: add one to zero match counts for n >= 2
-        let m = if match_n[n] == 0 && n > 0 { 1.0 } else { match_n[n] as f64 };
+        let m = if match_n[n] == 0 && n > 0 {
+            1.0
+        } else {
+            match_n[n] as f64
+        };
         if m == 0.0 {
             return 0.0;
         }

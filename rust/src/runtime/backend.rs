@@ -1,0 +1,179 @@
+//! The pluggable compute backend: the contract every engine that can run
+//! the paper's train/eval/decode steps must satisfy.
+//!
+//! Two implementations ship today (see README "Compute backends"):
+//!
+//! * `TrainEngine` (feature `backend-xla`) -- the PJRT engine executing
+//!   the AOT-lowered JAX+Pallas artifacts; bit-exact with the Python
+//!   model, needs `make artifacts` and the vendored `xla` bindings.
+//! * [`ReferenceBackend`](super::ReferenceBackend) (feature `backend-ref`)
+//!   -- a deterministic pure-Rust MoE transformer step on std alone; what
+//!   CI's tier-1 gate runs.
+//!
+//! The trait owns model + Adam state behind `&mut self`; callers never see
+//! parameter storage. Construction and execution return the typed
+//! [`BackendError`] so launchers can say exactly *which* tensor or
+//! artifact failed instead of aborting mid-init.
+
+use crate::data::Batch;
+
+use super::manifest::{Manifest, TensorSpec};
+
+/// Per-step training metrics, in the artifact's METRIC_ORDER.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub balance: f32,
+    pub kept_frac: f32,
+    pub lr: f32,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvalMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub balance: f32,
+    pub kept_frac: f32,
+}
+
+/// What went wrong, and on which piece of the model: load errors name the
+/// tensor/artifact file so `repro`/examples can print an actionable
+/// message instead of a mid-init abort with partial state.
+#[derive(Debug)]
+pub enum BackendError {
+    /// `manifest.json` missing or malformed.
+    Manifest { path: String, detail: String },
+    /// A parameter/checkpoint tensor failed to load.
+    Tensor { name: String, path: String, detail: String },
+    /// A compiled artifact (HLO file) failed to load or compile.
+    Artifact { name: String, detail: String },
+    /// The backend substrate itself failed to initialise (PJRT client...).
+    Init { detail: String },
+    /// A step failed at execution time.
+    Exec { what: String, detail: String },
+    /// Input does not match the model (batch shape, unknown param...).
+    Shape { detail: String },
+    /// The operation is not available on this backend/configuration.
+    Unsupported { what: String },
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Manifest { path, detail } => {
+                write!(f, "manifest {path}: {detail}")
+            }
+            BackendError::Tensor { name, path, detail } => {
+                write!(f, "tensor '{name}' ({path}): {detail}")
+            }
+            BackendError::Artifact { name, detail } => {
+                write!(f, "artifact '{name}': {detail}")
+            }
+            BackendError::Init { detail } => write!(f, "backend init: {detail}"),
+            BackendError::Exec { what, detail } => write!(f, "{what}: {detail}"),
+            BackendError::Shape { detail } => write!(f, "shape mismatch: {detail}"),
+            BackendError::Unsupported { what } => {
+                write!(f, "not supported by this backend: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BackendError {}
+
+pub type BackendResult<T> = std::result::Result<T, BackendError>;
+
+/// A compute engine that executes the training/eval/decode steps against
+/// the [`Manifest`] tensor specs and owns params + Adam `m`/`v` state.
+pub trait Backend {
+    /// Short backend identifier ("xla-pjrt", "reference").
+    fn name(&self) -> &'static str;
+
+    /// The model description this backend was built from.
+    fn manifest(&self) -> &Manifest;
+
+    /// Run one training step. `flags` = (drop_flag, expert_skip,
+    /// hash_route) from the coordinator's decision; `seed` drives the
+    /// per-step jitter noise.
+    fn train_step(
+        &mut self,
+        batch: &Batch,
+        flags: (f32, f32, f32),
+        seed: i32,
+    ) -> BackendResult<TrainMetrics>;
+
+    /// K fused steps in one execute where the backend supports it
+    /// ([`Backend::block_k`]); the default replays K single steps, which
+    /// is always semantically correct.
+    fn train_block(
+        &mut self,
+        batches: &[Batch],
+        flags: &[(f32, f32, f32)],
+        seeds: &[i32],
+    ) -> BackendResult<Vec<f32>> {
+        if batches.len() != flags.len() || batches.len() != seeds.len() {
+            return Err(BackendError::Shape {
+                detail: format!(
+                    "train_block wants equal-length batches/flags/seeds, got {}/{}/{}",
+                    batches.len(),
+                    flags.len(),
+                    seeds.len()
+                ),
+            });
+        }
+        let mut losses = Vec::with_capacity(batches.len());
+        for i in 0..batches.len() {
+            losses.push(self.train_step(&batches[i], flags[i], seeds[i])?.loss);
+        }
+        Ok(losses)
+    }
+
+    /// K of the fused train-block fast path, when one exists.
+    fn block_k(&self) -> Option<usize> {
+        None
+    }
+
+    /// Holdout loss: no dropout, no jitter, eval capacity factor.
+    fn eval(&self, batch: &Batch) -> BackendResult<EvalMetrics>;
+
+    /// Greedy-decode a source batch (row-major `[batch_rows, max_len]`).
+    fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>>;
+
+    /// Optimizer steps taken so far (f32: it round-trips through the
+    /// artifact state tuple on the XLA backend).
+    fn step_count(&self) -> f32;
+
+    /// Reset model + optimizer state to the initial parameters.
+    fn reset(&mut self) -> BackendResult<()>;
+
+    /// Write current parameters (not optimizer state) as raw f32 bins.
+    fn save_checkpoint(&self, dir: &str) -> BackendResult<()>;
+
+    fn load_checkpoint(&mut self, dir: &str) -> BackendResult<()>;
+
+    /// Host copy of one named parameter (tests / debugging).
+    fn param_by_name(&self, name: &str) -> BackendResult<(TensorSpec, Vec<f32>)>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_error_names_the_failing_piece() {
+        let e = BackendError::Tensor {
+            name: "embed".into(),
+            path: "artifacts/tiny/params/embed.bin".into(),
+            detail: "file not found".into(),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("embed"), "{msg}");
+        assert!(msg.contains("artifacts/tiny"), "{msg}");
+        let e = BackendError::Artifact {
+            name: "train_step.hlo.txt".into(),
+            detail: "parse error".into(),
+        };
+        assert!(e.to_string().contains("train_step.hlo.txt"));
+    }
+}

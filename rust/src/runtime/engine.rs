@@ -1,35 +1,24 @@
-//! The PJRT execution engine: compiled artifacts + resident model state.
+//! The PJRT execution engine: compiled artifacts + resident model state
+//! (the `backend-xla` implementation of [`Backend`]).
 //!
 //! One `TrainEngine` holds the CPU PJRT client, the compiled `train_step`
 //! / `eval_step` / `decode_step` executables, and the parameter +
 //! optimizer-state literals that flow through `train_step` every
 //! iteration. The HLO root is a tuple (return_tuple=True at lowering), so
 //! each execute yields one tuple literal we split back into state.
+//!
+//! Construction reports the typed [`BackendError`]: a missing or
+//! truncated init tensor names the tensor and file, a bad HLO artifact
+//! names the artifact -- no more aborting mid-init with a bare io error.
 
-use anyhow::{bail, Context, Result};
 use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use crate::bail;
 use crate::data::Batch;
+use crate::util::error::{Context, Result};
 
+use super::backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
 use super::manifest::{DType, Manifest, TensorSpec};
-
-/// Per-step training metrics, in the artifact's METRIC_ORDER.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct TrainMetrics {
-    pub loss: f32,
-    pub ce: f32,
-    pub balance: f32,
-    pub kept_frac: f32,
-    pub lr: f32,
-}
-
-#[derive(Debug, Clone, Copy, Default)]
-pub struct EvalMetrics {
-    pub loss: f32,
-    pub ce: f32,
-    pub balance: f32,
-    pub kept_frac: f32,
-}
 
 pub struct TrainEngine {
     pub manifest: Manifest,
@@ -63,6 +52,44 @@ fn load_bin_f32(path: &std::path::Path, expect_elems: usize) -> Result<Vec<f32>>
         .collect())
 }
 
+/// Load the exported initial parameters and zeroed Adam state, reporting
+/// which tensor failed on error (shared by [`TrainEngine::load`] and
+/// [`TrainEngine::reset`] so neither can abort with partial state).
+#[allow(clippy::type_complexity)] // (params, m, v) is the natural shape
+fn init_state(manifest: &Manifest) -> BackendResult<(Vec<Literal>, Vec<Literal>, Vec<Literal>)> {
+    if manifest.params_init.is_empty() {
+        return Err(BackendError::Manifest {
+            path: manifest.artifact_path("manifest.json").display().to_string(),
+            detail: "no params_init (re-run aot.py without --skip-params)".into(),
+        });
+    }
+    let mut params = Vec::with_capacity(manifest.params_init.len());
+    let mut m = Vec::with_capacity(manifest.params_init.len());
+    let mut v = Vec::with_capacity(manifest.params_init.len());
+    for spec in &manifest.params_init {
+        let terr = |path: String, detail: String| BackendError::Tensor {
+            name: spec.name.clone(),
+            path,
+            detail,
+        };
+        let file = spec
+            .file
+            .as_ref()
+            .ok_or_else(|| terr(String::new(), "params_init entry without file".into()))?;
+        let path = manifest.artifact_path(file);
+        let data = load_bin_f32(&path, spec.elements())
+            .map_err(|e| terr(path.display().to_string(), e.to_string()))?;
+        let shape = spec.dims_i64();
+        let zeros = vec![0f32; spec.elements()];
+        let mk = |d: &[f32]| {
+            lit_f32(d, &shape).map_err(|e| terr(path.display().to_string(), e.to_string()))
+        };
+        params.push(mk(&data)?);
+        m.push(mk(&zeros)?);
+        v.push(mk(&zeros)?);
+    }
+    Ok((params, m, v))
+}
 
 /// Leak-free execute: the `xla` crate's `execute()` uploads every input
 /// literal to a device buffer and then RELEASES it without freeing
@@ -89,48 +116,44 @@ impl TrainEngine {
     /// exported initial parameters. `with_decode=false` skips compiling the
     /// decode artifact (it is the slowest compile; benches that never
     /// decode save minutes).
-    pub fn load(artifact_dir: &str, with_decode: bool) -> Result<TrainEngine> {
-        let manifest = Manifest::load(artifact_dir)?;
-        let client = PjRtClient::cpu()?;
-        let compile = |file: &str| -> Result<PjRtLoadedExecutable> {
-            let path = manifest.artifact_path(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
+    pub fn load(artifact_dir: &str, with_decode: bool) -> BackendResult<TrainEngine> {
+        let manifest = Manifest::load(artifact_dir).map_err(|e| BackendError::Manifest {
+            path: format!("{artifact_dir}/manifest.json"),
+            detail: e.to_string(),
+        })?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| BackendError::Init { detail: format!("PJRT CPU client: {e}") })?;
+        let compile = |file: &str| -> BackendResult<PjRtLoadedExecutable> {
+            let inner = || -> Result<PjRtLoadedExecutable> {
+                let path = manifest.artifact_path(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 path")?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            inner().map_err(|e| BackendError::Artifact {
+                name: file.to_string(),
+                detail: e.to_string(),
+            })
         };
-        let train_exe = compile("train_step.hlo.txt").context("compiling train_step")?;
+        let train_exe = compile("train_step.hlo.txt")?;
         // train_block is optional: older artifact dirs may lack it.
         let train_block_exe = if manifest.block_k.is_some()
             && manifest.artifact_path("train_block.hlo.txt").exists()
         {
-            Some(compile("train_block.hlo.txt").context("compiling train_block")?)
+            Some(compile("train_block.hlo.txt")?)
         } else {
             None
         };
-        let eval_exe = compile("eval_step.hlo.txt").context("compiling eval_step")?;
+        let eval_exe = compile("eval_step.hlo.txt")?;
         let decode_exe = if with_decode {
-            Some(compile("decode_step.hlo.txt").context("compiling decode_step")?)
+            Some(compile("decode_step.hlo.txt")?)
         } else {
             None
         };
 
-        // Initial parameters from the exported bins; Adam state zeroed.
-        let mut params = Vec::with_capacity(manifest.params.len());
-        let mut m = Vec::with_capacity(manifest.params.len());
-        let mut v = Vec::with_capacity(manifest.params.len());
-        if manifest.params_init.is_empty() {
-            bail!("manifest has no params_init (re-run aot.py without --skip-params)");
-        }
-        for spec in &manifest.params_init {
-            let file = spec.file.as_ref().context("params_init entry without file")?;
-            let data = load_bin_f32(&manifest.artifact_path(file), spec.elements())?;
-            params.push(lit_f32(&data, &spec.dims_i64())?);
-            let zeros = vec![0f32; spec.elements()];
-            m.push(lit_f32(&zeros, &spec.dims_i64())?);
-            v.push(lit_f32(&zeros, &spec.dims_i64())?);
-        }
+        let (params, m, v) = init_state(&manifest)?;
         Ok(TrainEngine {
             manifest,
             client,
@@ -171,9 +194,14 @@ impl TrainEngine {
     }
 
     /// Run one training step. `flags` = (drop_flag, expert_skip,
-    /// hash_route) from the coordinator's [`Decision`]; `seed` drives the
+    /// hash_route) from the coordinator's decision; `seed` drives the
     /// jitter noise inside the artifact.
-    pub fn train_step(&mut self, batch: &Batch, flags: (f32, f32, f32), seed: i32) -> Result<TrainMetrics> {
+    pub fn train_step(
+        &mut self,
+        batch: &Batch,
+        flags: (f32, f32, f32),
+        seed: i32,
+    ) -> Result<TrainMetrics> {
         let np = self.params.len();
         let mut args: Vec<&Literal> = Vec::with_capacity(3 * np + 9);
         args.extend(self.params.iter());
@@ -344,18 +372,8 @@ impl TrainEngine {
     /// Reset model + optimizer state to the exported initial parameters
     /// (lets one compiled engine serve several policy runs -- compilation
     /// dominates load time).
-    pub fn reset(&mut self) -> Result<()> {
-        let mut params = Vec::with_capacity(self.manifest.params.len());
-        let mut m = Vec::with_capacity(self.manifest.params.len());
-        let mut v = Vec::with_capacity(self.manifest.params.len());
-        for spec in &self.manifest.params_init {
-            let file = spec.file.as_ref().context("params_init entry without file")?;
-            let data = load_bin_f32(&self.manifest.artifact_path(file), spec.elements())?;
-            params.push(lit_f32(&data, &spec.dims_i64())?);
-            let zeros = vec![0f32; spec.elements()];
-            m.push(lit_f32(&zeros, &spec.dims_i64())?);
-            v.push(lit_f32(&zeros, &spec.dims_i64())?);
-        }
+    pub fn reset(&mut self) -> BackendResult<()> {
+        let (params, m, v) = init_state(&self.manifest)?;
         self.params = params;
         self.m = m;
         self.v = v;
@@ -408,5 +426,70 @@ impl TrainEngine {
             bail!("param '{name}' is not f32");
         }
         Ok((spec, self.params[idx].to_vec::<f32>()?))
+    }
+}
+
+fn exec_err(what: &str, e: crate::util::error::Error) -> BackendError {
+    BackendError::Exec { what: what.to_string(), detail: e.to_string() }
+}
+
+impl Backend for TrainEngine {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &mut self,
+        batch: &Batch,
+        flags: (f32, f32, f32),
+        seed: i32,
+    ) -> BackendResult<TrainMetrics> {
+        TrainEngine::train_step(self, batch, flags, seed).map_err(|e| exec_err("train_step", e))
+    }
+
+    fn train_block(
+        &mut self,
+        batches: &[Batch],
+        flags: &[(f32, f32, f32)],
+        seeds: &[i32],
+    ) -> BackendResult<Vec<f32>> {
+        TrainEngine::train_block(self, batches, flags, seeds)
+            .map_err(|e| exec_err("train_block", e))
+    }
+
+    fn block_k(&self) -> Option<usize> {
+        TrainEngine::block_k(self)
+    }
+
+    fn eval(&self, batch: &Batch) -> BackendResult<EvalMetrics> {
+        TrainEngine::eval(self, batch).map_err(|e| exec_err("eval_step", e))
+    }
+
+    fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>> {
+        TrainEngine::decode(self, src).map_err(|e| exec_err("decode_step", e))
+    }
+
+    fn step_count(&self) -> f32 {
+        TrainEngine::step_count(self)
+    }
+
+    fn reset(&mut self) -> BackendResult<()> {
+        TrainEngine::reset(self)
+    }
+
+    fn save_checkpoint(&self, dir: &str) -> BackendResult<()> {
+        TrainEngine::save_checkpoint(self, dir).map_err(|e| exec_err("save_checkpoint", e))
+    }
+
+    fn load_checkpoint(&mut self, dir: &str) -> BackendResult<()> {
+        TrainEngine::load_checkpoint(self, dir).map_err(|e| exec_err("load_checkpoint", e))
+    }
+
+    fn param_by_name(&self, name: &str) -> BackendResult<(TensorSpec, Vec<f32>)> {
+        TrainEngine::param_by_name(self, name).map_err(|e| exec_err("param_by_name", e))
     }
 }

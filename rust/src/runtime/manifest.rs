@@ -1,8 +1,9 @@
 //! Typed view of `artifacts/<preset>/manifest.json`.
 
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -113,7 +114,7 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| crate::err!("{}: {e}", path.display()))?;
         let c = j.get("config").context("manifest: no config")?;
         let g = |k: &str| -> Result<usize> {
             c.get(k).and_then(Json::as_usize).with_context(|| format!("config.{k}"))
@@ -154,6 +155,57 @@ impl Manifest {
             );
         }
         Ok(m)
+    }
+
+    /// Build a manifest from in-memory specs instead of an artifact dir --
+    /// the reference backend derives its model description straight from
+    /// the preset dims, so it needs no `make artifacts` output on disk.
+    /// `params_init` mirrors `params` with no backing files (the backend
+    /// initialises tensors deterministically from its seed).
+    pub fn synthetic(preset: &str, dims: ModelDims, params: Vec<TensorSpec>) -> Manifest {
+        let batch = vec![
+            TensorSpec {
+                name: "src".into(),
+                shape: vec![dims.batch_rows, dims.max_len],
+                dtype: DType::I32,
+                file: None,
+            },
+            TensorSpec {
+                name: "tgt_in".into(),
+                shape: vec![dims.batch_rows, dims.max_len],
+                dtype: DType::I32,
+                file: None,
+            },
+            TensorSpec {
+                name: "tgt_out".into(),
+                shape: vec![dims.batch_rows, dims.max_len],
+                dtype: DType::I32,
+                file: None,
+            },
+            TensorSpec {
+                name: "local_expert_row".into(),
+                shape: vec![dims.batch_rows],
+                dtype: DType::I32,
+                file: None,
+            },
+        ];
+        Manifest {
+            dir: PathBuf::from(format!("artifacts/{preset}")),
+            preset: preset.to_string(),
+            dims,
+            params_init: params.clone(),
+            params,
+            batch,
+            train_metrics: ["loss", "ce", "balance", "kept_frac", "lr"]
+                .iter()
+                .map(|n| n.to_string())
+                .collect(),
+            block_k: None,
+            eval_metrics: ["loss", "ce", "balance", "kept_frac"]
+                .iter()
+                .map(|n| n.to_string())
+                .collect(),
+        }
     }
 
     pub fn artifact_path(&self, file: &str) -> PathBuf {

@@ -1,13 +1,58 @@
-//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
-//! and execute them on the request path with zero Python.
+//! The pluggable compute runtime.
 //!
-//! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes/dtypes
-//! are manifest-driven -- nothing is hard-coded); `engine` owns the
-//! PjRtClient, the compiled executables and the parameter/optimizer-state
-//! literals that round-trip through `train_step` each iteration.
+//! [`Backend`] is the contract (train/eval/decode against the
+//! [`Manifest`] tensor specs, owning params + Adam state); two engines
+//! implement it:
+//!
+//! * `TrainEngine` (cargo feature `backend-xla`, the default): executes
+//!   the AOT artifacts produced by `python/compile/aot.py` on a PJRT CPU
+//!   client with zero Python on the request path. Needs `make artifacts`
+//!   and the vendored `xla` bindings.
+//! * [`ReferenceBackend`] (cargo feature `backend-ref`): a deterministic
+//!   pure-Rust MoE transformer step built on the cache-blocked [`tensor`]
+//!   kernels -- zero non-std dependencies, no artifacts on disk. This is
+//!   the engine CI's tier-1 gate runs.
+//!
+//! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes and
+//! dtypes are manifest-driven -- nothing is hard-coded) and can also
+//! synthesize a manifest from preset dims for the reference backend.
 
+mod backend;
+#[cfg(feature = "backend-xla")]
 mod engine;
 mod manifest;
+mod reference;
+pub mod tensor;
 
-pub use engine::{EvalMetrics, TrainEngine, TrainMetrics};
-pub use manifest::{DType, Manifest, TensorSpec};
+pub use backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
+#[cfg(feature = "backend-xla")]
+pub use engine::TrainEngine;
+pub use manifest::{DType, Manifest, ModelDims, TensorSpec};
+pub use reference::{RefHyper, ReferenceBackend};
+
+#[cfg(not(any(feature = "backend-xla", feature = "backend-ref")))]
+compile_error!(
+    "no compute backend selected: enable `backend-xla` (PJRT, the default) \
+     or `backend-ref` (pure Rust) in rust/Cargo.toml features"
+);
+
+/// The build's default backend for a run configuration: the PJRT engine
+/// when `backend-xla` is compiled in (no behavior change for artifact
+/// users), the pure-Rust [`ReferenceBackend`] otherwise.
+pub fn default_backend(
+    artifact_dir: &str,
+    preset: &str,
+    seed: u64,
+    with_decode: bool,
+) -> BackendResult<Box<dyn Backend>> {
+    #[cfg(feature = "backend-xla")]
+    {
+        let _ = (preset, seed);
+        Ok(Box::new(TrainEngine::load(artifact_dir, with_decode)?))
+    }
+    #[cfg(not(feature = "backend-xla"))]
+    {
+        let _ = (artifact_dir, with_decode);
+        Ok(Box::new(ReferenceBackend::for_preset(preset, seed)?))
+    }
+}

@@ -1,0 +1,269 @@
+//! Small cache-blocked f32 tensor kernels for the pure-Rust
+//! [`ReferenceBackend`](super::ReferenceBackend).
+//!
+//! Everything is row-major and allocation-free (callers own the output
+//! buffers). The matmul family covers the three orientations a manual
+//! backward pass needs:
+//!
+//! * [`matmul`]     `out[m,n] = a[m,k] · b[k,n]`      (forward)
+//! * [`matmul_at`]  `out[m,n] = a[s,m]ᵀ · b[s,n]`     (weight gradients)
+//! * [`matmul_bt`]  `out[m,n] = a[m,k] · b[n,k]ᵀ`     (input gradients)
+//!
+//! [`matmul`] and [`matmul_at`] are saxpy-over-rows loops (the unit-stride
+//! direction of every operand is the inner loop), blocked over the shared
+//! dimension so the active output row stays in L1/L2 while a block of `b`
+//! rows streams through; [`matmul_bt`] is a row-dot kernel, which is
+//! already unit-stride in both operands. No SIMD intrinsics: the inner
+//! loops are shaped so LLVM auto-vectorizes them (this is the *reference*
+//! engine -- a threaded/SIMD backend is a ROADMAP item, not this one).
+
+/// Block size over the shared (k) dimension: 64 rows of a 1k-wide f32 `b`
+/// panel is 256 KiB -- comfortably inside L2 next to one output row.
+const BLOCK_K: usize = 64;
+
+/// `out = a · b` with `a: [m,k]`, `b: [k,n]`, `out: [m,n]` (overwritten).
+pub fn matmul(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: a shape");
+    assert_eq!(b.len(), k * n, "matmul: b shape");
+    assert_eq!(out.len(), m * n, "matmul: out shape");
+    out.fill(0.0);
+    for k0 in (0..k).step_by(BLOCK_K) {
+        let k1 = (k0 + BLOCK_K).min(k);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += aik * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out = aᵀ · b` with `a: [s,m]`, `b: [s,n]`, `out: [m,n]` (overwritten).
+/// This is the weight-gradient shape: a sum of outer products over the
+/// token axis `s`, accumulated row-block by row-block.
+pub fn matmul_at(out: &mut [f32], a: &[f32], b: &[f32], s: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), s * m, "matmul_at: a shape");
+    assert_eq!(b.len(), s * n, "matmul_at: b shape");
+    assert_eq!(out.len(), m * n, "matmul_at: out shape");
+    out.fill(0.0);
+    for s0 in (0..s).step_by(BLOCK_K) {
+        let s1 = (s0 + BLOCK_K).min(s);
+        for i in 0..m {
+            let orow = &mut out[i * n..(i + 1) * n];
+            for ss in s0..s1 {
+                let asi = a[ss * m + i];
+                if asi == 0.0 {
+                    continue;
+                }
+                let brow = &b[ss * n..(ss + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += asi * bv;
+                }
+            }
+        }
+    }
+}
+
+/// `out = a · bᵀ` with `a: [m,k]`, `b: [n,k]`, `out: [m,n]` (overwritten).
+/// Row-dot kernel: both operands are walked at unit stride.
+pub fn matmul_bt(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul_bt: a shape");
+    assert_eq!(b.len(), n * k, "matmul_bt: b shape");
+    assert_eq!(out.len(), m * n, "matmul_bt: out shape");
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            out[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// Dense dot product (auto-vectorizes).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// In-place row-wise softmax over `x: [rows, cols]` (max-subtracted).
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for row in x.chunks_exact_mut(cols) {
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Row-wise softmax VJP: `out = p ⊙ (dp − <dp, p>)` per row, where `p`
+/// is the softmax output and `dp` its cotangent. Shared by the
+/// reference backend's gate backward and the distributed `s1_bwd` stage
+/// so the two reference paths cannot drift.
+pub fn softmax_vjp_rows(out: &mut [f32], probs: &[f32], dprobs: &[f32], rows: usize, cols: usize) {
+    assert_eq!(probs.len(), rows * cols);
+    assert_eq!(dprobs.len(), rows * cols);
+    assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        let p = &probs[i * cols..(i + 1) * cols];
+        let dp = &dprobs[i * cols..(i + 1) * cols];
+        let inner = dot(dp, p);
+        let o = &mut out[i * cols..(i + 1) * cols];
+        for j in 0..cols {
+            o[j] = p[j] * (dp[j] - inner);
+        }
+    }
+}
+
+/// Stable `log(sum(exp(row)))` of one row.
+pub fn logsumexp(row: &[f32]) -> f32 {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let s: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+    mx + s.ln()
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Index of the row maximum (first wins on ties, like `jnp.argmax`).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut bi = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn transpose(a: &[f32], r: usize, c: usize) -> Vec<f32> {
+        let mut out = vec![0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = a[i * c + j];
+            }
+        }
+        out
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn prop_matmul_variants_match_naive() {
+        run_prop("matmul-oracle", 40, 11, |rng: &mut Rng| {
+            let m = 1 + rng.below(9) as usize;
+            let k = 1 + rng.below(130) as usize; // cross the BLOCK_K boundary
+            let n = 1 + rng.below(17) as usize;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let want = naive(&a, &b, m, k, n);
+            let mut got = vec![0f32; m * n];
+            matmul(&mut got, &a, &b, m, k, n);
+            if !close(&got, &want, 1e-4) {
+                return Err(format!("matmul mismatch m={m} k={k} n={n}"));
+            }
+            // a^T b == naive(transpose(a), b): reuse a as [s, k]
+            let s = m;
+            let n2 = 1 + rng.below(7) as usize;
+            let b2: Vec<f32> = (0..s * n2).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let want_at = naive(&transpose(&a, s, k), &b2, k, s, n2);
+            let mut got_at = vec![0f32; k * n2];
+            matmul_at(&mut got_at, &a, &b2, s, k, n2);
+            if !close(&got_at, &want_at, 1e-4) {
+                return Err(format!("matmul_at mismatch s={s} k={k} n={n2}"));
+            }
+            // a b^T == naive(a, transpose(b3))
+            let b3: Vec<f32> = (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let want_bt = naive(&a, &transpose(&b3, n, k), m, k, n);
+            let mut got_bt = vec![0f32; m * n];
+            matmul_bt(&mut got_bt, &a, &b3, m, k, n);
+            if !close(&got_bt, &want_bt, 1e-4) {
+                return Err(format!("matmul_bt mismatch m={m} k={k} n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_rows_normalizes_and_is_stable() {
+        let mut x = vec![1000.0, 1001.0, 999.0, /* row 2 */ 0.0, 0.0, 0.0];
+        softmax_rows(&mut x, 2, 3);
+        for row in x.chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5, "row sums to {s}");
+            assert!(row.iter().all(|v| v.is_finite()));
+        }
+        assert!(x[1] > x[0] && x[0] > x[2], "ordering preserved");
+        assert!((x[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn logsumexp_matches_softmax_denominator() {
+        let row = [0.5f32, -1.25, 2.0, 0.0];
+        let lse = logsumexp(&row);
+        let direct: f32 = row.iter().map(|v| v.exp()).sum::<f32>().ln();
+        assert!((lse - direct).abs() < 1e-5);
+        // huge logits stay finite
+        assert!(logsumexp(&[1e4, 1e4 + 1.0]).is_finite());
+    }
+
+    #[test]
+    fn relu_axpy_dot_argmax() {
+        let mut x = vec![-1.0f32, 2.0, -0.5, 0.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0, 0.0]);
+        let mut y = vec![1.0f32, 1.0];
+        axpy(&mut y, 2.0, &[3.0, -1.0]);
+        assert_eq!(y, vec![7.0, -1.0]);
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(argmax(&[0.1, 0.7, 0.7, 0.2]), 1, "first max wins");
+    }
+}

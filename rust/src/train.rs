@@ -8,15 +8,14 @@
 //! Fig-5-style "quality vs training time" curves use simulated cluster
 //! seconds while EXPERIMENTS.md reports both clocks.
 
-use anyhow::Result;
-
 use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, Decision, DropSchedule, Policy};
 use crate::data::{Batcher, Corpus, CorpusConfig, Pair, BOS, EOS, PAD};
 use crate::metrics::{clean_tokens, corpus_bleu, CsvWriter, Ema, ThroughputMeter};
 use crate::netmodel::{step_time, MoeWorkload, StepShape};
-use crate::runtime::TrainEngine;
+use crate::runtime::{default_backend, Backend};
 use crate::topology::Topology;
+use crate::util::error::Result;
 
 /// One row of the training history.
 #[derive(Debug, Clone)]
@@ -53,7 +52,9 @@ pub struct DirectionBleu {
 
 pub struct Trainer {
     pub cfg: RunConfig,
-    pub engine: TrainEngine,
+    /// The compute backend: PJRT under `backend-xla`, the pure-Rust
+    /// reference engine under `backend-ref` (see `runtime`).
+    pub engine: Box<dyn Backend>,
     pub topo: Topology,
     batcher: Batcher,
     holdout: Vec<Pair>,
@@ -63,8 +64,8 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunConfig, with_decode: bool) -> Result<Trainer> {
-        let engine = TrainEngine::load(&cfg.artifact_dir(), with_decode)?;
-        let dims = engine.manifest.dims.clone();
+        let engine = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, with_decode)?;
+        let dims = engine.manifest().dims.clone();
         let topo = Topology::new(cfg.n_ranks, dims.n_experts);
         let corpus = Corpus::new(CorpusConfig::for_preset(
             cfg.n_langs,
@@ -107,7 +108,7 @@ impl Trainer {
 
     /// BLEU of greedy decodes over the holdout, overall and per direction.
     pub fn bleu_eval(&self) -> Result<(f64, Vec<DirectionBleu>)> {
-        let dims = &self.engine.manifest.dims;
+        let dims = &self.engine.manifest().dims;
         let rows = dims.batch_rows;
         let mut pairs_scored: Vec<(Vec<i32>, Vec<i32>, usize, bool)> = Vec::new();
         for chunk in self.holdout.chunks(rows) {
@@ -163,7 +164,7 @@ impl Trainer {
 
     /// Mean holdout loss over up to `max_batches` eval batches.
     pub fn eval_loss(&self, max_batches: usize) -> Result<f32> {
-        let rows = self.engine.manifest.dims.batch_rows;
+        let rows = self.engine.manifest().dims.batch_rows;
         let mut total = 0.0;
         let mut n = 0;
         for chunk in self.holdout.chunks(rows).take(max_batches) {
@@ -191,8 +192,8 @@ impl Trainer {
         } else {
             None
         };
-        let rows = self.engine.manifest.dims.batch_rows;
-        let len = self.engine.manifest.dims.max_len;
+        let rows = self.engine.manifest().dims.batch_rows;
+        let len = self.engine.manifest().dims.max_len;
         let mut meter = ThroughputMeter::new();
         let mut ema = Ema::new(0.05);
         let mut history = Vec::new();
@@ -272,7 +273,7 @@ impl Trainer {
     pub fn reset_with_policy(&mut self, policy: Policy) -> Result<()> {
         self.engine.reset()?;
         self.cfg.policy = policy;
-        let dims = self.engine.manifest.dims.clone();
+        let dims = self.engine.manifest().dims.clone();
         let corpus = Corpus::new(CorpusConfig::for_preset(
             self.cfg.n_langs,
             dims.vocab,

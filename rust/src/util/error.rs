@@ -1,0 +1,166 @@
+//! Minimal error-context type (the offline/zero-dependency crate set has
+//! no `anyhow`; the reference backend must build with std alone).
+//!
+//! [`Error`] is a human-readable context chain: `?` converts any
+//! `std::error::Error` into it (same blanket-`From` trick anyhow uses --
+//! legal because `Error` itself does NOT implement `std::error::Error`),
+//! and the [`Context`] extension trait layers "while doing X" messages on
+//! `Result` and `Option` exactly like anyhow's. The `err!` / `bail!` /
+//! `ensure!` macros live at the crate root (`#[macro_export]`).
+
+use std::fmt;
+
+/// An error as a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// Crate-wide result type (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    fn wrap(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The root-cause message (last element of the chain).
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// `Debug` renders the same context chain as `Display` so that
+// `fn main() -> Result<()>` prints readable errors on exit.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// The anyhow blanket: any real error type converts by capturing its
+// Display rendering. (Allowed because `Error` is not itself a
+// `std::error::Error`.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { chain: vec![e.to_string()] }
+    }
+}
+
+/// Attach context to errors (drop-in for `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from format args (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($t:tt)*) => {
+        $crate::util::error::Error::msg(format!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] (drop-in for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::err!($($t)*))
+    };
+}
+
+/// Bail unless `cond` holds (drop-in for `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/gd-error-test")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.starts_with("reading config: "), "got: {msg}");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let root: Result<()> = Err(Error::msg("root"));
+        let e = root.context("mid").context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+        assert_eq!(Some(3).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::err!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                crate::bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+    }
+
+    #[test]
+    fn debug_matches_display() {
+        let e = Error::msg("a").wrap("b");
+        assert_eq!(format!("{e:?}"), format!("{e}"));
+    }
+}

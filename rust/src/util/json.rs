@@ -18,12 +18,19 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(s: &str) -> Result<Json, JsonError> {
@@ -406,8 +413,8 @@ mod tests {
                       "params": [{"name": "embed", "shape": [512, 64], "dtype": "f32"}]}"#;
         let v = Json::parse(src).unwrap();
         let p = &v.get("params").unwrap().as_arr().unwrap()[0];
-        let shape: Vec<usize> =
-            p.get("shape").unwrap().as_arr().unwrap().iter().map(|s| s.as_usize().unwrap()).collect();
+        let dims = p.get("shape").unwrap().as_arr().unwrap();
+        let shape: Vec<usize> = dims.iter().map(|s| s.as_usize().unwrap()).collect();
         assert_eq!(shape, vec![512, 64]);
     }
 }

@@ -3,6 +3,7 @@
 //! set carries no rand/serde/clap/criterion/proptest).
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

@@ -22,7 +22,12 @@ where
 }
 
 /// Generate a vector of length in [min_len, max_len] via `g`.
-pub fn vec_of<T>(rng: &mut Rng, min_len: usize, max_len: usize, mut g: impl FnMut(&mut Rng) -> T) -> Vec<T> {
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut g: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
     let len = min_len + rng.below((max_len - min_len + 1) as u64) as usize;
     (0..len).map(|_| g(rng)).collect()
 }

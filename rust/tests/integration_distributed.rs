@@ -1,4 +1,6 @@
-//! Integration tests for the distributed engine against `artifacts/dist`.
+//! Integration tests for the distributed engine: against `artifacts/dist`
+//! under `backend-xla`, against the deterministic synthetic model (pure
+//! Rust stage runner, no artifacts) otherwise.
 //!
 //! These prove the paper's mechanism end to end with real data movement:
 //! the consensual decision, the skipped all-to-alls, expert parallelism
@@ -9,8 +11,10 @@ use gating_dropout::coordinator::Policy;
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 
 fn run(policy: Policy, steps: u64, seed: u64) -> gating_dropout::distributed::DistRunResult {
+    // DistRunConfig::default() picks artifacts/dist under backend-xla and
+    // the artifact-free synthetic model otherwise.
     let cfg = DistRunConfig { policy, steps, seed, ..Default::default() };
-    DistEngine::run(&cfg).expect("artifacts/dist missing — run `make artifacts`")
+    DistEngine::run(&cfg).expect("dist engine failed (XLA builds need `make artifacts`)")
 }
 
 #[test]
