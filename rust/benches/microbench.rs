@@ -7,6 +7,11 @@
 //! fabric's f32->bytes->f32 wire copy) vs the two-phase flat path
 //! (counts-first exact-size buffers, zero-copy fabric). Target: >= 2x on
 //! the pack/unpack hot loop at t=4096, d=512, 4 ranks.
+//!
+//! `bench_matmul_par` is the acceptance gate for the `backend-par`
+//! ThreadPool: the cache-blocked single-thread matmul vs the same kernel
+//! fanned over the pool. Target: >= 2x at 512^3 on a 4-core runner, with
+//! the outputs asserted bit-identical (the backend's whole premise).
 
 use std::sync::Arc;
 
@@ -15,6 +20,7 @@ use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::metrics::corpus_bleu;
 use gating_dropout::moe;
+use gating_dropout::runtime::tensor::{matmul, matmul_par, resolve_threads, ThreadPool};
 use gating_dropout::topology::Topology;
 use gating_dropout::util::rng::Rng;
 
@@ -130,6 +136,47 @@ fn bench_dispatch() {
     }
 }
 
+/// Old-vs-new matmul: the cache-blocked single-thread baseline vs the
+/// same kernel over the deterministic ThreadPool (`backend-par`). Prints
+/// the speedup; asserts the two outputs are bit-identical first.
+fn bench_matmul_par() {
+    let threads = resolve_threads(0);
+    let pool = ThreadPool::new(threads);
+    println!("-- bench_matmul_par: cache-blocked 1-thread vs ThreadPool({threads}) --");
+    for (m, k, n, warmup, iters) in
+        [(256usize, 256usize, 256usize, 3, 20), (512, 512, 512, 2, 10), (768, 512, 768, 1, 5)]
+    {
+        let mut rng = Rng::new(17);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut seq_out = vec![0f32; m * n];
+        let mut par_out = vec![0f32; m * n];
+        matmul(&mut seq_out, &a, &b, m, k, n);
+        matmul_par(&pool, &mut par_out, &a, &b, m, k, n);
+        assert!(
+            seq_out.iter().zip(&par_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "matmul_par must be bit-identical to matmul ({m}x{k}x{n})"
+        );
+        let seq = bench(warmup, iters, || {
+            matmul(&mut seq_out, &a, &b, m, k, n);
+            std::hint::black_box(&seq_out);
+        });
+        let par = bench(warmup, iters, || {
+            matmul_par(&pool, &mut par_out, &a, &b, m, k, n);
+            std::hint::black_box(&par_out);
+        });
+        let name = format!("matmul {m}x{k}x{n}");
+        report(&format!("{name} [1-thread]"), &seq);
+        report(&format!("{name} [{threads}-thread]"), &par);
+        println!(
+            "{name:<44} speedup {:.2}x  (median {} -> {}; target >= 2x at 512^3 on 4 cores)",
+            seq.median_ns / par.median_ns,
+            fmt_ns(seq.median_ns),
+            fmt_ns(par.median_ns),
+        );
+    }
+}
+
 fn main() {
     // coordinator decision stream
     let mut c = Coordinator::new(Policy::GateDrop { p: 0.3 }, 1);
@@ -162,6 +209,8 @@ fn main() {
     report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
 
     bench_dispatch();
+
+    bench_matmul_par();
 
     // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
     let s = bench(3, 20, || {

@@ -90,10 +90,7 @@ impl Table {
             println!("{s}");
         };
         line(&self.headers);
-        println!(
-            "|{}|",
-            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
-        );
+        println!("|{}|", widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|"));
         for row in &self.rows {
             line(row);
         }

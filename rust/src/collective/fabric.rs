@@ -384,8 +384,7 @@ mod tests {
     #[test]
     fn all_to_all_preserves_total_payload() {
         run_ranks(3, |rank, fab| {
-            let out: Vec<Vec<f32>> =
-                (0..3).map(|d| vec![rank as f32; d + 1]).collect();
+            let out: Vec<Vec<f32>> = (0..3).map(|d| vec![rank as f32; d + 1]).collect();
             let got = fab.all_to_all(rank, out);
             let total: usize = got.iter().map(|c| c.len()).sum();
             assert_eq!(total, 3 * (rank + 1)); // each src sends rank+1 floats to me

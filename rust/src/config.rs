@@ -33,6 +33,10 @@ pub struct RunConfig {
     pub out_dir: String,
     /// Optional linear-decay dropout schedule `p -> p1 over N steps`.
     pub decay_to: Option<(f64, u64)>,
+    /// Worker threads for the `backend-par` engine. The `GD_THREADS` env
+    /// var overrides whatever is configured here; 0 means auto (available
+    /// parallelism). Ignored by the other backends.
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -51,6 +55,7 @@ impl Default for RunConfig {
             sim_gpus: 16,
             out_dir: "runs".into(),
             decay_to: None,
+            threads: 0,
         }
     }
 }
@@ -124,8 +129,7 @@ impl RunConfig {
             self.preset = v.to_string();
         }
         if let Some(v) = j.get("policy").and_then(Json::as_str) {
-            self.policy =
-                Policy::parse(v).with_context(|| format!("bad policy '{v}'"))?;
+            self.policy = Policy::parse(v).with_context(|| format!("bad policy '{v}'"))?;
         }
         if let Some(v) = j.get("steps").and_then(Json::as_i64) {
             self.steps = v as u64;
@@ -157,6 +161,9 @@ impl RunConfig {
         if let Some(v) = j.get("out_dir").and_then(Json::as_str) {
             self.out_dir = v.to_string();
         }
+        if let Some(v) = j.get("threads").and_then(Json::as_usize) {
+            self.threads = v;
+        }
         Ok(())
     }
 
@@ -175,6 +182,7 @@ impl RunConfig {
         self.seed = a.u64("seed", self.seed);
         self.eval_every = a.u64("eval-every", self.eval_every);
         self.sim_gpus = a.usize("sim-gpus", self.sim_gpus);
+        self.threads = a.usize("threads", self.threads);
         if let Some(c) = a.get("cluster") {
             self.cluster = cluster_by_name(c)?;
         }
@@ -218,7 +226,8 @@ mod tests {
     fn json_overrides() {
         let mut c = RunConfig::default();
         let j = Json::parse(
-            r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4}"#,
+            r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4,
+                "threads": 6}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -226,13 +235,14 @@ mod tests {
         assert_eq!(c.steps, 77);
         assert_eq!(c.cluster.name, "A100+IB1600");
         assert_eq!(c.n_ranks, 4);
+        assert_eq!(c.threads, 6);
     }
 
     #[test]
     fn args_overrides() {
         let mut c = RunConfig::default();
         let a = Args::parse(
-            "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100"
+            "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100 --threads 2"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -240,6 +250,7 @@ mod tests {
         assert_eq!(c.policy, Policy::GateExpertDrop { p: 0.2 });
         assert_eq!(c.steps, 5);
         assert_eq!(c.decay_to, Some((0.0, 100)));
+        assert_eq!(c.threads, 2);
     }
 
     #[test]

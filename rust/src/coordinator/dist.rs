@@ -29,8 +29,7 @@ impl<C: Collective> DistCoordinator<C> {
     pub const LEADER: usize = 0;
 
     pub fn new(rank: usize, fabric: Arc<C>, policy: Policy, seed: u64) -> Self {
-        let leader =
-            (rank == Self::LEADER).then(|| Coordinator::new(policy, seed));
+        let leader = (rank == Self::LEADER).then(|| Coordinator::new(policy, seed));
         DistCoordinator { rank, fabric, leader, audit: Vec::new() }
     }
 

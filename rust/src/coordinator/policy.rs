@@ -100,11 +100,7 @@ impl Decision {
 
     /// The flag values fed to the AOT `train_step` artifact.
     pub fn as_flags(&self) -> (f32, f32, f32) {
-        (
-            self.drop as u8 as f32,
-            self.expert_skip as u8 as f32,
-            self.hash_route as u8 as f32,
-        )
+        (self.drop as u8 as f32, self.expert_skip as u8 as f32, self.hash_route as u8 as f32)
     }
 }
 
@@ -117,10 +113,7 @@ mod tests {
         assert_eq!(Policy::parse("baseline"), Some(Policy::Baseline));
         assert_eq!(Policy::parse("gate-drop:0.5"), Some(Policy::GateDrop { p: 0.5 }));
         assert_eq!(Policy::parse("gate-drop"), Some(Policy::GateDrop { p: 0.3 }));
-        assert_eq!(
-            Policy::parse("gate-expert-drop"),
-            Some(Policy::GateExpertDrop { p: 0.2 })
-        );
+        assert_eq!(Policy::parse("gate-expert-drop"), Some(Policy::GateExpertDrop { p: 0.2 }));
         assert_eq!(Policy::parse("hash-layer"), Some(Policy::HashLayer));
         assert_eq!(Policy::parse("no-alltoall"), Some(Policy::NoAllToAll));
         assert_eq!(Policy::parse("nonsense"), None);

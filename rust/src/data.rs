@@ -389,8 +389,7 @@ mod tests {
             let c = corpus();
             let base = c.content_base() as i32;
             let n = (512 - c.content_base()) as i64;
-            let s: Vec<i32> =
-                (0..10).map(|_| base + rng.below(n as u64) as i32).collect();
+            let s: Vec<i32> = (0..10).map(|_| base + rng.below(n as u64) as i32).collect();
             let lang = rng.below(10) as usize;
             let out = c.translate(&s, lang, Direction::EtoX);
             if out.len() != s.len() {

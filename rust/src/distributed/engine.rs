@@ -153,8 +153,7 @@ impl WorkerState {
         let (experts, gates): (Vec<usize>, Vec<f32>) = if decision.drop {
             // Gating Dropout: every token to the rank's own expert.
             let e: Vec<usize> = (0..t).map(|_| self.rank).collect();
-            let g: Vec<f32> =
-                (0..t).map(|i| moe::gate_of(probs, r, i, self.rank)).collect();
+            let g: Vec<f32> = (0..t).map(|i| moe::gate_of(probs, r, i, self.rank)).collect();
             (e, g)
         } else if decision.hash_route {
             // Hash-Layer routing hashes the token's VOCAB id (the
@@ -247,8 +246,7 @@ impl WorkerState {
                 // many of its tokens survived capacity admission here.
                 let recv_tokens = fabric.all_to_all_counts(self.rank, &ret_counts);
                 let back = moe::return_pack(&self.topo, &admitted, ye, d, &ret_counts);
-                let expect: Vec<usize> =
-                    recv_tokens.iter().map(|&c| c * stride).collect();
+                let expect: Vec<usize> = recv_tokens.iter().map(|&c| c * stride).collect();
                 let arrivals = fabric.all_to_all_f32(self.rank, back, &expect);
                 surviving = recv_tokens;
                 moe::return_unpack(&arrivals, t, d)
@@ -321,8 +319,7 @@ impl WorkerState {
                     msg.extend_from_slice(&[ret.slot[i] as f32, i as f32, ret.gate[i]]);
                     msg.extend(dy[i * d..(i + 1) * d].iter().map(|&v| ret.gate[i] * v));
                 }
-                let expect: Vec<usize> =
-                    ret_counts.iter().map(|&c| c * stride).collect();
+                let expect: Vec<usize> = ret_counts.iter().map(|&c| c * stride).collect();
                 let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
                 let mut buf = vec![0f32; cap * d];
                 for msg in &arrivals {
@@ -362,8 +359,7 @@ impl WorkerState {
                     msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
                     msg.extend_from_slice(&dxe[a.slot * d..(a.slot + 1) * d]);
                 }
-                let expect: Vec<usize> =
-                    surviving.iter().map(|&c| c * stride).collect();
+                let expect: Vec<usize> = surviving.iter().map(|&c| c * stride).collect();
                 let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
@@ -448,8 +444,7 @@ impl DistEngine {
             type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64);
             handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
                 let mut w = WorkerState::new(rank, manifest, cfg.lr)?;
-                let mut coord =
-                    DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
+                let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
                 let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
                 let mut losses = Vec::new();
                 let mut walls = Vec::new();

@@ -236,8 +236,7 @@ impl XlaStages {
         let mut exes = std::collections::BTreeMap::new();
         for (name, file) in &manifest.files {
             let path = manifest.dir.join(file);
-            let proto =
-                xla::HloModuleProto::from_text_file(path.to_str().context("path")?)?;
+            let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path")?)?;
             let comp = xla::XlaComputation::from_proto(&proto);
             exes.insert(name.clone(), client.compile(&comp).context(name.clone())?);
         }

@@ -49,8 +49,7 @@ impl ClusterTask {
             }
             labels.push(self.label_of(&x[start..], lang));
         }
-        let ids: Vec<u32> =
-            (0..t).map(|_| id_rng.below(self.vocab as u64) as u32).collect();
+        let ids: Vec<u32> = (0..t).map(|_| id_rng.below(self.vocab as u64) as u32).collect();
         (x, labels, ids)
     }
 

@@ -23,9 +23,12 @@
 //! The compute [`runtime`] is pluggable (see README "Compute backends"):
 //! the default `backend-xla` feature executes the AOT artifacts on PJRT
 //! (Python never runs on the training path: `make artifacts` lowers the
-//! model once), while `backend-ref` is a deterministic pure-Rust
-//! reference engine with zero non-std dependencies -- the configuration
-//! CI's tier-1 gate builds and tests on a stock toolchain.
+//! model once), `backend-ref` is a deterministic pure-Rust reference
+//! engine with zero non-std dependencies -- the configuration CI's
+//! tier-1 gate builds and tests on a stock toolchain -- and `backend-par`
+//! runs that same engine on a deterministic std-thread pool
+//! (`runtime::tensor::ThreadPool`), bit-identical to `backend-ref` at
+//! any thread count.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
 //! reproductions of every table and figure in the paper.

@@ -27,6 +27,8 @@ USAGE: repro <COMMAND> [flags]
 COMMANDS:
   train    --run-preset wmt10|web50|e2e|tiny [--policy P] [--steps N]
            [--config FILE] [--out-dir DIR] [--decay-to P1@STEPS] [--no-decode]
+           [--threads N]  (backend-par worker threads; 0 = auto,
+                           GD_THREADS env var overrides)
   scaling  --cluster v100|a100 [--gpus 8,16,32,64,128] [--workload wmt10|web50]
   sweep    [--rates 0,0.1,...] [--gpus 16] (Fig 6 throughput axis)
   dist     [--policy P] [--steps N] [--seed S] (real multi-worker engine)
@@ -203,10 +205,8 @@ fn cmd_dist(args: &Args) -> Result<()> {
     let res = DistEngine::run(&cfg)?;
     let first = res.losses.first().copied().unwrap_or(f32::NAN);
     let last = res.losses.last().copied().unwrap_or(f32::NAN);
-    let dropped: Vec<f64> =
-        res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| *s).collect();
-    let full: Vec<f64> =
-        res.step_wall.iter().filter(|(d, _)| !*d).map(|(_, s)| *s).collect();
+    let dropped: Vec<f64> = res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| *s).collect();
+    let full: Vec<f64> = res.step_wall.iter().filter(|(d, _)| !*d).map(|(_, s)| *s).collect();
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
     println!(
         "[dist] loss {first:.4} -> {last:.4} | dense consistent: {} | observed drop rate {:.2}",

@@ -81,8 +81,7 @@ pub fn hash_route(
     probs: &[f32],
     n_experts: usize,
 ) -> (Vec<usize>, Vec<f32>) {
-    let experts: Vec<usize> =
-        token_ids.iter().map(|&id| hash_expert(id, n_experts)).collect();
+    let experts: Vec<usize> = token_ids.iter().map(|&id| hash_expert(id, n_experts)).collect();
     let gates: Vec<f32> = experts
         .iter()
         .enumerate()
@@ -111,8 +110,7 @@ pub fn route_pack(
     assert_eq!(x.len(), t * d);
     assert_eq!(counts.len(), topo.n_ranks);
     let stride = HEADER + d;
-    let mut out: Vec<Vec<f32>> =
-        counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
+    let mut out: Vec<Vec<f32>> = counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
     for i in 0..t {
         let e = experts[i];
         let msg = &mut out[topo.owner_of(e)];
@@ -231,8 +229,7 @@ pub fn return_pack(
 ) -> Vec<Vec<f32>> {
     assert_eq!(counts.len(), topo.n_ranks);
     let stride = HEADER + d;
-    let mut out: Vec<Vec<f32>> =
-        counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
+    let mut out: Vec<Vec<f32>> = counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
     for a in admitted {
         let msg = &mut out[a.src_rank];
         msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
@@ -389,8 +386,7 @@ mod tests {
         assert_eq!(adm.len(), 3);
         let kept: Vec<usize> = adm.iter().map(|a| a.src_idx).collect();
         assert_eq!(kept, vec![0, 1, 2], "earliest tokens admitted first");
-        let ret =
-            return_pack(&topo, &adm, &vec![1.0; 3 * d], d, &return_counts(&topo, &adm));
+        let ret = return_pack(&topo, &adm, &vec![1.0; 3 * d], d, &return_counts(&topo, &adm));
         let r = return_unpack(&ret, 5, d);
         let got: Vec<bool> = r.slot.iter().map(|&s| s >= 0).collect();
         assert_eq!(got, vec![true, true, true, false, false]);
@@ -512,8 +508,7 @@ mod tests {
             let mut send_counts: Vec<Vec<usize>> = Vec::new();
             for r in 0..n_ranks {
                 let t = ts[r];
-                let x: Vec<f32> =
-                    (0..t * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
                 let experts: Vec<usize> =
                     (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
                 let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();

@@ -78,8 +78,7 @@ impl Cluster {
         let frac_local = (g - 1) as f64 / n_ranks as f64;
         let intra = bytes_per_rank * frac_local / self.nvlink_bw;
         // All g ranks of a node push their remote bytes through one NIC.
-        let inter =
-            bytes_per_rank * frac_remote * g as f64 / self.node_net_bw;
+        let inter = bytes_per_rank * frac_remote * g as f64 / self.node_net_bw;
         let latency = self.alpha * (g as f64 - 1.0).max(0.0)
             + self.alpha * (nodes as f64 - 1.0).max(0.0);
         intra.max(inter) + latency

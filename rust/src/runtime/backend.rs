@@ -1,7 +1,7 @@
 //! The pluggable compute backend: the contract every engine that can run
 //! the paper's train/eval/decode steps must satisfy.
 //!
-//! Two implementations ship today (see README "Compute backends"):
+//! Three implementations ship today (see README "Compute backends"):
 //!
 //! * `TrainEngine` (feature `backend-xla`) -- the PJRT engine executing
 //!   the AOT-lowered JAX+Pallas artifacts; bit-exact with the Python
@@ -9,6 +9,9 @@
 //! * [`ReferenceBackend`](super::ReferenceBackend) (feature `backend-ref`)
 //!   -- a deterministic pure-Rust MoE transformer step on std alone; what
 //!   CI's tier-1 gate runs.
+//! * `ParallelBackend` (feature `backend-par`) -- the reference engine on
+//!   a deterministic std-thread pool; bit-identical to the reference
+//!   engine at any thread count.
 //!
 //! The trait owns model + Adam state behind `&mut self`; callers never see
 //! parameter storage. Construction and execution return the typed

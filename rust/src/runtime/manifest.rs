@@ -90,9 +90,7 @@ fn specs_from(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
                 .iter()
                 .map(|s| s.as_usize().context("bad dim"))
                 .collect::<Result<Vec<_>>>()?;
-            let dtype = DType::parse(
-                e.get("dtype").and_then(Json::as_str).unwrap_or("f32"),
-            )?;
+            let dtype = DType::parse(e.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
             let file = e.get("file").and_then(Json::as_str).map(str::to_string);
             Ok(TensorSpec { name, shape, dtype, file })
         })

@@ -1,7 +1,7 @@
 //! The pluggable compute runtime.
 //!
 //! [`Backend`] is the contract (train/eval/decode against the
-//! [`Manifest`] tensor specs, owning params + Adam state); two engines
+//! [`Manifest`] tensor specs, owning params + Adam state); three engines
 //! implement it:
 //!
 //! * `TrainEngine` (cargo feature `backend-xla`, the default): executes
@@ -12,6 +12,10 @@
 //!   pure-Rust MoE transformer step built on the cache-blocked [`tensor`]
 //!   kernels -- zero non-std dependencies, no artifacts on disk. This is
 //!   the engine CI's tier-1 gate runs.
+//! * `ParallelBackend` (cargo feature `backend-par`): the reference engine
+//!   on the [`tensor::ThreadPool`] -- std threads only, fixed chunk
+//!   schedule, in-order reductions, bit-identical to [`ReferenceBackend`]
+//!   at any thread count.
 //!
 //! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes and
 //! dtypes are manifest-driven -- nothing is hard-coded) and can also
@@ -21,6 +25,8 @@ mod backend;
 #[cfg(feature = "backend-xla")]
 mod engine;
 mod manifest;
+#[cfg(feature = "backend-par")]
+mod parallel;
 mod reference;
 pub mod tensor;
 
@@ -28,31 +34,43 @@ pub use backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetric
 #[cfg(feature = "backend-xla")]
 pub use engine::TrainEngine;
 pub use manifest::{DType, Manifest, ModelDims, TensorSpec};
+#[cfg(feature = "backend-par")]
+pub use parallel::ParallelBackend;
 pub use reference::{RefHyper, ReferenceBackend};
 
-#[cfg(not(any(feature = "backend-xla", feature = "backend-ref")))]
+#[cfg(not(any(feature = "backend-xla", feature = "backend-ref", feature = "backend-par")))]
 compile_error!(
-    "no compute backend selected: enable `backend-xla` (PJRT, the default) \
-     or `backend-ref` (pure Rust) in rust/Cargo.toml features"
+    "no compute backend selected: enable `backend-xla` (PJRT, the default), \
+     `backend-ref` (pure Rust), or `backend-par` (pure Rust, threaded) in \
+     rust/Cargo.toml features"
 );
 
 /// The build's default backend for a run configuration: the PJRT engine
 /// when `backend-xla` is compiled in (no behavior change for artifact
-/// users), the pure-Rust [`ReferenceBackend`] otherwise.
+/// users), the deterministic threaded [`ParallelBackend`] under
+/// `backend-par`, the single-thread [`ReferenceBackend`] otherwise.
+/// `threads` is the config knob (0 = auto; `GD_THREADS` overrides); only
+/// the threaded engine reads it.
 pub fn default_backend(
     artifact_dir: &str,
     preset: &str,
     seed: u64,
     with_decode: bool,
+    threads: usize,
 ) -> BackendResult<Box<dyn Backend>> {
     #[cfg(feature = "backend-xla")]
     {
-        let _ = (preset, seed);
+        let _ = (preset, seed, threads);
         Ok(Box::new(TrainEngine::load(artifact_dir, with_decode)?))
     }
-    #[cfg(not(feature = "backend-xla"))]
+    #[cfg(all(not(feature = "backend-xla"), feature = "backend-par"))]
     {
         let _ = (artifact_dir, with_decode);
+        Ok(Box::new(ParallelBackend::with_threads(preset, seed, threads)?))
+    }
+    #[cfg(all(not(feature = "backend-xla"), not(feature = "backend-par")))]
+    {
+        let _ = (artifact_dir, with_decode, threads);
         Ok(Box::new(ReferenceBackend::for_preset(preset, seed)?))
     }
 }

@@ -1,0 +1,148 @@
+//! The deterministic threaded reference engine (`backend-par`).
+//!
+//! [`ParallelBackend`] is the [`ReferenceBackend`](super::ReferenceBackend)
+//! with a [`tensor::ThreadPool`](super::tensor::ThreadPool) attached: the
+//! cache-blocked matmul/FFN kernels fan out by output-row chunk and the
+//! expert backward by expert, with a fixed chunk schedule and in-order
+//! reductions, so results are **bit-identical** to the single-thread
+//! reference engine at any thread count (pinned by
+//! `rust/tests/parallel_backend.rs` across seeds, routing modes and
+//! gating-dropout rates). The paper's argument is throughput -- tier-1
+//! experiments should measure routing effects, not a single-threaded
+//! matmul -- and this engine is how the reference model keeps up without
+//! giving up the reproducibility the golden-trace fixture pins.
+//!
+//! Thread count: `RunConfig::threads` (CLI `--threads`, JSON `"threads"`),
+//! overridden by the `GD_THREADS` env var, defaulting to the machine's
+//! available parallelism (see [`tensor::resolve_threads`]).
+//!
+//! [`tensor::resolve_threads`]: super::tensor::resolve_threads
+
+use crate::data::Batch;
+
+use super::backend::{Backend, BackendResult, EvalMetrics, TrainMetrics};
+use super::manifest::{Manifest, ModelDims, TensorSpec};
+use super::reference::{RefHyper, ReferenceBackend};
+use super::tensor::resolve_threads;
+
+pub struct ParallelBackend {
+    inner: ReferenceBackend,
+}
+
+impl ParallelBackend {
+    /// Build for a preset with the auto-resolved thread count
+    /// (`GD_THREADS` env var, else available parallelism).
+    pub fn for_preset(preset: &str, seed: u64) -> BackendResult<ParallelBackend> {
+        Self::with_threads(preset, seed, 0)
+    }
+
+    /// Build for a preset; `threads` = 0 means auto (env, then available
+    /// parallelism), anything else is taken as the configured count
+    /// unless `GD_THREADS` overrides it.
+    pub fn with_threads(preset: &str, seed: u64, threads: usize) -> BackendResult<ParallelBackend> {
+        let mut inner = ReferenceBackend::for_preset(preset, seed)?;
+        inner.set_thread_pool(resolve_threads(threads));
+        Ok(ParallelBackend { inner })
+    }
+
+    /// Build for arbitrary dims with an *exact* thread count (no env or
+    /// parallelism fallback) -- what the parity tests use to pin 1/2/4.
+    pub fn from_dims(
+        preset: &str,
+        dims: ModelDims,
+        hyper: RefHyper,
+        seed: u64,
+        threads: usize,
+    ) -> ParallelBackend {
+        let mut inner = ReferenceBackend::from_dims(preset, dims, hyper, seed);
+        inner.set_thread_pool(threads);
+        ParallelBackend { inner }
+    }
+
+    /// Worker threads in use.
+    pub fn threads(&self) -> usize {
+        self.inner.thread_count()
+    }
+}
+
+impl Backend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+
+    fn train_step(
+        &mut self,
+        batch: &Batch,
+        flags: (f32, f32, f32),
+        seed: i32,
+    ) -> BackendResult<TrainMetrics> {
+        self.inner.train_step(batch, flags, seed)
+    }
+
+    fn eval(&self, batch: &Batch) -> BackendResult<EvalMetrics> {
+        self.inner.eval(batch)
+    }
+
+    fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>> {
+        self.inner.decode(src)
+    }
+
+    fn step_count(&self) -> f32 {
+        self.inner.step_count()
+    }
+
+    fn reset(&mut self) -> BackendResult<()> {
+        self.inner.reset()
+    }
+
+    fn save_checkpoint(&self, dir: &str) -> BackendResult<()> {
+        self.inner.save_checkpoint(dir)
+    }
+
+    fn load_checkpoint(&mut self, dir: &str) -> BackendResult<()> {
+        self.inner.load_checkpoint(dir)
+    }
+
+    fn param_by_name(&self, name: &str) -> BackendResult<(TensorSpec, Vec<f32>)> {
+        self.inner.param_by_name(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_backend_reports_name_and_threads() {
+        let be = ParallelBackend::from_dims(
+            "tiny-test",
+            ModelDims {
+                vocab: 64,
+                d_model: 8,
+                d_ff: 16,
+                n_experts: 2,
+                enc_blocks: 1,
+                dec_blocks: 0,
+                max_len: 4,
+                batch_rows: 2,
+                bos: crate::data::BOS,
+                param_count: 0,
+            },
+            RefHyper { lr: 1e-2, warmup: 4.0 },
+            1,
+            3,
+        );
+        assert_eq!(be.name(), "parallel");
+        assert_eq!(be.threads(), 3);
+        assert!(be.manifest().dims.param_count > 0);
+    }
+
+    #[test]
+    fn unknown_preset_is_typed_error() {
+        assert!(ParallelBackend::with_threads("nope", 1, 2).is_err());
+    }
+}

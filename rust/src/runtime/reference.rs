@@ -28,6 +28,30 @@
 //! the XLA backend.
 //!
 //! Dense math runs on the cache-blocked kernels in [`super::tensor`].
+//!
+//! # The threaded execution path (`backend-par`)
+//!
+//! When a [`ThreadPool`] is attached ([`ReferenceBackend::set_thread_pool`];
+//! the `ParallelBackend` wrapper does this), the hot loops fan out over
+//! std threads with a fixed schedule and in-order reductions:
+//!
+//! * the matmuls go through the `*_par` kernels (output-row chunking);
+//! * the expert FFN forward is chunked by token range (each token's rows
+//!   of `pre`/`hid`/`ye`/`y` are written by exactly one worker);
+//! * the expert backward is partitioned **by expert**: each worker owns
+//!   one expert's `dw1`/`dw2` slices and walks that expert's tokens in
+//!   ascending token order (the same order the sequential loop feeds that
+//!   expert), parking its per-token `dx`/`dprobs` contributions in local
+//!   buffers that the calling thread merges afterwards -- each target
+//!   element receives exactly one addition, so merge order is irrelevant;
+//! * per-token CE terms are computed in parallel but summed by the
+//!   calling thread in token order; the Adam update is chunked
+//!   elementwise.
+//!
+//! Every reduction order is therefore identical to the sequential path,
+//! which makes the threaded backend bit-for-bit equal to the plain
+//! reference backend at any thread count (pinned by
+//! `rust/tests/parallel_backend.rs`).
 
 use crate::data::Batch;
 use crate::moe;
@@ -36,8 +60,8 @@ use crate::util::rng::Rng;
 use super::backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
 use super::manifest::{DType, Manifest, ModelDims, TensorSpec};
 use super::tensor::{
-    argmax, axpy, dot, logsumexp, matmul, matmul_at, matmul_bt, relu, softmax_rows,
-    softmax_vjp_rows,
+    argmax, axpy, dot, logsumexp, matmul, matmul_at, matmul_at_par, matmul_bt, matmul_bt_par,
+    matmul_par, relu, softmax_rows, softmax_vjp_rows, ThreadPool,
 };
 
 const JITTER_EPS: f32 = 0.01;
@@ -65,6 +89,10 @@ pub struct ReferenceBackend {
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     step: f32,
+    /// `Some` = the deterministic threaded execution path (`backend-par`);
+    /// `None` = the plain single-thread reference path. Both produce
+    /// bit-identical results (see the module docs).
+    pool: Option<ThreadPool>,
 }
 
 /// Per-step routing decision, decoded from the coordinator flags.
@@ -110,10 +138,7 @@ impl ReferenceBackend {
     /// CI-scale runs show real learning progress).
     pub fn for_preset(preset: &str, seed: u64) -> BackendResult<ReferenceBackend> {
         let (dims, hyper) = match preset {
-            "tiny" => (
-                dims(512, 64, 128, 4, 1, 1, 16, 8),
-                RefHyper { lr: 1e-2, warmup: 4.0 },
-            ),
+            "tiny" => (dims(512, 64, 128, 4, 1, 1, 16, 8), RefHyper { lr: 1e-2, warmup: 4.0 }),
             "wmt10_sim" => (
                 dims(4096, 256, 1024, 8, 2, 2, 32, 8),
                 RefHyper { lr: 3e-3, warmup: 100.0 },
@@ -170,7 +195,21 @@ impl ReferenceBackend {
             v: zeros,
             params,
             step: 0.0,
+            pool: None,
         }
+    }
+
+    /// Attach a worker pool: subsequent steps run the deterministic
+    /// threaded path. `threads <= 1` still routes through the pool
+    /// machinery (a one-worker pool), which the parity suite uses to
+    /// prove the machinery itself is numerics-neutral.
+    pub fn set_thread_pool(&mut self, threads: usize) {
+        self.pool = Some(ThreadPool::new(threads));
+    }
+
+    /// Worker threads in use (1 when no pool is attached).
+    pub fn thread_count(&self) -> usize {
+        self.pool.as_ref().map_or(1, ThreadPool::threads)
     }
 
     /// Deterministic init: embeddings at std 0.02, matrices at
@@ -202,6 +241,29 @@ impl ReferenceBackend {
 
     fn out_b(&self) -> &[f32] {
         &self.params[self.params.len() - 1]
+    }
+
+    // Kernel dispatch: the threaded path when a pool is attached, the
+    // plain cache-blocked kernel otherwise. Bit-identical either way.
+    fn mm(&self, out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        match &self.pool {
+            Some(p) => matmul_par(p, out, a, b, m, k, n),
+            None => matmul(out, a, b, m, k, n),
+        }
+    }
+
+    fn mm_at(&self, out: &mut [f32], a: &[f32], b: &[f32], s: usize, m: usize, n: usize) {
+        match &self.pool {
+            Some(p) => matmul_at_par(p, out, a, b, s, m, n),
+            None => matmul_at(out, a, b, s, m, n),
+        }
+    }
+
+    fn mm_bt(&self, out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+        match &self.pool {
+            Some(p) => matmul_bt_par(p, out, a, b, m, k, n),
+            None => matmul_bt(out, a, b, m, k, n),
+        }
     }
 
     fn check_batch(&self, rows: usize, len: usize) -> BackendResult<()> {
@@ -272,7 +334,7 @@ impl ReferenceBackend {
             };
 
             let mut probs = vec![0f32; t * e];
-            matmul(&mut probs, &gate_in, wr, t, d, e);
+            self.mm(&mut probs, &gate_in, wr, t, d, e);
             softmax_rows(&mut probs, t, e);
 
             // routing: local (Gating Dropout) > hash (Hash-Layer) > top-1
@@ -283,8 +345,7 @@ impl ReferenceBackend {
                     .collect()
             };
             let (idx, gate): (Vec<usize>, Vec<f32>) = if flags.drop {
-                let idx: Vec<usize> =
-                    (0..t).map(|i| local_expert_row[i / len] as usize).collect();
+                let idx: Vec<usize> = (0..t).map(|i| local_expert_row[i / len] as usize).collect();
                 let gate = forced_gates(&idx);
                 (idx, gate)
             } else if flags.hash {
@@ -318,37 +379,58 @@ impl ReferenceBackend {
             balance_sum += balance;
             kept_sum += kept.iter().filter(|&&k| k).count() as f32 / t as f32;
 
-            // expert FFN + gated residual combine
+            // expert FFN + gated residual combine. The threaded path
+            // chunks the token range: every token's pre/hid/ye/y rows are
+            // written by exactly one worker, and the per-token math is the
+            // shared `expert_fwd_tokens`, so the split cannot change bits.
             let active = !(flags.drop && flags.skip);
             let mut pre = vec![0f32; t * ff];
             let mut hid = vec![0f32; t * ff];
             let mut ye = vec![0f32; t * d];
             let mut y = x.clone();
             if active {
-                for i in 0..t {
-                    if !kept[i] {
-                        continue;
-                    }
-                    let ei = idx[i];
-                    let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
-                    let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
-                    let xi = &x[i * d..(i + 1) * d];
-                    let pi = &mut pre[i * ff..(i + 1) * ff];
-                    for (j, &xv) in xi.iter().enumerate() {
-                        if xv != 0.0 {
-                            axpy(pi, xv, &w1e[j * ff..(j + 1) * ff]);
+                match &self.pool {
+                    None => expert_fwd_tokens(
+                        w1,
+                        w2,
+                        &x,
+                        &idx,
+                        &kept,
+                        &gate,
+                        d,
+                        ff,
+                        0,
+                        &mut pre,
+                        &mut hid,
+                        &mut ye,
+                        &mut y,
+                    ),
+                    Some(pool) => {
+                        let tp = t.div_ceil(pool.threads());
+                        let mut parts = Vec::new();
+                        let (mut pre_r, mut hid_r) = (&mut pre[..], &mut hid[..]);
+                        let (mut ye_r, mut y_r) = (&mut ye[..], &mut y[..]);
+                        let mut i0 = 0;
+                        while i0 < t {
+                            let take = tp.min(t - i0);
+                            let (pc, rest) = std::mem::take(&mut pre_r).split_at_mut(take * ff);
+                            pre_r = rest;
+                            let (hc, rest) = std::mem::take(&mut hid_r).split_at_mut(take * ff);
+                            hid_r = rest;
+                            let (ec, rest) = std::mem::take(&mut ye_r).split_at_mut(take * d);
+                            ye_r = rest;
+                            let (yc, rest) = std::mem::take(&mut y_r).split_at_mut(take * d);
+                            y_r = rest;
+                            parts.push((i0, pc, hc, ec, yc));
+                            i0 += take;
                         }
+                        let (x_r, idx_r, kept_r, gate_r) = (&x, &idx, &kept, &gate);
+                        pool.run_parts(parts, &|_, (i0, pc, hc, ec, yc)| {
+                            expert_fwd_tokens(
+                                w1, w2, x_r, idx_r, kept_r, gate_r, d, ff, i0, pc, hc, ec, yc,
+                            )
+                        });
                     }
-                    let hi = &mut hid[i * ff..(i + 1) * ff];
-                    hi.copy_from_slice(pi);
-                    relu(hi);
-                    let yi = &mut ye[i * d..(i + 1) * d];
-                    for (j, &hv) in hi.iter().enumerate() {
-                        if hv != 0.0 {
-                            axpy(yi, hv, &w2e[j * d..(j + 1) * d]);
-                        }
-                    }
-                    axpy(&mut y[i * d..(i + 1) * d], gate[i], yi);
                 }
             }
 
@@ -370,7 +452,7 @@ impl ReferenceBackend {
 
         // -- tied-projection head ------------------------------------------
         let mut logits = vec![0f32; t * vocab];
-        matmul_bt(&mut logits, &x, embed, t, d, vocab);
+        self.mm_bt(&mut logits, &x, embed, t, d, vocab);
         let ob = self.out_b();
         for row in logits.chunks_exact_mut(vocab) {
             for (lv, &bv) in row.iter_mut().zip(ob) {
@@ -388,28 +470,67 @@ impl ReferenceBackend {
         }
     }
 
-    /// Masked token-mean CE and its logit cotangent.
+    /// Masked token-mean CE and its logit cotangent. The threaded path
+    /// computes per-token terms in parallel (disjoint `dlogits` rows, one
+    /// `ces` slot per token) and reduces `ce` on the calling thread in
+    /// token order -- the exact summation order of the sequential loop.
     fn ce_and_dlogits(&self, logits: &[f32], tgt_out: &[i32]) -> (f32, Vec<f32>) {
         let vocab = self.manifest.dims.vocab;
         let t = tgt_out.len();
         let msum: f32 = tgt_out.iter().filter(|&&y| y != PAD).count() as f32;
         let msum = msum.max(1.0);
-        let mut ce = 0f32;
+        let w = 1.0 / msum;
         let mut dlogits = vec![0f32; t * vocab];
+        let mut ces = vec![0f32; t];
+        match &self.pool {
+            None => {
+                for i in 0..t {
+                    if tgt_out[i] == PAD {
+                        continue;
+                    }
+                    ces[i] = ce_token(
+                        &logits[i * vocab..(i + 1) * vocab],
+                        tgt_out[i] as usize,
+                        w,
+                        &mut dlogits[i * vocab..(i + 1) * vocab],
+                    );
+                }
+            }
+            Some(pool) => {
+                let tp = t.div_ceil(pool.threads());
+                let mut parts = Vec::new();
+                let (mut dl_r, mut ce_r) = (&mut dlogits[..], &mut ces[..]);
+                let mut i0 = 0;
+                while i0 < t {
+                    let take = tp.min(t - i0);
+                    let (dc, rest) = std::mem::take(&mut dl_r).split_at_mut(take * vocab);
+                    dl_r = rest;
+                    let (cc, rest) = std::mem::take(&mut ce_r).split_at_mut(take);
+                    ce_r = rest;
+                    parts.push((i0, dc, cc));
+                    i0 += take;
+                }
+                pool.run_parts(parts, &|_, (i0, dc, cc)| {
+                    for r in 0..cc.len() {
+                        let i = i0 + r;
+                        if tgt_out[i] == PAD {
+                            continue;
+                        }
+                        cc[r] = ce_token(
+                            &logits[i * vocab..(i + 1) * vocab],
+                            tgt_out[i] as usize,
+                            w,
+                            &mut dc[r * vocab..(r + 1) * vocab],
+                        );
+                    }
+                });
+            }
+        }
+        let mut ce = 0f32;
         for i in 0..t {
-            let row = &logits[i * vocab..(i + 1) * vocab];
-            if tgt_out[i] == PAD {
-                continue;
+            if tgt_out[i] != PAD {
+                ce += ces[i];
             }
-            let y = tgt_out[i] as usize;
-            let lse = logsumexp(row);
-            ce += lse - row[y];
-            let drow = &mut dlogits[i * vocab..(i + 1) * vocab];
-            let w = 1.0 / msum;
-            for (dv, &lv) in drow.iter_mut().zip(row) {
-                *dv = (lv - lse).exp() * w;
-            }
-            drow[y] -= w;
         }
         (ce / msum, dlogits)
     }
@@ -443,42 +564,84 @@ impl ReferenceBackend {
         }
 
         if cache.active {
-            for i in 0..t {
-                if !cache.kept[i] {
-                    continue;
-                }
-                let ei = cache.idx[i];
-                let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
-                let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
-                let dyi = &dy[i * d..(i + 1) * d];
-                let yei = &cache.ye[i * d..(i + 1) * d];
-                // gate path: dgate = <dy, ye>, flows into the routed prob
-                dprobs[i * e + ei] += dot(dyi, yei);
-                // expert path
-                let g = cache.gate[i];
-                let hi = &cache.hid[i * ff..(i + 1) * ff];
-                let prei = &cache.pre[i * ff..(i + 1) * ff];
-                let dw1e = &mut dw1[ei * d * ff..(ei + 1) * d * ff];
-                let dw2e = &mut dw2[ei * ff * d..(ei + 1) * ff * d];
-                // dye = gate * dy; dh = dye @ w2^T; dpre = dh * (pre > 0)
-                let mut dpre = vec![0f32; ff];
-                for j in 0..ff {
-                    if prei[j] > 0.0 {
-                        dpre[j] = g * dot(dyi, &w2e[j * d..(j + 1) * d]);
-                    }
-                    // dw2[j,:] += h[j] * dye
-                    if hi[j] != 0.0 {
-                        axpy(&mut dw2e[j * d..(j + 1) * d], g * hi[j], dyi);
+            match &self.pool {
+                None => {
+                    let mut dxa = vec![0f32; d];
+                    for i in 0..t {
+                        if !cache.kept[i] {
+                            continue;
+                        }
+                        let ei = cache.idx[i];
+                        let dg = expert_token_bwd(
+                            cache,
+                            dy,
+                            w1,
+                            w2,
+                            d,
+                            ff,
+                            i,
+                            &mut dw1[ei * d * ff..(ei + 1) * d * ff],
+                            &mut dw2[ei * ff * d..(ei + 1) * ff * d],
+                            &mut dxa,
+                        );
+                        dprobs[i * e + ei] += dg;
+                        for (dxv, &av) in dx[i * d..(i + 1) * d].iter_mut().zip(&dxa) {
+                            *dxv += av;
+                        }
                     }
                 }
-                let xi = &cache.x[i * d..(i + 1) * d];
-                let dxi = &mut dx[i * d..(i + 1) * d];
-                for j in 0..d {
-                    // dw1[j,:] += x[j] * dpre ; dx[j] += <w1[j,:], dpre>
-                    if xi[j] != 0.0 {
-                        axpy(&mut dw1e[j * ff..(j + 1) * ff], xi[j], &dpre);
+                Some(pool) => {
+                    // Partition by expert: each worker owns one expert's
+                    // dw1/dw2 slices and walks that expert's tokens in
+                    // ascending order -- the exact order the sequential
+                    // loop feeds that expert's accumulators. Per-token
+                    // dx/dprobs contributions land in worker-local buffers
+                    // and are merged below; every target element receives
+                    // exactly one addition (a token has one expert), so
+                    // the merge cannot change bits.
+                    let mut toks: Vec<Vec<usize>> = vec![Vec::new(); e];
+                    for i in 0..t {
+                        if cache.kept[i] {
+                            toks[cache.idx[i]].push(i);
+                        }
                     }
-                    dxi[j] += dot(&w1e[j * ff..(j + 1) * ff], &dpre);
+                    let mut scat: Vec<(Vec<f32>, Vec<f32>)> =
+                        (0..e).map(|_| (Vec::new(), Vec::new())).collect();
+                    let parts: Vec<_> = toks
+                        .iter()
+                        .zip(dw1.chunks_mut(d * ff))
+                        .zip(dw2.chunks_mut(ff * d))
+                        .zip(scat.iter_mut())
+                        .map(|(((tk, w1c), w2c), sc)| (tk, w1c, w2c, sc))
+                        .collect();
+                    pool.run_parts(parts, &|_, (tk, dw1e, dw2e, out)| {
+                        let mut dxa = vec![0f32; tk.len() * d];
+                        let mut dga = vec![0f32; tk.len()];
+                        for (r, &i) in tk.iter().enumerate() {
+                            dga[r] = expert_token_bwd(
+                                cache,
+                                dy,
+                                w1,
+                                w2,
+                                d,
+                                ff,
+                                i,
+                                dw1e,
+                                dw2e,
+                                &mut dxa[r * d..(r + 1) * d],
+                            );
+                        }
+                        *out = (dxa, dga);
+                    });
+                    for (ei, (dxa, dga)) in scat.iter().enumerate() {
+                        for (r, &i) in toks[ei].iter().enumerate() {
+                            dprobs[i * e + ei] += dga[r];
+                            let dst = &mut dx[i * d..(i + 1) * d];
+                            for (dxv, &av) in dst.iter_mut().zip(&dxa[r * d..(r + 1) * d]) {
+                                *dxv += av;
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -488,12 +651,12 @@ impl ReferenceBackend {
         softmax_vjp_rows(&mut dglogits, &cache.probs, &dprobs, t, e);
         // dwr += gate_in^T dglogits ; d(gate_in) = dglogits wr^T
         let mut dwr_l = vec![0f32; d * e];
-        matmul_at(&mut dwr_l, &cache.gate_in, &dglogits, t, d, e);
+        self.mm_at(&mut dwr_l, &cache.gate_in, &dglogits, t, d, e);
         axpy(dwr, 1.0, &dwr_l);
         let wr = self.layer_param(l, 0);
         let mut dgate_in = vec![0f32; t * d];
         // dglogits [t,e] x wr [d,e]^T -> [t,d]
-        matmul_bt(&mut dgate_in, &dglogits, wr, t, e, d);
+        self.mm_bt(&mut dgate_in, &dglogits, wr, t, e, d);
         match &cache.jit {
             Some(jit) => {
                 for ((dxv, &dgv), &jv) in dx.iter_mut().zip(&dgate_in).zip(jit) {
@@ -509,6 +672,128 @@ impl ReferenceBackend {
         let s = step1.max(1.0);
         let w = self.hyper.warmup;
         self.hyper.lr * (s / w).min(w.sqrt() / s.sqrt())
+    }
+}
+
+/// Expert FFN forward for the token range `[i0, i0 + rows)`:
+/// `pre`/`hid`/`ye`/`y` are that range's row chunks (token-local), while
+/// `x`/`idx`/`kept`/`gate` stay full-batch. Shared by the sequential path
+/// (one call covering every token) and the threaded path (one call per
+/// token chunk), so the two cannot drift numerically.
+#[allow(clippy::too_many_arguments)]
+fn expert_fwd_tokens(
+    w1: &[f32],
+    w2: &[f32],
+    x: &[f32],
+    idx: &[usize],
+    kept: &[bool],
+    gate: &[f32],
+    d: usize,
+    ff: usize,
+    i0: usize,
+    pre: &mut [f32],
+    hid: &mut [f32],
+    ye: &mut [f32],
+    y: &mut [f32],
+) {
+    let rows = pre.len() / ff;
+    for r in 0..rows {
+        let i = i0 + r;
+        if !kept[i] {
+            continue;
+        }
+        let ei = idx[i];
+        let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
+        let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
+        let xi = &x[i * d..(i + 1) * d];
+        let pi = &mut pre[r * ff..(r + 1) * ff];
+        for (j, &xv) in xi.iter().enumerate() {
+            if xv != 0.0 {
+                axpy(pi, xv, &w1e[j * ff..(j + 1) * ff]);
+            }
+        }
+        let hi = &mut hid[r * ff..(r + 1) * ff];
+        hi.copy_from_slice(pi);
+        relu(hi);
+        let yi = &mut ye[r * d..(r + 1) * d];
+        for (j, &hv) in hi.iter().enumerate() {
+            if hv != 0.0 {
+                axpy(yi, hv, &w2e[j * d..(j + 1) * d]);
+            }
+        }
+        axpy(&mut y[r * d..(r + 1) * d], gate[i], yi);
+    }
+}
+
+/// Expert-path backward for one kept token `i`: accumulates into its
+/// expert's `dw1e`/`dw2e` slices, writes the token's input-cotangent
+/// contribution into `dxa` (length `d`, fully overwritten), and returns
+/// the gate cotangent `<dy_i, ye_i>`. Shared by the sequential and
+/// per-expert-parallel paths.
+#[allow(clippy::too_many_arguments)]
+fn expert_token_bwd(
+    cache: &LayerCache,
+    dy: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    d: usize,
+    ff: usize,
+    i: usize,
+    dw1e: &mut [f32],
+    dw2e: &mut [f32],
+    dxa: &mut [f32],
+) -> f32 {
+    let ei = cache.idx[i];
+    let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
+    let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
+    let dyi = &dy[i * d..(i + 1) * d];
+    let yei = &cache.ye[i * d..(i + 1) * d];
+    // gate path: dgate = <dy, ye>, flows into the routed prob
+    let dg = dot(dyi, yei);
+    // expert path
+    let g = cache.gate[i];
+    let hi = &cache.hid[i * ff..(i + 1) * ff];
+    let prei = &cache.pre[i * ff..(i + 1) * ff];
+    // dye = gate * dy; dh = dye @ w2^T; dpre = dh * (pre > 0)
+    let mut dpre = vec![0f32; ff];
+    for j in 0..ff {
+        if prei[j] > 0.0 {
+            dpre[j] = g * dot(dyi, &w2e[j * d..(j + 1) * d]);
+        }
+        // dw2[j,:] += h[j] * dye
+        if hi[j] != 0.0 {
+            axpy(&mut dw2e[j * d..(j + 1) * d], g * hi[j], dyi);
+        }
+    }
+    let xi = &cache.x[i * d..(i + 1) * d];
+    for j in 0..d {
+        // dw1[j,:] += x[j] * dpre ; dx contribution = <w1[j,:], dpre>
+        if xi[j] != 0.0 {
+            axpy(&mut dw1e[j * ff..(j + 1) * ff], xi[j], &dpre);
+        }
+        dxa[j] = dot(&w1e[j * ff..(j + 1) * ff], &dpre);
+    }
+    dg
+}
+
+/// CE term and logit cotangent row for one non-pad token.
+fn ce_token(row: &[f32], y: usize, w: f32, drow: &mut [f32]) -> f32 {
+    let lse = logsumexp(row);
+    for (dv, &lv) in drow.iter_mut().zip(row) {
+        *dv = (lv - lse).exp() * w;
+    }
+    drow[y] -= w;
+    lse - row[y]
+}
+
+/// The bias-corrected Adam update over one contiguous span (the model.py
+/// recipe); shared by the sequential and chunked-parallel paths.
+fn adam_span(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, bc1: f32, bc2: f32) {
+    for j in 0..p.len() {
+        let gj = g[j];
+        m[j] = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * gj;
+        v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * gj * gj;
+        p[j] -= lr * (m[j] / bc1) / ((v[j] / bc2).sqrt() + ADAM_EPS);
     }
 }
 
@@ -570,8 +855,7 @@ impl Backend for ReferenceBackend {
         let t = batch.src.len();
 
         // -- backward -------------------------------------------------------
-        let mut grads: Vec<Vec<f32>> =
-            self.params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0f32; p.len()]).collect();
         let np = self.params.len();
 
         // head: out_b, tied embed (projection side), dy
@@ -582,10 +866,10 @@ impl Backend for ReferenceBackend {
             }
         }
         let mut dembed_proj = vec![0f32; vocab * d];
-        matmul_at(&mut dembed_proj, &dlogits, &fwd.y, t, vocab, d);
+        self.mm_at(&mut dembed_proj, &dlogits, &fwd.y, t, vocab, d);
         axpy(&mut grads[0], 1.0, &dembed_proj);
         let mut dy = vec![0f32; t * d];
-        matmul(&mut dy, &dlogits, &self.params[0], t, vocab, d);
+        self.mm(&mut dy, &dlogits, &self.params[0], t, vocab, d);
 
         // layers, deepest first
         for l in (0..self.n_layers).rev() {
@@ -617,11 +901,22 @@ impl Backend for ReferenceBackend {
         for pi in 0..np {
             let (p, g) = (&mut self.params[pi], &grads[pi]);
             let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
-            for j in 0..p.len() {
-                let gj = g[j];
-                m[j] = ADAM_B1 * m[j] + (1.0 - ADAM_B1) * gj;
-                v[j] = ADAM_B2 * v[j] + (1.0 - ADAM_B2) * gj * gj;
-                p[j] -= lr * (m[j] / bc1) / ((v[j] / bc2).sqrt() + ADAM_EPS);
+            match &self.pool {
+                None => adam_span(p, m, v, g, lr, bc1, bc2),
+                Some(pool) => {
+                    // elementwise update: any chunking is bit-neutral
+                    let cl = p.len().div_ceil(pool.threads());
+                    let parts: Vec<_> = p
+                        .chunks_mut(cl)
+                        .zip(m.chunks_mut(cl))
+                        .zip(v.chunks_mut(cl))
+                        .zip(g.chunks(cl))
+                        .map(|(((pc, mc), vc), gc)| (pc, mc, vc, gc))
+                        .collect();
+                    pool.run_parts(parts, &|_, (pc, mc, vc, gc)| {
+                        adam_span(pc, mc, vc, gc, lr, bc1, bc2)
+                    });
+                }
             }
         }
         self.step = step1;

@@ -1,5 +1,6 @@
 //! Small cache-blocked f32 tensor kernels for the pure-Rust
-//! [`ReferenceBackend`](super::ReferenceBackend).
+//! [`ReferenceBackend`](super::ReferenceBackend), plus the [`ThreadPool`]
+//! seam the deterministic threaded backend (`backend-par`) builds on.
 //!
 //! Everything is row-major and allocation-free (callers own the output
 //! buffers). The matmul family covers the three orientations a manual
@@ -14,8 +15,19 @@
 //! dimension so the active output row stays in L1/L2 while a block of `b`
 //! rows streams through; [`matmul_bt`] is a row-dot kernel, which is
 //! already unit-stride in both operands. No SIMD intrinsics: the inner
-//! loops are shaped so LLVM auto-vectorizes them (this is the *reference*
-//! engine -- a threaded/SIMD backend is a ROADMAP item, not this one).
+//! loops are shaped so LLVM auto-vectorizes them.
+//!
+//! # Determinism of the parallel kernels
+//!
+//! [`matmul_par`] / [`matmul_at_par`] / [`matmul_bt_par`] fan the *output
+//! rows* out across a [`ThreadPool`]. Every output element is produced by
+//! exactly one worker, and within one output row the accumulation order
+//! over the shared dimension is the same ascending-`k` order the
+//! single-thread kernels use (the chunked kernels literally re-run the
+//! sequential kernel on a row sub-range). Floating-point summation order
+//! is therefore *identical* at any thread count, which makes the parallel
+//! kernels bit-for-bit equal to the sequential ones -- the property the
+//! `backend-par` engine's cross-backend parity suite pins.
 
 /// Block size over the shared (k) dimension: 64 rows of a 1k-wide f32 `b`
 /// panel is 256 KiB -- comfortably inside L2 next to one output row.
@@ -162,6 +174,201 @@ pub fn argmax(row: &[f32]) -> usize {
     bi
 }
 
+/// A scoped worker pool over plain `std::thread` (no rayon, no unsafe).
+///
+/// The pool is a *schedule*, not a set of live threads: each
+/// [`ThreadPool::run_parts`] call opens one `std::thread::scope`, fans the
+/// caller's pre-split work parts out over at most `threads` workers
+/// (contiguous groups, fixed assignment -- no work stealing), runs the
+/// first group on the calling thread, and joins before returning. Workers
+/// only ever touch the disjoint `&mut` parts the caller split off, so the
+/// borrow checker proves race freedom and results cannot depend on the
+/// thread count. This is the seam future SIMD / remote backends build on:
+/// anything expressible as "disjoint output parts + shared read-only
+/// inputs" parallelizes deterministically through it.
+#[derive(Debug, Clone)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// A pool that fans work out to `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool { threads: threads.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(part_index, part)` for every part. Parts are distributed as
+    /// contiguous groups over the workers; the first group runs inline on
+    /// the calling thread (after the others are spawned). Panics in any
+    /// worker propagate at scope exit.
+    ///
+    /// `T` is typically a tuple of disjoint `&mut [f32]` chunks plus the
+    /// indices a worker needs; because each part is *moved* into exactly
+    /// one worker, outputs are race-free by construction.
+    ///
+    /// Cost model: each call opens one `thread::scope` and spawns its
+    /// workers fresh (tens of microseconds per worker). That is noise for
+    /// the kernels the `backend-par` bench gates on (>= 512^2 outputs) but
+    /// real overhead for tiny parts; callers below that scale should
+    /// prefer the sequential kernels. The engine deliberately does NOT
+    /// auto-threshold: results are bit-identical either way, and keeping
+    /// every region on the pool is what lets the parity suite exercise the
+    /// whole threaded surface at test-sized models (a persistent pool /
+    /// size threshold is a ROADMAP perf follow-up).
+    pub fn run_parts<T: Send>(&self, parts: Vec<T>, f: &(dyn Fn(usize, T) + Sync)) {
+        let n = parts.len();
+        if n == 0 {
+            return;
+        }
+        let nt = self.threads.min(n);
+        if nt <= 1 {
+            for (i, p) in parts.into_iter().enumerate() {
+                f(i, p);
+            }
+            return;
+        }
+        let per = n.div_ceil(nt);
+        let mut groups: Vec<Vec<(usize, T)>> = Vec::with_capacity(nt);
+        let mut it = parts.into_iter().enumerate();
+        loop {
+            let g: Vec<(usize, T)> = it.by_ref().take(per).collect();
+            if g.is_empty() {
+                break;
+            }
+            groups.push(g);
+        }
+        std::thread::scope(|s| {
+            let mut groups = groups.into_iter();
+            let inline = groups.next().expect("n > 0 so at least one group");
+            for g in groups {
+                s.spawn(move || {
+                    for (i, p) in g {
+                        f(i, p);
+                    }
+                });
+            }
+            for (i, p) in inline {
+                f(i, p);
+            }
+        });
+    }
+
+    /// Split `out` (row-major, rows of `row_len`) into one contiguous row
+    /// chunk per worker and run `f(first_row, chunk)` on each. The chunk
+    /// boundaries depend only on `rows` and the pool width, never on
+    /// runtime timing.
+    pub fn run_row_chunks(
+        &self,
+        out: &mut [f32],
+        row_len: usize,
+        f: &(dyn Fn(usize, &mut [f32]) + Sync),
+    ) {
+        assert!(row_len > 0, "run_row_chunks: zero row_len");
+        assert_eq!(out.len() % row_len, 0, "run_row_chunks: ragged rows");
+        let rows = out.len() / row_len;
+        if rows == 0 {
+            return;
+        }
+        let nt = self.threads.min(rows);
+        let per = rows.div_ceil(nt);
+        let parts: Vec<&mut [f32]> = out.chunks_mut(per * row_len).collect();
+        self.run_parts(parts, &|ci, chunk| f(ci * per, chunk));
+    }
+}
+
+/// Resolve the worker-thread count for the `backend-par` engine:
+/// the `GD_THREADS` env var wins, then a non-zero `config_threads`, then
+/// the machine's available parallelism. `0` means "auto" at every level.
+pub fn resolve_threads(config_threads: usize) -> usize {
+    std::env::var("GD_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .or((config_threads > 0).then_some(config_threads))
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+/// Parallel [`matmul`]: output rows are chunked over the pool and each
+/// chunk re-runs the sequential cache-blocked kernel on its row range, so
+/// the result is bit-identical to `matmul` at any thread count.
+pub fn matmul_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_par: a shape");
+    assert_eq!(b.len(), k * n, "matmul_par: b shape");
+    assert_eq!(out.len(), m * n, "matmul_par: out shape");
+    pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        matmul(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
+    });
+}
+
+/// Parallel [`matmul_at`]; bit-identical to the sequential kernel (the
+/// per-output-row accumulation order over `s` is unchanged).
+pub fn matmul_at_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), s * m, "matmul_at_par: a shape");
+    assert_eq!(b.len(), s * n, "matmul_at_par: b shape");
+    assert_eq!(out.len(), m * n, "matmul_at_par: out shape");
+    pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        chunk.fill(0.0);
+        for s0 in (0..s).step_by(BLOCK_K) {
+            let s1 = (s0 + BLOCK_K).min(s);
+            for i in 0..rows {
+                let orow = &mut chunk[i * n..(i + 1) * n];
+                for ss in s0..s1 {
+                    let asi = a[ss * m + i0 + i];
+                    if asi == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[ss * n..(ss + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += asi * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Parallel [`matmul_bt`]; bit-identical (row-dot kernel, rows are
+/// independent).
+pub fn matmul_bt_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_bt_par: a shape");
+    assert_eq!(b.len(), n * k, "matmul_bt_par: b shape");
+    assert_eq!(out.len(), m * n, "matmul_bt_par: out shape");
+    pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
+        let rows = chunk.len() / n;
+        matmul_bt(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +460,86 @@ mod tests {
         assert!((lse - direct).abs() < 1e-5);
         // huge logits stay finite
         assert!(logsumexp(&[1e4, 1e4 + 1.0]).is_finite());
+    }
+
+    #[test]
+    fn thread_pool_runs_every_part_exactly_once() {
+        for threads in [1usize, 2, 3, 4, 9] {
+            let pool = ThreadPool::new(threads);
+            let mut hits = vec![0u32; 7];
+            let parts: Vec<&mut u32> = hits.iter_mut().collect();
+            pool.run_parts(parts, &|i, slot| *slot = i as u32 + 1);
+            assert_eq!(hits, vec![1, 2, 3, 4, 5, 6, 7], "threads={threads}");
+        }
+        // empty part list is a no-op
+        ThreadPool::new(4).run_parts(Vec::<usize>::new(), &|_, _| panic!("no parts"));
+    }
+
+    #[test]
+    fn run_row_chunks_covers_all_rows_with_fixed_schedule() {
+        for threads in [1usize, 2, 4, 5] {
+            let pool = ThreadPool::new(threads);
+            let mut out = vec![0f32; 11 * 3];
+            pool.run_row_chunks(&mut out, 3, &|first_row, chunk: &mut [f32]| {
+                for (r, row) in chunk.chunks_exact_mut(3).enumerate() {
+                    row.fill((first_row + r) as f32);
+                }
+            });
+            for (r, row) in out.chunks_exact(3).enumerate() {
+                assert!(row.iter().all(|&v| v == r as f32), "threads={threads} row {r}");
+            }
+        }
+    }
+
+    /// The tentpole property: the parallel kernels are bit-identical to
+    /// the sequential ones at every thread count, shapes crossing both the
+    /// BLOCK_K boundary and the rows-per-worker chunk boundaries.
+    #[test]
+    fn prop_parallel_kernels_bit_identical() {
+        run_prop("par-kernels-bitwise", 25, 23, |rng: &mut Rng| {
+            let m = 1 + rng.below(17) as usize;
+            let k = 1 + rng.below(130) as usize;
+            let n = 1 + rng.below(9) as usize;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let at_b: Vec<f32> = (0..m * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let mut want = vec![0f32; m * n];
+            matmul(&mut want, &a, &b, m, k, n);
+            let mut want_bt = vec![0f32; m * n];
+            matmul_bt(&mut want_bt, &a, &bt, m, k, n);
+            let mut want_at = vec![0f32; k * n];
+            matmul_at(&mut want_at, &a, &at_b, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let pool = ThreadPool::new(threads);
+                let mut got = vec![0f32; m * n];
+                matmul_par(&pool, &mut got, &a, &b, m, k, n);
+                if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    return Err(format!("matmul_par != matmul at {threads} threads"));
+                }
+                let mut got_bt = vec![0f32; m * n];
+                matmul_bt_par(&pool, &mut got_bt, &a, &bt, m, k, n);
+                if got_bt.iter().zip(&want_bt).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    return Err(format!("matmul_bt_par != matmul_bt at {threads} threads"));
+                }
+                let mut got_at = vec![0f32; k * n];
+                matmul_at_par(&pool, &mut got_at, &a, &at_b, m, k, n);
+                if got_at.iter().zip(&want_at).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                    return Err(format!("matmul_at_par != matmul_at at {threads} threads"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn resolve_threads_prefers_config_over_auto() {
+        // NOTE: does not touch GD_THREADS (env mutation would race other
+        // tests); the env override is covered by the CI matrix instead.
+        if std::env::var("GD_THREADS").is_err() {
+            assert_eq!(resolve_threads(3), 3);
+        }
+        assert!(resolve_threads(0) >= 1);
     }
 
     #[test]

@@ -161,10 +161,7 @@ mod tests {
         let w = MoeWorkload::wmt10(16);
         let pts = fig6_throughput(&V100_IB100, 16, &w, &[0.0, 0.1, 0.2, 0.3, 0.4, 0.5], 4000, 4);
         for w2 in pts.windows(2) {
-            assert!(
-                w2[1].1 > w2[0].1 * 0.995,
-                "throughput should rise with dropout rate: {pts:?}"
-            );
+            assert!(w2[1].1 > w2[0].1 * 0.995, "throughput should rise with dropout rate: {pts:?}");
         }
     }
 
@@ -174,8 +171,7 @@ mod tests {
         let w = MoeWorkload::web50(64);
         let gain = |c: &Cluster| {
             let rows = policy_throughputs(c, 64, &w, 500, 5);
-            let get =
-                |name: &str| rows.iter().find(|r| r.policy == name).unwrap().tokens_per_sec;
+            let get = |name: &str| rows.iter().find(|r| r.policy == name).unwrap().tokens_per_sec;
             get("gate-drop") / get("baseline") - 1.0
         };
         assert!(gain(&V100_IB100) > gain(&A100_IB1600));

@@ -64,7 +64,13 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunConfig, with_decode: bool) -> Result<Trainer> {
-        let engine = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, with_decode)?;
+        let engine = default_backend(
+            &cfg.artifact_dir(),
+            &cfg.preset,
+            cfg.seed,
+            with_decode,
+            cfg.threads,
+        )?;
         let dims = engine.manifest().dims.clone();
         let topo = Topology::new(cfg.n_ranks, dims.n_experts);
         let corpus = Corpus::new(CorpusConfig::for_preset(

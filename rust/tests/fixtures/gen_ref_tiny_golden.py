@@ -1,0 +1,580 @@
+#!/usr/bin/env python3
+"""Exact f32 simulation of rust/src/runtime/reference.rs: the generator
+that produced the committed golden fixture ref_tiny_golden.txt on a
+machine without a Rust toolchain.
+
+Replicates, operation for operation (same f32 rounding, same accumulation
+order, same libm calls Rust's std makes on linux-gnu -- expf/logf/powf/
+log/cos/pow through ctypes):
+  trace(Policy::GateDrop { p: 0.5 }, 20, 42)   (reference_backend.rs)
+on the "tiny" preset: vocab 512, d 64, ff 128, e 4, enc 1 + dec 1 layers,
+len 16, rows 8, lr 1e-2, warmup 4.0.
+
+libm bit-stability caveat: the float transcendentals (expf/logf/powf) in
+glibc >= 2.28 are essentially correctly rounded and bit-stable across
+versions. The trace also goes through DOUBLE transcendentals -- log/cos
+in Rng::normal() (param init) and pow in the corpus sampler -- whose
+glibc implementations (rewritten 2.28/2.29, unchanged since) are only
+~0.5 ulp, not proven correctly rounded, so a future glibc could in
+principle flip an init weight by one ulp and diverge the whole trace.
+If the golden test ever fails on a fresh runner with no reference.rs
+change, suspect exactly this: regenerate from that machine's toolchain
+(`cargo test ... -- --ignored regen_golden_fixture`), commit, and note
+the glibc versions in ROADMAP.md.
+
+The canonical regeneration path is the Rust side:
+  cargo test --no-default-features --features backend-ref \
+    --test reference_backend -- --ignored
+This script exists for provenance and for toolchain-less environments;
+if the two ever disagree, the Rust output wins -- and the disagreement
+itself is signal (libm drift or a semantics change in reference.rs).
+Writes to /tmp/golden/ref_tiny_golden.txt; diff/copy manually.
+"""
+import ctypes
+import math
+import numpy as np
+
+np.seterr(all="ignore")
+F = np.float32
+
+libm = ctypes.CDLL("libm.so.6")
+libm.expf.restype = ctypes.c_float
+libm.expf.argtypes = [ctypes.c_float]
+libm.logf.restype = ctypes.c_float
+libm.logf.argtypes = [ctypes.c_float]
+libm.powf.restype = ctypes.c_float
+libm.powf.argtypes = [ctypes.c_float, ctypes.c_float]
+_expf, _logf, _powf, _cf = libm.expf, libm.logf, libm.powf, ctypes.c_float
+
+def expf(x):
+    return F(_expf(_cf(float(x))))
+
+def logf(x):
+    return F(_logf(_cf(float(x))))
+
+def powf(x, y):
+    return F(_powf(_cf(float(x)), _cf(float(y))))
+
+def expf_vec(a):
+    out = np.empty(a.shape, np.float32)
+    fa, fo = a.ravel(), out.ravel()
+    for i in range(fa.size):
+        fo[i] = _expf(_cf(float(fa[i])))
+    return out
+
+def dot(u, v):
+    """Rust tensor::dot -- sequential f32 fold of elementwise products."""
+    return np.add.accumulate(u * v)[-1]
+
+def fbits(x):
+    return int.from_bytes(np.float32(x).tobytes(), "little")
+
+# ----- util::rng::Rng (SplitMix64) ------------------------------------------
+M64 = (1 << 64) - 1
+GAMMA = 0x9E3779B97F4A7C15
+MIX1 = 0xBF58476D1CE4E5B9
+MIX2 = 0x94D049BB133111EB
+TAU = math.tau
+
+class Rng:
+    __slots__ = ("state",)
+
+    def __init__(self, seed):
+        self.state = (seed + GAMMA) & M64
+
+    def fork(self, stream):
+        r = Rng(self.state ^ ((stream * MIX1) & M64))
+        r.next_u64()
+        return r
+
+    def next_u64(self):
+        self.state = (self.state + GAMMA) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * MIX1) & M64
+        z = ((z ^ (z >> 27)) * MIX2) & M64
+        return z ^ (z >> 31)
+
+    def uniform(self):
+        return float(self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform_in_f32(self, lo, hi):
+        # lo + (hi - lo) * uniform() as f32, all in f32
+        return F(lo + (hi - lo) * F(self.uniform()))
+
+    def bernoulli(self, p):
+        return self.uniform() < p
+
+    def below(self, n):
+        if n == 0:
+            return 0
+        thresh = ((M64 + 1) - n) % n  # n.wrapping_neg() % n
+        while True:
+            x = self.next_u64()
+            m = x * n
+            hi, lo = m >> 64, m & M64
+            if lo >= n or lo >= thresh:
+                return hi
+
+    def normal(self):
+        u1 = max(self.uniform(), 1e-12)
+        u2 = self.uniform()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(TAU * u2)
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def weighted(self, ws):
+        total = 0.0
+        for w in ws:
+            total += w
+        u = self.uniform() * total
+        for i, w in enumerate(ws):
+            if u < w:
+                return i
+            u -= w
+        return len(ws) - 1
+
+# ----- data.rs ---------------------------------------------------------------
+PAD, BOS, EOS, TAG0 = 0, 1, 2, 3
+
+class Corpus:
+    def __init__(self, n_langs, vocab, seq_len, seed):
+        self.n_langs, self.vocab, self.seq_len = n_langs, vocab, seq_len
+        self.base = TAG0 + 2 * n_langs
+        content = vocab - self.base
+        self.content = content
+        root = Rng(seed)
+        self.maps, self.inv, self.windows = [], [], []
+        for l in range(n_langs):
+            rng = root.fork(1000 + l)
+            mp = list(range(content))
+            rng.shuffle(mp)
+            inv = [0] * content
+            for i, m in enumerate(mp):
+                inv[m] = i
+            self.maps.append(mp)
+            self.inv.append(inv)
+            self.windows.append(1 + (l % 3))
+        self.weights = [1.0 / math.pow(float(l + 1), 1.0) for l in range(n_langs)]
+
+    def tag(self, lang, e2x):
+        return TAG0 + lang + (0 if e2x else self.n_langs)
+
+    def translate_e2x(self, content, lang):
+        mapped = [self.maps[lang][t - self.base] + self.base for t in content]
+        w = self.windows[lang]
+        out = []
+        for i in range(0, len(mapped), w):
+            out.extend(reversed(mapped[i : i + w]))
+        return out
+
+    def sample_pair(self, rng):
+        lang = rng.weighted(self.weights)
+        e2x = rng.bernoulli(0.5)
+        return self.sample_pair_for(rng, lang, e2x)
+
+    def sample_pair_for(self, rng, lang, e2x):
+        L = self.seq_len
+        clen = L - 2
+        n = self.content
+        content = []
+        for _ in range(clen):
+            u = rng.uniform()
+            x = math.pow(float(n), u) - 1.0
+            xi = int(x)  # trunc toward zero (x >= 0)
+            xi = min(max(xi, 0), n - 1)
+            content.append(self.base + xi)
+        if e2x:
+            src_c = content[:]
+            tgt_c = self.translate_e2x(content, lang)
+        else:
+            src_c = self.translate_e2x(content, lang)
+            tgt_c = content[:]
+        src = [self.tag(lang, e2x)] + src_c + [EOS]
+        tgt = tgt_c + [EOS]
+        tgt_in = [BOS] + tgt[: L - 1]
+        tgt_out = tgt + [PAD] * (L - len(tgt))
+        return src, tgt_in, tgt_out
+
+class Batcher:
+    def __init__(self, corpus, seed, n_ranks):
+        self.c = corpus
+        self.rng = Rng(seed).fork(0xBA7C4)
+        self.counter = 0
+        self.n_ranks = n_ranks
+
+    def next_batch(self, rows):
+        src, tin, tout, ler = [], [], [], []
+        per = 1  # experts_per_rank for topo (4, 4)
+        for row in range(rows):
+            s, ti, to = self.c.sample_pair(self.rng)
+            src += s
+            tin += ti
+            tout += to
+            rank = row * self.n_ranks // rows
+            ler.append(rank * per + (self.counter + row) % per)
+        self.counter += rows
+        return src, tin, tout, ler
+
+# ----- the reference model ("tiny") -----------------------------------------
+V, D, FF, E, LEN, ROWS = 512, 64, 128, 4, 16, 8
+NL = 2
+T = ROWS * LEN
+B1, B2, EPS_ADAM = F(0.9), F(0.99), F(1e-8)
+BALANCE = F(0.01)
+OMB1 = F(1.0) - B1
+OMB2 = F(1.0) - B2
+SHAPES = [
+    ("embed", (V, D)),
+    ("pos", (LEN, D)),
+    ("l0wr", (D, E)),
+    ("l0w1", (E, D, FF)),
+    ("l0w2", (E, FF, D)),
+    ("l1wr", (D, E)),
+    ("l1w1", (E, D, FF)),
+    ("l1w2", (E, FF, D)),
+    ("out_b", (V,)),
+]
+
+def init_params(seed):
+    root = Rng(seed ^ 0x9EF05EED)
+    params = []
+    for i, (name, shape) in enumerate(SHAPES):
+        rng = root.fork(i)
+        if name in ("embed", "pos"):
+            scale = F(0.02)
+        elif name == "out_b":
+            scale = F(0.0)
+        elif name.endswith("w2"):
+            scale = F(1.0) / np.sqrt(F(float(FF)))
+        else:
+            scale = F(1.0) / np.sqrt(F(float(D)))
+        n = 1
+        for s in shape:
+            n *= s
+        vals = np.empty(n, np.float32)
+        for j in range(n):
+            vals[j] = F(rng.normal()) * scale
+        params.append(vals.reshape(shape))
+    return params
+
+def matmul_rows(a, b):
+    """tensor::matmul -- saxpy over rows, kk ascending, skip aik == 0."""
+    m = a.shape[0]
+    k = a.shape[1]
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        orow = out[i]
+        arow = a[i]
+        for kk in range(k):
+            aik = arow[kk]
+            if aik != 0:
+                orow += aik * b[kk]
+    return out
+
+def matmul_at(a, b, m_out):
+    """tensor::matmul_at -- out[m,n] = a[s,m]^T b[s,n], ss ascending, skip 0."""
+    s = a.shape[0]
+    n = b.shape[1]
+    out = np.zeros((m_out, n), np.float32)
+    for i in range(m_out):
+        orow = out[i]
+        col = np.ascontiguousarray(a[:, i])
+        for ss in range(s):
+            asi = col[ss]
+            if asi != 0:
+                orow += asi * b[ss]
+    return out
+
+def matmul_bt(a, bT):
+    """tensor::matmul_bt -- out[i,j] = dot(a_i, b_j); bT is b transposed
+    ([k, n]) so column kk of b-rows is bT[kk]; kk ascending == dot fold."""
+    m, k = a.shape
+    n = bT.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        acc = np.zeros(n, np.float32)
+        arow = a[i]
+        for kk in range(k):
+            acc += arow[kk] * bT[kk]
+        out[i] = acc
+    return out
+
+class RefModel:
+    def __init__(self, seed):
+        self.P = init_params(seed)
+        self.M = [np.zeros_like(p) for p in self.P]
+        self.Vv = [np.zeros_like(p) for p in self.P]
+        self.step = F(0.0)
+        self.lr0, self.warmup = F(1e-2), F(4.0)
+
+    def lr_at(self, s1):
+        s = s1 if s1 > F(1.0) else F(1.0)  # step1.max(1.0)
+        w = self.warmup
+        a = s / w
+        b = np.sqrt(w) / np.sqrt(s)
+        mn = a if a < b else b  # f32 min
+        return self.lr0 * mn
+
+    def forward(self, src, tin, ler, drop, step_seed):
+        embed, pos = self.P[0], self.P[1]
+        sc = np.sqrt(F(float(D)))
+        x = np.zeros((T, D), np.float32)
+        for i in range(T):
+            x[i] = (embed[src[i]] + embed[tin[i]]) * sc + pos[i % LEN]
+        cap = max(int(math.ceil(float(F(1.0) * F(float(T)) / F(float(E))))), 1)
+        caches = []
+        balance_sum = F(0.0)
+        kept_sum = F(0.0)
+        for l in range(NL):
+            wr = self.P[2 + 3 * l]
+            w1 = self.P[3 + 3 * l]
+            w2 = self.P[4 + 3 * l]
+            # gate-input jitter (training only)
+            jr = Rng(0x117E4 ^ step_seed).fork(l)
+            lo = F(1.0) - F(0.01)
+            hi = F(1.0) + F(0.01)
+            jit = np.empty(T * D, np.float32)
+            for i in range(T * D):
+                jit[i] = jr.uniform_in_f32(lo, hi)
+            jit = jit.reshape(T, D)
+            gate_in = x * jit
+            probs = matmul_rows(gate_in, wr)
+            # softmax_rows, max-subtracted, sequential sum
+            for i in range(T):
+                row = probs[i]
+                mx = F(-np.inf)
+                for v in row:
+                    if v > mx:
+                        mx = v
+                s = F(0.0)
+                for j in range(E):
+                    ev = expf(row[j] - mx)
+                    row[j] = ev
+                    s = s + ev
+                inv = F(1.0) / s
+                for j in range(E):
+                    row[j] = row[j] * inv
+            # routing
+            if drop:
+                idx = [ler[i // LEN] for i in range(T)]
+                gate = np.array([probs[i, idx[i]] for i in range(T)], np.float32)
+            else:
+                idx = []
+                gate = np.empty(T, np.float32)
+                for i in range(T):
+                    bi, bv = 0, F(-np.inf)
+                    row = probs[i]
+                    for j in range(E):
+                        if row[j] > bv:
+                            bv = row[j]
+                            bi = j
+                    idx.append(bi)
+                    gate[i] = bv
+            # capacity admission in token order
+            fill = [0] * E
+            kept = []
+            for i in range(T):
+                fill[idx[i]] += 1
+                kept.append(fill[idx[i]] <= cap)
+            f_frac = np.array([F(float(c)) / F(float(T)) for c in fill], np.float32)
+            p_mean = np.zeros(E, np.float32)
+            for i in range(T):
+                p_mean += probs[i]
+            bsum = F(0.0)
+            for j in range(E):
+                bsum = bsum + (f_frac[j] * p_mean[j]) / F(float(T))
+            balance = F(float(E)) * bsum
+            balance_sum = balance_sum + balance
+            kc = sum(1 for k in kept if k)
+            kept_sum = kept_sum + F(float(kc)) / F(float(T))
+            # expert FFN + gated residual combine (active always: no skip)
+            pre = np.zeros((T, FF), np.float32)
+            hid = np.zeros((T, FF), np.float32)
+            ye = np.zeros((T, D), np.float32)
+            y = x.copy()
+            for i in range(T):
+                if not kept[i]:
+                    continue
+                ei = idx[i]
+                w1e, w2e = w1[ei], w2[ei]
+                xi = x[i]
+                pi = pre[i]
+                for j in range(D):
+                    xv = xi[j]
+                    if xv != 0:
+                        pi += xv * w1e[j]
+                hid[i] = np.maximum(pi, F(0.0))
+                hi_ = hid[i]
+                yi = ye[i]
+                for j in range(FF):
+                    hv = hi_[j]
+                    if hv != 0:
+                        yi += hv * w2e[j]
+                y[i] += gate[i] * yi
+            caches.append(
+                dict(x=x, gate_in=gate_in, jit=jit, probs=probs, idx=idx, gate=gate,
+                     kept=kept, f_frac=f_frac, pre=pre, hid=hid, ye=ye)
+            )
+            x = y
+        # tied-projection head
+        embT = np.ascontiguousarray(embed.T)  # [D, V]
+        logits = matmul_bt(x, embT)
+        logits += self.P[8]
+        balance = balance_sum / F(float(NL))
+        kept_frac = kept_sum / F(float(NL))
+        return caches, x, logits, balance, kept_frac
+
+    def ce_and_dlogits(self, logits, tout):
+        msum = F(float(sum(1 for yv in tout if yv != PAD)))
+        msum = msum if msum > F(1.0) else F(1.0)
+        w = F(1.0) / msum
+        ce = F(0.0)
+        dlogits = np.zeros((T, V), np.float32)
+        for i in range(T):
+            if tout[i] == PAD:
+                continue
+            row = logits[i]
+            y = tout[i]
+            # logsumexp
+            mx = F(-np.inf)
+            for v in row:
+                if v > mx:
+                    mx = v
+            exps = expf_vec(row - mx)
+            s = np.add.accumulate(exps)[-1]
+            lse = mx + logf(s)
+            ce = ce + (lse - row[y])
+            drow = expf_vec(row - lse) * w
+            drow[y] = drow[y] - w
+            dlogits[i] = drow
+        return ce / msum, dlogits
+
+    def train_step(self, src, tin, tout, ler, drop, step_seed):
+        caches, yfin, logits, balance, kept_frac = self.forward(
+            src, tin, ler, drop, step_seed
+        )
+        ce, dlogits = self.ce_and_dlogits(logits, tout)
+        loss = ce + BALANCE * balance
+
+        grads = [np.zeros_like(p) for p in self.P]
+        # head: out_b, tied embed (projection side), dy
+        dob = grads[8]
+        for i in range(T):
+            dob += dlogits[i]
+        dep = matmul_at(dlogits, yfin, V)
+        grads[0] += dep
+        dy = matmul_rows(dlogits, self.P[0])  # [T, D]
+
+        # layers, deepest first
+        for l in (1, 0):
+            c = caches[l]
+            wr = self.P[2 + 3 * l]
+            w1 = self.P[3 + 3 * l]
+            w2 = self.P[4 + 3 * l]
+            dwr = grads[2 + 3 * l]
+            dw1 = grads[3 + 3 * l]
+            dw2 = grads[4 + 3 * l]
+            dx = dy.copy()
+            bal = BALANCE / F(float(NL)) * F(float(E)) / F(float(T))
+            dprobs = np.zeros((T, E), np.float32)
+            for i in range(T):
+                dprobs[i] = bal * c["f_frac"]
+            for i in range(T):
+                if not c["kept"][i]:
+                    continue
+                ei = c["idx"][i]
+                w1e, w2e = w1[ei], w2[ei]
+                dyi = dy[i]
+                yei = c["ye"][i]
+                dprobs[i, ei] = dprobs[i, ei] + dot(dyi, yei)
+                g = c["gate"][i]
+                hi_ = c["hid"][i]
+                prei = c["pre"][i]
+                dw1e, dw2e = dw1[ei], dw2[ei]
+                dpre = np.zeros(FF, np.float32)
+                for j in range(FF):
+                    if prei[j] > 0:
+                        dpre[j] = g * dot(dyi, w2e[j])
+                    hv = hi_[j]
+                    if hv != 0:
+                        dw2e[j] += (g * hv) * dyi
+                xi = c["x"][i]
+                dxi = dx[i]
+                for j in range(D):
+                    xv = xi[j]
+                    if xv != 0:
+                        dw1e[j] += xv * dpre
+                    dxi[j] = dxi[j] + dot(w1e[j], dpre)
+            # softmax vjp
+            dgl = np.zeros((T, E), np.float32)
+            for i in range(T):
+                p_ = c["probs"][i]
+                dp = dprobs[i]
+                inner = dot(dp, p_)
+                dgl[i] = p_ * (dp - inner)
+            dwrl = matmul_at(c["gate_in"], dgl, D)
+            dwr += dwrl
+            wrT = np.ascontiguousarray(wr.T)  # [E, D]
+            dgin = matmul_bt(dgl, wrT)
+            dx += dgin * c["jit"]
+            dy = dx
+
+        # embedding (input side) + positions
+        sc = np.sqrt(F(float(D)))
+        emb_g, pos_g = grads[0], grads[1]
+        for i in range(T):
+            dyi = dy[i]
+            emb_g[src[i]] += sc * dyi
+            emb_g[tin[i]] += sc * dyi
+            pos_g[i % LEN] += dyi
+
+        # Adam, bias-corrected
+        step1 = self.step + F(1.0)
+        lr = self.lr_at(step1)
+        bc1 = F(1.0) - powf(B1, step1)
+        bc2 = F(1.0) - powf(B2, step1)
+        for pi in range(len(self.P)):
+            g = grads[pi]
+            m = self.M[pi]
+            v = self.Vv[pi]
+            p = self.P[pi]
+            m[...] = B1 * m + OMB1 * g
+            v[...] = B2 * v + OMB2 * g * g
+            p[...] = p - lr * (m / bc1) / (np.sqrt(v / bc2) + EPS_ADAM)
+        self.step = step1
+        return loss, ce, balance, kept_frac, lr
+
+def main():
+    import sys, time
+    seed = 42
+    model = RefModel(seed)
+    corpus = Corpus(4, V, LEN, seed)
+    batcher = Batcher(corpus, seed ^ 0xDA7A, 4)
+    coord = Rng(seed).fork(0xC0DE)
+    lines = ["# step loss ce balance kept_frac lr (f32 bits, hex)"]
+    t0 = time.time()
+    for step in range(20):
+        drop = coord.uniform() < 0.5  # GateDrop p=0.5 coin
+        src, tin, tout, ler = batcher.next_batch(ROWS)
+        loss, ce, balance, kept, lr = model.train_step(src, tin, tout, ler, drop, step)
+        lines.append(
+            f"{step} {fbits(loss):08x} {fbits(ce):08x} {fbits(balance):08x} "
+            f"{fbits(kept):08x} {fbits(lr):08x}"
+        )
+        print(
+            f"step {step:2d} drop={int(drop)} loss={float(loss):.6f} ce={float(ce):.6f} "
+            f"balance={float(balance):.6f} kept={float(kept):.4f} lr={float(lr):.6f} "
+            f"({time.time() - t0:.1f}s)",
+            file=sys.stderr,
+        )
+    out = "\n".join(lines) + "\n"
+    with open("/tmp/golden/ref_tiny_golden.txt", "w") as f:
+        f.write(out)
+    print("wrote /tmp/golden/ref_tiny_golden.txt", file=sys.stderr)
+
+if __name__ == "__main__":
+    main()

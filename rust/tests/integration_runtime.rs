@@ -60,10 +60,7 @@ fn train_loss_decreases_on_repeated_batch(t: &mut Trainer, fresh: Fresh) {
     for s in 1..12 {
         last = t.engine.train_step(&batch, (0.0, 0.0, 0.0), s).unwrap().loss;
     }
-    assert!(
-        last < first - 0.2,
-        "loss should fall on a repeated batch: {first} -> {last}"
-    );
+    assert!(last < first - 0.2, "loss should fall on a repeated batch: {first} -> {last}");
 }
 
 fn step_counter_advances(t: &mut Trainer, fresh: Fresh) {

@@ -1,0 +1,170 @@
+//! Edge cases of MoE capacity handling (Switch semantics the paper's
+//! quality claims lean on): an expert filled to *exactly* its capacity,
+//! the degenerate zero-capacity step where every token is dropped (the
+//! rate-1.0 worst case), and the backward pass over experts that received
+//! no tokens at all. Each case must stay NaN-free and keep the
+//! `FabricStats` accounting balanced.
+
+use std::sync::Arc;
+
+use gating_dropout::collective::{Collective, ThreadFabric};
+use gating_dropout::data::{Batch, BOS};
+use gating_dropout::moe;
+use gating_dropout::runtime::{Backend, ModelDims, RefHyper, ReferenceBackend};
+use gating_dropout::topology::Topology;
+
+#[test]
+fn expert_at_exactly_capacity_keeps_every_token() {
+    let topo = Topology::new(1, 2);
+    let d = 3;
+    let cap = 4;
+    // each expert receives exactly `cap` tokens
+    let experts = vec![0usize, 1, 0, 1, 0, 1, 0, 1];
+    let t = experts.len();
+    let x: Vec<f32> = (0..t * d).map(|i| i as f32).collect();
+    let gates = vec![0.25f32; t];
+    let counts = topo.owner_counts(&experts);
+    let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
+    let (xe, adm) = moe::route_admit(0, &topo, &packed, d, cap);
+    assert_eq!(adm.len(), t, "exactly-at-capacity must drop nothing");
+    // every slot of both experts used exactly once
+    let mut slots: Vec<usize> = adm.iter().map(|a| a.slot).collect();
+    slots.sort_unstable();
+    assert_eq!(slots, (0..2 * cap).collect::<Vec<_>>());
+    // and the full round trip returns gate * x for every token
+    let rc = moe::return_counts(&topo, &adm);
+    assert_eq!(rc, vec![t]);
+    let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
+    let r = moe::return_unpack(&back, t, d);
+    assert!(r.slot.iter().all(|&s| s >= 0));
+    for i in 0..t * d {
+        assert_eq!(r.combined[i], 0.25 * x[i]);
+    }
+
+    // one token beyond capacity: only that token is dropped, in
+    // token-order (the Switch tie-break), not an earlier one
+    let mut experts_over = experts.clone();
+    experts_over.push(0);
+    let mut x_over = x.clone();
+    x_over.extend([100.0, 101.0, 102.0]);
+    let gates_over = vec![0.25f32; t + 1];
+    let counts_over = topo.owner_counts(&experts_over);
+    let packed_over = moe::route_pack(&topo, &x_over, d, &experts_over, &gates_over, &counts_over);
+    let (_, adm_over) = moe::route_admit(0, &topo, &packed_over, d, cap);
+    assert_eq!(adm_over.len(), t, "only the over-capacity token drops");
+    assert!(
+        adm_over.iter().all(|a| a.src_idx != t),
+        "the dropped token must be the last arrival for the full expert"
+    );
+}
+
+/// The rate-1.0 worst case with zero local capacity: every token is
+/// dropped at admission. The wire still runs both passes (counts +
+/// payload, SPMD order preserved), returns nothing, and the stats ledger
+/// stays balanced -- dispatch bytes only, one counts op, two payload ops,
+/// no NaN anywhere in the reassembled output.
+#[test]
+fn zero_capacity_drops_all_tokens_with_balanced_accounting() {
+    let n = 2usize;
+    let d = 2usize;
+    let t = 2usize; // tokens per rank
+    let fab = Arc::new(ThreadFabric::new(n));
+    let mut hs = Vec::new();
+    for rank in 0..n {
+        let fab = fab.clone();
+        hs.push(std::thread::spawn(move || {
+            let topo = Topology::new(2, 2);
+            // every token targets the OTHER rank's expert: all payload
+            // bytes cross the wire
+            let experts = vec![1 - rank; t];
+            let gates = vec![0.5f32; t];
+            let x = vec![1.0f32; t * d];
+            let counts = topo.owner_counts(&experts);
+            let recv = fab.all_to_all_counts(rank, &counts);
+            let stride = moe::HEADER + d;
+            let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
+            let expect: Vec<usize> = recv.iter().map(|c| c * stride).collect();
+            let arrivals = fab.all_to_all_f32(rank, packed, &expect);
+            let (xe, adm) = moe::route_admit(rank, &topo, &arrivals, d, 0);
+            assert!(xe.is_empty(), "zero capacity allocates no expert rows");
+            assert!(adm.is_empty(), "zero capacity admits nothing");
+            // the return pass still runs, with empty buffers
+            let rc = moe::return_counts(&topo, &adm);
+            assert_eq!(rc, vec![0, 0]);
+            let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
+            let returned = fab.all_to_all_f32(rank, back, &[0, 0]);
+            let r = moe::return_unpack(&returned, t, d);
+            assert!(r.slot.iter().all(|&s| s == -1), "every token dropped");
+            assert!(r.gate.iter().all(|&g| g == 0.0));
+            assert!(r.combined.iter().chain(&r.raw).all(|&v| v == 0.0));
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    let s = fab.stats();
+    let stride = moe::HEADER + d;
+    assert_eq!(s.counts_ops, 1, "one counts exchange");
+    assert_eq!(s.counts_bytes, (n * 4 * (n - 1)) as u64);
+    assert_eq!(s.a2a_ops, 2, "dispatch + (empty) return payload passes");
+    assert_eq!(
+        s.a2a_bytes,
+        (n * t * stride * 4) as u64,
+        "wire bytes = dispatch only; the all-dropped return moves nothing"
+    );
+    assert_eq!(s.allreduce_ops, 0);
+    assert_eq!(s.broadcast_ops, 0);
+}
+
+fn edge_dims() -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 8,
+        d_ff: 12,
+        n_experts: 4,
+        enc_blocks: 1,
+        dec_blocks: 0,
+        max_len: 4,
+        batch_rows: 2,
+        bos: BOS,
+        param_count: 0,
+    }
+}
+
+/// A Gating Dropout step that routes every token to one local expert
+/// starves the other three completely: their forward runs zero tokens and
+/// their backward sees zero gradient. The step must stay finite, respect
+/// the capacity split, and leave the idle experts' weights exactly in
+/// place (zero grad + zero Adam state = zero first-step update).
+#[test]
+fn empty_expert_backward_is_nan_free_and_leaves_idle_experts_in_place() {
+    let hyper = RefHyper { lr: 1e-2, warmup: 4.0 };
+    let mut be = ReferenceBackend::from_dims("edge", edge_dims(), hyper, 7);
+    let init = ReferenceBackend::from_dims("edge", edge_dims(), hyper, 7);
+    let batch = Batch {
+        src: vec![5, 6, 7, 2, 9, 10, 11, 2],
+        tgt_in: vec![BOS, 5, 6, 7, BOS, 9, 10, 11],
+        tgt_out: vec![5, 6, 7, 0, 9, 10, 11, 0],
+        local_expert_row: vec![0, 0],
+        rows: 2,
+        len: 4,
+    };
+    // drop flag on: local routing sends all 8 tokens to expert 0;
+    // cap = ceil(8/4) = 2, so 2 kept, 6 dropped, experts 1..3 empty
+    let m = be.train_step(&batch, (1.0, 0.0, 0.0), 0).unwrap();
+    assert!(m.loss.is_finite() && m.ce.is_finite() && m.balance.is_finite());
+    assert!((m.kept_frac - 0.25).abs() < 1e-6, "kept_frac {}", m.kept_frac);
+    for spec in be.manifest().params.clone() {
+        let (_, data) = be.param_by_name(&spec.name).unwrap();
+        assert!(
+            data.iter().all(|v| v.is_finite()),
+            "non-finite value in '{}' after an empty-expert step",
+            spec.name
+        );
+    }
+    let per = 8 * 12; // d_model * d_ff per expert
+    let (_, w1) = be.param_by_name("layer0/w1").unwrap();
+    let (_, w1_init) = init.param_by_name("layer0/w1").unwrap();
+    assert_ne!(&w1[..per], &w1_init[..per], "the routed expert must move");
+    assert_eq!(&w1[per..], &w1_init[per..], "idle experts must not move");
+}

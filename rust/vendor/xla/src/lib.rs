@@ -1,0 +1,10 @@
+//! Stub for the vendored `xla` PJRT bindings (see Cargo.toml alongside).
+
+compile_error!(
+    "this is the in-tree `xla` stub: the PJRT backend (`backend-xla`) needs \
+     the real xla-rs bindings from the offline toolchain image. Replace \
+     rust/vendor/xla with the image's vendored bindings (same package name \
+     `xla`), or build a pure-Rust engine instead: \
+     `cargo build --no-default-features --features backend-ref` (or \
+     `backend-par` for the threaded one)."
+);
