@@ -12,15 +12,22 @@
 //! ThreadPool: the cache-blocked single-thread matmul vs the same kernel
 //! fanned over the pool. Target: >= 2x at 512^3 on a 4-core runner, with
 //! the outputs asserted bit-identical (the backend's whole premise).
+//!
+//! `bench_decode` is the serving-path analogue: per-request `decode`
+//! loops vs one ragged `decode_batch` over the same requests, outputs
+//! asserted bit-identical first (the `decode_batch` contract), then
+//! tokens/sec for both. The batched win comes from amortizing per-forward
+//! overhead and streaming each weight panel across all requests' rows.
 
 use std::sync::Arc;
 
-use gating_dropout::benchkit::{bench, fmt_ns, report};
+use gating_dropout::benchkit::{bench, fmt_ns, fmt_tps, report};
 use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::metrics::corpus_bleu;
 use gating_dropout::moe;
 use gating_dropout::runtime::tensor::{matmul, matmul_par, resolve_threads, ThreadPool};
+use gating_dropout::runtime::Backend;
 use gating_dropout::topology::Topology;
 use gating_dropout::util::rng::Rng;
 
@@ -177,6 +184,51 @@ fn bench_matmul_par() {
     }
 }
 
+/// Per-request sequential decode vs one ragged `decode_batch` over the
+/// same requests, on the tiny-preset reference model. Bit-equality is
+/// asserted before any timing (mirrors `bench_matmul_par`).
+fn bench_decode() {
+    use gating_dropout::runtime::ReferenceBackend;
+    let be = ReferenceBackend::for_preset("tiny", 7).unwrap();
+    let dm = be.manifest().dims.clone();
+    println!("-- bench_decode: per-request decode loop vs ragged decode_batch --");
+    for (n_reqs, warmup, iters) in [(4usize, 1, 5), (8, 1, 5)] {
+        let mut rng = Rng::new(23);
+        let reqs: Vec<Vec<i32>> = (0..n_reqs)
+            .map(|_| {
+                (0..dm.max_len).map(|_| 3 + rng.below(dm.vocab as u64 - 3) as i32).collect()
+            })
+            .collect();
+        let srcs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+        let batched = be.decode_batch(&srcs).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(
+                batched[i],
+                be.decode(r).unwrap(),
+                "decode_batch must be bit-identical to per-request decode (request {i})"
+            );
+        }
+        let seq = bench(warmup, iters, || {
+            for r in &reqs {
+                std::hint::black_box(be.decode(r).unwrap());
+            }
+        });
+        let bat = bench(warmup, iters, || {
+            std::hint::black_box(be.decode_batch(&srcs).unwrap());
+        });
+        let tokens = (n_reqs * dm.max_len) as f64;
+        let name = format!("decode {n_reqs} reqs x len {}", dm.max_len);
+        report(&format!("{name} [sequential]"), &seq);
+        report(&format!("{name} [batched]"), &bat);
+        println!(
+            "{name:<44} speedup {:.2}x  ({} -> {} tok/s)",
+            seq.median_ns / bat.median_ns,
+            fmt_tps(tokens / seq.median_secs()),
+            fmt_tps(tokens / bat.median_secs()),
+        );
+    }
+}
+
 fn main() {
     // coordinator decision stream
     let mut c = Coordinator::new(Policy::GateDrop { p: 0.3 }, 1);
@@ -211,6 +263,8 @@ fn main() {
     bench_dispatch();
 
     bench_matmul_par();
+
+    bench_decode();
 
     // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
     let s = bench(3, 20, || {

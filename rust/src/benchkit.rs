@@ -97,6 +97,35 @@ impl Table {
     }
 }
 
+/// One old-vs-new throughput comparison over a shared work count: prints
+/// both variants as tokens/sec plus the speedup, in the same shape as
+/// the microbench `[seed]`/`[flat]` rows. The serving bench
+/// (`repro bench-serve`) reports batched-vs-sequential decode through
+/// this; returns the speedup so smoke gates can assert on it.
+pub fn report_tps_speedup(
+    name: &str,
+    work_tokens: u64,
+    base_label: &str,
+    base_secs: f64,
+    new_label: &str,
+    new_secs: f64,
+) -> f64 {
+    let tps = |secs: f64| work_tokens as f64 / secs.max(1e-12);
+    let speedup = base_secs / new_secs.max(1e-12);
+    println!(
+        "{name:<44} [{base_label}] {:>10}  ({})",
+        fmt_tps(tps(base_secs)),
+        fmt_ns(base_secs * 1e9),
+    );
+    println!(
+        "{name:<44} [{new_label}] {:>10}  ({})",
+        fmt_tps(tps(new_secs)),
+        fmt_ns(new_secs * 1e9),
+    );
+    println!("{name:<44} speedup {speedup:.2}x");
+    speedup
+}
+
 /// Format tokens/sec the way the paper does ("129k").
 pub fn fmt_tps(tps: f64) -> String {
     if tps >= 1e6 {
@@ -128,6 +157,14 @@ mod tests {
         assert_eq!(fmt_tps(129_000.0), "129k");
         assert_eq!(fmt_tps(1_500_000.0), "1.50M");
         assert_eq!(fmt_tps(420.0), "420");
+    }
+
+    #[test]
+    fn report_tps_speedup_returns_the_ratio() {
+        let s = report_tps_speedup("demo", 1000, "seq", 2.0, "batched", 0.5);
+        assert!((s - 4.0).abs() < 1e-9);
+        // degenerate timings stay finite
+        assert!(report_tps_speedup("demo0", 10, "a", 0.0, "b", 0.0).is_finite());
     }
 
     #[test]

@@ -37,6 +37,15 @@ pub struct RunConfig {
     /// var overrides whatever is configured here; 0 means auto (available
     /// parallelism). Ignored by the other backends.
     pub threads: usize,
+    /// Serving (`repro serve` / `bench-serve`): most requests one
+    /// micro-batch may carry.
+    pub max_batch: usize,
+    /// Serving: oldest-waiter age (ticks) that forces a dispatch even
+    /// when the micro-batch is not full.
+    pub max_wait_ticks: u64,
+    /// Serving: waiting requests beyond this are shed at admission
+    /// (Switch-style load shedding).
+    pub queue_cap: usize,
 }
 
 impl Default for RunConfig {
@@ -56,6 +65,9 @@ impl Default for RunConfig {
             out_dir: "runs".into(),
             decay_to: None,
             threads: 0,
+            max_batch: 8,
+            max_wait_ticks: 4,
+            queue_cap: 64,
         }
     }
 }
@@ -164,6 +176,17 @@ impl RunConfig {
         if let Some(v) = j.get("threads").and_then(Json::as_usize) {
             self.threads = v;
         }
+        if let Some(v) = j.get("max_batch").and_then(Json::as_usize) {
+            self.max_batch = v;
+        }
+        // reject negatives like Json::as_usize does (a -1 cast to u64
+        // would overflow the scheduler's deadline arithmetic)
+        if let Some(v) = j.get("max_wait_ticks").and_then(Json::as_i64).filter(|&v| v >= 0) {
+            self.max_wait_ticks = v as u64;
+        }
+        if let Some(v) = j.get("queue_cap").and_then(Json::as_usize) {
+            self.queue_cap = v;
+        }
         Ok(())
     }
 
@@ -183,6 +206,9 @@ impl RunConfig {
         self.eval_every = a.u64("eval-every", self.eval_every);
         self.sim_gpus = a.usize("sim-gpus", self.sim_gpus);
         self.threads = a.usize("threads", self.threads);
+        self.max_batch = a.usize("max-batch", self.max_batch);
+        self.max_wait_ticks = a.u64("max-wait-ticks", self.max_wait_ticks);
+        self.queue_cap = a.usize("queue-cap", self.queue_cap);
         if let Some(c) = a.get("cluster") {
             self.cluster = cluster_by_name(c)?;
         }
@@ -227,7 +253,7 @@ mod tests {
         let mut c = RunConfig::default();
         let j = Json::parse(
             r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4,
-                "threads": 6}"#,
+                "threads": 6, "max_batch": 16, "max_wait_ticks": 7, "queue_cap": 128}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -236,13 +262,17 @@ mod tests {
         assert_eq!(c.cluster.name, "A100+IB1600");
         assert_eq!(c.n_ranks, 4);
         assert_eq!(c.threads, 6);
+        assert_eq!(c.max_batch, 16);
+        assert_eq!(c.max_wait_ticks, 7);
+        assert_eq!(c.queue_cap, 128);
     }
 
     #[test]
     fn args_overrides() {
         let mut c = RunConfig::default();
         let a = Args::parse(
-            "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100 --threads 2"
+            "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100 --threads 2 \
+             --max-batch 4 --max-wait-ticks 2 --queue-cap 32"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -251,6 +281,9 @@ mod tests {
         assert_eq!(c.steps, 5);
         assert_eq!(c.decay_to, Some((0.0, 100)));
         assert_eq!(c.threads, 2);
+        assert_eq!(c.max_batch, 4);
+        assert_eq!(c.max_wait_ticks, 2);
+        assert_eq!(c.queue_cap, 32);
     }
 
     #[test]

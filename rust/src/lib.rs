@@ -17,8 +17,9 @@
 //!   [`topology`], the pluggable compute [`runtime`], the synthetic
 //!   multilingual [`data`] corpus, [`metrics`] (corpus BLEU, throughput),
 //!   the [`netmodel`] cluster cost model, the [`simengine`] scaling
-//!   sweeps, the single-process [`train`] loop and the real-data-movement
-//!   [`distributed`] engine.
+//!   sweeps, the single-process [`train`] loop, the real-data-movement
+//!   [`distributed`] engine, and the micro-batching [`serve`] subsystem
+//!   (batched greedy decode behind `Backend::decode_batch`).
 //!
 //! The compute [`runtime`] is pluggable (see README "Compute backends"):
 //! the default `backend-xla` feature executes the AOT artifacts on PJRT
@@ -48,6 +49,7 @@ pub mod metrics;
 pub mod moe;
 pub mod netmodel;
 pub mod runtime;
+pub mod serve;
 pub mod simengine;
 pub mod topology;
 pub mod train;

@@ -1,19 +1,23 @@
 //! `repro` -- the gating-dropout CLI launcher.
 //!
-//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §4):
-//!   train     one training run (policy x preset), CSV history
-//!   scaling   Fig 3 / Table 1 / Table 3 virtual-cluster sweeps
-//!   sweep     Fig 6 dropout-rate sweep (throughput axis)
-//!   dist      the real-data-movement distributed engine
-//!   eval      holdout BLEU/loss of a checkpoint
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §4), plus
+//! the serving path:
+//!   train       one training run (policy x preset), CSV history
+//!   scaling     Fig 3 / Table 1 / Table 3 virtual-cluster sweeps
+//!   sweep       Fig 6 dropout-rate sweep (throughput axis)
+//!   dist        the real-data-movement distributed engine
+//!   eval        holdout BLEU/loss of a checkpoint
+//!   serve       deterministic micro-batched decode serving run
+//!   bench-serve batched vs sequential serving throughput (wall clock)
 
 use gating_dropout::bail;
-use gating_dropout::benchkit::{fmt_tps, Table};
+use gating_dropout::benchkit::{bench, fmt_tps, report_tps_speedup, Table};
 use gating_dropout::config::{cluster_by_name, RunConfig};
 use gating_dropout::coordinator::Policy;
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::netmodel::MoeWorkload;
-use gating_dropout::runtime::Backend;
+use gating_dropout::runtime::{default_backend, Backend};
+use gating_dropout::serve::{self, ServeConfig};
 use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
@@ -33,6 +37,16 @@ COMMANDS:
   sweep    [--rates 0,0.1,...] [--gpus 16] (Fig 6 throughput axis)
   dist     [--policy P] [--steps N] [--seed S] (real multi-worker engine)
   eval     --run-preset P --checkpoint DIR
+  serve    --run-preset P [--requests N] [--mean-gap T] [--max-batch B]
+           [--max-wait-ticks W] [--queue-cap C] [--seed S] [--threads N]
+           (deterministic micro-batched decode over the synthetic load;
+            fixed seed => identical metrics at any thread count. Needs a
+            pure-Rust backend: the load is single-row requests, which the
+            XLA decode artifact's fixed batch shape rejects)
+  bench-serve  [serve flags] [--iters N] [--smoke]
+           (same load served batched vs max-batch=1; asserts the decoded
+            tokens are bit-identical, then reports the wall tokens/sec
+            speedup. --smoke = tiny preset + load for CI)
 
 Policies: baseline | gate-drop[:p] | gate-expert-drop[:p] | hash-layer | no-alltoall
 ";
@@ -51,6 +65,8 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "dist" => cmd_dist(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -218,6 +234,96 @@ fn cmd_dist(args: &Args) -> Result<()> {
         res.fabric.a2a_bytes,
         mean(&full) * 1e3,
         mean(&dropped) * 1e3
+    );
+    Ok(())
+}
+
+/// The serving ServeConfig for this invocation: run-config knobs
+/// (`--max-batch` / `--max-wait-ticks` / `--queue-cap` / `--seed`) plus
+/// the load flags.
+fn serve_config(cfg: &RunConfig, args: &Args) -> ServeConfig {
+    let mut scfg = ServeConfig::from_run(cfg);
+    scfg.n_requests = args.usize("requests", scfg.n_requests);
+    scfg.mean_gap_ticks = args.u64("mean-gap", scfg.mean_gap_ticks);
+    scfg
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let scfg = serve_config(&cfg, args);
+    eprintln!(
+        "[serve] preset={} requests={} max_batch={} max_wait={} queue_cap={} \
+         (loading backend...)",
+        cfg.preset, scfg.n_requests, scfg.max_batch, scfg.max_wait_ticks, scfg.queue_cap
+    );
+    let backend = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    eprintln!("[serve] backend={}", backend.name());
+    let report = serve::serve(backend.as_ref(), &scfg)?;
+    let s = &report.summary;
+    report.summary.print();
+    println!(
+        "[serve] tokens/tick={:.3} rows/batch={:.2} output_hash={:016x}",
+        s.tokens_per_tick(),
+        s.mean_batch_rows(),
+        s.output_hash
+    );
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let mut cfg = load_config(args)?;
+    if smoke && args.get("run-preset").is_none() && args.get("config").is_none() {
+        cfg = RunConfig::preset_named("tiny")?;
+        cfg.apply_args(args)?;
+    }
+    let mut scfg = serve_config(&cfg, args);
+    if smoke {
+        scfg.n_requests = args.usize("requests", 10);
+    }
+    // comparability: neither mode may shed load, so both serve the exact
+    // same request set and the output bit-equality check is meaningful
+    scfg.queue_cap = scfg.queue_cap.max(scfg.n_requests);
+    let seq_cfg = scfg.sequential();
+    eprintln!(
+        "[bench-serve] preset={} requests={} max_batch={} vs 1 (loading backend...)",
+        cfg.preset, scfg.n_requests, scfg.max_batch
+    );
+    let backend = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    eprintln!("[bench-serve] backend={}", backend.name());
+
+    let batched = serve::serve(backend.as_ref(), &scfg)?;
+    let sequential = serve::serve(backend.as_ref(), &seq_cfg)?;
+    assert_eq!(
+        batched.outputs, sequential.outputs,
+        "decode_batch must be bit-identical to sequential decodes"
+    );
+    assert_eq!(batched.summary.output_hash, sequential.summary.output_hash);
+    println!(
+        "bit-equality: OK ({} requests, hash {:016x})",
+        batched.summary.completed, batched.summary.output_hash
+    );
+    println!(
+        "virtual ticks: sequential {} -> batched {} ({:.2} rows/batch)",
+        sequential.summary.total_ticks,
+        batched.summary.total_ticks,
+        batched.summary.mean_batch_rows()
+    );
+
+    let (warmup, iters) = if smoke { (0, 1) } else { (1, args.usize("iters", 5)) };
+    let t_seq = bench(warmup, iters, || {
+        std::hint::black_box(serve::serve(backend.as_ref(), &seq_cfg).unwrap());
+    });
+    let t_bat = bench(warmup, iters, || {
+        std::hint::black_box(serve::serve(backend.as_ref(), &scfg).unwrap());
+    });
+    report_tps_speedup(
+        &format!("serve {} reqs x len {}", scfg.n_requests, backend.manifest().dims.max_len),
+        batched.summary.tokens_out,
+        "sequential",
+        t_seq.median_secs(),
+        "batched",
+        t_bat.median_secs(),
     );
     Ok(())
 }

@@ -140,8 +140,26 @@ pub trait Backend {
     /// Holdout loss: no dropout, no jitter, eval capacity factor.
     fn eval(&self, batch: &Batch) -> BackendResult<EvalMetrics>;
 
-    /// Greedy-decode a source batch (row-major `[batch_rows, max_len]`).
+    /// Greedy-decode a source batch (row-major `[rows, max_len]`). The
+    /// pure-Rust engines accept any non-zero row count; the XLA engine's
+    /// decode artifact is compiled for exactly `batch_rows` rows.
     fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>>;
+
+    /// Greedy-decode a ragged batch of independent requests, each a
+    /// row-major `[rows, max_len]` source buffer (serving requests are
+    /// typically one row).
+    ///
+    /// Contract (what `rust/tests/serve_decode.rs` pins): element `i` of
+    /// the result is **bit-identical** to `self.decode(srcs[i])` --
+    /// co-batched requests never affect each other's outputs. Capacity
+    /// admission is therefore accounted *per request*, exactly as if each
+    /// request were decoded alone. The default implementation loops
+    /// [`Backend::decode`]; engines that can run the whole ragged batch
+    /// through their kernels at once (the reference/parallel engines)
+    /// override it for throughput, not for different results.
+    fn decode_batch(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        srcs.iter().map(|s| self.decode(s)).collect()
+    }
 
     /// Optimizer steps taken so far (f32: it round-trips through the
     /// artifact state tuple on the XLA backend).

@@ -63,6 +63,14 @@ impl ParallelBackend {
     pub fn threads(&self) -> usize {
         self.inner.thread_count()
     }
+
+    /// Small-work cutoff of the pool (elements below which regions run
+    /// the sequential kernels inline -- bit-identical either way). The
+    /// parity suites force `0` to keep test-sized models on the pooled
+    /// paths.
+    pub fn set_seq_cutoff(&mut self, cutoff: usize) {
+        self.inner.set_seq_cutoff(cutoff);
+    }
 }
 
 impl Backend for ParallelBackend {
@@ -89,6 +97,12 @@ impl Backend for ParallelBackend {
 
     fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>> {
         self.inner.decode(src)
+    }
+
+    fn decode_batch(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        // the reference engine's real batched decode, threaded through the
+        // attached pool (not the trait's sequential default)
+        self.inner.decode_batch(srcs)
     }
 
     fn step_count(&self) -> f32 {

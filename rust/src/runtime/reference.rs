@@ -51,7 +51,22 @@
 //! Every reduction order is therefore identical to the sequential path,
 //! which makes the threaded backend bit-for-bit equal to the plain
 //! reference backend at any thread count (pinned by
-//! `rust/tests/parallel_backend.rs`).
+//! `rust/tests/parallel_backend.rs`). Regions smaller than the pool's
+//! `seq_cutoff` skip the fan-out and run the sequential kernels inline --
+//! bit-identical by construction, so the cutoff is purely a scheduling
+//! knob (the parity suites force it to `0` to keep exercising the pooled
+//! paths at test-sized models).
+//!
+//! # Batched decode (the serving path)
+//!
+//! [`Backend::decode_batch`] is overridden with a real batched greedy
+//! decode: all requests' rows are concatenated and run through one
+//! forward per position, with Switch capacity admission accounted in
+//! per-request groups. Because every other op is token- or row-local and
+//! the matmul kernels produce each output row independently, the batched
+//! results are bit-identical to decoding each request alone -- the
+//! request-isolation contract `rust/tests/serve_decode.rs` pins across
+//! backends, thread counts, and ragged batch sizes.
 
 use crate::data::Batch;
 use crate::moe;
@@ -212,6 +227,42 @@ impl ReferenceBackend {
         self.pool.as_ref().map_or(1, ThreadPool::threads)
     }
 
+    /// Small-work cutoff of the attached pool (no-op without one). The
+    /// parity suites force `0` so test-sized models keep exercising every
+    /// pooled path; results are bit-identical at any cutoff.
+    pub fn set_seq_cutoff(&mut self, cutoff: usize) {
+        if let Some(pool) = &mut self.pool {
+            pool.set_seq_cutoff(cutoff);
+        }
+    }
+
+    /// Greedy decode over `src` (`rows = src.len()/max_len` already
+    /// validated by the callers), with `groups` partitioning the token
+    /// stream into per-request capacity groups. Shared by `decode` (one
+    /// group) and `decode_batch` (one group per request) so the two paths
+    /// cannot drift.
+    fn greedy_decode(&self, src: &[i32], groups: &[usize]) -> Vec<i32> {
+        let dm = &self.manifest.dims;
+        let (len, vocab) = (dm.max_len, dm.vocab);
+        let rows = src.len() / len;
+        let rows_local = vec![0i32; rows];
+        let sf = StepFlags { drop: false, skip: false, hash: false };
+        let mut tgt_in = vec![dm.bos; rows * len];
+        let mut out = vec![0i32; rows * len];
+        for p in 0..len {
+            let fwd = self.forward(src, &tgt_in, &rows_local, sf, CF_EVAL, None, groups);
+            for r in 0..rows {
+                let i = r * len + p;
+                let nxt = argmax(&fwd.logits[i * vocab..(i + 1) * vocab]) as i32;
+                out[i] = nxt;
+                if p + 1 < len {
+                    tgt_in[r * len + p + 1] = nxt;
+                }
+            }
+        }
+        out
+    }
+
     /// Deterministic init: embeddings at std 0.02, matrices at
     /// 1/sqrt(fan_in), biases zero (the `model.py` recipe).
     fn init_params(manifest: &Manifest, seed: u64) -> Vec<Vec<f32>> {
@@ -282,6 +333,15 @@ impl ReferenceBackend {
     /// Full forward pass over the flattened `t = rows*len` token stream.
     /// `jitter_seed` enables training-time gate jitter; capacity factor
     /// `cf` is 1.0 train / 2.0 eval+decode.
+    ///
+    /// `groups` partitions the token stream into contiguous capacity
+    /// groups (token counts, summing to `t`): Switch admission runs
+    /// independently per group with `cap = max(1, ceil(cf*group_t/E))`.
+    /// Train/eval pass one group spanning the whole batch (the paper's
+    /// batch-wide admission, unchanged); batched decode passes one group
+    /// per serving request so co-batched requests cannot steal each
+    /// other's expert capacity -- the per-request isolation that makes
+    /// `decode_batch` bit-identical to sequential decodes.
     fn forward(
         &self,
         src: &[i32],
@@ -290,6 +350,7 @@ impl ReferenceBackend {
         flags: StepFlags,
         cf: f32,
         jitter_seed: Option<i32>,
+        groups: &[usize],
     ) -> Forward {
         let dm = &self.manifest.dims;
         let (d, e, ff, vocab, len) = (dm.d_model, dm.n_experts, dm.d_ff, dm.vocab, dm.max_len);
@@ -310,7 +371,7 @@ impl ReferenceBackend {
             }
         }
 
-        let cap = ((cf * t as f32 / e as f32).ceil() as usize).max(1);
+        debug_assert_eq!(groups.iter().sum::<usize>(), t, "groups must cover the token stream");
         let mut layers = Vec::with_capacity(self.n_layers);
         let mut balance_sum = 0f32;
         let mut kept_sum = 0f32;
@@ -358,15 +419,25 @@ impl ReferenceBackend {
                 moe::top1(&probs, t, e)
             };
 
-            // capacity admission in token order (Switch tie-break)
+            // capacity admission in token order (Switch tie-break),
+            // independently per capacity group; `fill` accumulates the
+            // full-batch counts for the balance loss (identical to the
+            // ungrouped accounting when `groups == [t]`)
             let mut fill = vec![0usize; e];
-            let kept: Vec<bool> = idx
-                .iter()
-                .map(|&ei| {
-                    fill[ei] += 1;
-                    fill[ei] <= cap
-                })
-                .collect();
+            let mut kept = Vec::with_capacity(t);
+            let mut g0 = 0;
+            for &gt in groups {
+                let cap = ((cf * gt as f32 / e as f32).ceil() as usize).max(1);
+                let mut gfill = vec![0usize; e];
+                for &ei in &idx[g0..g0 + gt] {
+                    gfill[ei] += 1;
+                    kept.push(gfill[ei] <= cap);
+                }
+                for (fv, &gv) in fill.iter_mut().zip(&gfill) {
+                    *fv += gv;
+                }
+                g0 += gt;
+            }
             let f_frac: Vec<f32> = fill.iter().map(|&c| c as f32 / t as f32).collect();
             let mut p_mean = vec![0f32; e];
             for row in probs.chunks_exact(e) {
@@ -389,7 +460,7 @@ impl ReferenceBackend {
             let mut ye = vec![0f32; t * d];
             let mut y = x.clone();
             if active {
-                match &self.pool {
+                match self.pool.as_ref().filter(|p| p.workers_for(t * ff) > 1) {
                     None => expert_fwd_tokens(
                         w1,
                         w2,
@@ -482,7 +553,7 @@ impl ReferenceBackend {
         let w = 1.0 / msum;
         let mut dlogits = vec![0f32; t * vocab];
         let mut ces = vec![0f32; t];
-        match &self.pool {
+        match self.pool.as_ref().filter(|p| p.workers_for(t * vocab) > 1) {
             None => {
                 for i in 0..t {
                     if tgt_out[i] == PAD {
@@ -564,7 +635,7 @@ impl ReferenceBackend {
         }
 
         if cache.active {
-            match &self.pool {
+            match self.pool.as_ref().filter(|p| p.workers_for(t * ff) > 1) {
                 None => {
                     let mut dxa = vec![0f32; d];
                     for i in 0..t {
@@ -846,6 +917,7 @@ impl Backend for ReferenceBackend {
             sf,
             CF_TRAIN,
             Some(seed),
+            &[batch.src.len()],
         );
         let (ce, dlogits) = self.ce_and_dlogits(&fwd.logits, &batch.tgt_out);
         let loss = ce + BALANCE_COEFF * fwd.balance;
@@ -901,7 +973,7 @@ impl Backend for ReferenceBackend {
         for pi in 0..np {
             let (p, g) = (&mut self.params[pi], &grads[pi]);
             let (m, v) = (&mut self.m[pi], &mut self.v[pi]);
-            match &self.pool {
+            match self.pool.as_ref().filter(|pl| pl.workers_for(p.len()) > 1) {
                 None => adam_span(p, m, v, g, lr, bc1, bc2),
                 Some(pool) => {
                     // elementwise update: any chunking is bit-neutral
@@ -934,6 +1006,7 @@ impl Backend for ReferenceBackend {
             sf,
             CF_EVAL,
             None,
+            &[batch.src.len()],
         );
         let (ce, _) = self.ce_and_dlogits(&fwd.logits, &batch.tgt_out);
         Ok(EvalMetrics {
@@ -945,27 +1018,59 @@ impl Backend for ReferenceBackend {
     }
 
     fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>> {
-        let dm = &self.manifest.dims;
-        let (rows, len, vocab) = (dm.batch_rows, dm.max_len, dm.vocab);
-        if src.len() != rows * len {
+        let len = self.manifest.dims.max_len;
+        if src.is_empty() || src.len() % len != 0 {
             return Err(BackendError::Shape {
-                detail: format!("decode src length {} != {}", src.len(), rows * len),
+                detail: format!(
+                    "decode src length {} is not a non-zero multiple of max_len {len}",
+                    src.len()
+                ),
             });
         }
-        let rows_local = vec![0i32; rows];
-        let sf = StepFlags { drop: false, skip: false, hash: false };
-        let mut tgt_in = vec![dm.bos; rows * len];
-        let mut out = vec![0i32; rows * len];
-        for p in 0..len {
-            let fwd = self.forward(src, &tgt_in, &rows_local, sf, CF_EVAL, None);
-            for r in 0..rows {
-                let i = r * len + p;
-                let nxt = argmax(&fwd.logits[i * vocab..(i + 1) * vocab]) as i32;
-                out[i] = nxt;
-                if p + 1 < len {
-                    tgt_in[r * len + p + 1] = nxt;
-                }
+        // one capacity group spanning the whole call: a decode call is one
+        // request, with the same joint admission the fixed-batch path
+        // always had
+        Ok(self.greedy_decode(src, &[src.len()]))
+    }
+
+    /// Batched greedy decode: every request's rows run through the
+    /// embedding/gate/expert/head kernels in ONE forward per position
+    /// (threaded when a pool is attached), with one capacity group per
+    /// request so admission is accounted exactly as in `decode(srcs[i])`.
+    /// Per-row math is token-local and the matmul kernels compute each
+    /// output row independently, so the results are bit-identical to the
+    /// sequential per-request decodes -- the contract `decode_batch`
+    /// documents and `rust/tests/serve_decode.rs` pins.
+    fn decode_batch(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        let len = self.manifest.dims.max_len;
+        let mut groups = Vec::with_capacity(srcs.len());
+        let mut total = 0usize;
+        for (i, s) in srcs.iter().enumerate() {
+            if s.is_empty() || s.len() % len != 0 {
+                return Err(BackendError::Shape {
+                    detail: format!(
+                        "decode_batch request {i} length {} is not a non-zero multiple of \
+                         max_len {len}",
+                        s.len()
+                    ),
+                });
             }
+            groups.push(s.len());
+            total += s.len();
+        }
+        if srcs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut src = Vec::with_capacity(total);
+        for s in srcs {
+            src.extend_from_slice(s);
+        }
+        let flat = self.greedy_decode(&src, &groups);
+        let mut out = Vec::with_capacity(srcs.len());
+        let mut off = 0;
+        for &g in &groups {
+            out.push(flat[off..off + g].to_vec());
+            off += g;
         }
         Ok(out)
     }
@@ -1137,9 +1242,41 @@ mod tests {
         let toks = be.decode(&b.src).unwrap();
         assert_eq!(toks.len(), 8 * 16);
         assert!(toks.iter().all(|&x| x >= 0 && (x as usize) < 512));
-        // wrong length is a typed shape error
+        // non-multiple-of-len and empty inputs are typed shape errors
         assert!(matches!(
             be.decode(&b.src[..8]).unwrap_err(),
+            BackendError::Shape { .. }
+        ));
+        assert!(matches!(be.decode(&[]).unwrap_err(), BackendError::Shape { .. }));
+        // any non-zero row count is accepted (the serving path decodes
+        // single-row requests)
+        let one = be.decode(&b.src[..16]).unwrap();
+        assert_eq!(one.len(), 16);
+    }
+
+    /// The serving contract at unit scale: a ragged batched decode equals
+    /// the per-request decodes bit for bit (capacity admission is
+    /// per-request), including multi-row requests.
+    #[test]
+    fn decode_batch_is_bit_identical_to_per_request_decode() {
+        let be = tiny();
+        let b = batch(29);
+        let len = 16;
+        let reqs: Vec<&[i32]> = vec![
+            &b.src[..len],          // 1 row
+            &b.src[len..4 * len],   // 3 rows in one request
+            &b.src[4 * len..5 * len],
+            &b.src[5 * len..8 * len],
+        ];
+        let batched = be.decode_batch(&reqs).unwrap();
+        assert_eq!(batched.len(), reqs.len());
+        for (i, req) in reqs.iter().enumerate() {
+            assert_eq!(batched[i], be.decode(req).unwrap(), "request {i} diverged");
+        }
+        // empty batch is fine; malformed requests are typed errors
+        assert!(be.decode_batch(&[]).unwrap().is_empty());
+        assert!(matches!(
+            be.decode_batch(&[&b.src[..len], &b.src[..7]]).unwrap_err(),
             BackendError::Shape { .. }
         ));
     }

@@ -174,6 +174,27 @@ pub fn argmax(row: &[f32]) -> usize {
     bi
 }
 
+/// Output-element count below which the pooled kernels fall back to the
+/// sequential path. Each `run_parts` call spawns its workers fresh (tens
+/// of microseconds per worker), which dominates regions this small; the
+/// fallback is bit-identical by construction (the chunked kernels re-run
+/// the sequential kernels), so it is purely a scheduling decision.
+/// Override per pool with [`ThreadPool::set_seq_cutoff`] or globally with
+/// the `GD_SEQ_CUTOFF` env var (`0` keeps every region on the pool --
+/// what the parity suites use to exercise the threaded paths at
+/// test-sized models).
+pub const DEFAULT_SEQ_CUTOFF: usize = 16 * 1024;
+
+/// Resolve the small-work cutoff: the `GD_SEQ_CUTOFF` env var wins
+/// (including an explicit `0` = never fall back), then
+/// [`DEFAULT_SEQ_CUTOFF`].
+pub fn resolve_seq_cutoff() -> usize {
+    std::env::var("GD_SEQ_CUTOFF")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(DEFAULT_SEQ_CUTOFF)
+}
+
 /// A scoped worker pool over plain `std::thread` (no rayon, no unsafe).
 ///
 /// The pool is a *schedule*, not a set of live threads: each
@@ -186,19 +207,52 @@ pub fn argmax(row: &[f32]) -> usize {
 /// thread count. This is the seam future SIMD / remote backends build on:
 /// anything expressible as "disjoint output parts + shared read-only
 /// inputs" parallelizes deterministically through it.
+///
+/// Small regions skip the pool entirely: work whose output-element count
+/// is below `seq_cutoff` runs on the calling thread through the same
+/// sequential kernels ([`ThreadPool::workers_for`]). Results are
+/// bit-identical either way -- the cutoff only decides whether threads
+/// are spawned.
 #[derive(Debug, Clone)]
 pub struct ThreadPool {
     threads: usize,
+    seq_cutoff: usize,
 }
 
 impl ThreadPool {
-    /// A pool that fans work out to `threads` workers (clamped to >= 1).
+    /// A pool that fans work out to `threads` workers (clamped to >= 1),
+    /// with the resolved small-work cutoff ([`resolve_seq_cutoff`]).
     pub fn new(threads: usize) -> ThreadPool {
-        ThreadPool { threads: threads.max(1) }
+        Self::with_cutoff(threads, resolve_seq_cutoff())
+    }
+
+    /// A pool with an explicit small-work cutoff (`0` = never fall back;
+    /// the parity suites use this to keep tiny models on the pool).
+    pub fn with_cutoff(threads: usize, seq_cutoff: usize) -> ThreadPool {
+        ThreadPool { threads: threads.max(1), seq_cutoff }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    pub fn seq_cutoff(&self) -> usize {
+        self.seq_cutoff
+    }
+
+    pub fn set_seq_cutoff(&mut self, seq_cutoff: usize) {
+        self.seq_cutoff = seq_cutoff;
+    }
+
+    /// Workers to schedule for a region producing `elements` output
+    /// elements: `1` (sequential fallback, no spawns) below the cutoff,
+    /// the full pool width otherwise.
+    pub fn workers_for(&self, elements: usize) -> usize {
+        if elements < self.seq_cutoff {
+            1
+        } else {
+            self.threads
+        }
     }
 
     /// Run `f(part_index, part)` for every part. Parts are distributed as
@@ -213,12 +267,14 @@ impl ThreadPool {
     /// Cost model: each call opens one `thread::scope` and spawns its
     /// workers fresh (tens of microseconds per worker). That is noise for
     /// the kernels the `backend-par` bench gates on (>= 512^2 outputs) but
-    /// real overhead for tiny parts; callers below that scale should
-    /// prefer the sequential kernels. The engine deliberately does NOT
-    /// auto-threshold: results are bit-identical either way, and keeping
-    /// every region on the pool is what lets the parity suite exercise the
-    /// whole threaded surface at test-sized models (a persistent pool /
-    /// size threshold is a ROADMAP perf follow-up).
+    /// real overhead for tiny parts, which is why the element-counting
+    /// entry points ([`ThreadPool::run_row_chunks`], the engine's chunked
+    /// paths via [`ThreadPool::workers_for`]) fall back to the sequential
+    /// kernels below `seq_cutoff`. `run_parts` itself takes opaque parts
+    /// and cannot count elements; callers gate it themselves. The parity
+    /// suites force the cutoff to `0` so test-sized models still exercise
+    /// every pooled path (a persistent worker pool remains a ROADMAP perf
+    /// follow-up).
     pub fn run_parts<T: Send>(&self, parts: Vec<T>, f: &(dyn Fn(usize, T) + Sync)) {
         let n = parts.len();
         if n == 0 {
@@ -259,8 +315,9 @@ impl ThreadPool {
 
     /// Split `out` (row-major, rows of `row_len`) into one contiguous row
     /// chunk per worker and run `f(first_row, chunk)` on each. The chunk
-    /// boundaries depend only on `rows` and the pool width, never on
-    /// runtime timing.
+    /// boundaries depend only on `rows`, the pool width, and the
+    /// small-work cutoff (below it the whole output is one inline chunk)
+    /// -- never on runtime timing.
     pub fn run_row_chunks(
         &self,
         out: &mut [f32],
@@ -273,7 +330,7 @@ impl ThreadPool {
         if rows == 0 {
             return;
         }
-        let nt = self.threads.min(rows);
+        let nt = self.workers_for(out.len()).min(rows);
         let per = rows.div_ceil(nt);
         let parts: Vec<&mut [f32]> = out.chunks_mut(per * row_len).collect();
         self.run_parts(parts, &|ci, chunk| f(ci * per, chunk));
@@ -477,8 +534,10 @@ mod tests {
 
     #[test]
     fn run_row_chunks_covers_all_rows_with_fixed_schedule() {
+        // cutoff 0: keep this tiny output on the pool so the multi-chunk
+        // schedule is what's under test
         for threads in [1usize, 2, 4, 5] {
-            let pool = ThreadPool::new(threads);
+            let pool = ThreadPool::with_cutoff(threads, 0);
             let mut out = vec![0f32; 11 * 3];
             pool.run_row_chunks(&mut out, 3, &|first_row, chunk: &mut [f32]| {
                 for (r, row) in chunk.chunks_exact_mut(3).enumerate() {
@@ -511,7 +570,8 @@ mod tests {
             let mut want_at = vec![0f32; k * n];
             matmul_at(&mut want_at, &a, &at_b, m, k, n);
             for threads in [1usize, 2, 4] {
-                let pool = ThreadPool::new(threads);
+                // cutoff 0 keeps these small shapes on the pooled path
+                let pool = ThreadPool::with_cutoff(threads, 0);
                 let mut got = vec![0f32; m * n];
                 matmul_par(&pool, &mut got, &a, &b, m, k, n);
                 if got.iter().zip(&want).any(|(x, y)| x.to_bits() != y.to_bits()) {
@@ -530,6 +590,46 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The small-work fallback is a scheduling decision only: below the
+    /// cutoff the pooled kernels produce the exact bits of the sequential
+    /// ones (they literally run them), and `workers_for` is the knob.
+    #[test]
+    fn seq_cutoff_falls_back_below_threshold_bit_identically() {
+        let pool = ThreadPool::with_cutoff(4, 1000);
+        assert_eq!(pool.workers_for(999), 1, "below cutoff: sequential");
+        assert_eq!(pool.workers_for(1000), 4, "at cutoff: pooled");
+        assert_eq!(pool.seq_cutoff(), 1000);
+        let mut pool2 = ThreadPool::with_cutoff(4, 0);
+        assert_eq!(pool2.workers_for(1), 4, "cutoff 0 never falls back");
+        pool2.set_seq_cutoff(usize::MAX);
+        assert_eq!(pool2.workers_for(1 << 30), 1, "max cutoff always falls back");
+        // bit-identity across the threshold: same kernel, same bits
+        let (m, k, n) = (8usize, 70usize, 6usize);
+        let mut rng = Rng::new(31);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut want = vec![0f32; m * n];
+        matmul(&mut want, &a, &b, m, k, n);
+        for cutoff in [0usize, usize::MAX] {
+            let pool = ThreadPool::with_cutoff(4, cutoff);
+            let mut got = vec![0f32; m * n];
+            matmul_par(&pool, &mut got, &a, &b, m, k, n);
+            assert!(
+                got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "cutoff {cutoff} changed bits"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_seq_cutoff_defaults_without_env() {
+        // NOTE: does not touch GD_SEQ_CUTOFF (env mutation would race
+        // other tests); the override branch is plain parse-or-default.
+        if std::env::var("GD_SEQ_CUTOFF").is_err() {
+            assert_eq!(resolve_seq_cutoff(), DEFAULT_SEQ_CUTOFF);
+        }
     }
 
     #[test]

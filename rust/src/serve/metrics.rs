@@ -1,0 +1,203 @@
+//! Serving metrics: deterministic per-request latency and throughput
+//! accounting.
+//!
+//! Everything in [`ServeSummary`] is an integer (ticks, counts, a token
+//! hash), so two runs of the same seeded load produce *equal* summaries
+//! -- the property `rust/tests/serve_decode.rs` asserts across repeat
+//! invocations and thread counts. Derived rates (tokens per tick, mean
+//! batch occupancy) are computed on demand from the integers.
+
+use crate::benchkit::Table;
+
+use super::session::{RequestState, Session};
+
+/// Exact quantile over sorted samples, using the same floor-index formula
+/// as `benchkit::bench` (`sorted[floor((n-1) * p)]`): deterministic, no
+/// interpolation. Returns 0 on an empty slice.
+pub fn quantile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+/// FNV-1a over `(id, tokens)` pairs. Callers pass outputs in request-id
+/// order, which makes the fingerprint a function of *what* was decoded,
+/// not of how the scheduler happened to batch it -- sequential and
+/// batched serving of the same load hash equal exactly when every
+/// request decoded to the same tokens (the `decode_batch` contract).
+pub fn output_hash(outputs: &[(usize, Vec<i32>)]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    };
+    for (id, toks) in outputs {
+        mix(*id as u64);
+        for &t in toks {
+            mix(t as u64);
+        }
+    }
+    h
+}
+
+/// The deterministic result of one serve run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeSummary {
+    /// Requests the load generator offered.
+    pub offered: u64,
+    /// Requests decoded to completion.
+    pub completed: u64,
+    /// Requests shed at admission (queue at capacity).
+    pub rejected: u64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Rows across all dispatched micro-batches.
+    pub dispatched_rows: u64,
+    /// Tokens produced by completed decodes.
+    pub tokens_out: u64,
+    /// Tick the last event (completion or arrival) landed on.
+    pub total_ticks: u64,
+    pub p50_queue_ticks: u64,
+    pub p99_queue_ticks: u64,
+    pub p50_total_ticks: u64,
+    pub p99_total_ticks: u64,
+    /// [`output_hash`] of every completed decode, in request-id order.
+    pub output_hash: u64,
+}
+
+impl ServeSummary {
+    /// Fold the scheduler's sessions into the summary. `batches`,
+    /// `total_ticks`, and `output_hash` come from the scheduler (they
+    /// are not derivable from sessions alone).
+    pub fn from_sessions(
+        sessions: &[Session],
+        batches: u64,
+        total_ticks: u64,
+        output_hash: u64,
+    ) -> ServeSummary {
+        let mut queue_ticks = Vec::new();
+        let mut total_lat = Vec::new();
+        let mut completed = 0u64;
+        let mut rejected = 0u64;
+        let mut dispatched_rows = 0u64;
+        let mut tokens_out = 0u64;
+        for s in sessions {
+            match s.state {
+                RequestState::Done => {
+                    completed += 1;
+                    dispatched_rows += s.rows as u64;
+                    tokens_out += s.tokens_out;
+                    queue_ticks.push(s.queue_ticks());
+                    total_lat.push(s.total_ticks());
+                }
+                RequestState::Rejected => rejected += 1,
+                RequestState::Queued | RequestState::Decoding => {
+                    debug_assert!(false, "serve must drain every session");
+                }
+            }
+        }
+        queue_ticks.sort_unstable();
+        total_lat.sort_unstable();
+        ServeSummary {
+            offered: sessions.len() as u64,
+            completed,
+            rejected,
+            batches,
+            dispatched_rows,
+            tokens_out,
+            total_ticks,
+            p50_queue_ticks: quantile(&queue_ticks, 0.5),
+            p99_queue_ticks: quantile(&queue_ticks, 0.99),
+            p50_total_ticks: quantile(&total_lat, 0.5),
+            p99_total_ticks: quantile(&total_lat, 0.99),
+            output_hash,
+        }
+    }
+
+    /// Decoded tokens per scheduler tick -- the deterministic throughput
+    /// axis (wall tokens/sec is the bench's job).
+    pub fn tokens_per_tick(&self) -> f64 {
+        self.tokens_out as f64 / (self.total_ticks.max(1)) as f64
+    }
+
+    /// Mean rows per dispatched micro-batch: 1.0 = no batching happened,
+    /// `max_batch` = every dispatch went out full.
+    pub fn mean_batch_rows(&self) -> f64 {
+        self.dispatched_rows as f64 / (self.batches.max(1)) as f64
+    }
+
+    /// Print the paper-style summary table.
+    pub fn print(&self) {
+        let mut t = Table::new(&[
+            "completed/offered",
+            "rejected",
+            "batches",
+            "rows/batch",
+            "tok/tick",
+            "queue p50/p99",
+            "latency p50/p99",
+        ]);
+        t.row(&[
+            format!("{}/{}", self.completed, self.offered),
+            self.rejected.to_string(),
+            self.batches.to_string(),
+            format!("{:.2}", self.mean_batch_rows()),
+            format!("{:.3}", self.tokens_per_tick()),
+            format!("{}/{}", self.p50_queue_ticks, self.p99_queue_ticks),
+            format!("{}/{}", self.p50_total_ticks, self.p99_total_ticks),
+        ]);
+        t.print();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_uses_the_benchkit_floor_index() {
+        let s = [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 10];
+        assert_eq!(quantile(&s, 0.5), 5); // floor(9 * 0.5) = 4 -> s[4]
+        assert_eq!(quantile(&s, 0.99), 9); // floor(9 * 0.99) = 8 -> s[8]
+        assert_eq!(quantile(&s, 0.0), 1);
+        assert_eq!(quantile(&s, 1.0), 10);
+        assert_eq!(quantile(&[], 0.5), 0);
+    }
+
+    #[test]
+    fn output_hash_keys_on_ids_and_tokens() {
+        let a = vec![(0usize, vec![1i32, 2, 3]), (1, vec![4, 5])];
+        let mut b = a.clone();
+        assert_eq!(output_hash(&a), output_hash(&b));
+        b[1].1[0] = 9;
+        assert_ne!(output_hash(&a), output_hash(&b), "token change must show");
+        let c = vec![(0usize, vec![1i32, 2, 3]), (2, vec![4, 5])];
+        assert_ne!(output_hash(&a), output_hash(&c), "id change must show");
+    }
+
+    #[test]
+    fn summary_folds_sessions() {
+        let mut done = Session::queued(0, 1, 0);
+        done.dispatch(2, 0);
+        done.complete(5, 8);
+        let mut done2 = Session::queued(1, 1, 1);
+        done2.dispatch(2, 0);
+        done2.complete(5, 8);
+        let rej = Session::rejected(2, 1, 3);
+        let s = ServeSummary::from_sessions(&[done, done2, rej], 1, 5, 77);
+        assert_eq!(s.offered, 3);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.tokens_out, 16);
+        assert_eq!(s.dispatched_rows, 2);
+        assert_eq!(s.p50_queue_ticks, 1); // sorted [1, 2] -> floor(0.5) = idx 0
+        assert_eq!(s.p99_total_ticks, 5);
+        assert_eq!(s.output_hash, 77);
+        assert!((s.tokens_per_tick() - 16.0 / 5.0).abs() < 1e-12);
+        assert!((s.mean_batch_rows() - 2.0).abs() < 1e-12);
+        s.print(); // smoke: no panic
+    }
+}

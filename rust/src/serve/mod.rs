@@ -1,0 +1,132 @@
+//! The batched decode serving subsystem: dynamic micro-batching over the
+//! [`Backend`](crate::runtime::Backend) trait.
+//!
+//! The paper's argument is that per-token cross-machine cost dominates
+//! sparse models; at inference time that cost surfaces as per-request
+//! dispatch overhead, and micro-batching is how it gets amortized. This
+//! module turns the one-shot `decode` API into a serving engine:
+//!
+//! * [`queue`] -- a seeded synthetic load generator (arrival ticks, fill
+//!   lengths, content tokens from forked `util::rng` streams; no wall
+//!   clock anywhere) feeding a bounded FIFO with Switch-style admission
+//!   control (over-capacity arrivals are shed, like tokens over expert
+//!   capacity);
+//! * [`scheduler`] -- the deterministic event loop coalescing waiting
+//!   requests into ragged micro-batches under a `max_batch` /
+//!   `max_wait_ticks` budget and serving each with ONE
+//!   [`decode_batch`](crate::runtime::Backend::decode_batch) call;
+//! * [`session`] -- per-request lifecycle records in integer ticks;
+//! * [`metrics`] -- the fold into [`ServeSummary`]: p50/p99 queue and
+//!   end-to-end latency, tokens per tick, batch occupancy, and an
+//!   output-token hash.
+//!
+//! Determinism guarantee (pinned by `rust/tests/serve_decode.rs`): a
+//! fixed-seed serve run produces an identical [`ServeSummary`] -- every
+//! field, including the output hash -- on repeat runs and at any
+//! `backend-par` thread count, because `decode_batch` is bit-identical
+//! to sequential per-request decodes and the scheduler's clock is
+//! virtual. `repro serve` / `repro bench-serve` are the CLI front-ends;
+//! a real-clock socket front-end and continuous (in-flight) batching are
+//! ROADMAP follow-ups.
+//!
+//! Backend support: the synthetic load is single-row requests, which
+//! need the pure-Rust engines (their `decode` accepts any row count).
+//! The XLA engine still satisfies the trait via the default
+//! `decode_batch` loop, but its decode artifact only accepts
+//! `[batch_rows, max_len]` buffers, so serving it the synthetic load
+//! fails with a typed `Shape` error at the first dispatch.
+
+pub mod metrics;
+pub mod queue;
+pub mod scheduler;
+pub mod session;
+
+pub use metrics::ServeSummary;
+pub use queue::{LoadGen, Request, RequestQueue};
+pub use scheduler::{serve, ServeReport};
+pub use session::{RequestState, Session};
+
+use crate::config::RunConfig;
+
+/// Knobs of one serve run. The scheduling knobs (`max_batch`,
+/// `max_wait_ticks`, `queue_cap`) mirror `RunConfig` / the CLI; the load
+/// and cost-model knobs live here.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Requests the synthetic load generator offers.
+    pub n_requests: usize,
+    /// Mean inter-arrival gap in ticks (gaps are uniform in `[0, 2*mean]`).
+    pub mean_gap_ticks: u64,
+    /// Most requests one micro-batch may carry.
+    pub max_batch: usize,
+    /// Oldest-waiter age that forces a dispatch even when the batch is
+    /// not full: the batching-vs-latency knob.
+    pub max_wait_ticks: u64,
+    /// Waiting requests beyond this are shed at admission.
+    pub queue_cap: usize,
+    /// Fixed virtual cost per dispatched micro-batch (the overhead that
+    /// batching amortizes).
+    pub batch_ticks: u64,
+    /// Marginal virtual cost per request row in a micro-batch.
+    pub row_ticks: u64,
+    pub seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            n_requests: 64,
+            mean_gap_ticks: 1,
+            max_batch: 8,
+            max_wait_ticks: 4,
+            queue_cap: 64,
+            batch_ticks: 4,
+            row_ticks: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Lift the serving knobs out of a run config (`--max-batch`,
+    /// `--max-wait-ticks`, `--queue-cap`, `--seed` on the CLI).
+    pub fn from_run(cfg: &RunConfig) -> ServeConfig {
+        ServeConfig {
+            max_batch: cfg.max_batch,
+            max_wait_ticks: cfg.max_wait_ticks,
+            queue_cap: cfg.queue_cap,
+            seed: cfg.seed,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// The no-batching baseline `bench-serve` compares against: same
+    /// load, same queue, but every micro-batch carries one request.
+    pub fn sequential(&self) -> ServeConfig {
+        ServeConfig { max_batch: 1, ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_run_lifts_the_serving_knobs() {
+        let rc = RunConfig {
+            max_batch: 12,
+            max_wait_ticks: 9,
+            queue_cap: 33,
+            seed: 5,
+            ..RunConfig::default()
+        };
+        let sc = ServeConfig::from_run(&rc);
+        assert_eq!(sc.max_batch, 12);
+        assert_eq!(sc.max_wait_ticks, 9);
+        assert_eq!(sc.queue_cap, 33);
+        assert_eq!(sc.seed, 5);
+        let seq = sc.sequential();
+        assert_eq!(seq.max_batch, 1);
+        assert_eq!(seq.queue_cap, 33, "only the batch width changes");
+    }
+}

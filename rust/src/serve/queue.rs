@@ -1,0 +1,211 @@
+//! Deterministic request queue + seeded synthetic load generator.
+//!
+//! The serving path has no socket front-end yet (ROADMAP follow-up), so
+//! load is *synthesized*: [`LoadGen`] derives inter-arrival gaps, fill
+//! lengths, and content tokens from three forked SplitMix64 streams
+//! ([`crate::util::rng::Rng`]) -- the offered load is a pure function of
+//! the seed, which is what lets `rust/tests/serve_decode.rs` assert a
+//! whole serve run's metrics summary is identical across invocations and
+//! thread counts.
+//!
+//! [`RequestQueue`] is a bounded FIFO with Switch-style admission
+//! control: arrivals beyond the capacity are *dropped*, exactly like
+//! tokens over expert capacity in the MoE layer -- overload becomes
+//! bounded load shedding instead of unbounded queueing latency.
+
+use std::collections::VecDeque;
+
+use crate::data::PAD;
+use crate::util::rng::Rng;
+
+/// First non-special vocab id: 0/1/2 are PAD/BOS/EOS (see `data`), and
+/// synthetic request content stays above them.
+const CONTENT0: u64 = 3;
+
+/// One decode request: a row-major `[rows, max_len]` source buffer
+/// (synthetic load uses single-row requests; multi-row requests are the
+/// `decode`-compatible general case).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    pub id: usize,
+    pub arrival_tick: u64,
+    pub rows: usize,
+    pub src: Vec<i32>,
+}
+
+/// Seeded open-loop load: per request, an inter-arrival gap uniform in
+/// `[0, 2*mean_gap]` ticks, a fill length uniform in `[1, max_len]`, and
+/// content tokens uniform over the non-special vocab, padded with `PAD`
+/// -- each drawn from its own forked stream so changing one knob never
+/// shifts another stream's draws.
+pub struct LoadGen {
+    arrivals: Rng,
+    lengths: Rng,
+    contents: Rng,
+    max_len: usize,
+    vocab: usize,
+    mean_gap: u64,
+    n_requests: usize,
+    next_id: usize,
+    clock: u64,
+}
+
+impl LoadGen {
+    pub fn new(
+        seed: u64,
+        n_requests: usize,
+        mean_gap_ticks: u64,
+        max_len: usize,
+        vocab: usize,
+    ) -> LoadGen {
+        assert!(vocab as u64 > CONTENT0, "vocab too small for synthetic load");
+        assert!(max_len > 0, "zero max_len");
+        let root = Rng::new(seed ^ 0x5E47_E000);
+        LoadGen {
+            arrivals: root.fork(1),
+            lengths: root.fork(2),
+            contents: root.fork(3),
+            max_len,
+            vocab,
+            mean_gap: mean_gap_ticks,
+            n_requests,
+            next_id: 0,
+            clock: 0,
+        }
+    }
+
+    /// Requests not yet generated.
+    pub fn remaining(&self) -> usize {
+        self.n_requests - self.next_id
+    }
+
+    /// The next request, with a monotonically non-decreasing arrival
+    /// tick; `None` once `n_requests` have been generated.
+    pub fn next_request(&mut self) -> Option<Request> {
+        if self.next_id >= self.n_requests {
+            return None;
+        }
+        self.clock += self.arrivals.below(2 * self.mean_gap + 1);
+        let fill = 1 + self.lengths.below(self.max_len as u64) as usize;
+        let mut src = vec![PAD; self.max_len];
+        for slot in src.iter_mut().take(fill) {
+            *slot = (CONTENT0 + self.contents.below(self.vocab as u64 - CONTENT0)) as i32;
+        }
+        let req = Request { id: self.next_id, arrival_tick: self.clock, rows: 1, src };
+        self.next_id += 1;
+        Some(req)
+    }
+}
+
+/// Bounded FIFO with Switch-style admission control.
+#[derive(Debug)]
+pub struct RequestQueue {
+    cap: usize,
+    q: VecDeque<Request>,
+}
+
+impl RequestQueue {
+    /// A queue holding at most `cap` waiting requests (clamped to >= 1).
+    pub fn new(cap: usize) -> RequestQueue {
+        RequestQueue { cap: cap.max(1), q: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Admit `r`, or hand it back when the queue is at capacity (the
+    /// caller records the rejection -- the request is *dropped*, not
+    /// retried: Switch semantics).
+    pub fn offer(&mut self, r: Request) -> Result<(), Request> {
+        if self.q.len() >= self.cap {
+            return Err(r);
+        }
+        self.q.push_back(r);
+        Ok(())
+    }
+
+    /// Arrival tick of the oldest waiting request.
+    pub fn front_arrival(&self) -> Option<u64> {
+        self.q.front().map(|r| r.arrival_tick)
+    }
+
+    /// Pop up to `max` requests in FIFO order: the next micro-batch.
+    pub fn take(&mut self, max: usize) -> Vec<Request> {
+        let n = max.min(self.q.len());
+        self.q.drain(..n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_is_a_pure_function_of_the_seed() {
+        let collect = |seed| -> Vec<Request> {
+            let mut g = LoadGen::new(seed, 20, 2, 8, 64);
+            std::iter::from_fn(|| g.next_request()).collect()
+        };
+        let a = collect(7);
+        let b = collect(7);
+        let c = collect(8);
+        assert_eq!(a, b, "same seed, same load");
+        assert_ne!(a, c, "different seed, different load");
+        assert_eq!(a.len(), 20);
+    }
+
+    #[test]
+    fn requests_are_well_formed_and_arrivals_monotone() {
+        let mut g = LoadGen::new(3, 50, 2, 8, 64);
+        let mut last = 0u64;
+        while let Some(r) = g.next_request() {
+            assert!(r.arrival_tick >= last, "arrivals must be non-decreasing");
+            last = r.arrival_tick;
+            assert_eq!(r.rows, 1);
+            assert_eq!(r.src.len(), 8);
+            assert!(r.src[0] >= 3, "first token is content");
+            assert!(r.src.iter().all(|&t| t == PAD || (3..64).contains(&t)));
+        }
+        assert_eq!(g.remaining(), 0);
+        assert!(g.next_request().is_none());
+    }
+
+    #[test]
+    fn fill_lengths_cover_the_whole_range() {
+        let mut g = LoadGen::new(11, 200, 1, 8, 64);
+        let mut seen_full = false;
+        let mut seen_short = false;
+        while let Some(r) = g.next_request() {
+            let fill = r.src.iter().filter(|&&t| t != PAD).count();
+            assert!((1..=8).contains(&fill));
+            seen_full |= fill == 8;
+            seen_short |= fill <= 2;
+        }
+        assert!(seen_full && seen_short, "lengths should spread over [1, max_len]");
+    }
+
+    #[test]
+    fn queue_is_fifo_and_sheds_over_capacity() {
+        let mut q = RequestQueue::new(2);
+        let req = |id: usize| Request { id, arrival_tick: id as u64, rows: 1, src: vec![3] };
+        assert!(q.offer(req(0)).is_ok());
+        assert!(q.offer(req(1)).is_ok());
+        let back = q.offer(req(2)).unwrap_err();
+        assert_eq!(back.id, 2, "over-capacity arrival comes back for the rejection record");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.front_arrival(), Some(0));
+        let batch = q.take(8);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(q.is_empty());
+        assert!(q.take(4).is_empty());
+    }
+}

@@ -1,0 +1,116 @@
+//! Per-request serving session: the lifecycle record the scheduler
+//! writes and the [`metrics`](super::metrics) summary reads.
+//!
+//! Every field is an integer tick or count -- no wall clock, no floats --
+//! so a fixed-seed serve run produces byte-identical sessions on every
+//! invocation and at every thread count.
+
+/// Lifecycle of one request inside the serving engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// Admitted, waiting in the queue.
+    Queued,
+    /// Dropped at admission: the queue was at capacity (Switch-style
+    /// load shedding -- the serving analogue of a token over expert
+    /// capacity).
+    Rejected,
+    /// Dispatched in a micro-batch; decode in flight.
+    Decoding,
+    /// Decode finished; all ticks recorded.
+    Done,
+}
+
+/// One request's timeline in scheduler ticks. Tick fields become
+/// meaningful as the state advances: `dispatch_tick`/`batch_id` from
+/// [`RequestState::Decoding`], `done_tick`/`tokens_out` from
+/// [`RequestState::Done`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Session {
+    pub id: usize,
+    pub rows: usize,
+    pub state: RequestState,
+    pub arrival_tick: u64,
+    pub dispatch_tick: u64,
+    pub done_tick: u64,
+    /// Micro-batch this request rode in (dispatch order, 0-based).
+    pub batch_id: u64,
+    pub tokens_out: u64,
+}
+
+impl Session {
+    pub fn queued(id: usize, rows: usize, arrival_tick: u64) -> Session {
+        Session {
+            id,
+            rows,
+            state: RequestState::Queued,
+            arrival_tick,
+            dispatch_tick: 0,
+            done_tick: 0,
+            batch_id: 0,
+            tokens_out: 0,
+        }
+    }
+
+    pub fn rejected(id: usize, rows: usize, arrival_tick: u64) -> Session {
+        Session { state: RequestState::Rejected, ..Session::queued(id, rows, arrival_tick) }
+    }
+
+    pub fn dispatch(&mut self, tick: u64, batch_id: u64) {
+        debug_assert_eq!(self.state, RequestState::Queued, "dispatch of non-queued request");
+        debug_assert!(tick >= self.arrival_tick, "dispatch before arrival");
+        self.state = RequestState::Decoding;
+        self.dispatch_tick = tick;
+        self.batch_id = batch_id;
+    }
+
+    pub fn complete(&mut self, tick: u64, tokens_out: u64) {
+        debug_assert_eq!(self.state, RequestState::Decoding, "completion of undispatched request");
+        debug_assert!(tick >= self.dispatch_tick, "completion before dispatch");
+        self.state = RequestState::Done;
+        self.done_tick = tick;
+        self.tokens_out = tokens_out;
+    }
+
+    /// Ticks spent waiting in the queue (arrival -> dispatch).
+    pub fn queue_ticks(&self) -> u64 {
+        self.dispatch_tick - self.arrival_tick
+    }
+
+    /// Ticks spent in the decode engine (dispatch -> done).
+    pub fn decode_ticks(&self) -> u64 {
+        self.done_tick - self.dispatch_tick
+    }
+
+    /// End-to-end latency (arrival -> done).
+    pub fn total_ticks(&self) -> u64 {
+        self.done_tick - self.arrival_tick
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_records_every_tick() {
+        let mut s = Session::queued(3, 1, 10);
+        assert_eq!(s.state, RequestState::Queued);
+        s.dispatch(14, 2);
+        assert_eq!(s.state, RequestState::Decoding);
+        s.complete(19, 8);
+        assert_eq!(s.state, RequestState::Done);
+        assert_eq!(s.queue_ticks(), 4);
+        assert_eq!(s.decode_ticks(), 5);
+        assert_eq!(s.total_ticks(), 9);
+        assert_eq!(s.batch_id, 2);
+        assert_eq!(s.tokens_out, 8);
+    }
+
+    #[test]
+    fn rejected_sessions_stay_terminal() {
+        let s = Session::rejected(0, 2, 7);
+        assert_eq!(s.state, RequestState::Rejected);
+        assert_eq!(s.rows, 2);
+        assert_eq!(s.arrival_tick, 7);
+    }
+}

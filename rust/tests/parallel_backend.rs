@@ -105,6 +105,10 @@ fn parallel_matches_reference_bitwise() {
             let want = run(&mut reference, policy, seed);
             for threads in [1usize, 2, 4] {
                 let mut par = ParallelBackend::from_dims("par-test", dims(), HYPER, seed, threads);
+                // force the small-work cutoff off so this test-sized model
+                // keeps exercising every pooled path (the default cutoff
+                // would route it all through the sequential kernels)
+                par.set_seq_cutoff(0);
                 assert_eq!(par.threads(), threads);
                 let got = run(&mut par, policy, seed);
                 let ctx = format!("seed {seed} policy {} threads {threads}", policy.name());
@@ -149,9 +153,29 @@ fn oversubscribed_pool_is_still_bit_identical() {
     let mut reference = ReferenceBackend::from_dims("par-test", dims(), HYPER, seed);
     let want = run(&mut reference, Policy::GateDrop { p: 0.3 }, seed);
     let mut par = ParallelBackend::from_dims("par-test", dims(), HYPER, seed, 64);
+    par.set_seq_cutoff(0);
     let got = run(&mut par, Policy::GateDrop { p: 0.3 }, seed);
     assert_eq!(want.metrics, got.metrics);
     assert_eq!(want.eval, got.eval);
+}
+
+/// The small-work cutoff is a scheduling knob only: at the default cutoff
+/// this test-sized model runs the sequential kernels inline, and the
+/// result must still be the reference trace bit for bit.
+#[test]
+fn default_seq_cutoff_is_numerics_neutral() {
+    let seed = 2;
+    let mut reference = ReferenceBackend::from_dims("par-test", dims(), HYPER, seed);
+    let want = run(&mut reference, Policy::GateDrop { p: 0.3 }, seed);
+    let mut par = ParallelBackend::from_dims("par-test", dims(), HYPER, seed, 4);
+    // default cutoff (no set_seq_cutoff): tiny regions fall back inline
+    let got = run(&mut par, Policy::GateDrop { p: 0.3 }, seed);
+    assert_eq!(want.metrics, got.metrics);
+    assert_eq!(want.eval, got.eval);
+    assert_eq!(want.decode, got.decode);
+    for ((name, w), (_, g)) in want.params.iter().zip(&got.params) {
+        assert_eq!(w, g, "param '{name}' diverged at the default cutoff");
+    }
 }
 
 /// Checkpoints written by one engine restore bit-exactly into the other:

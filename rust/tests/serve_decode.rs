@@ -1,0 +1,159 @@
+//! Serving parity suite: the batched decode path and the serve loop must
+//! be *bit-deterministic*.
+//!
+//! Pins the two contracts the serving subsystem stands on:
+//!
+//! * `Backend::decode_batch` is bit-identical to sequential per-request
+//!   `decode` -- across backends (`backend-ref`, `backend-par` at 1/2/4
+//!   worker threads, with the small-work cutoff both forced to 0 and at
+//!   its default), seeds {1, 2}, and ragged batch sizes {1, 3,
+//!   max_batch} including a multi-row request;
+//! * a fixed-seed `serve` run produces an identical metrics summary
+//!   (every field: p50/p99 ticks, counts, token hash) on repeat
+//!   invocations and at every thread count.
+
+use gating_dropout::data::BOS;
+use gating_dropout::runtime::{Backend, ModelDims, RefHyper, ReferenceBackend};
+use gating_dropout::serve::{self, ServeConfig};
+use gating_dropout::util::rng::Rng;
+
+#[cfg(feature = "backend-par")]
+use gating_dropout::runtime::ParallelBackend;
+
+const MAX_BATCH: usize = 6;
+const HYPER: RefHyper = RefHyper { lr: 1e-2, warmup: 4.0 };
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 128,
+        d_model: 16,
+        d_ff: 24,
+        n_experts: 4,
+        enc_blocks: 1,
+        dec_blocks: 1,
+        max_len: 8,
+        batch_rows: 4,
+        bos: BOS,
+        param_count: 0,
+    }
+}
+
+/// `n` deterministic single-row requests (content tokens only, so the
+/// gate sees realistic variety).
+fn request_rows(seed: u64, n: usize) -> Vec<Vec<i32>> {
+    let d = dims();
+    let mut rng = Rng::new(seed ^ 0x5EED_02E6);
+    (0..n)
+        .map(|_| {
+            (0..d.max_len).map(|_| 3 + rng.below(d.vocab as u64 - 3) as i32).collect()
+        })
+        .collect()
+}
+
+/// The core contract, checked on any backend: batched == per-request,
+/// bit for bit.
+fn assert_batched_matches_sequential(be: &dyn Backend, reqs: &[Vec<i32>], ctx: &str) {
+    let srcs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+    let batched = be.decode_batch(&srcs).unwrap();
+    assert_eq!(batched.len(), reqs.len(), "{ctx}: result arity");
+    for (i, r) in reqs.iter().enumerate() {
+        let single = be.decode(r).unwrap();
+        assert_eq!(batched[i], single, "{ctx}: request {i} diverged from its solo decode");
+    }
+}
+
+#[test]
+fn decode_batch_matches_per_request_decode_on_reference() {
+    for seed in [1u64, 2] {
+        let be = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, seed);
+        for &bs in &[1usize, 3, MAX_BATCH] {
+            let reqs = request_rows(seed * 100 + bs as u64, bs);
+            assert_batched_matches_sequential(&be, &reqs, &format!("ref seed {seed} bs {bs}"));
+        }
+        // a ragged batch mixing single- and multi-row requests: capacity
+        // groups follow request boundaries, not row boundaries
+        let rows = request_rows(seed * 1000, 4);
+        let multi: Vec<i32> = rows[0].iter().chain(&rows[1]).copied().collect();
+        let mixed = vec![multi, rows[2].clone(), rows[3].clone()];
+        assert_batched_matches_sequential(&be, &mixed, &format!("ref seed {seed} multi-row"));
+    }
+}
+
+#[cfg(feature = "backend-par")]
+#[test]
+fn decode_batch_parity_across_backends_and_threads() {
+    for seed in [1u64, 2] {
+        let reference = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, seed);
+        for &bs in &[1usize, 3, MAX_BATCH] {
+            let reqs = request_rows(seed * 100 + bs as u64, bs);
+            let srcs: Vec<&[i32]> = reqs.iter().map(|r| r.as_slice()).collect();
+            let want = reference.decode_batch(&srcs).unwrap();
+            for threads in [1usize, 2, 4] {
+                for cutoff in [Some(0usize), None] {
+                    let mut par =
+                        ParallelBackend::from_dims("serve-parity", dims(), HYPER, seed, threads);
+                    if let Some(c) = cutoff {
+                        par.set_seq_cutoff(c); // 0 = keep pooled paths hot
+                    }
+                    let got = par.decode_batch(&srcs).unwrap();
+                    assert_eq!(
+                        want, got,
+                        "seed {seed} bs {bs} threads {threads} cutoff {cutoff:?}"
+                    );
+                    assert_batched_matches_sequential(
+                        &par,
+                        &reqs,
+                        &format!("par seed {seed} bs {bs} threads {threads} cutoff {cutoff:?}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        n_requests: 24,
+        mean_gap_ticks: 1,
+        max_batch: MAX_BATCH,
+        max_wait_ticks: 3,
+        queue_cap: 16,
+        batch_ticks: 4,
+        row_ticks: 1,
+        seed: 9,
+    }
+}
+
+#[test]
+fn serve_summary_identical_across_invocations() {
+    let be = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, 3);
+    let a = serve::serve(&be, &serve_cfg()).unwrap();
+    let b = serve::serve(&be, &serve_cfg()).unwrap();
+    assert_eq!(a.summary, b.summary, "repeat serve runs must be identical");
+    assert_eq!(a.sessions, b.sessions);
+    assert_eq!(a.outputs, b.outputs);
+    // the load is real: batching happened and every request resolved
+    assert_eq!(a.summary.completed + a.summary.rejected, a.summary.offered);
+    assert!(a.summary.batches < a.summary.completed, "micro-batching must coalesce");
+}
+
+#[cfg(feature = "backend-par")]
+#[test]
+fn serve_summary_identical_across_thread_counts() {
+    let reference = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, 3);
+    let want = serve::serve(&reference, &serve_cfg()).unwrap();
+    for threads in [1usize, 2, 4] {
+        for cutoff in [Some(0usize), None] {
+            let mut par = ParallelBackend::from_dims("serve-parity", dims(), HYPER, 3, threads);
+            if let Some(c) = cutoff {
+                par.set_seq_cutoff(c);
+            }
+            let got = serve::serve(&par, &serve_cfg()).unwrap();
+            assert_eq!(
+                want.summary, got.summary,
+                "serve summary diverged at {threads} threads (cutoff {cutoff:?})"
+            );
+            assert_eq!(want.outputs, got.outputs, "decoded tokens diverged at {threads} threads");
+        }
+    }
+}
