@@ -13,6 +13,12 @@
 //! fanned over the pool. Target: >= 2x at 512^3 on a 4-core runner, with
 //! the outputs asserted bit-identical (the backend's whole premise).
 //!
+//! `bench_pool_dispatch` is the acceptance gate for the persistent-worker
+//! pool (PR 5): per-region dispatch overhead of the retained scoped-spawn
+//! baseline (`tensor::run_parts_scoped`) vs the parked-worker pool, at
+//! region sizes below `DEFAULT_SEQ_CUTOFF`. Target: >= 5x lower overhead
+//! -- the number that justifies the cutoff's 16Ki -> 2Ki re-tune.
+//!
 //! `bench_decode` is the serving-path analogue: per-request `decode`
 //! loops vs one ragged `decode_batch` over the same requests, outputs
 //! asserted bit-identical first (the `decode_batch` contract), then
@@ -26,7 +32,9 @@ use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::metrics::corpus_bleu;
 use gating_dropout::moe;
-use gating_dropout::runtime::tensor::{matmul, matmul_par, resolve_threads, ThreadPool};
+use gating_dropout::runtime::tensor::{
+    matmul, matmul_par, resolve_threads, run_parts_scoped, ThreadPool, DEFAULT_SEQ_CUTOFF,
+};
 use gating_dropout::runtime::Backend;
 use gating_dropout::topology::Topology;
 use gating_dropout::util::rng::Rng;
@@ -143,11 +151,117 @@ fn bench_dispatch() {
     }
 }
 
+/// The scoped-spawn dispatch the persistent pool replaced, driving the
+/// exact chunk schedule `matmul_par` uses (rows over `threads` contiguous
+/// chunks). This is the old-vs-new baseline for `bench_pool_dispatch` --
+/// the math per region is identical, only the dispatch differs.
+fn matmul_rows_scoped(
+    threads: usize,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let nt = threads.min(m).max(1);
+    let per = m.div_ceil(nt);
+    let parts: Vec<&mut [f32]> = out.chunks_mut(per * n).collect();
+    run_parts_scoped(threads, parts, &|ci, chunk| {
+        let i0 = ci * per;
+        let rows = chunk.len() / n;
+        matmul(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
+    });
+}
+
+/// Acceptance gate for the PR-5 persistent-worker pool: per-region
+/// dispatch overhead, scoped spawn vs persistent workers, at sub-cutoff
+/// region sizes where dispatch dominates the math. Outputs are asserted
+/// bit-identical to the sequential kernel before any timing (the pool's
+/// whole premise), then the per-region medians are reported. Target:
+/// persistent dispatch >= 5x cheaper than scoped spawn -- the headroom
+/// that justifies `DEFAULT_SEQ_CUTOFF` dropping 16Ki -> 2Ki in PR 5.
+fn bench_pool_dispatch() {
+    let threads = resolve_threads(0).expect("GD_THREADS must parse");
+    // cutoff 0: these regions are deliberately below the default cutoff,
+    // and the point is to measure the dispatch they would pay on the pool
+    let pool = ThreadPool::with_cutoff(threads, 0);
+    println!(
+        "-- bench_pool_dispatch: scoped spawn vs persistent workers ({threads} threads, \
+         sub-cutoff regions) --"
+    );
+
+    // pure dispatch floor: no-op parts, one per worker
+    let (warmup, iters) = (20, 200);
+    let scoped = bench(warmup, iters, || {
+        let parts: Vec<usize> = (0..threads).collect();
+        run_parts_scoped(threads, parts, &|_, p| {
+            std::hint::black_box(p);
+        });
+    });
+    let pooled = bench(warmup, iters, || {
+        let parts: Vec<usize> = (0..threads).collect();
+        pool.run_parts(parts, &|_, p| {
+            std::hint::black_box(p);
+        });
+    });
+    report("dispatch noop [scoped-spawn]", &scoped);
+    report("dispatch noop [persistent]", &pooled);
+    println!(
+        "{:<44} overhead ratio {:.2}x  (median {} -> {}; target >= 5x)",
+        "dispatch noop",
+        scoped.median_ns / pooled.median_ns,
+        fmt_ns(scoped.median_ns),
+        fmt_ns(pooled.median_ns),
+    );
+
+    // tiny matmul regions: every m*n is below DEFAULT_SEQ_CUTOFF, i.e.
+    // sizes the spawn-era cutoff had to keep sequential
+    for (m, k, n, warmup, iters) in
+        [(16usize, 64usize, 16usize, 10, 100), (32, 128, 32, 10, 100), (48, 256, 32, 5, 50)]
+    {
+        assert!(m * n < DEFAULT_SEQ_CUTOFF, "bench premise: sub-cutoff region");
+        let mut rng = Rng::new(19);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut seq_out = vec![0f32; m * n];
+        let mut scoped_out = vec![0f32; m * n];
+        let mut pooled_out = vec![0f32; m * n];
+        matmul(&mut seq_out, &a, &b, m, k, n);
+        matmul_rows_scoped(threads, &mut scoped_out, &a, &b, m, k, n);
+        matmul_par(&pool, &mut pooled_out, &a, &b, m, k, n);
+        for (name, got) in [("scoped", &scoped_out), ("persistent", &pooled_out)] {
+            assert!(
+                seq_out.iter().zip(got.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{name} dispatch must be bit-identical to the sequential kernel \
+                 ({m}x{k}x{n})"
+            );
+        }
+        let scoped = bench(warmup, iters, || {
+            matmul_rows_scoped(threads, &mut scoped_out, &a, &b, m, k, n);
+            std::hint::black_box(&scoped_out);
+        });
+        let pooled = bench(warmup, iters, || {
+            matmul_par(&pool, &mut pooled_out, &a, &b, m, k, n);
+            std::hint::black_box(&pooled_out);
+        });
+        let name = format!("tiny matmul {m}x{k}x{n} ({} out elems)", m * n);
+        report(&format!("{name} [scoped-spawn]"), &scoped);
+        report(&format!("{name} [persistent]"), &pooled);
+        println!(
+            "{name:<44} region cost {:.2}x lower  (median {} -> {}; target >= 5x)",
+            scoped.median_ns / pooled.median_ns,
+            fmt_ns(scoped.median_ns),
+            fmt_ns(pooled.median_ns),
+        );
+    }
+}
+
 /// Old-vs-new matmul: the cache-blocked single-thread baseline vs the
 /// same kernel over the deterministic ThreadPool (`backend-par`). Prints
 /// the speedup; asserts the two outputs are bit-identical first.
 fn bench_matmul_par() {
-    let threads = resolve_threads(0);
+    let threads = resolve_threads(0).expect("GD_THREADS must parse");
     let pool = ThreadPool::new(threads);
     println!("-- bench_matmul_par: cache-blocked 1-thread vs ThreadPool({threads}) --");
     for (m, k, n, warmup, iters) in
@@ -261,6 +375,8 @@ fn main() {
     report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
 
     bench_dispatch();
+
+    bench_pool_dispatch();
 
     bench_matmul_par();
 

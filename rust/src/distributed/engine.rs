@@ -23,6 +23,7 @@ use crate::util::error::Result;
 use crate::collective::{Collective, FabricStats, ThreadFabric};
 use crate::coordinator::{Decision, DistCoordinator, Policy};
 use crate::moe;
+use crate::runtime::tensor::{resolve_seq_cutoff, resolve_threads_explicit, ThreadPool};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
@@ -38,6 +39,16 @@ pub struct DistRunConfig {
     pub policy: Policy,
     pub seed: u64,
     pub lr: f32,
+    /// Worker threads PER RANK for the pure-Rust stage math (each rank
+    /// attaches a persistent `tensor::ThreadPool` to its `StageRunner`).
+    /// `0` = auto: divide the machine's available parallelism across the
+    /// ranks -- which are already `ThreadFabric` threads -- so the sim
+    /// never oversubscribes by default. An explicit value (CLI
+    /// `--threads`, config `"threads"`, or the `GD_THREADS` env override)
+    /// is taken as the per-rank count verbatim. Thread count never
+    /// changes results: the pooled stage kernels are bit-identical to
+    /// the sequential ones.
+    pub threads: usize,
 }
 
 impl Default for DistRunConfig {
@@ -56,6 +67,7 @@ impl Default for DistRunConfig {
             policy: Policy::Baseline,
             seed: 7,
             lr: 2e-3,
+            threads: 0,
         }
     }
 }
@@ -95,7 +107,13 @@ struct WorkerState {
 }
 
 impl WorkerState {
-    fn new(rank: usize, m: DistManifest, lr: f32) -> Result<WorkerState> {
+    fn new(
+        rank: usize,
+        m: DistManifest,
+        lr: f32,
+        threads: usize,
+        seq_cutoff: usize,
+    ) -> Result<WorkerState> {
         let topo = Topology::new(m.ranks, m.ranks); // one expert per rank
         let w_in = m.load_init("w_in")?;
         let b_in = m.load_init("b_in")?;
@@ -103,7 +121,14 @@ impl WorkerState {
         let w_out = m.load_init("w_out")?;
         let w1 = m.load_init(&format!("expert{rank}_w1"))?;
         let w2 = m.load_init(&format!("expert{rank}_w2"))?;
-        let runner = StageRunner::new(m)?;
+        let mut runner = StageRunner::new(m)?;
+        if threads > 1 {
+            // this rank's slice of the machine: persistent workers under
+            // the ThreadFabric rank thread, bit-neutral by the kernel
+            // parity contract (cutoff resolved once by the engine, so a
+            // bad GD_SEQ_CUTOFF errors at launch, not as a rank panic)
+            runner.set_thread_pool(ThreadPool::with_cutoff(threads, seq_cutoff));
+        }
         Ok(WorkerState {
             rank,
             topo,
@@ -427,6 +452,19 @@ impl DistEngine {
             cfg.n_ranks
         );
         let n = manifest.ranks;
+        // Per-rank thread budget for the stage math. Explicit requests
+        // (CLI --threads / config "threads" / GD_THREADS env) are taken
+        // as workers PER RANK; auto (0) divides the machine's available
+        // parallelism across the rank threads so the default never
+        // oversubscribes. Either way the bits cannot move -- the pooled
+        // stage kernels are bit-identical to the sequential ones.
+        let per_rank_threads = match resolve_threads_explicit(cfg.threads)? {
+            Some(explicit) => explicit,
+            None => (std::thread::available_parallelism().map_or(1, |p| p.get()) / n).max(1),
+        };
+        // resolve the cutoff once here so a garbage GD_SEQ_CUTOFF is a
+        // clean launch error, not a panic inside every rank thread
+        let seq_cutoff = resolve_seq_cutoff()?;
         let fabric = Arc::new(ThreadFabric::new(n));
         let task = Arc::new(ClusterTask::new(
             manifest.d_in,
@@ -443,7 +481,7 @@ impl DistEngine {
             let cfg = cfg.clone();
             type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64);
             handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
-                let mut w = WorkerState::new(rank, manifest, cfg.lr)?;
+                let mut w = WorkerState::new(rank, manifest, cfg.lr, per_rank_threads, seq_cutoff)?;
                 let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
                 let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
                 let mut losses = Vec::new();

@@ -17,6 +17,15 @@
 //! and the manual backward through both all-to-alls (see
 //! `python/compile/dist_stages.py` for the stage algebra), plus dense-grad
 //! all-reduce and host-side Adam.
+//!
+//! The pure-Rust stage math is threaded through the same
+//! `tensor::mm`/`mm_at`/`mm_bt` seam as the single-process engines: each
+//! rank attaches a persistent `tensor::ThreadPool` sized by the per-rank
+//! budget (`DistRunConfig::threads`; explicit = workers per rank, auto =
+//! machine parallelism divided across ranks). The pooled kernels are
+//! bit-identical to the sequential ones, so the budget changes wall
+//! time, never losses -- pinned by
+//! `tests/integration_distributed.rs::dist_losses_bit_identical_across_thread_budgets`.
 
 mod engine;
 mod optim;

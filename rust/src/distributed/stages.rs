@@ -15,7 +15,7 @@
 //! model (the `dist_stages.py` default config with seeded init) for
 //! exactly that artifact-free mode.
 
-use crate::runtime::tensor::{matmul, matmul_at, matmul_bt, relu, softmax_rows, softmax_vjp_rows};
+use crate::runtime::tensor::{mm, mm_at, mm_bt, relu, softmax_rows, softmax_vjp_rows, ThreadPool};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -185,6 +185,12 @@ pub fn lit1_i32(data: &[i32]) -> StageArg<'_> {
 /// One worker's stage executor.
 pub struct StageRunner {
     pub manifest: DistManifest,
+    /// Optional worker pool for the pure-Rust stage math: the per-rank
+    /// thread budget the distributed engine resolves (see
+    /// `distributed::engine`). The stage matmuls go through the shared
+    /// `tensor::mm`/`mm_at`/`mm_bt` dispatch seam, so an attached pool
+    /// changes wall time, never bits. The XLA stage path ignores it.
+    pool: Option<ThreadPool>,
     #[cfg(feature = "backend-xla")]
     xla: XlaStages,
 }
@@ -193,12 +199,27 @@ impl StageRunner {
     #[cfg(feature = "backend-xla")]
     pub fn new(manifest: DistManifest) -> Result<StageRunner> {
         let xla = XlaStages::new(&manifest)?;
-        Ok(StageRunner { manifest, xla })
+        Ok(StageRunner { manifest, pool: None, xla })
     }
 
     #[cfg(not(feature = "backend-xla"))]
     pub fn new(manifest: DistManifest) -> Result<StageRunner> {
-        Ok(StageRunner { manifest })
+        Ok(StageRunner { manifest, pool: None })
+    }
+
+    /// Attach a persistent worker pool: subsequent pure-Rust stage
+    /// executions fan their matmuls out over the pool's workers
+    /// (bit-identical to the sequential path at any count). The caller
+    /// builds the pool so env knobs (`GD_SEQ_CUTOFF`) are resolved --
+    /// and their parse errors surfaced -- once, up front, not inside
+    /// every rank thread.
+    pub fn set_thread_pool(&mut self, pool: ThreadPool) {
+        self.pool = Some(pool);
+    }
+
+    /// Worker threads in use for the pure-Rust stage math (1 = inline).
+    pub fn thread_count(&self) -> usize {
+        self.pool.as_ref().map_or(1, ThreadPool::threads)
     }
 
     /// Execute stage `name`; returns the flattened tuple outputs as f32
@@ -207,7 +228,7 @@ impl StageRunner {
     /// on `backend-xla` builds.
     pub fn run(&self, name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
         if self.manifest.synthetic_seed.is_some() {
-            return ref_stage(name, args);
+            return ref_stage(name, args, self.pool.as_ref());
         }
         #[cfg(feature = "backend-xla")]
         {
@@ -215,7 +236,7 @@ impl StageRunner {
         }
         #[cfg(not(feature = "backend-xla"))]
         {
-            ref_stage(name, args)
+            ref_stage(name, args, self.pool.as_ref())
         }
     }
 }
@@ -294,8 +315,16 @@ fn i1<'a>(args: &'a [StageArg], i: usize, stage: &str) -> Result<&'a [i32]> {
 }
 
 /// Pure-Rust execution of one stage (see `dist_stages.py` for the exact
-/// formulas this mirrors).
-pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
+/// formulas this mirrors). Every matmul goes through the shared
+/// `tensor::mm`/`mm_at`/`mm_bt` dispatch seam, so handing a pool threads
+/// the stage without forking its math; the pooled kernels are
+/// bit-identical to the sequential ones, so `pool` changes wall time,
+/// never the returned bits.
+pub fn ref_stage(
+    name: &str,
+    args: &[StageArg],
+    pool: Option<&ThreadPool>,
+) -> Result<Vec<Vec<f32>>> {
     match name {
         // h = relu(x@w_in + b_in); probs = softmax(h@wr)
         "s1_fwd" => {
@@ -304,7 +333,7 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let (wr, _, r) = f2(args, 2, name)?;
             let (x, t, _) = f2(args, 3, name)?;
             let mut h = vec![0f32; t * d];
-            matmul(&mut h, x, w_in, t, din, d);
+            mm(pool, &mut h, x, w_in, t, din, d);
             for row in h.chunks_exact_mut(d) {
                 for (hv, &bv) in row.iter_mut().zip(b_in) {
                     *hv += bv;
@@ -312,7 +341,7 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             }
             relu(&mut h);
             let mut probs = vec![0f32; t * r];
-            matmul(&mut probs, &h, wr, t, d, r);
+            mm(pool, &mut probs, &h, wr, t, d, r);
             softmax_rows(&mut probs, t, r);
             Ok(vec![h, probs])
         }
@@ -322,10 +351,10 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let (w2, _, _) = f2(args, 1, name)?;
             let (xe, t, _) = f2(args, 2, name)?;
             let mut hid = vec![0f32; t * f];
-            matmul(&mut hid, xe, w1, t, d, f);
+            mm(pool, &mut hid, xe, w1, t, d, f);
             relu(&mut hid);
             let mut ye = vec![0f32; t * d];
-            matmul(&mut ye, &hid, w2, t, f, d);
+            mm(pool, &mut ye, &hid, w2, t, f, d);
             Ok(vec![ye])
         }
         // logits = y@w_out; loss = -mean(logp[label]); (loss, dy, dw_out)
@@ -335,7 +364,7 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let labels = i1(args, 2, name)?;
             ensure!(labels.len() == t, "{name}: {} labels for {t} tokens", labels.len());
             let mut p = vec![0f32; t * k];
-            matmul(&mut p, y, w_out, t, d, k);
+            mm(pool, &mut p, y, w_out, t, d, k);
             softmax_rows(&mut p, t, k);
             let mut loss = 0f32;
             let inv_t = 1.0 / t as f32;
@@ -349,9 +378,9 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
                 p[i * k + lab as usize] -= inv_t;
             }
             let mut dy = vec![0f32; t * d];
-            matmul_bt(&mut dy, &p, w_out, t, k, d);
+            mm_bt(pool, &mut dy, &p, w_out, t, k, d);
             let mut dw_out = vec![0f32; d * k];
-            matmul_at(&mut dw_out, y, &p, t, d, k);
+            mm_at(pool, &mut dw_out, y, &p, t, d, k);
             Ok(vec![vec![loss * inv_t], dy, dw_out])
         }
         // VJP of expert_fwd (recompute-forward): (dxe, dw1, dw2)
@@ -361,22 +390,22 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let (xe, t, _) = f2(args, 2, name)?;
             let (dye, _, _) = f2(args, 3, name)?;
             let mut pre = vec![0f32; t * f];
-            matmul(&mut pre, xe, w1, t, d, f);
+            mm(pool, &mut pre, xe, w1, t, d, f);
             let mut hid = pre.clone();
             relu(&mut hid);
             let mut dw2 = vec![0f32; f * d];
-            matmul_at(&mut dw2, &hid, dye, t, f, d);
+            mm_at(pool, &mut dw2, &hid, dye, t, f, d);
             let mut dpre = vec![0f32; t * f];
-            matmul_bt(&mut dpre, dye, w2, t, d, f);
+            mm_bt(pool, &mut dpre, dye, w2, t, d, f);
             for (dp, &pr) in dpre.iter_mut().zip(&pre) {
                 if pr <= 0.0 {
                     *dp = 0.0;
                 }
             }
             let mut dw1 = vec![0f32; d * f];
-            matmul_at(&mut dw1, xe, &dpre, t, d, f);
+            mm_at(pool, &mut dw1, xe, &dpre, t, d, f);
             let mut dxe = vec![0f32; t * d];
-            matmul_bt(&mut dxe, &dpre, w1, t, f, d);
+            mm_bt(pool, &mut dxe, &dpre, w1, t, f, d);
             Ok(vec![dxe, dw1, dw2])
         }
         // VJP of s1_fwd given cotangents for h and probs: (dw_in, db_in, dwr)
@@ -388,7 +417,7 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let (dh, _, _) = f2(args, 4, name)?;
             let (dprobs, _, _) = f2(args, 5, name)?;
             let mut pre = vec![0f32; t * d];
-            matmul(&mut pre, x, w_in, t, din, d);
+            mm(pool, &mut pre, x, w_in, t, din, d);
             for row in pre.chunks_exact_mut(d) {
                 for (pv, &bv) in row.iter_mut().zip(b_in) {
                     *pv += bv;
@@ -397,14 +426,14 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
             let mut h = pre.clone();
             relu(&mut h);
             let mut probs = vec![0f32; t * r];
-            matmul(&mut probs, &h, wr, t, d, r);
+            mm(pool, &mut probs, &h, wr, t, d, r);
             softmax_rows(&mut probs, t, r);
             let mut dlogits = vec![0f32; t * r];
             softmax_vjp_rows(&mut dlogits, &probs, dprobs, t, r);
             let mut dwr = vec![0f32; d * r];
-            matmul_at(&mut dwr, &h, &dlogits, t, d, r);
+            mm_at(pool, &mut dwr, &h, &dlogits, t, d, r);
             let mut dh_total = vec![0f32; t * d];
-            matmul_bt(&mut dh_total, &dlogits, wr, t, r, d);
+            mm_bt(pool, &mut dh_total, &dlogits, wr, t, r, d);
             for (dv, &hv) in dh_total.iter_mut().zip(dh) {
                 *dv += hv;
             }
@@ -414,7 +443,7 @@ pub fn ref_stage(name: &str, args: &[StageArg]) -> Result<Vec<Vec<f32>>> {
                 }
             }
             let mut dw_in = vec![0f32; din * d];
-            matmul_at(&mut dw_in, x, &dh_total, t, din, d);
+            mm_at(pool, &mut dw_in, x, &dh_total, t, din, d);
             let mut db_in = vec![0f32; d];
             for row in dh_total.chunks_exact(d) {
                 for (bv, &dv) in db_in.iter_mut().zip(row) {
@@ -475,6 +504,7 @@ mod tests {
                     lit2(wr_, d, r).unwrap(),
                     lit2(&x, t, din).unwrap(),
                 ],
+                None,
             )
             .unwrap();
             let h = &out[0];
@@ -482,6 +512,7 @@ mod tests {
             let head = ref_stage(
                 "head_loss_bwd",
                 &[lit2(&w_out, d, k).unwrap(), lit2(h, t, d).unwrap(), lit1_i32(&labels)],
+                None,
             )
             .unwrap();
             // add a probs-dependent term so dwr is exercised: sum(probs^2)
@@ -497,12 +528,14 @@ mod tests {
                 lit2(&wr, d, r).unwrap(),
                 lit2(&x, t, din).unwrap(),
             ],
+            None,
         )
         .unwrap();
         let (h, probs) = (&out[0], &out[1]);
         let head = ref_stage(
             "head_loss_bwd",
             &[lit2(&w_out, d, k).unwrap(), lit2(h, t, d).unwrap(), lit1_i32(&labels)],
+            None,
         )
         .unwrap();
         let dh = &head[1];
@@ -517,6 +550,7 @@ mod tests {
                 lit2(dh, t, d).unwrap(),
                 lit2(&dprobs, t, r).unwrap(),
             ],
+            None,
         )
         .unwrap();
 
@@ -570,6 +604,7 @@ mod tests {
                     lit2(&w2, f, d).unwrap(),
                     lit2(xe_, t, d).unwrap(),
                 ],
+                None,
             )
             .unwrap();
             0.5 * out[0].iter().map(|&v| v * v).sum::<f32>()
@@ -577,6 +612,7 @@ mod tests {
         let out = ref_stage(
             "expert_fwd",
             &[lit2(&w1, d, f).unwrap(), lit2(&w2, f, d).unwrap(), lit2(&xe, t, d).unwrap()],
+            None,
         )
         .unwrap();
         let ye = &out[0];
@@ -588,6 +624,7 @@ mod tests {
                 lit2(&xe, t, d).unwrap(),
                 lit2(ye, t, d).unwrap(),
             ],
+            None,
         )
         .unwrap();
         let mut checked = 0usize;
@@ -622,7 +659,86 @@ mod tests {
 
     #[test]
     fn unknown_stage_and_bad_args_error() {
-        assert!(ref_stage("nope", &[]).is_err());
-        assert!(ref_stage("s1_fwd", &[lit1(&[1.0])]).is_err());
+        assert!(ref_stage("nope", &[], None).is_err());
+        assert!(ref_stage("s1_fwd", &[lit1(&[1.0])], None).is_err());
+    }
+
+    /// The per-rank threading contract: every stage produces bit-identical
+    /// outputs with and without a pool (cutoff 0 so these test-sized
+    /// shapes actually ride the pooled kernels). This is what lets the
+    /// distributed engine hand each rank a thread budget without
+    /// re-qualifying the dist numerics.
+    #[test]
+    fn ref_stage_pooled_matches_sequential_bitwise() {
+        let (t, din, d, r, f, k) = (9usize, 5usize, 8usize, 4usize, 7usize, 3usize);
+        let mut rng = Rng::new(29);
+        let rand_vec = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+        };
+        let w_in = rand_vec(&mut rng, din * d);
+        let b_in = rand_vec(&mut rng, d);
+        let wr = rand_vec(&mut rng, d * r);
+        let x = rand_vec(&mut rng, t * din);
+        let w_out = rand_vec(&mut rng, d * k);
+        let w1 = rand_vec(&mut rng, d * f);
+        let w2 = rand_vec(&mut rng, f * d);
+        let xe = rand_vec(&mut rng, t * d);
+        let dye = rand_vec(&mut rng, t * d);
+        let dh = rand_vec(&mut rng, t * d);
+        let dprobs = rand_vec(&mut rng, t * r);
+        let labels: Vec<i32> = (0..t).map(|i| (i % k) as i32).collect();
+
+        let stages: Vec<(&str, Vec<StageArg>)> = vec![
+            (
+                "s1_fwd",
+                vec![
+                    lit2(&w_in, din, d).unwrap(),
+                    lit1(&b_in),
+                    lit2(&wr, d, r).unwrap(),
+                    lit2(&x, t, din).unwrap(),
+                ],
+            ),
+            (
+                "expert_fwd",
+                vec![lit2(&w1, d, f).unwrap(), lit2(&w2, f, d).unwrap(), lit2(&xe, t, d).unwrap()],
+            ),
+            (
+                "head_loss_bwd",
+                vec![lit2(&w_out, d, k).unwrap(), lit2(&xe, t, d).unwrap(), lit1_i32(&labels)],
+            ),
+            (
+                "expert_bwd",
+                vec![
+                    lit2(&w1, d, f).unwrap(),
+                    lit2(&w2, f, d).unwrap(),
+                    lit2(&xe, t, d).unwrap(),
+                    lit2(&dye, t, d).unwrap(),
+                ],
+            ),
+            (
+                "s1_bwd",
+                vec![
+                    lit2(&w_in, din, d).unwrap(),
+                    lit1(&b_in),
+                    lit2(&wr, d, r).unwrap(),
+                    lit2(&x, t, din).unwrap(),
+                    lit2(&dh, t, d).unwrap(),
+                    lit2(&dprobs, t, r).unwrap(),
+                ],
+            ),
+        ];
+        for (name, args) in &stages {
+            let want = ref_stage(name, args, None).unwrap();
+            for threads in [2usize, 4] {
+                let pool = ThreadPool::with_cutoff(threads, 0);
+                let got = ref_stage(name, args, Some(&pool)).unwrap();
+                assert_eq!(want.len(), got.len(), "{name}: output arity");
+                for (oi, (w, g)) in want.iter().zip(&got).enumerate() {
+                    let same = w.len() == g.len()
+                        && w.iter().zip(g).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "{name} output {oi} diverged at {threads} threads");
+                }
+            }
+        }
     }
 }

@@ -27,9 +27,10 @@
 //! model once), `backend-ref` is a deterministic pure-Rust reference
 //! engine with zero non-std dependencies -- the configuration CI's
 //! tier-1 gate builds and tests on a stock toolchain -- and `backend-par`
-//! runs that same engine on a deterministic std-thread pool
-//! (`runtime::tensor::ThreadPool`), bit-identical to `backend-ref` at
-//! any thread count.
+//! runs that same engine on a deterministic persistent-worker std-thread
+//! pool (`runtime::tensor::ThreadPool`, also the per-rank thread budget
+//! of the [`distributed`] engine's stage math), bit-identical to
+//! `backend-ref` at any thread count.
 //!
 //! See DESIGN.md for the experiment index and EXPERIMENTS.md for measured
 //! reproductions of every table and figure in the paper.

@@ -22,6 +22,7 @@ use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
 use gating_dropout::util::error::Result;
+use gating_dropout::util::json::Json;
 
 const USAGE: &str = "\
 repro -- Gating Dropout (ICML 2022) reproduction
@@ -35,7 +36,11 @@ COMMANDS:
                            GD_THREADS env var overrides)
   scaling  --cluster v100|a100 [--gpus 8,16,32,64,128] [--workload wmt10|web50]
   sweep    [--rates 0,0.1,...] [--gpus 16] (Fig 6 throughput axis)
-  dist     [--policy P] [--steps N] [--seed S] (real multi-worker engine)
+  dist     [--policy P] [--steps N] [--seed S] [--threads N] [--config FILE]
+           (real multi-worker engine; --threads = stage-math workers PER
+            RANK, 0 = auto: machine parallelism divided across ranks.
+            GD_THREADS env overrides; thread count never changes the
+            losses -- the pooled stage kernels are bit-identical)
   eval     --run-preset P --checkpoint DIR
   serve    --run-preset P [--requests N] [--mean-gap T] [--max-batch B]
            [--max-wait-ticks W] [--queue-cap C] [--seed S] [--threads N]
@@ -206,18 +211,50 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_dist(args: &Args) -> Result<()> {
-    let policy = Policy::parse(args.get_or("policy", "gate-drop:0.3"))
-        .ok_or_else(|| gating_dropout::err!("bad policy"))?;
-    let default_artifacts = DistRunConfig::default().artifact_dir;
-    let cfg = DistRunConfig {
-        artifact_dir: args.get_or("artifacts", &default_artifacts).to_string(),
-        n_ranks: args.usize("ranks", 4),
-        steps: args.u64("steps", 30),
-        policy,
-        seed: args.u64("seed", 7),
-        lr: args.f64("lr", 2e-3) as f32,
+    // Defaults: the dist engine's own (NOT the train RunConfig's -- a
+    // partial JSON must not silently flip policy/steps/seed), overridden
+    // by exactly the keys a `--config FILE` sets, overridden by CLI
+    // flags; GD_THREADS overrides the thread knob inside the engine.
+    let mut def = DistRunConfig::default();
+    let mut def_policy = Policy::GateDrop { p: 0.3 };
+    if let Some(f) = args.get("config") {
+        let text = std::fs::read_to_string(f)
+            .map_err(|e| gating_dropout::err!("reading {f}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| gating_dropout::err!("{f}: {e}"))?;
+        if let Some(v) = j.get("policy").and_then(Json::as_str) {
+            def_policy =
+                Policy::parse(v).ok_or_else(|| gating_dropout::err!("{f}: bad policy '{v}'"))?;
+        }
+        if let Some(v) = j.get("steps").and_then(Json::as_i64).filter(|&v| v >= 0) {
+            def.steps = v as u64;
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64).filter(|&v| v >= 0) {
+            def.seed = v as u64;
+        }
+        if let Some(v) = j.get("threads").and_then(Json::as_usize) {
+            def.threads = v;
+        }
+    }
+    let policy = match args.get("policy") {
+        Some(p) => Policy::parse(p).ok_or_else(|| gating_dropout::err!("bad policy"))?,
+        None => def_policy,
     };
-    eprintln!("[dist] policy={} ranks={} steps={}", policy.name(), cfg.n_ranks, cfg.steps);
+    let cfg = DistRunConfig {
+        artifact_dir: args.get_or("artifacts", &def.artifact_dir).to_string(),
+        n_ranks: args.usize("ranks", def.n_ranks),
+        steps: args.u64("steps", def.steps),
+        policy,
+        seed: args.u64("seed", def.seed),
+        lr: args.f64("lr", 2e-3) as f32,
+        threads: args.usize("threads", def.threads),
+    };
+    eprintln!(
+        "[dist] policy={} ranks={} steps={} threads/rank={}",
+        policy.name(),
+        cfg.n_ranks,
+        cfg.steps,
+        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
+    );
     let res = DistEngine::run(&cfg)?;
     let first = res.losses.first().copied().unwrap_or(f32::NAN);
     let last = res.losses.last().copied().unwrap_or(f32::NAN);

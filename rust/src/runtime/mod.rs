@@ -13,9 +13,10 @@
 //!   kernels -- zero non-std dependencies, no artifacts on disk. This is
 //!   the engine CI's tier-1 gate runs.
 //! * `ParallelBackend` (cargo feature `backend-par`): the reference engine
-//!   on the [`tensor::ThreadPool`] -- std threads only, fixed chunk
-//!   schedule, in-order reductions, bit-identical to [`ReferenceBackend`]
-//!   at any thread count.
+//!   on the [`tensor::ThreadPool`] -- persistent parked std-thread
+//!   workers, fixed chunk schedule, in-order reductions, bit-identical to
+//!   [`ReferenceBackend`] at any thread count. The same pool type carries
+//!   the distributed engine's per-rank stage math.
 //!
 //! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes and
 //! dtypes are manifest-driven -- nothing is hard-coded) and can also

@@ -74,9 +74,9 @@ use crate::util::rng::Rng;
 
 use super::backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
 use super::manifest::{DType, Manifest, ModelDims, TensorSpec};
+use super::tensor;
 use super::tensor::{
-    argmax, axpy, dot, logsumexp, matmul, matmul_at, matmul_at_par, matmul_bt, matmul_bt_par,
-    matmul_par, relu, softmax_rows, softmax_vjp_rows, ThreadPool,
+    argmax, axpy, dot, logsumexp, relu, softmax_rows, softmax_vjp_rows, ThreadPool,
 };
 
 const JITTER_EPS: f32 = 0.01;
@@ -218,8 +218,19 @@ impl ReferenceBackend {
     /// threaded path. `threads <= 1` still routes through the pool
     /// machinery (a one-worker pool), which the parity suite uses to
     /// prove the machinery itself is numerics-neutral.
+    ///
+    /// Panics if `GD_SEQ_CUTOFF` is set to garbage (it resolves the
+    /// cutoff via [`ThreadPool::new`]); callers that want the parse
+    /// error as a `Result` resolve it themselves and use
+    /// [`ReferenceBackend::attach_thread_pool`].
     pub fn set_thread_pool(&mut self, threads: usize) {
-        self.pool = Some(ThreadPool::new(threads));
+        self.attach_thread_pool(ThreadPool::new(threads));
+    }
+
+    /// Attach a caller-built pool (env knobs already resolved -- the
+    /// loud-error path `ParallelBackend::with_threads` uses).
+    pub fn attach_thread_pool(&mut self, pool: ThreadPool) {
+        self.pool = Some(pool);
     }
 
     /// Worker threads in use (1 when no pool is attached).
@@ -294,27 +305,20 @@ impl ReferenceBackend {
         &self.params[self.params.len() - 1]
     }
 
-    // Kernel dispatch: the threaded path when a pool is attached, the
-    // plain cache-blocked kernel otherwise. Bit-identical either way.
+    // Kernel dispatch through the shared `tensor` seam (the same three
+    // entry points the distributed stage runner uses): the threaded path
+    // when a pool is attached, the plain cache-blocked kernel otherwise.
+    // Bit-identical either way.
     fn mm(&self, out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-        match &self.pool {
-            Some(p) => matmul_par(p, out, a, b, m, k, n),
-            None => matmul(out, a, b, m, k, n),
-        }
+        tensor::mm(self.pool.as_ref(), out, a, b, m, k, n);
     }
 
     fn mm_at(&self, out: &mut [f32], a: &[f32], b: &[f32], s: usize, m: usize, n: usize) {
-        match &self.pool {
-            Some(p) => matmul_at_par(p, out, a, b, s, m, n),
-            None => matmul_at(out, a, b, s, m, n),
-        }
+        tensor::mm_at(self.pool.as_ref(), out, a, b, s, m, n);
     }
 
     fn mm_bt(&self, out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-        match &self.pool {
-            Some(p) => matmul_bt_par(p, out, a, b, m, k, n),
-            None => matmul_bt(out, a, b, m, k, n),
-        }
+        tensor::mm_bt(self.pool.as_ref(), out, a, b, m, k, n);
     }
 
     fn check_batch(&self, rows: usize, len: usize) -> BackendResult<()> {

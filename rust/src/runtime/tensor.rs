@@ -1,6 +1,7 @@
 //! Small cache-blocked f32 tensor kernels for the pure-Rust
 //! [`ReferenceBackend`](super::ReferenceBackend), plus the [`ThreadPool`]
-//! seam the deterministic threaded backend (`backend-par`) builds on.
+//! seam the deterministic threaded backend (`backend-par`) and the
+//! distributed stage runner build on.
 //!
 //! Everything is row-major and allocation-free (callers own the output
 //! buffers). The matmul family covers the three orientations a manual
@@ -27,7 +28,24 @@
 //! sequential kernel on a row sub-range). Floating-point summation order
 //! is therefore *identical* at any thread count, which makes the parallel
 //! kernels bit-for-bit equal to the sequential ones -- the property the
-//! `backend-par` engine's cross-backend parity suite pins.
+//! `backend-par` engine's cross-backend parity suite pins. Persistent
+//! workers do not weaken this: the chunk *contents* are a pure function
+//! of (rows, pool width, cutoff), and which OS thread happens to execute
+//! a chunk cannot change the bits it writes.
+//!
+//! # The shared kernel seam
+//!
+//! [`mm`] / [`mm_at`] / [`mm_bt`] are the dispatch points every engine
+//! routes matmuls through: the pooled kernel when an optional pool is
+//! attached, the plain cache-blocked kernel otherwise. The single-process
+//! reference engine (`runtime/reference.rs`) and the distributed stage
+//! runner (`distributed/stages.rs`) both call them, so threading either
+//! path is a matter of handing it a pool -- and the bit-identity argument
+//! above covers both at once.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::util::error::Result;
 
 /// Block size over the shared (k) dimension: 64 rows of a 1k-wide f32 `b`
 /// panel is 256 KiB -- comfortably inside L2 next to one output row.
@@ -175,61 +193,345 @@ pub fn argmax(row: &[f32]) -> usize {
 }
 
 /// Output-element count below which the pooled kernels fall back to the
-/// sequential path. Each `run_parts` call spawns its workers fresh (tens
-/// of microseconds per worker), which dominates regions this small; the
-/// fallback is bit-identical by construction (the chunked kernels re-run
-/// the sequential kernels), so it is purely a scheduling decision.
-/// Override per pool with [`ThreadPool::set_seq_cutoff`] or globally with
-/// the `GD_SEQ_CUTOFF` env var (`0` keeps every region on the pool --
-/// what the parity suites use to exercise the threaded paths at
-/// test-sized models).
-pub const DEFAULT_SEQ_CUTOFF: usize = 16 * 1024;
+/// sequential path. With persistent workers a dispatch costs one condvar
+/// broadcast plus a handful of uncontended mutex hops (order a
+/// microsecond) instead of the scoped-spawn era's fresh `std::thread`
+/// per worker per region (tens of microseconds) -- which is why this
+/// cutoff is 8x lower than the 16Ki that PR 4 tuned for scoped spawns.
+/// `bench_pool_dispatch` in `rust/benches/microbench.rs` measures both
+/// dispatch paths at sub-cutoff sizes; re-tune against its numbers if
+/// the pool internals change. The fallback is bit-identical by
+/// construction (the chunked kernels re-run the sequential kernels), so
+/// it is purely a scheduling decision. Override per pool with
+/// [`ThreadPool::set_seq_cutoff`] or globally with the `GD_SEQ_CUTOFF`
+/// env var (`0` keeps every region on the pool -- what the parity suites
+/// use to exercise the threaded paths at test-sized models).
+pub const DEFAULT_SEQ_CUTOFF: usize = 2 * 1024;
+
+/// Parse a `GD_SEQ_CUTOFF` value. Garbage errors loudly: the pre-PR-5
+/// behavior silently fell back to the default, which turned typos like
+/// `GD_SEQ_CUTOFF=16k` into invisible misconfiguration.
+pub fn parse_gd_seq_cutoff(raw: &str) -> Result<usize> {
+    raw.trim().parse::<usize>().map_err(|_| {
+        crate::err!(
+            "GD_SEQ_CUTOFF: invalid value '{raw}' (want a non-negative element count; \
+             0 = never fall back to the sequential path)"
+        )
+    })
+}
 
 /// Resolve the small-work cutoff: the `GD_SEQ_CUTOFF` env var wins
 /// (including an explicit `0` = never fall back), then
-/// [`DEFAULT_SEQ_CUTOFF`].
-pub fn resolve_seq_cutoff() -> usize {
-    std::env::var("GD_SEQ_CUTOFF")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(DEFAULT_SEQ_CUTOFF)
+/// [`DEFAULT_SEQ_CUTOFF`]. An unparsable env value is an error, not a
+/// silent default.
+pub fn resolve_seq_cutoff() -> Result<usize> {
+    match std::env::var("GD_SEQ_CUTOFF") {
+        Ok(v) => parse_gd_seq_cutoff(&v),
+        Err(_) => Ok(DEFAULT_SEQ_CUTOFF),
+    }
 }
 
-/// A scoped worker pool over plain `std::thread` (no rayon, no unsafe).
+/// Parse a `GD_THREADS` value: `0` means "auto" (fall through to the
+/// config / machine resolution). Garbage errors loudly instead of
+/// silently resolving to auto.
+pub fn parse_gd_threads(raw: &str) -> Result<Option<usize>> {
+    match raw.trim().parse::<usize>() {
+        Ok(0) => Ok(None),
+        Ok(n) => Ok(Some(n)),
+        Err(_) => crate::bail!(
+            "GD_THREADS: invalid value '{raw}' (want a non-negative integer; 0 = auto)"
+        ),
+    }
+}
+
+/// The explicitly-requested worker-thread count, if any: the `GD_THREADS`
+/// env var wins, then a non-zero `config_threads`; `None` means nobody
+/// asked ("auto"). The distributed engine uses this to distinguish "the
+/// operator wants N workers per rank" from "divide the machine across
+/// ranks" -- see `distributed::engine`.
+pub fn resolve_threads_explicit(config_threads: usize) -> Result<Option<usize>> {
+    if let Ok(v) = std::env::var("GD_THREADS") {
+        if let Some(n) = parse_gd_threads(&v)? {
+            return Ok(Some(n));
+        }
+    }
+    Ok((config_threads > 0).then_some(config_threads))
+}
+
+/// Resolve the worker-thread count for a single engine: the `GD_THREADS`
+/// env var wins, then a non-zero `config_threads`, then the machine's
+/// available parallelism. `0` means "auto" at every level; an unparsable
+/// env value is an error, not a silent auto.
+pub fn resolve_threads(config_threads: usize) -> Result<usize> {
+    Ok(resolve_threads_explicit(config_threads)?
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get())))
+}
+
+/// A persistent-worker pool over plain `std::thread`.
 ///
-/// The pool is a *schedule*, not a set of live threads: each
-/// [`ThreadPool::run_parts`] call opens one `std::thread::scope`, fans the
-/// caller's pre-split work parts out over at most `threads` workers
-/// (contiguous groups, fixed assignment -- no work stealing), runs the
-/// first group on the calling thread, and joins before returning. Workers
-/// only ever touch the disjoint `&mut` parts the caller split off, so the
-/// borrow checker proves race freedom and results cannot depend on the
-/// thread count. This is the seam future SIMD / remote backends build on:
-/// anything expressible as "disjoint output parts + shared read-only
-/// inputs" parallelizes deterministically through it.
+/// Construction spawns `threads - 1` long-lived workers parked on a
+/// condvar (the calling thread is worker 0); every
+/// [`ThreadPool::run_parts`] call publishes one job -- the caller's
+/// pre-split work parts, grouped into the same fixed contiguous chunk
+/// groups the scoped-spawn pool used -- wakes the workers, has caller and
+/// workers claim whole groups until none remain, and returns only after
+/// every group has finished. Dropping the last handle to the pool signals
+/// shutdown and **joins every worker**, so pools cannot leak threads
+/// across repeated construction.
 ///
-/// Small regions skip the pool entirely: work whose output-element count
-/// is below `seq_cutoff` runs on the calling thread through the same
-/// sequential kernels ([`ThreadPool::workers_for`]). Results are
-/// bit-identical either way -- the cutoff only decides whether threads
-/// are spawned.
-#[derive(Debug, Clone)]
+/// Determinism is unchanged from the scoped pool: group *contents* are a
+/// pure function of the part count and the pool width (contiguous
+/// groups, fixed assignment of parts to groups -- no work stealing
+/// *within* a group), every part is moved into exactly one executor, and
+/// outputs are the disjoint `&mut` parts the caller split off. Which OS
+/// thread claims which group varies run to run, but cannot affect the
+/// bits any part writes. What changed is the price: dispatch costs a
+/// condvar wakeup instead of a fresh thread spawn per worker per region,
+/// which is what lets [`DEFAULT_SEQ_CUTOFF`] sit 8x lower than the
+/// scoped-spawn era and lets tiny regions (serve-time ragged batches,
+/// per-rank expert shards in the distributed sim) parallelize profitably.
+///
+/// Small regions still skip the pool entirely: work whose output-element
+/// count is below `seq_cutoff` runs on the calling thread through the
+/// same sequential kernels ([`ThreadPool::workers_for`]). Results are
+/// bit-identical either way -- the cutoff only decides whether workers
+/// are woken.
+///
+/// Clones share the same worker set (cheap handles); jobs from
+/// concurrent callers serialize on an internal lock. `run_parts` is NOT
+/// reentrant -- a part callback must not dispatch onto the pool it runs
+/// on (it would deadlock on that lock).
 pub struct ThreadPool {
     threads: usize,
     seq_cutoff: usize,
+    /// `None` when `threads <= 1`: a one-thread pool has no workers to
+    /// park and runs everything inline.
+    workers: Option<Arc<WorkerSet>>,
+}
+
+impl Clone for ThreadPool {
+    /// Clones share the underlying workers (no new threads are spawned);
+    /// the last handle dropped joins them.
+    fn clone(&self) -> ThreadPool {
+        ThreadPool {
+            threads: self.threads,
+            seq_cutoff: self.seq_cutoff,
+            workers: self.workers.clone(),
+        }
+    }
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool")
+            .field("threads", &self.threads)
+            .field("seq_cutoff", &self.seq_cutoff)
+            .finish()
+    }
+}
+
+/// One pending job: a type-erased group runner plus claim/completion
+/// counters. The `'static` on `run` is a lie told under a barrier -- see
+/// the safety comment in [`WorkerSet::run`].
+struct Job {
+    run: &'static (dyn Fn(usize) + Sync),
+    next: usize,
+    groups: usize,
+    unfinished: usize,
+}
+
+struct PoolState {
+    job: Option<Job>,
+    shutdown: bool,
+    /// First panic message out of any group of the current job; the
+    /// dispatching caller re-raises it after the completion barrier.
+    panic: Option<String>,
+}
+
+struct PoolCore {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The dispatching caller parks here until `unfinished == 0`.
+    done: Condvar,
+}
+
+/// The long-lived workers plus the handles needed to join them. Owned
+/// behind an `Arc` so `ThreadPool` clones share one set; the `Drop` of
+/// the *last* handle signals shutdown and joins every worker.
+struct WorkerSet {
+    core: Arc<PoolCore>,
+    /// Serializes jobs from concurrent callers (pool clones).
+    run_lock: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// Lock the pool state, shrugging off poisoning: user callbacks never run
+/// while this lock is held (they are caught with `catch_unwind` outside
+/// it), so a poisoned state mutex still holds consistent counters.
+fn lock_state(core: &PoolCore) -> MutexGuard<'_, PoolState> {
+    core.state.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+/// Mark one group finished (recording its panic, if any) and wake the
+/// caller when it was the last.
+fn finish_group(core: &PoolCore, res: std::thread::Result<()>) {
+    let mut st = lock_state(core);
+    if let Err(p) = res {
+        let msg = payload_msg(p.as_ref());
+        st.panic.get_or_insert(msg);
+    }
+    let job = st.job.as_mut().expect("job stays published until the barrier");
+    job.unfinished -= 1;
+    if job.unfinished == 0 {
+        core.done.notify_all();
+    }
+}
+
+fn worker_loop(core: &PoolCore) {
+    let mut st = lock_state(core);
+    loop {
+        if st.shutdown {
+            return;
+        }
+        let claim = match st.job.as_mut() {
+            Some(job) if job.next < job.groups => {
+                job.next += 1;
+                Some((job.run, job.next - 1))
+            }
+            _ => None,
+        };
+        match claim {
+            Some((run, gi)) => {
+                drop(st);
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(gi)));
+                finish_group(core, res);
+                st = lock_state(core);
+            }
+            None => {
+                st = core.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+}
+
+impl WorkerSet {
+    fn spawn(threads: usize) -> WorkerSet {
+        let core = Arc::new(PoolCore {
+            state: Mutex::new(PoolState { job: None, shutdown: false, panic: None }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..threads - 1)
+            .map(|i| {
+                let core = Arc::clone(&core);
+                std::thread::Builder::new()
+                    .name(format!("gd-pool-{i}"))
+                    .spawn(move || worker_loop(&core))
+                    .expect("spawn ThreadPool worker")
+            })
+            .collect();
+        WorkerSet { core, run_lock: Mutex::new(()), handles }
+    }
+
+    /// Publish `groups` claimable group indices for `run`, participate in
+    /// claiming, and return once every group has finished. Re-raises the
+    /// first worker panic after the barrier.
+    fn run(&self, run: &(dyn Fn(usize) + Sync), groups: usize) {
+        let serial = self.run_lock.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: `run` borrows the caller's stack (the part groups and
+        // the part callback). The lifetime is erased to publish it to the
+        // parked workers, which is sound because this function is a
+        // barrier: it does not return -- and therefore the borrow cannot
+        // end -- until `unfinished` hits zero, and a worker only holds
+        // `run` between claiming a group and decrementing `unfinished`
+        // (panics included, via `catch_unwind`). After the barrier the
+        // job is unpublished, so no worker can observe the stale pointer.
+        let run: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(run)
+        };
+        {
+            let mut st = lock_state(&self.core);
+            debug_assert!(st.job.is_none(), "run_lock serializes jobs");
+            st.job = Some(Job { run, next: 0, groups, unfinished: groups });
+            self.core.work.notify_all();
+        }
+        // The calling thread is worker 0: claim groups like everyone
+        // else until none remain.
+        loop {
+            let gi = {
+                let mut st = lock_state(&self.core);
+                let job = st.job.as_mut().expect("job stays published until the barrier");
+                if job.next < job.groups {
+                    job.next += 1;
+                    Some(job.next - 1)
+                } else {
+                    None
+                }
+            };
+            let Some(gi) = gi else { break };
+            let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run(gi)));
+            finish_group(&self.core, res);
+        }
+        // Completion barrier: the erased borrow must outlive every use.
+        let mut st = lock_state(&self.core);
+        while st.job.as_ref().expect("job stays published until the barrier").unfinished > 0 {
+            st = self.core.done.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        let panicked = st.panic.take();
+        drop(st);
+        drop(serial);
+        if let Some(msg) = panicked {
+            panic!("ThreadPool worker panicked: {msg}");
+        }
+    }
+}
+
+impl Drop for WorkerSet {
+    /// Joins every worker: after the last pool handle drops, no pool
+    /// thread outlives it.
+    fn drop(&mut self) {
+        {
+            let mut st = lock_state(&self.core);
+            st.shutdown = true;
+        }
+        self.core.work.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
 }
 
 impl ThreadPool {
     /// A pool that fans work out to `threads` workers (clamped to >= 1),
     /// with the resolved small-work cutoff ([`resolve_seq_cutoff`]).
+    /// Spawns the `threads - 1` persistent workers immediately.
+    ///
+    /// Panics if `GD_SEQ_CUTOFF` is set to an unparsable value (loud
+    /// failure; use [`resolve_seq_cutoff`] + [`ThreadPool::with_cutoff`]
+    /// to surface the error as a `Result` instead).
     pub fn new(threads: usize) -> ThreadPool {
-        Self::with_cutoff(threads, resolve_seq_cutoff())
+        let cutoff = resolve_seq_cutoff().unwrap_or_else(|e| panic!("{e}"));
+        Self::with_cutoff(threads, cutoff)
     }
 
     /// A pool with an explicit small-work cutoff (`0` = never fall back;
     /// the parity suites use this to keep tiny models on the pool).
     pub fn with_cutoff(threads: usize, seq_cutoff: usize) -> ThreadPool {
-        ThreadPool { threads: threads.max(1), seq_cutoff }
+        let threads = threads.max(1);
+        let workers = (threads > 1).then(|| Arc::new(WorkerSet::spawn(threads)));
+        ThreadPool { threads, seq_cutoff, workers }
     }
 
     pub fn threads(&self) -> usize {
@@ -245,8 +547,8 @@ impl ThreadPool {
     }
 
     /// Workers to schedule for a region producing `elements` output
-    /// elements: `1` (sequential fallback, no spawns) below the cutoff,
-    /// the full pool width otherwise.
+    /// elements: `1` (sequential fallback, nobody woken) below the
+    /// cutoff, the full pool width otherwise.
     pub fn workers_for(&self, elements: usize) -> usize {
         if elements < self.seq_cutoff {
             1
@@ -256,61 +558,67 @@ impl ThreadPool {
     }
 
     /// Run `f(part_index, part)` for every part. Parts are distributed as
-    /// contiguous groups over the workers; the first group runs inline on
-    /// the calling thread (after the others are spawned). Panics in any
-    /// worker propagate at scope exit.
+    /// contiguous groups (the same grouping at every call with the same
+    /// part count -- never dependent on runtime timing); the persistent
+    /// workers and the calling thread claim whole groups until none
+    /// remain. Panics in any part propagate on the calling thread after
+    /// every group has finished.
     ///
     /// `T` is typically a tuple of disjoint `&mut [f32]` chunks plus the
     /// indices a worker needs; because each part is *moved* into exactly
-    /// one worker, outputs are race-free by construction.
+    /// one executor, outputs are race-free by construction.
     ///
-    /// Cost model: each call opens one `thread::scope` and spawns its
-    /// workers fresh (tens of microseconds per worker). That is noise for
-    /// the kernels the `backend-par` bench gates on (>= 512^2 outputs) but
-    /// real overhead for tiny parts, which is why the element-counting
-    /// entry points ([`ThreadPool::run_row_chunks`], the engine's chunked
-    /// paths via [`ThreadPool::workers_for`]) fall back to the sequential
-    /// kernels below `seq_cutoff`. `run_parts` itself takes opaque parts
-    /// and cannot count elements; callers gate it themselves. The parity
-    /// suites force the cutoff to `0` so test-sized models still exercise
-    /// every pooled path (a persistent worker pool remains a ROADMAP perf
-    /// follow-up).
+    /// Cost model: one condvar broadcast plus ~2 uncontended mutex hops
+    /// per group -- about a microsecond of dispatch overhead, vs tens of
+    /// microseconds per worker for the scoped-spawn pool this replaced
+    /// (kept as [`run_parts_scoped`] for the `bench_pool_dispatch`
+    /// baseline). The element-counting entry points
+    /// ([`ThreadPool::run_row_chunks`], the engine's chunked paths via
+    /// [`ThreadPool::workers_for`]) still fall back to the sequential
+    /// kernels below `seq_cutoff`; `run_parts` itself takes opaque parts
+    /// and cannot count elements, so callers gate it themselves.
+    ///
+    /// NOT reentrant: `f` must not dispatch onto this pool (jobs
+    /// serialize on an internal lock, so the nested call would deadlock).
     pub fn run_parts<T: Send>(&self, parts: Vec<T>, f: &(dyn Fn(usize, T) + Sync)) {
         let n = parts.len();
         if n == 0 {
             return;
         }
         let nt = self.threads.min(n);
-        if nt <= 1 {
-            for (i, p) in parts.into_iter().enumerate() {
-                f(i, p);
+        let ws = match &self.workers {
+            Some(ws) if nt > 1 => ws,
+            _ => {
+                for (i, p) in parts.into_iter().enumerate() {
+                    f(i, p);
+                }
+                return;
             }
-            return;
-        }
+        };
+        // Same fixed contiguous grouping as the scoped-spawn pool: the
+        // chunk schedule is part of the bit-identity contract.
         let per = n.div_ceil(nt);
-        let mut groups: Vec<Vec<(usize, T)>> = Vec::with_capacity(nt);
+        let mut groups: Vec<Mutex<Option<Vec<(usize, T)>>>> = Vec::with_capacity(nt);
         let mut it = parts.into_iter().enumerate();
         loop {
             let g: Vec<(usize, T)> = it.by_ref().take(per).collect();
             if g.is_empty() {
                 break;
             }
-            groups.push(g);
+            groups.push(Mutex::new(Some(g)));
         }
-        std::thread::scope(|s| {
-            let mut groups = groups.into_iter();
-            let inline = groups.next().expect("n > 0 so at least one group");
-            for g in groups {
-                s.spawn(move || {
-                    for (i, p) in g {
-                        f(i, p);
-                    }
-                });
-            }
-            for (i, p) in inline {
+        let ngroups = groups.len();
+        let run_group = |gi: usize| {
+            let g = groups[gi]
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .expect("each group is claimed exactly once");
+            for (i, p) in g {
                 f(i, p);
             }
-        });
+        };
+        ws.run(&run_group, ngroups);
     }
 
     /// Split `out` (row-major, rows of `row_len`) into one contiguous row
@@ -337,16 +645,47 @@ impl ThreadPool {
     }
 }
 
-/// Resolve the worker-thread count for the `backend-par` engine:
-/// the `GD_THREADS` env var wins, then a non-zero `config_threads`, then
-/// the machine's available parallelism. `0` means "auto" at every level.
-pub fn resolve_threads(config_threads: usize) -> usize {
-    std::env::var("GD_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .or((config_threads > 0).then_some(config_threads))
-        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+/// The scoped-spawn dispatch the persistent pool replaced: one
+/// `std::thread::scope` + fresh spawns per call, same fixed contiguous
+/// grouping. Kept as the old-vs-new baseline for `bench_pool_dispatch`
+/// in `rust/benches/microbench.rs` (like `moe::route_pack_naive` for the
+/// flat wire format); nothing on a hot path should call it.
+pub fn run_parts_scoped<T: Send>(threads: usize, parts: Vec<T>, f: &(dyn Fn(usize, T) + Sync)) {
+    let n = parts.len();
+    if n == 0 {
+        return;
+    }
+    let nt = threads.max(1).min(n);
+    if nt <= 1 {
+        for (i, p) in parts.into_iter().enumerate() {
+            f(i, p);
+        }
+        return;
+    }
+    let per = n.div_ceil(nt);
+    let mut groups: Vec<Vec<(usize, T)>> = Vec::with_capacity(nt);
+    let mut it = parts.into_iter().enumerate();
+    loop {
+        let g: Vec<(usize, T)> = it.by_ref().take(per).collect();
+        if g.is_empty() {
+            break;
+        }
+        groups.push(g);
+    }
+    std::thread::scope(|s| {
+        let mut groups = groups.into_iter();
+        let inline = groups.next().expect("n > 0 so at least one group");
+        for g in groups {
+            s.spawn(move || {
+                for (i, p) in g {
+                    f(i, p);
+                }
+            });
+        }
+        for (i, p) in inline {
+            f(i, p);
+        }
+    });
 }
 
 /// Parallel [`matmul`]: output rows are chunked over the pool and each
@@ -424,6 +763,61 @@ pub fn matmul_bt_par(
         let rows = chunk.len() / n;
         matmul_bt(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
     });
+}
+
+// ---------------------------------------------------------------------------
+// The shared kernel dispatch seam: pooled when a pool is attached,
+// sequential otherwise; bit-identical either way. Every engine (the
+// reference backend, the distributed stage runner) routes its matmuls
+// through these three entry points, so "thread this layer" always means
+// "hand it a pool" and never "fork the math".
+
+/// [`matmul`] through the optional-pool seam.
+pub fn mm(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) => matmul_par(p, out, a, b, m, k, n),
+        None => matmul(out, a, b, m, k, n),
+    }
+}
+
+/// [`matmul_at`] through the optional-pool seam.
+pub fn mm_at(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) => matmul_at_par(p, out, a, b, s, m, n),
+        None => matmul_at(out, a, b, s, m, n),
+    }
+}
+
+/// [`matmul_bt`] through the optional-pool seam.
+pub fn mm_bt(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match pool {
+        Some(p) => matmul_bt_par(p, out, a, b, m, k, n),
+        None => matmul_bt(out, a, b, m, k, n),
+    }
 }
 
 #[cfg(test)]
@@ -623,12 +1017,141 @@ mod tests {
         }
     }
 
+    /// Lifecycle: `Drop` joins every persistent worker, so repeated
+    /// construction cannot leak threads. Observed through the worker
+    /// set's shared `Arc`: each parked worker holds one strong count, and
+    /// `join` (which `Drop` performs) happens-after the worker released
+    /// it.
+    #[test]
+    fn drop_joins_every_worker_no_leak_across_repeated_construction() {
+        for round in 0..200 {
+            let pool = ThreadPool::with_cutoff(4, 0);
+            let core = Arc::clone(&pool.workers.as_ref().expect("4 threads => workers").core);
+            // 3 parked workers + the WorkerSet itself + this probe
+            assert_eq!(Arc::strong_count(&core), 5, "round {round}: workers missing");
+            let mut out = vec![0f32; 8 * 4];
+            pool.run_row_chunks(&mut out, 4, &|r0, c: &mut [f32]| c.fill(r0 as f32));
+            drop(pool);
+            assert_eq!(
+                Arc::strong_count(&core),
+                1,
+                "round {round}: Drop must join (and thereby release) every worker"
+            );
+        }
+        // a one-thread pool parks nobody
+        assert!(ThreadPool::with_cutoff(1, 0).workers.is_none());
+    }
+
+    /// One pool reused across thousands of tiny regions -- the serve-time
+    /// ragged-batch / distributed expert-shard shape -- stays bit-identical
+    /// to the sequential kernels on every single region.
+    #[test]
+    fn persistent_pool_reused_across_thousands_of_tiny_regions() {
+        let pool = ThreadPool::with_cutoff(4, 0);
+        let mut rng = Rng::new(77);
+        for round in 0..2000usize {
+            let m = 1 + round % 7;
+            let k = 1 + round % 13;
+            let n = 1 + round % 5;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let mut want = vec![0f32; m * n];
+            matmul(&mut want, &a, &b, m, k, n);
+            let mut got = vec![0f32; m * n];
+            matmul_par(&pool, &mut got, &a, &b, m, k, n);
+            assert!(
+                got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "region {round} ({m}x{k}x{n}) diverged on the reused pool"
+            );
+        }
+    }
+
+    /// A panic inside any part propagates on the calling thread (like the
+    /// scoped pool's scope-exit propagation) -- and the pool remains
+    /// usable afterwards: the job slot is cleared and the workers go back
+    /// to parking.
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::with_cutoff(4, 0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let parts: Vec<usize> = (0..8).collect();
+            pool.run_parts(parts, &|i, _| {
+                if i == 5 {
+                    panic!("part 5 exploded");
+                }
+            });
+        }));
+        let payload = result.expect_err("the part panic must propagate");
+        let msg = payload_msg(payload.as_ref());
+        assert!(msg.contains("part 5 exploded"), "got: {msg}");
+        // still dispatchable after the propagated panic
+        let mut hits = vec![0u32; 6];
+        let parts: Vec<&mut u32> = hits.iter_mut().collect();
+        pool.run_parts(parts, &|i, slot| *slot = i as u32 + 1);
+        assert_eq!(hits, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    /// Clones share one worker set: dropping the original must not tear
+    /// the workers down under a surviving clone.
+    #[test]
+    fn clone_shares_workers_and_outlives_the_original() {
+        let pool = ThreadPool::with_cutoff(3, 0);
+        let clone = pool.clone();
+        drop(pool);
+        let mut out = vec![0f32; 9 * 2];
+        clone.run_row_chunks(&mut out, 2, &|r0, c: &mut [f32]| {
+            for (r, row) in c.chunks_exact_mut(2).enumerate() {
+                row.fill((r0 + r) as f32);
+            }
+        });
+        for (r, row) in out.chunks_exact(2).enumerate() {
+            assert!(row.iter().all(|&v| v == r as f32), "row {r}");
+        }
+    }
+
+    /// The scoped-spawn baseline kept for the microbench must keep
+    /// producing the identical part coverage (it shares the grouping
+    /// math with the persistent path).
+    #[test]
+    fn run_parts_scoped_covers_every_part() {
+        for threads in [1usize, 2, 4, 9] {
+            let mut hits = vec![0u32; 7];
+            let parts: Vec<&mut u32> = hits.iter_mut().collect();
+            run_parts_scoped(threads, parts, &|i, slot| *slot = i as u32 + 1);
+            assert_eq!(hits, vec![1, 2, 3, 4, 5, 6, 7], "threads={threads}");
+        }
+        run_parts_scoped(4, Vec::<usize>::new(), &|_, _| panic!("no parts"));
+    }
+
+    /// Env-knob parsing is strict: garbage errors loudly (naming the
+    /// variable) instead of silently resolving to a default. Pure string
+    /// parsers so the error branches are testable without racing other
+    /// tests on process-global env state.
+    #[test]
+    fn env_knob_parsing_is_strict() {
+        assert_eq!(parse_gd_threads("0").unwrap(), None, "0 = auto");
+        assert_eq!(parse_gd_threads("6").unwrap(), Some(6));
+        assert_eq!(parse_gd_threads(" 2 ").unwrap(), Some(2), "whitespace tolerated");
+        for bad in ["", "four", "-1", "3.5", "0x4"] {
+            let err = parse_gd_threads(bad).unwrap_err().to_string();
+            assert!(err.contains("GD_THREADS"), "'{bad}' error must name the var: {err}");
+            assert!(err.contains(bad) || bad.is_empty(), "'{bad}' error must echo the value");
+        }
+        assert_eq!(parse_gd_seq_cutoff("0").unwrap(), 0);
+        assert_eq!(parse_gd_seq_cutoff("16384").unwrap(), 16384);
+        for bad in ["", "lots", "-3", "1e4"] {
+            let err = parse_gd_seq_cutoff(bad).unwrap_err().to_string();
+            assert!(err.contains("GD_SEQ_CUTOFF"), "'{bad}' error must name the var: {err}");
+        }
+    }
+
     #[test]
     fn resolve_seq_cutoff_defaults_without_env() {
         // NOTE: does not touch GD_SEQ_CUTOFF (env mutation would race
-        // other tests); the override branch is plain parse-or-default.
+        // other tests); the override/error branches are covered by the
+        // pure parser test above.
         if std::env::var("GD_SEQ_CUTOFF").is_err() {
-            assert_eq!(resolve_seq_cutoff(), DEFAULT_SEQ_CUTOFF);
+            assert_eq!(resolve_seq_cutoff().unwrap(), DEFAULT_SEQ_CUTOFF);
         }
     }
 
@@ -637,9 +1160,46 @@ mod tests {
         // NOTE: does not touch GD_THREADS (env mutation would race other
         // tests); the env override is covered by the CI matrix instead.
         if std::env::var("GD_THREADS").is_err() {
-            assert_eq!(resolve_threads(3), 3);
+            assert_eq!(resolve_threads(3).unwrap(), 3);
+            assert_eq!(resolve_threads_explicit(3).unwrap(), Some(3));
+            assert_eq!(resolve_threads_explicit(0).unwrap(), None, "auto is not explicit");
         }
-        assert!(resolve_threads(0) >= 1);
+        assert!(resolve_threads(0).unwrap() >= 1);
+    }
+
+    /// The optional-pool dispatch seam is bit-neutral in both states.
+    #[test]
+    fn mm_seam_matches_kernels_bitwise() {
+        let (m, k, n) = (9usize, 67usize, 5usize);
+        let mut rng = Rng::new(41);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let ab: Vec<f32> = (0..m * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let pool = ThreadPool::with_cutoff(4, 0);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        let mut want = vec![0f32; m * n];
+        matmul(&mut want, &a, &b, m, k, n);
+        for p in [None, Some(&pool)] {
+            let mut got = vec![0f32; m * n];
+            mm(p, &mut got, &a, &b, m, k, n);
+            assert_eq!(bits(&got), bits(&want), "mm pool={}", p.is_some());
+        }
+        let mut want_at = vec![0f32; k * n];
+        matmul_at(&mut want_at, &a, &ab, m, k, n);
+        for p in [None, Some(&pool)] {
+            let mut got = vec![0f32; k * n];
+            mm_at(p, &mut got, &a, &ab, m, k, n);
+            assert_eq!(bits(&got), bits(&want_at), "mm_at pool={}", p.is_some());
+        }
+        let mut want_bt = vec![0f32; m * n];
+        matmul_bt(&mut want_bt, &a, &bt, m, k, n);
+        for p in [None, Some(&pool)] {
+            let mut got = vec![0f32; m * n];
+            mm_bt(p, &mut got, &a, &bt, m, k, n);
+            assert_eq!(bits(&got), bits(&want_bt), "mm_bt pool={}", p.is_some());
+        }
     }
 
     #[test]

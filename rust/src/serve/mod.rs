@@ -35,6 +35,14 @@
 //! `decode_batch` loop, but its decode artifact only accepts
 //! `[batch_rows, max_len]` buffers, so serving it the synthetic load
 //! fails with a typed `Shape` error at the first dispatch.
+//!
+//! Threading: serve-time regions are small (ragged batches of short
+//! rows), which under the scoped-spawn pool meant most of them fell
+//! below the 16Ki `seq_cutoff` and decoded sequentially. The persistent
+//! worker pool (PR 5) cut per-region dispatch from spawn cost to a
+//! condvar wakeup, and the re-tuned 2Ki default cutoff lets moderately
+//! sized ragged batches ride the `backend-par` pool -- bit-identical
+//! either way, so summaries and output hashes are unchanged.
 
 pub mod metrics;
 pub mod queue;

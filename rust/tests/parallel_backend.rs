@@ -132,14 +132,14 @@ fn thread_count_resolution_respects_env_override() {
     use gating_dropout::runtime::tensor::resolve_threads;
     match std::env::var("GD_THREADS").ok().and_then(|v| v.parse::<usize>().ok()) {
         Some(env_n) if env_n > 0 => {
-            assert_eq!(resolve_threads(0), env_n, "env must fill in for auto");
-            assert_eq!(resolve_threads(2), env_n, "env must override config");
+            assert_eq!(resolve_threads(0).unwrap(), env_n, "env must fill in for auto");
+            assert_eq!(resolve_threads(2).unwrap(), env_n, "env must override config");
             let be = ParallelBackend::with_threads("tiny", 1, 2).unwrap();
             assert_eq!(be.threads(), env_n, "engine must see the env override");
         }
         _ => {
-            assert_eq!(resolve_threads(3), 3, "config wins when no env override");
-            assert!(resolve_threads(0) >= 1, "auto resolves to >= 1");
+            assert_eq!(resolve_threads(3).unwrap(), 3, "config wins when no env override");
+            assert!(resolve_threads(0).unwrap() >= 1, "auto resolves to >= 1");
         }
     }
 }
