@@ -24,10 +24,21 @@
 //! asserted bit-identical first (the `decode_batch` contract), then
 //! tokens/sec for both. The batched win comes from amortizing per-forward
 //! overhead and streaming each weight panel across all requests' rows.
+//!
+//! `bench_routing` guards the PR-6 router seam: `topk(k=1)` is asserted
+//! bit-identical to the seed `top1` scan before any timing, then the
+//! selection + CSR pack cost and the dispatch fan-out (wire rows per
+//! token) are compared across top1 / topk / adaptive.
+//!
+//! The headline sections also emit machine-readable `BENCH_<section>.json`
+//! artifacts (schema `gd-bench-v1`; `GD_BENCH_DIR` picks the directory)
+//! so sweeps can diff runs without scraping the stdout tables.
 
 use std::sync::Arc;
 
-use gating_dropout::benchkit::{bench, fmt_ns, fmt_tps, report};
+use gating_dropout::benchkit::{
+    bench, bench_json_path, fmt_ns, fmt_tps, report, write_bench_json, BenchEntry,
+};
 use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::metrics::corpus_bleu;
@@ -115,7 +126,8 @@ fn dispatch_round_trip(
     }
 }
 
-fn bench_dispatch() {
+fn bench_dispatch() -> Vec<BenchEntry> {
+    let mut entries = Vec::new();
     println!("-- bench_dispatch: seed wire path vs flat-buffer two-phase path --");
     for (t, d, n_ranks, warmup, iters) in
         [(1024usize, 128usize, 4usize, 3, 20), (4096, 512, 4, 2, 10), (2048, 256, 8, 2, 10)]
@@ -148,7 +160,16 @@ fn bench_dispatch() {
             fmt_ns(seed.median_ns),
             fmt_ns(flat.median_ns),
         );
+        let tag = format!("dispatch_t{t}_d{d}_r{n_ranks}");
+        entries.push(BenchEntry::new(format!("{tag}_seed_median"), seed.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_flat_median"), flat.median_ns, "ns"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_speedup"),
+            seed.median_ns / flat.median_ns,
+            "x",
+        ));
     }
+    entries
 }
 
 /// The scoped-spawn dispatch the persistent pool replaced, driving the
@@ -260,7 +281,8 @@ fn bench_pool_dispatch() {
 /// Old-vs-new matmul: the cache-blocked single-thread baseline vs the
 /// same kernel over the deterministic ThreadPool (`backend-par`). Prints
 /// the speedup; asserts the two outputs are bit-identical first.
-fn bench_matmul_par() {
+fn bench_matmul_par() -> Vec<BenchEntry> {
+    let mut entries = Vec::new();
     let threads = resolve_threads(0).expect("GD_THREADS must parse");
     let pool = ThreadPool::new(threads);
     println!("-- bench_matmul_par: cache-blocked 1-thread vs ThreadPool({threads}) --");
@@ -295,14 +317,20 @@ fn bench_matmul_par() {
             fmt_ns(seq.median_ns),
             fmt_ns(par.median_ns),
         );
+        let tag = format!("matmul_{m}x{k}x{n}");
+        entries.push(BenchEntry::new(format!("{tag}_seq_median"), seq.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_par_median"), par.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_speedup"), seq.median_ns / par.median_ns, "x"));
     }
+    entries
 }
 
 /// Per-request sequential decode vs one ragged `decode_batch` over the
 /// same requests, on the tiny-preset reference model. Bit-equality is
 /// asserted before any timing (mirrors `bench_matmul_par`).
-fn bench_decode() {
+fn bench_decode() -> Vec<BenchEntry> {
     use gating_dropout::runtime::ReferenceBackend;
+    let mut entries = Vec::new();
     let be = ReferenceBackend::for_preset("tiny", 7).unwrap();
     let dm = be.manifest().dims.clone();
     println!("-- bench_decode: per-request decode loop vs ragged decode_batch --");
@@ -340,7 +368,59 @@ fn bench_decode() {
             fmt_tps(tokens / seq.median_secs()),
             fmt_tps(tokens / bat.median_secs()),
         );
+        let tag = format!("decode_{n_reqs}reqs");
+        entries.push(BenchEntry::new(format!("{tag}_seq_tps"), tokens / seq.median_secs(), "tok/s"));
+        entries.push(BenchEntry::new(format!("{tag}_bat_tps"), tokens / bat.median_secs(), "tok/s"));
+        entries.push(BenchEntry::new(format!("{tag}_speedup"), seq.median_ns / bat.median_ns, "x"));
     }
+    entries
+}
+
+/// Router selection + CSR pack cost across top1 / topk / adaptive, plus
+/// the dispatch fan-out each induces. The k=1 bit-equality contract (the
+/// whole point of the PR-6 refactor) is asserted before any timing.
+fn bench_routing() -> Vec<BenchEntry> {
+    let (t, e, d, n_ranks) = (4096usize, 16usize, 64usize, 4usize);
+    let topo = Topology::new(n_ranks, e);
+    let mut rng = Rng::new(29);
+    let probs: Vec<f32> = (0..t * e).map(|_| rng.uniform() as f32).collect();
+    let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+
+    // contract first: topk(1) must reproduce the seed top1 scan bit for bit
+    let (idx, gate) = moe::top1(&probs, t, e);
+    let k1 = moe::topk(&probs, t, e, 1);
+    assert_eq!(k1.experts, idx, "topk(1) must select the seed top1 experts");
+    assert!(
+        k1.gates.iter().zip(&gate).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "topk(1) gates must be bit-identical to top1"
+    );
+
+    let mut entries = Vec::new();
+    println!("-- bench_routing: selection + CSR pack, top1 vs topk vs adaptive --");
+    for router in [
+        moe::Router::Top1,
+        moe::Router::TopK { k: 2 },
+        moe::Router::Adaptive { thresh: 0.5, k_max: 4 },
+    ] {
+        let slots = router.route(&probs, t, e).n_slots();
+        let s = bench(3, 20, || {
+            let a = router.route(&probs, t, e);
+            let counts = topo.owner_counts(&a.experts);
+            std::hint::black_box(moe::route_pack_k(&topo, &x, d, &a, &counts));
+        });
+        let name =
+            format!("routing {} ({:.2} slots/token)", router.name(), slots as f64 / t as f64);
+        report(&name, &s);
+        let tag = format!("routing_{}", router.name());
+        entries.push(BenchEntry::new(format!("{tag}_median"), s.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_slots"), slots as f64, "rows"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_wire"),
+            (slots * (moe::HEADER + d) * 4) as f64,
+            "bytes",
+        ));
+    }
+    entries
 }
 
 fn main() {
@@ -374,13 +454,20 @@ fn main() {
     });
     report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
 
-    bench_dispatch();
-
-    bench_pool_dispatch();
-
-    bench_matmul_par();
-
-    bench_decode();
+    for (section, entries) in [
+        ("dispatch", bench_dispatch()),
+        ("routing", bench_routing()),
+        ("matmul_par", {
+            bench_pool_dispatch();
+            bench_matmul_par()
+        }),
+        ("decode", bench_decode()),
+    ] {
+        let path = bench_json_path(section);
+        write_bench_json(&path, &entries)
+            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("[bench] wrote {path} ({} entries)", entries.len());
+    }
 
     // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
     let s = bench(3, 20, || {

@@ -126,6 +126,46 @@ pub fn report_tps_speedup(
     speedup
 }
 
+/// One machine-readable benchmark result row.
+#[derive(Debug, Clone)]
+pub struct BenchEntry {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+}
+
+impl BenchEntry {
+    pub fn new(name: impl Into<String>, value: f64, unit: impl Into<String>) -> BenchEntry {
+        BenchEntry { name: name.into(), value, unit: unit.into() }
+    }
+}
+
+/// Write benchmark entries as a `BENCH_*.json` artifact (schema
+/// `gd-bench-v1`) so sweeps and CI can diff runs without scraping the
+/// human-readable tables. The microbench sections emit through this;
+/// `GD_BENCH_DIR` picks the output directory (default: cwd).
+pub fn write_bench_json(path: &str, entries: &[BenchEntry]) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    let rows: Vec<Json> = entries
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name.as_str())),
+                ("value", Json::num(e.value)),
+                ("unit", Json::str(e.unit.as_str())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![("schema", Json::str("gd-bench-v1")), ("entries", Json::Arr(rows))]);
+    std::fs::write(path, doc.to_string_pretty() + "\n")
+}
+
+/// `BENCH_<section>.json` under `GD_BENCH_DIR` (default ".").
+pub fn bench_json_path(section: &str) -> String {
+    let dir = std::env::var("GD_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    format!("{dir}/BENCH_{section}.json")
+}
+
 /// Format tokens/sec the way the paper does ("129k").
 pub fn fmt_tps(tps: f64) -> String {
     if tps >= 1e6 {
@@ -165,6 +205,27 @@ mod tests {
         assert!((s - 4.0).abs() < 1e-9);
         // degenerate timings stay finite
         assert!(report_tps_speedup("demo0", 10, "a", 0.0, "b", 0.0).is_finite());
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join(format!("gd_benchjson_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_demo.json");
+        let entries = [
+            BenchEntry::new("dispatch_rows", 128.0, "rows"),
+            BenchEntry::new("pack_median", 1250.5, "ns"),
+        ];
+        write_bench_json(path.to_str().unwrap(), &entries).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("gd-bench-v1"));
+        let rows = j.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").and_then(Json::as_str), Some("dispatch_rows"));
+        assert_eq!(rows[1].get("value").and_then(Json::as_f64), Some(1250.5));
+        assert_eq!(rows[1].get("unit").and_then(Json::as_str), Some("ns"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

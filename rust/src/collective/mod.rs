@@ -61,6 +61,38 @@ pub trait Collective {
     /// comm-savings numbers stay comparable with the seed.
     fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Vec<usize>;
 
+    /// Row-counted wrapper over [`Collective::all_to_all_f32`]: the caller
+    /// passes the per-destination **row** counts it packed (`send_rows`,
+    /// its own counts-phase input) and the per-source row counts it
+    /// expects (`recv_rows`, the counts-phase output), plus the row
+    /// `stride` in f32 elements. Debug builds assert every send buffer's
+    /// length equals `send_rows[dst] * stride` -- so a variable-fan-out
+    /// packing bug fails loudly at the wire, before it can desync the
+    /// receiver -- and the receive expectation is derived here instead of
+    /// at every call site.
+    fn all_to_all_rows(
+        &self,
+        rank: usize,
+        bufs: Vec<Vec<f32>>,
+        send_rows: &[usize],
+        recv_rows: &[usize],
+        stride: usize,
+    ) -> Vec<Vec<f32>> {
+        debug_assert_eq!(bufs.len(), send_rows.len(), "one send buffer per destination");
+        for (dst, b) in bufs.iter().enumerate() {
+            debug_assert_eq!(
+                b.len(),
+                send_rows[dst] * stride,
+                "send buffer for dst {dst} disagrees with the counts phase \
+                 (len {} != {} rows x stride {stride})",
+                b.len(),
+                send_rows[dst],
+            );
+        }
+        let expect: Vec<usize> = recv_rows.iter().map(|&c| c * stride).collect();
+        self.all_to_all_f32(rank, bufs, &expect)
+    }
+
     /// Element-wise sum across ranks; result replicated to every rank.
     fn all_reduce_sum(&self, rank: usize, data: &mut [f32]);
 
@@ -77,4 +109,53 @@ pub trait Collective {
 
     /// Rendezvous of all ranks.
     fn barrier(&self, rank: usize);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// The row-counted wrapper moves exactly the counts-phase volumes and
+    /// hands back per-source buffers sized `recv_rows[src] * stride`.
+    #[test]
+    fn all_to_all_rows_moves_counts_phase_volumes() {
+        let n = 2;
+        let stride = 4;
+        let fabric = Arc::new(ThreadFabric::new(n));
+        // send_rows[src][dst]; recv_rows is its transpose column
+        let send_rows = [vec![1usize, 2], vec![3usize, 1]];
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let fabric = fabric.clone();
+            let send = send_rows[rank].clone();
+            let recv: Vec<usize> = (0..n).map(|src| send_rows[src][rank]).collect();
+            handles.push(std::thread::spawn(move || {
+                let bufs: Vec<Vec<f32>> = send
+                    .iter()
+                    .enumerate()
+                    .map(|(dst, &rows)| vec![(rank * 10 + dst) as f32; rows * stride])
+                    .collect();
+                let got = fabric.all_to_all_rows(rank, bufs, &send, &recv, stride);
+                for (src, buf) in got.iter().enumerate() {
+                    assert_eq!(buf.len(), recv[src] * stride, "rank {rank} from {src}");
+                    assert!(buf.iter().all(|&v| v == (src * 10 + rank) as f32));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    /// A send buffer that disagrees with the counts phase must fail loudly
+    /// at the wire (debug builds), not corrupt rows downstream.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "disagrees with the counts phase")]
+    fn all_to_all_rows_rejects_desynced_buffer() {
+        let fabric = ThreadFabric::new(1);
+        // claims 1 row of stride 4 but packs only 3 elements
+        fabric.all_to_all_rows(0, vec![vec![0f32; 3]], &[1], &[1], 4);
+    }
 }

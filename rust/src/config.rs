@@ -46,6 +46,14 @@ pub struct RunConfig {
     /// Serving: waiting requests beyond this are shed at admission
     /// (Switch-style load shedding).
     pub queue_cap: usize,
+    /// Router on non-dropped steps: `top1` (seed default), `topk`,
+    /// `adaptive`. Resolved into a [`moe::Router`] by
+    /// [`RunConfig::router`].
+    pub router: String,
+    /// Fan-out for `--router topk`; also the `k_max` cap for `adaptive`.
+    pub topk: usize,
+    /// Cumulative gate-mass threshold for `--router adaptive`.
+    pub adaptive_thresh: f64,
 }
 
 impl Default for RunConfig {
@@ -68,6 +76,9 @@ impl Default for RunConfig {
             max_batch: 8,
             max_wait_ticks: 4,
             queue_cap: 64,
+            router: "top1".into(),
+            topk: 2,
+            adaptive_thresh: 0.5,
         }
     }
 }
@@ -187,6 +198,15 @@ impl RunConfig {
         if let Some(v) = j.get("queue_cap").and_then(Json::as_usize) {
             self.queue_cap = v;
         }
+        if let Some(v) = j.get("router").and_then(Json::as_str) {
+            self.router = v.to_string();
+        }
+        if let Some(v) = j.get("topk").and_then(Json::as_usize) {
+            self.topk = v;
+        }
+        if let Some(v) = j.get("adaptive_thresh").and_then(Json::as_f64) {
+            self.adaptive_thresh = v;
+        }
         Ok(())
     }
 
@@ -222,7 +242,20 @@ impl RunConfig {
                 .context("--decay-to wants P1@STEPS")?;
             self.decay_to = Some((p1.parse()?, over.parse()?));
         }
+        if let Some(rt) = a.get("router") {
+            self.router = rt.to_string();
+        }
+        self.topk = a.usize("topk", self.topk);
+        self.adaptive_thresh = a.f64("adaptive-thresh", self.adaptive_thresh);
+        // resolve eagerly so a typo'd --router fails at parse time
+        self.router()?;
         Ok(())
+    }
+
+    /// Resolve the configured router name/knobs into a [`crate::moe::Router`].
+    pub fn router(&self) -> Result<crate::moe::Router> {
+        crate::moe::Router::from_parts(&self.router, self.topk, self.adaptive_thresh as f32)
+            .ok_or_else(|| crate::err!("unknown router '{}' (top1|topk|adaptive)", self.router))
     }
 
     pub fn artifact_dir(&self) -> String {
@@ -230,7 +263,13 @@ impl RunConfig {
     }
 
     pub fn run_name(&self) -> String {
-        format!("{}_{}", self.preset, self.policy.name())
+        // non-default routers get a suffix so sweep outputs don't collide;
+        // top1 keeps the seed's names (and its on-disk run dirs) stable
+        if self.router == "top1" {
+            format!("{}_{}", self.preset, self.policy.name())
+        } else {
+            format!("{}_{}_{}", self.preset, self.policy.name(), self.router)
+        }
     }
 }
 
@@ -253,7 +292,8 @@ mod tests {
         let mut c = RunConfig::default();
         let j = Json::parse(
             r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4,
-                "threads": 6, "max_batch": 16, "max_wait_ticks": 7, "queue_cap": 128}"#,
+                "threads": 6, "max_batch": 16, "max_wait_ticks": 7, "queue_cap": 128,
+                "router": "topk", "topk": 3, "adaptive_thresh": 0.7}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -265,6 +305,8 @@ mod tests {
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.max_wait_ticks, 7);
         assert_eq!(c.queue_cap, 128);
+        assert_eq!(c.router().unwrap(), crate::moe::Router::TopK { k: 3 });
+        assert_eq!(c.adaptive_thresh, 0.7);
     }
 
     #[test]
@@ -287,9 +329,33 @@ mod tests {
     }
 
     #[test]
+    fn router_flags_resolve_and_name_runs() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.router().unwrap(), crate::moe::Router::Top1);
+        let base_name = c.run_name();
+        let a = Args::parse(
+            "--router adaptive --topk 4 --adaptive-thresh 0.8"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_args(&a).unwrap();
+        assert_eq!(c.router().unwrap(), crate::moe::Router::Adaptive { thresh: 0.8, k_max: 4 });
+        // non-default router tags the run name; top1 keeps the seed name
+        assert!(c.run_name().ends_with("_adaptive"));
+        assert!(c.run_name().starts_with(&base_name));
+    }
+
+    #[test]
     fn bad_policy_is_error() {
         let mut c = RunConfig::default();
         let a = Args::parse(["--policy".to_string(), "bogus".to_string()]);
+        assert!(c.apply_args(&a).is_err());
+    }
+
+    #[test]
+    fn bad_router_is_error() {
+        let mut c = RunConfig::default();
+        let a = Args::parse(["--router".to_string(), "top3000".to_string()]);
         assert!(c.apply_args(&a).is_err());
     }
 }

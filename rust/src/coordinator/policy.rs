@@ -1,4 +1,13 @@
 //! Routing policies and the per-step decision they induce.
+//!
+//! Policies are orthogonal to the configured [`Router`]: a policy decides
+//! *whether* a step consults the learned gate at all (gating dropout skips
+//! it, forcing every token onto its local expert with a single slot),
+//! while the router decides *how many* experts a consulted gate selects
+//! (`top1` / `topk` / `adaptive`). Any policy therefore composes with any
+//! router -- a dropped step looks the same under all of them.
+//!
+//! [`Router`]: crate::moe::Router
 
 /// Routing policy under comparison in the paper's evaluation (Table 2).
 #[derive(Debug, Clone, Copy, PartialEq)]

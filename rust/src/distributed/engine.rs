@@ -49,6 +49,11 @@ pub struct DistRunConfig {
     /// changes results: the pooled stage kernels are bit-identical to
     /// the sequential ones.
     pub threads: usize,
+    /// Router for routed (non-dropped, non-hash) steps. `Top1` (the
+    /// default) runs the seed's `moe::top1` scan verbatim; `TopK` /
+    /// `Adaptive` send each token to multiple experts over the same
+    /// two-phase wire (the counts phase already sizes variable fan-out).
+    pub router: moe::Router,
 }
 
 impl Default for DistRunConfig {
@@ -68,6 +73,7 @@ impl Default for DistRunConfig {
             seed: 7,
             lr: 2e-3,
             threads: 0,
+            router: moe::Router::Top1,
         }
     }
 }
@@ -89,6 +95,7 @@ struct WorkerState {
     rank: usize,
     topo: Topology,
     runner: StageRunner,
+    router: moe::Router,
     // dense (replicated)
     w_in: Vec<f32>,
     b_in: Vec<f32>,
@@ -113,6 +120,7 @@ impl WorkerState {
         lr: f32,
         threads: usize,
         seq_cutoff: usize,
+        router: moe::Router,
     ) -> Result<WorkerState> {
         let topo = Topology::new(m.ranks, m.ranks); // one expert per rank
         let w_in = m.load_init("w_in")?;
@@ -132,6 +140,7 @@ impl WorkerState {
         Ok(WorkerState {
             rank,
             topo,
+            router,
             o_win: Adam::new(w_in.len(), lr),
             o_bin: Adam::new(b_in.len(), lr),
             o_wr: Adam::new(wr.len(), lr),
@@ -159,7 +168,13 @@ impl WorkerState {
     ) -> Result<f32> {
         let m = &self.runner.manifest;
         let (din, d, t, r) = (m.d_in, m.d_model, m.tokens_per_rank, m.ranks);
-        let cap = t; // expert buffer rows = tokens_per_rank (one expert/rank)
+        // Expert buffer rows: the per-token share times the router's
+        // fan-out bound on routed steps (x1 under any k=1 routing --
+        // identical to the seed's `cap = t`). Dropped/hashed steps force
+        // one slot per token, so their capacity stays the seed's
+        // regardless of the configured router.
+        let kmax = if decision.drop || decision.hash_route { 1 } else { self.router.max_k() };
+        let cap = t * kmax;
         let stride = moe::HEADER + d;
 
         // ---- stage 1 forward -------------------------------------------------
@@ -175,17 +190,21 @@ impl WorkerState {
         let (h, probs) = (&out[0], &out[1]);
 
         // ---- routing ---------------------------------------------------------
-        let (experts, gates): (Vec<usize>, Vec<f32>) = if decision.drop {
+        // CSR assignment: dropped/hashed steps force one expert per token
+        // (offsets 0..=t, the seed layout); routed steps go through the
+        // configured router (Top1 runs the seed's `moe::top1` scan).
+        let assign: moe::RouteAssign = if decision.drop {
             // Gating Dropout: every token to the rank's own expert.
             let e: Vec<usize> = (0..t).map(|_| self.rank).collect();
             let g: Vec<f32> = (0..t).map(|i| moe::gate_of(probs, r, i, self.rank)).collect();
-            (e, g)
+            moe::RouteAssign::from_single(e, g)
         } else if decision.hash_route {
             // Hash-Layer routing hashes the token's VOCAB id (the
             // `model._hash_ids` convention), not its batch position.
-            moe::hash_route(token_ids, probs, r)
+            let (e, g) = moe::hash_route(token_ids, probs, r);
+            moe::RouteAssign::from_single(e, g)
         } else {
-            moe::top1(probs, t, r)
+            self.router.route(probs, t, r)
         };
 
         // ---- dispatch (+all-to-all unless dropped) ---------------------------
@@ -198,7 +217,7 @@ impl WorkerState {
                     .map(|i| moe::Admitted {
                         src_rank: self.rank,
                         src_idx: i,
-                        gate: gates[i],
+                        gate: assign.gates[i],
                         slot: i,
                         local_expert: 0,
                     })
@@ -207,12 +226,14 @@ impl WorkerState {
             }
         } else {
             // two-phase flat dispatch: counts first, then exactly-sized
-            // contiguous buffers through the typed all-to-all.
-            let counts = self.topo.owner_counts(&experts);
-            let recv_tokens = fabric.all_to_all_counts(self.rank, &counts);
-            let packed = moe::route_pack(&self.topo, h, d, &experts, &gates, &counts);
-            let expect: Vec<usize> = recv_tokens.iter().map(|&c| c * stride).collect();
-            let arrivals = fabric.all_to_all_f32(self.rank, packed, &expect);
+            // contiguous buffers through the row-counted all-to-all (one
+            // wire row per (token, slot) -- variable fan-out rides the
+            // same counts phase).
+            let counts = self.topo.owner_counts(&assign.experts);
+            let recv_rows = fabric.all_to_all_counts(self.rank, &counts);
+            let packed = moe::route_pack_k(&self.topo, h, d, &assign, &counts);
+            let arrivals =
+                fabric.all_to_all_rows(self.rank, packed, &counts, &recv_rows, stride);
             moe::route_admit(self.rank, &self.topo, &arrivals, d, cap)
         };
 
@@ -239,42 +260,48 @@ impl WorkerState {
         } else {
             moe::return_counts(&self.topo, &admitted)
         };
-        // own tokens admitted per owner rank: the return-leg counts phase
-        // delivers exactly this, and both backward wire legs reuse it
-        // (empty on dropped / expert-skipped steps, where no wire runs).
+        // own (token, slot) rows admitted per owner rank: the return-leg
+        // counts phase delivers exactly this, and both backward wire legs
+        // reuse it (empty on dropped / expert-skipped steps, where no
+        // wire runs).
         let mut surviving: Vec<usize> = Vec::new();
-        // ret: per-token combined/raw/slot/gate view on the home rank.
-        let ret: moe::Returned = match (&ye, decision.drop) {
-            (None, _) => moe::Returned {
+        // ret: weighted combine + per-arrival-row records on the home rank.
+        let ret: moe::ReturnedK = match (&ye, decision.drop) {
+            (None, _) => moe::ReturnedK {
                 combined: vec![0.0; t * d],
-                raw: vec![0.0; t * d],
-                slot: vec![-1; t],
-                gate: vec![0.0; t],
+                raw: Vec::new(),
+                rows: Vec::new(),
             },
             (Some(ye), true) => {
-                // local: token i <-> slot i
-                let mut out = moe::Returned {
+                // local: token i <-> slot i, one row per token
+                let mut out = moe::ReturnedK {
                     combined: vec![0.0; t * d],
                     raw: ye.clone(),
-                    slot: (0..t as i32).collect(),
-                    gate: gates.clone(),
+                    rows: (0..t)
+                        .map(|i| moe::RetRow {
+                            token: i,
+                            owner: self.rank,
+                            slot: i,
+                            gate: assign.gates[i],
+                        })
+                        .collect(),
                 };
                 for i in 0..t {
                     for j in 0..d {
-                        out.combined[i * d + j] = gates[i] * ye[i * d + j];
+                        out.combined[i * d + j] = assign.gates[i] * ye[i * d + j];
                     }
                 }
                 out
             }
             (Some(ye), false) => {
                 // counts phase again: the home rank cannot predict how
-                // many of its tokens survived capacity admission here.
-                let recv_tokens = fabric.all_to_all_counts(self.rank, &ret_counts);
+                // many of its rows survived capacity admission here.
+                let recv_rows = fabric.all_to_all_counts(self.rank, &ret_counts);
                 let back = moe::return_pack(&self.topo, &admitted, ye, d, &ret_counts);
-                let expect: Vec<usize> = recv_tokens.iter().map(|&c| c * stride).collect();
-                let arrivals = fabric.all_to_all_f32(self.rank, back, &expect);
-                surviving = recv_tokens;
-                moe::return_unpack(&arrivals, t, d)
+                let arrivals =
+                    fabric.all_to_all_rows(self.rank, back, &ret_counts, &recv_rows, stride);
+                surviving = recv_rows;
+                moe::return_unpack_k(&arrivals, t, d)
             }
         };
         let mut y = vec![0f32; t * d];
@@ -299,19 +326,25 @@ impl WorkerState {
         let mut dh: Vec<f32> = dy.clone(); // residual path
         let mut dprobs = vec![0f32; t * r];
         let (dw1, dw2): (Vec<f32>, Vec<f32>) = if decision.runs_expert() {
-            // cotangents for expert outputs, per token
-            let mut dgate = vec![0f32; t];
-            for i in 0..t {
-                if ret.slot[i] >= 0 {
-                    let mut acc = 0f32;
-                    for j in 0..d {
-                        acc += dy[i * d + j] * ret.raw[i * d + j];
+            // cotangents for expert outputs, one per returned (token, slot)
+            // row; scatter each onto its CSR slot (one expert per rank, so
+            // a (token, owner) pair names at most one slot) and push the
+            // gate gradients through the router VJP -- the raw-prob gate
+            // at k=1 (the seed's scatter), renormalized-softmax at k>=2.
+            let mut dgates = vec![0f32; assign.n_slots()];
+            for (ri, row) in ret.rows.iter().enumerate() {
+                let mut acc = 0f32;
+                for j in 0..d {
+                    acc += dy[row.token * d + j] * ret.raw[ri * d + j];
+                }
+                for s in assign.range(row.token) {
+                    if self.topo.owner_of(assign.experts[s]) == row.owner {
+                        dgates[s] = acc;
+                        break;
                     }
-                    dgate[i] = acc;
-                    // gate gradient flows into the chosen expert's prob
-                    dprobs[i * r + experts[i]] = dgate[i];
                 }
             }
+            moe::router_vjp(&assign, probs, &dgates, r, &mut dprobs);
             // Both backward wire legs ride the admission edges, so no
             // counts phase goes on the wire: this rank *receives* one dye
             // row / *sends* one dxe row per token it admitted
@@ -324,28 +357,28 @@ impl WorkerState {
                 let mut buf = vec![0f32; cap * d];
                 for i in 0..t {
                     for j in 0..d {
-                        buf[i * d + j] = ret.gate[i] * dy[i * d + j];
+                        buf[i * d + j] = assign.gates[i] * dy[i * d + j];
                     }
                 }
                 buf
             } else {
                 // ship [slot, src_idx, gate, gate*dy_row] to the expert
-                // owner
+                // owner, one message per surviving returned row (rows
+                // arrive owner-major, token-ascending, so per-destination
+                // packing order matches the seed's token scan at k=1)
                 let mut msgs: Vec<Vec<f32>> = surviving
                     .iter()
                     .map(|&c| Vec::with_capacity(c * stride))
                     .collect();
-                for i in 0..t {
-                    if ret.slot[i] < 0 {
-                        continue;
-                    }
-                    let dest = self.topo.owner_of(experts[i]);
-                    let msg = &mut msgs[dest];
-                    msg.extend_from_slice(&[ret.slot[i] as f32, i as f32, ret.gate[i]]);
-                    msg.extend(dy[i * d..(i + 1) * d].iter().map(|&v| ret.gate[i] * v));
+                for row in &ret.rows {
+                    let msg = &mut msgs[row.owner];
+                    msg.extend_from_slice(&[row.slot as f32, row.token as f32, row.gate]);
+                    msg.extend(
+                        dy[row.token * d..(row.token + 1) * d].iter().map(|&v| row.gate * v),
+                    );
                 }
-                let expect: Vec<usize> = ret_counts.iter().map(|&c| c * stride).collect();
-                let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
+                let arrivals =
+                    fabric.all_to_all_rows(self.rank, msgs, &surviving, &ret_counts, stride);
                 let mut buf = vec![0f32; cap * d];
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
@@ -384,8 +417,8 @@ impl WorkerState {
                     msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
                     msg.extend_from_slice(&dxe[a.slot * d..(a.slot + 1) * d]);
                 }
-                let expect: Vec<usize> = surviving.iter().map(|&c| c * stride).collect();
-                let arrivals = fabric.all_to_all_f32(self.rank, msgs, &expect);
+                let arrivals =
+                    fabric.all_to_all_rows(self.rank, msgs, &ret_counts, &surviving, stride);
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
                         let i = tok[1] as usize;
@@ -481,7 +514,14 @@ impl DistEngine {
             let cfg = cfg.clone();
             type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64);
             handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
-                let mut w = WorkerState::new(rank, manifest, cfg.lr, per_rank_threads, seq_cutoff)?;
+                let mut w = WorkerState::new(
+                    rank,
+                    manifest,
+                    cfg.lr,
+                    per_rank_threads,
+                    seq_cutoff,
+                    cfg.router,
+                )?;
                 let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
                 let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
                 let mut losses = Vec::new();

@@ -34,9 +34,16 @@ COMMANDS:
            [--config FILE] [--out-dir DIR] [--decay-to P1@STEPS] [--no-decode]
            [--threads N]  (backend-par worker threads; 0 = auto,
                            GD_THREADS env var overrides)
+           [--router top1|topk|adaptive] [--topk K] [--adaptive-thresh T]
+           (routing on non-dropped steps; top1 is the seed default and
+            bit-identical to it, topk sends each token to K experts with
+            renormalized gates, adaptive sends to 1..K experts until the
+            cumulative gate mass reaches T. --topk doubles as adaptive's
+            k_max; dropout policies compose with any router)
   scaling  --cluster v100|a100 [--gpus 8,16,32,64,128] [--workload wmt10|web50]
   sweep    [--rates 0,0.1,...] [--gpus 16] (Fig 6 throughput axis)
   dist     [--policy P] [--steps N] [--seed S] [--threads N] [--config FILE]
+           [--router top1|topk|adaptive] [--topk K] [--adaptive-thresh T]
            (real multi-worker engine; --threads = stage-math workers PER
             RANK, 0 = auto: machine parallelism divided across ranks.
             GD_THREADS env overrides; thread count never changes the
@@ -217,6 +224,9 @@ fn cmd_dist(args: &Args) -> Result<()> {
     // flags; GD_THREADS overrides the thread knob inside the engine.
     let mut def = DistRunConfig::default();
     let mut def_policy = Policy::GateDrop { p: 0.3 };
+    let mut def_router = "top1".to_string();
+    let mut def_topk = 2usize;
+    let mut def_thresh = 0.5f64;
     if let Some(f) = args.get("config") {
         let text = std::fs::read_to_string(f)
             .map_err(|e| gating_dropout::err!("reading {f}: {e}"))?;
@@ -234,11 +244,29 @@ fn cmd_dist(args: &Args) -> Result<()> {
         if let Some(v) = j.get("threads").and_then(Json::as_usize) {
             def.threads = v;
         }
+        if let Some(v) = j.get("router").and_then(Json::as_str) {
+            def_router = v.to_string();
+        }
+        if let Some(v) = j.get("topk").and_then(Json::as_usize) {
+            def_topk = v;
+        }
+        if let Some(v) = j.get("adaptive_thresh").and_then(Json::as_f64) {
+            def_thresh = v;
+        }
     }
     let policy = match args.get("policy") {
         Some(p) => Policy::parse(p).ok_or_else(|| gating_dropout::err!("bad policy"))?,
         None => def_policy,
     };
+    let router_name = args.get_or("router", &def_router).to_string();
+    let router = gating_dropout::moe::Router::from_parts(
+        &router_name,
+        args.usize("topk", def_topk),
+        args.f64("adaptive-thresh", def_thresh) as f32,
+    )
+    .ok_or_else(|| {
+        gating_dropout::err!("unknown router '{router_name}' (top1|topk|adaptive)")
+    })?;
     let cfg = DistRunConfig {
         artifact_dir: args.get_or("artifacts", &def.artifact_dir).to_string(),
         n_ranks: args.usize("ranks", def.n_ranks),
@@ -247,10 +275,12 @@ fn cmd_dist(args: &Args) -> Result<()> {
         seed: args.u64("seed", def.seed),
         lr: args.f64("lr", 2e-3) as f32,
         threads: args.usize("threads", def.threads),
+        router,
     };
     eprintln!(
-        "[dist] policy={} ranks={} steps={} threads/rank={}",
+        "[dist] policy={} router={} ranks={} steps={} threads/rank={}",
         policy.name(),
+        cfg.router.name(),
         cfg.n_ranks,
         cfg.steps,
         if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() }
@@ -293,7 +323,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
          (loading backend...)",
         cfg.preset, scfg.n_requests, scfg.max_batch, scfg.max_wait_ticks, scfg.queue_cap
     );
-    let backend = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    let mut backend =
+        default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    backend
+        .set_router(cfg.router()?)
+        .map_err(|e| gating_dropout::err!("configuring router: {e}"))?;
     eprintln!("[serve] backend={}", backend.name());
     let report = serve::serve(backend.as_ref(), &scfg)?;
     let s = &report.summary;
@@ -326,7 +360,11 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "[bench-serve] preset={} requests={} max_batch={} vs 1 (loading backend...)",
         cfg.preset, scfg.n_requests, scfg.max_batch
     );
-    let backend = default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    let mut backend =
+        default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+    backend
+        .set_router(cfg.router()?)
+        .map_err(|e| gating_dropout::err!("configuring router: {e}"))?;
     eprintln!("[bench-serve] backend={}", backend.name());
 
     let batched = serve::serve(backend.as_ref(), &scfg)?;

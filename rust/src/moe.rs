@@ -41,6 +41,12 @@ use crate::topology::Topology;
 pub const HEADER: usize = 3;
 
 /// Top-1 choice from a row-major probs matrix [t, e].
+///
+/// Tie-break rule: the scan uses a strict `>` comparison in ascending
+/// index order, so among equal-probability experts the **lowest index
+/// wins**. [`topk`] with k=1 reproduces this scan (and therefore this
+/// tie-break) operation for operation -- that equivalence is pinned by
+/// `prop_topk_k1_matches_top1`.
 pub fn top1(probs: &[f32], t: usize, e: usize) -> (Vec<usize>, Vec<f32>) {
     assert_eq!(probs.len(), t * e);
     let mut idx = Vec::with_capacity(t);
@@ -57,6 +63,243 @@ pub fn top1(probs: &[f32], t: usize, e: usize) -> (Vec<usize>, Vec<f32>) {
         gate.push(bv);
     }
     (idx, gate)
+}
+
+/// Per-token routing assignment in CSR form: token `i` is assigned the
+/// experts `experts[offsets[i]..offsets[i+1]]` with combine weights
+/// `gates[..]` over the same range, in **selection order** (descending
+/// probability, ties broken toward the lower expert index).
+///
+/// For every k=1 router (`Router::Top1`, or `topk`/`adaptive_k` when they
+/// select a single expert per token) `experts`/`gates` are exactly the
+/// flat [`top1`] outputs and `offsets` is `0..=t`, so all legacy
+/// single-assignment consumers keep working on the flat slices.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteAssign {
+    pub experts: Vec<usize>,
+    pub gates: Vec<f32>,
+    /// len t+1; slot range of token i is `offsets[i]..offsets[i+1]`.
+    pub offsets: Vec<usize>,
+}
+
+impl RouteAssign {
+    /// Wrap flat single-expert-per-token routing (top-1 / hash / local)
+    /// into CSR form: offsets = 0..=t.
+    pub fn from_single(experts: Vec<usize>, gates: Vec<f32>) -> Self {
+        let t = experts.len();
+        assert_eq!(gates.len(), t);
+        RouteAssign { experts, gates, offsets: (0..=t).collect() }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Slot range of token `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.offsets[i]..self.offsets[i + 1]
+    }
+}
+
+/// Shared gate-weight rule for the multi-expert routers: when a token
+/// selected a single expert the gate is the **raw** router probability
+/// (Switch-style -- bit-identical to [`top1`]); when it selected two or
+/// more, gates are the selected probabilities renormalized to sum to one
+/// (`g_i = p_i / sum(selected p)`, Shazeer-style weighted combine). The
+/// sum runs in selection order. Backward mirrors this branch (see the
+/// router VJP in `runtime/reference.rs`).
+fn gates_for_selection(row: &[f32], sel: &[usize], gates: &mut Vec<f32>) {
+    if sel.len() == 1 {
+        gates.push(row[sel[0]]);
+    } else {
+        let mut s = 0f32;
+        for &e in sel {
+            s += row[e];
+        }
+        for &e in sel {
+            gates.push(row[e] / s);
+        }
+    }
+}
+
+/// Top-k choice from a row-major probs matrix [t, e]: k rounds of the
+/// [`top1`] strict-`>` scan, skipping already-selected experts, so
+/// selection order is descending probability with ties toward the lower
+/// index -- round one is literally `top1`'s loop, which is what makes
+/// `topk(.., 1)` bit-identical to `top1` (indices, gates, pack order).
+/// `k` is clamped to `e`. Gate weights follow [`gates_for_selection`].
+pub fn topk(probs: &[f32], t: usize, e: usize, k: usize) -> RouteAssign {
+    assert_eq!(probs.len(), t * e);
+    let k = k.max(1).min(e);
+    let mut experts = Vec::with_capacity(t * k);
+    let mut gates = Vec::with_capacity(t * k);
+    let mut offsets = Vec::with_capacity(t + 1);
+    offsets.push(0usize);
+    let mut sel: Vec<usize> = Vec::with_capacity(k);
+    for row in probs.chunks_exact(e) {
+        sel.clear();
+        for _ in 0..k {
+            let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+            for (i, &v) in row.iter().enumerate() {
+                if sel.contains(&i) {
+                    continue;
+                }
+                if v > bv {
+                    bv = v;
+                    bi = i;
+                }
+            }
+            sel.push(bi);
+        }
+        experts.extend_from_slice(&sel);
+        gates_for_selection(row, &sel, &mut gates);
+        offsets.push(experts.len());
+    }
+    RouteAssign { experts, gates, offsets }
+}
+
+/// Adaptive-k routing (Adaptive Gating in MoE, 2310.07188): greedily
+/// select experts in descending-probability order (the same strict-`>`
+/// scan as [`topk`]) until the cumulative **raw** probability mass of the
+/// selected experts reaches `thresh`, capped at `k_max` experts; always at
+/// least one. Gate weights follow [`gates_for_selection`], so
+/// `adaptive_k(.., 0.0, _)` selects exactly one expert per token and is
+/// bit-identical to [`top1`].
+pub fn adaptive_k(probs: &[f32], t: usize, e: usize, thresh: f32, k_max: usize) -> RouteAssign {
+    assert_eq!(probs.len(), t * e);
+    let k_max = k_max.max(1).min(e);
+    let mut experts = Vec::new();
+    let mut gates = Vec::new();
+    let mut offsets = Vec::with_capacity(t + 1);
+    offsets.push(0usize);
+    let mut sel: Vec<usize> = Vec::with_capacity(k_max);
+    for row in probs.chunks_exact(e) {
+        sel.clear();
+        let mut mass = 0f32;
+        while sel.len() < k_max {
+            let (mut bi, mut bv) = (0usize, f32::NEG_INFINITY);
+            for (i, &v) in row.iter().enumerate() {
+                if sel.contains(&i) {
+                    continue;
+                }
+                if v > bv {
+                    bv = v;
+                    bi = i;
+                }
+            }
+            sel.push(bi);
+            mass += row[bi];
+            if mass >= thresh {
+                break;
+            }
+        }
+        experts.extend_from_slice(&sel);
+        gates_for_selection(row, &sel, &mut gates);
+        offsets.push(experts.len());
+    }
+    RouteAssign { experts, gates, offsets }
+}
+
+/// First-class router choice, threaded from config/CLI through the
+/// backends and the distributed engine. Gating-dropout policies compose
+/// with any router: a dropped step skips the gate entirely (every token
+/// stays local with a single slot), so the paper's mechanism is unchanged
+/// regardless of the router used on non-dropped steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Router {
+    /// Switch-style top-1 (the seed behavior and the default).
+    Top1,
+    /// Fixed top-k with renormalized gates (k=1 is bit-identical to Top1).
+    TopK { k: usize },
+    /// Variable fan-out: select until cumulative gate mass >= thresh,
+    /// capped at k_max.
+    Adaptive { thresh: f32, k_max: usize },
+}
+
+impl Router {
+    /// Build from config/CLI parts; `None` for an unknown name.
+    pub fn from_parts(name: &str, k: usize, thresh: f32) -> Option<Router> {
+        match name {
+            "top1" => Some(Router::Top1),
+            "topk" => Some(Router::TopK { k: k.max(1) }),
+            "adaptive" => Some(Router::Adaptive { thresh, k_max: k.max(1) }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Router::Top1 => "top1",
+            Router::TopK { .. } => "topk",
+            Router::Adaptive { .. } => "adaptive",
+        }
+    }
+
+    /// Upper bound on slots per token -- sizes expert capacity and the
+    /// routed-path buffers.
+    pub fn max_k(&self) -> usize {
+        match *self {
+            Router::Top1 => 1,
+            Router::TopK { k } => k.max(1),
+            Router::Adaptive { k_max, .. } => k_max.max(1),
+        }
+    }
+
+    /// Route a [t, e] probs matrix. `Top1` goes through the original
+    /// [`top1`] scan (wrapped into CSR form) so the default path runs the
+    /// seed code verbatim.
+    pub fn route(&self, probs: &[f32], t: usize, e: usize) -> RouteAssign {
+        match *self {
+            Router::Top1 => {
+                let (idx, gate) = top1(probs, t, e);
+                RouteAssign::from_single(idx, gate)
+            }
+            Router::TopK { k } => topk(probs, t, e, k),
+            Router::Adaptive { thresh, k_max } => adaptive_k(probs, t, e, thresh, k_max),
+        }
+    }
+}
+
+/// Router VJP shared by the backends' backward passes and the distributed
+/// engine: turn per-slot gate cotangents (`dgates`, 0 where the slot was
+/// capacity-dropped) into routed-prob cotangents. Single-slot tokens use
+/// the raw prob as the gate, so `dprobs += dg` directly (the seed
+/// operation, bit for bit under any k=1 routing). Multi-slot tokens went
+/// through the renormalization `g_j = p_j / S` (`S` = selected-prob sum
+/// in selection order), whose VJP is `dL/dp_j = (dg_j - B) / S` with
+/// `B = sum_k dg_k * g_k` accumulated in slot order. A dropped slot's
+/// prob still shaped the renormalization, so it correctly receives the
+/// `(0 - B) / S` term.
+pub fn router_vjp(
+    assign: &RouteAssign,
+    probs: &[f32],
+    dgates: &[f32],
+    e: usize,
+    dprobs: &mut [f32],
+) {
+    for i in 0..assign.n_tokens() {
+        let r = assign.range(i);
+        if r.len() == 1 {
+            let s = r.start;
+            dprobs[i * e + assign.experts[s]] += dgates[s];
+        } else {
+            let mut ssum = 0f32;
+            for s in r.clone() {
+                ssum += probs[i * e + assign.experts[s]];
+            }
+            let mut b = 0f32;
+            for s in r.clone() {
+                b += dgates[s] * assign.gates[s];
+            }
+            for s in r {
+                dprobs[i * e + assign.experts[s]] += (dgates[s] - b) / ssum;
+            }
+        }
+    }
 }
 
 /// Gate value of a *forced* expert choice (local routing / hash routing):
@@ -116,6 +359,39 @@ pub fn route_pack(
         let msg = &mut out[topo.owner_of(e)];
         msg.extend_from_slice(&[e as f32, i as f32, gates[i]]);
         msg.extend_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    debug_assert!(
+        out.iter().zip(counts).all(|(m, &c)| m.len() == c * stride),
+        "counts phase disagrees with pack"
+    );
+    out
+}
+
+/// Variable-fan-out packer: one wire row per (token, slot) of a
+/// [`RouteAssign`], in token order then selection order. `counts` is
+/// `topo.owner_counts(&assign.experts)` -- the CSR expert list is flat, so
+/// the counts sweep needs no changes. For a single-slot assign
+/// (`offsets == 0..=t`) the emitted buffers are byte-identical to
+/// [`route_pack`] on the flat slices.
+pub fn route_pack_k(
+    topo: &Topology,
+    x: &[f32],
+    d: usize,
+    assign: &RouteAssign,
+    counts: &[usize],
+) -> Vec<Vec<f32>> {
+    let t = assign.n_tokens();
+    assert_eq!(x.len(), t * d);
+    assert_eq!(counts.len(), topo.n_ranks);
+    let stride = HEADER + d;
+    let mut out: Vec<Vec<f32>> = counts.iter().map(|&c| Vec::with_capacity(c * stride)).collect();
+    for i in 0..t {
+        for s in assign.range(i) {
+            let e = assign.experts[s];
+            let msg = &mut out[topo.owner_of(e)];
+            msg.extend_from_slice(&[e as f32, i as f32, assign.gates[s]]);
+            msg.extend_from_slice(&x[i * d..(i + 1) * d]);
+        }
     }
     debug_assert!(
         out.iter().zip(counts).all(|(m, &c)| m.len() == c * stride),
@@ -298,6 +574,72 @@ pub fn return_unpack(arrivals: &[Vec<f32>], t: usize, d: usize) -> Returned {
             {
                 *c = gate * v;
             }
+        }
+    }
+    out
+}
+
+/// One arrival row of the variable-fan-out return trip, in arrival order
+/// (owner-rank-major, admission order within a rank).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetRow {
+    /// Home-rank token index.
+    pub token: usize,
+    /// Owner rank the row came back from.
+    pub owner: usize,
+    /// Expert-buffer slot on the owner rank (for the dye backward leg).
+    pub slot: usize,
+    /// Combine weight used for this row.
+    pub gate: f32,
+}
+
+/// Variable-fan-out return-trip outcome: the weighted combine plus every
+/// arrival row kept raw for backward (d(gate) = <dy, raw row> and the dye
+/// leg need them).
+#[derive(Debug, Clone)]
+pub struct ReturnedK {
+    /// `sum(gate * ye)` per token, row-major [t, d] (zeros where every
+    /// slot of the token was dropped).
+    pub combined: Vec<f32>,
+    /// Raw `ye` arrival rows, row-major [rows.len(), d], in arrival order.
+    pub raw: Vec<f32>,
+    /// One record per arrival row, in arrival order.
+    pub rows: Vec<RetRow>,
+}
+
+/// Unpack returned expert outputs with variable fan-out: accumulate the
+/// weighted combine per token and keep every raw arrival row. A token's
+/// first arrival *assigns* (`= gate*v`) and later arrivals accumulate
+/// (`+= gate*v`), so a single-slot assign reproduces [`return_unpack`]'s
+/// overwrite semantics bit for bit (including signed zeros).
+pub fn return_unpack_k(arrivals: &[Vec<f32>], t: usize, d: usize) -> ReturnedK {
+    let stride = HEADER + d;
+    let nrows: usize = arrivals.iter().map(|m| m.len() / stride).sum();
+    let mut out = ReturnedK {
+        combined: vec![0f32; t * d],
+        raw: Vec::with_capacity(nrows * d),
+        rows: Vec::with_capacity(nrows),
+    };
+    let mut seen = vec![0usize; t];
+    for (owner, msg) in arrivals.iter().enumerate() {
+        assert_eq!(msg.len() % stride, 0, "corrupt return message");
+        for tok in msg.chunks_exact(stride) {
+            let i = tok[1] as usize;
+            let gate = tok[2];
+            assert!(i < t);
+            out.raw.extend_from_slice(&tok[HEADER..]);
+            out.rows.push(RetRow { token: i, owner, slot: tok[0] as usize, gate });
+            let dst = &mut out.combined[i * d..(i + 1) * d];
+            if seen[i] == 0 {
+                for (c, &v) in dst.iter_mut().zip(&tok[HEADER..]) {
+                    *c = gate * v;
+                }
+            } else {
+                for (c, &v) in dst.iter_mut().zip(&tok[HEADER..]) {
+                    *c += gate * v;
+                }
+            }
+            seen[i] += 1;
         }
     }
     out
@@ -600,6 +942,287 @@ mod tests {
             let total_tokens: usize = ts.iter().sum();
             if total_admitted > total_tokens {
                 return Err("token duplicated across ranks".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite guard rail: `topk(k=1)` must be bit-identical to `top1`
+    /// -- indices, gates (raw prob, not renormalized), and the flat
+    /// per-destination pack order -- for random prob matrices. This is
+    /// what lets the refactor replace the old call sites outright.
+    #[test]
+    fn prop_topk_k1_matches_top1() {
+        run_prop("topk-k1-is-top1", 80, 2024, |rng: &mut Rng| {
+            let e = 1 + rng.below(8) as usize;
+            let t = 1 + rng.below(32) as usize;
+            // mix in exact duplicates so the tie-break is actually hit
+            let mut probs: Vec<f32> = (0..t * e).map(|_| rng.uniform() as f32).collect();
+            for i in 0..t {
+                if e > 1 && rng.below(2) == 0 {
+                    probs[i * e + 1] = probs[i * e];
+                }
+            }
+            let (idx, gate) = top1(&probs, t, e);
+            let a = topk(&probs, t, e, 1);
+            if a.experts != idx {
+                return Err("indices diverged".into());
+            }
+            if a.gates.iter().zip(&gate).any(|(x, y)| x.to_bits() != y.to_bits()) {
+                return Err("gates diverged".into());
+            }
+            if a.offsets != (0..=t).collect::<Vec<usize>>() {
+                return Err("offsets not 0..=t".into());
+            }
+            // adaptive with thresh 0.0 selects exactly one expert: top1
+            let ad = adaptive_k(&probs, t, e, 0.0, 3);
+            if ad != a {
+                return Err("adaptive(thresh=0) != topk(1)".into());
+            }
+            // pack order must match the legacy packer byte for byte
+            let n_ranks = [1usize, 2][rng.below(2) as usize];
+            if e % n_ranks != 0 {
+                return Ok(());
+            }
+            let topo = Topology::new(n_ranks, e);
+            let d = 1 + rng.below(4) as usize;
+            let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+            let counts = topo.owner_counts(&a.experts);
+            let flat_k = route_pack_k(&topo, &x, d, &a, &counts);
+            let flat = route_pack(&topo, &x, d, &idx, &gate, &counts);
+            if flat_k != flat {
+                return Err("route_pack_k != route_pack at k=1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn topk_selects_descending_and_renormalizes() {
+        // row: probs 0.5, 0.3, 0.2 -> top2 = [0, 1], gates renormalized
+        let probs = vec![0.5f32, 0.3, 0.2];
+        let a = topk(&probs, 1, 3, 2);
+        assert_eq!(a.experts, vec![0, 1]);
+        assert_eq!(a.offsets, vec![0, 2]);
+        let s = 0.5 + 0.3;
+        assert_eq!(a.gates, vec![0.5 / s, 0.3 / s]);
+        // k clamped to e; all three selected, gates sum to ~1
+        let b = topk(&probs, 1, 3, 9);
+        assert_eq!(b.experts, vec![0, 1, 2]);
+        let sum: f32 = b.gates.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // ties break toward the lower index, in every round
+        let tied = vec![0.4f32, 0.4, 0.2];
+        let c = topk(&tied, 1, 3, 2);
+        assert_eq!(c.experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn adaptive_k_stops_at_mass_threshold() {
+        // 0.6 alone clears thresh 0.5 -> one expert, raw-prob gate
+        let probs = vec![0.6f32, 0.3, 0.1];
+        let a = adaptive_k(&probs, 1, 3, 0.5, 3);
+        assert_eq!(a.experts, vec![0]);
+        assert_eq!(a.gates, vec![0.6]);
+        // flat row needs two experts to clear 0.5
+        let flat = vec![0.34f32, 0.33, 0.33];
+        let b = adaptive_k(&flat, 1, 3, 0.5, 3);
+        assert_eq!(b.experts, vec![0, 1]);
+        // k_max caps the fan-out even when mass never clears
+        let c = adaptive_k(&flat, 1, 3, 2.0, 2);
+        assert_eq!(c.experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn router_from_parts_round_trips() {
+        assert_eq!(Router::from_parts("top1", 2, 0.5), Some(Router::Top1));
+        assert_eq!(Router::from_parts("topk", 2, 0.5), Some(Router::TopK { k: 2 }));
+        assert_eq!(
+            Router::from_parts("adaptive", 3, 0.7),
+            Some(Router::Adaptive { thresh: 0.7, k_max: 3 })
+        );
+        assert_eq!(Router::from_parts("nope", 1, 0.0), None);
+        assert_eq!(Router::Top1.max_k(), 1);
+        assert_eq!(Router::TopK { k: 2 }.max_k(), 2);
+        assert_eq!(Router::Adaptive { thresh: 0.5, k_max: 4 }.max_k(), 4);
+    }
+
+    /// Single-rank multi-slot round trip: a top-2 assign occupies two
+    /// expert slots per token and the return leg's weighted combine equals
+    /// the hand-computed sum over slots.
+    #[test]
+    fn round_trip_topk2_weighted_combine() {
+        let topo = Topology::new(1, 2);
+        let d = 3;
+        let t = 4;
+        let x: Vec<f32> = (0..t * d).map(|i| (i as f32) * 0.25 - 1.0).collect();
+        // alternate which expert is preferred so both get traffic
+        let probs: Vec<f32> =
+            (0..t).flat_map(|i| if i % 2 == 0 { [0.7, 0.3] } else { [0.2, 0.8] }).collect();
+        let a = topk(&probs, t, 2, 2);
+        assert_eq!(a.n_slots(), 2 * t);
+        let counts = topo.owner_counts(&a.experts);
+        let packed = route_pack_k(&topo, &x, d, &a, &counts);
+        let cap = 2 * t; // no drops
+        let (xe, adm) = route_admit(0, &topo, &packed, d, cap);
+        assert_eq!(adm.len(), 2 * t);
+        // identity expert: ye = xe
+        let rc = return_counts(&topo, &adm);
+        let back = return_pack(&topo, &adm, &xe, d, &rc);
+        let r = return_unpack_k(&back, t, d);
+        assert_eq!(r.rows.len(), 2 * t);
+        for i in 0..t {
+            // gates renormalize to 1, identity expert => combined == x row
+            for j in 0..d {
+                let got = r.combined[i * d + j];
+                let want = x[i * d + j];
+                assert!((got - want).abs() < 1e-5, "tok {i} dim {j}: {got} vs {want}");
+            }
+        }
+    }
+
+    /// `return_unpack_k` on single-slot traffic must reproduce the legacy
+    /// `return_unpack` combine bit for bit, including pack order effects.
+    #[test]
+    fn prop_return_unpack_k_matches_legacy_on_single_slot() {
+        run_prop("return-unpack-k-legacy", 40, 77, |rng: &mut Rng| {
+            let n_ranks = [1usize, 2, 4][rng.below(3) as usize];
+            let topo = Topology::new(n_ranks, n_ranks);
+            let d = 1 + rng.below(6) as usize;
+            let t = 1 + rng.below(24) as usize;
+            let cap = 1 + rng.below(8) as usize;
+            let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+            let experts: Vec<usize> =
+                (0..t).map(|_| rng.below(topo.n_experts as u64) as usize).collect();
+            let gates: Vec<f32> = (0..t).map(|_| rng.uniform() as f32).collect();
+            let counts = topo.owner_counts(&experts);
+            let packed = route_pack(&topo, &x, d, &experts, &gates, &counts);
+            // run every owner rank, then bring all returns home to rank 0's
+            // view: returned_bufs[owner] = what owner sends home rank 0
+            let mut returned: Vec<Vec<f32>> = vec![Vec::new(); n_ranks];
+            for owner in 0..n_ranks {
+                let mut arrivals: Vec<Vec<f32>> = vec![Vec::new(); n_ranks];
+                arrivals[0] = packed[owner].clone();
+                let (xe, adm) = route_admit(owner, &topo, &arrivals, d, cap);
+                let rc = return_counts(&topo, &adm);
+                let back = return_pack(&topo, &adm, &xe, d, &rc);
+                returned[owner] = back[0].clone();
+            }
+            let legacy = return_unpack(&returned, t, d);
+            let k = return_unpack_k(&returned, t, d);
+            for i in 0..t * d {
+                if legacy.combined[i].to_bits() != k.combined[i].to_bits() {
+                    return Err(format!("combined bit-diverged at {i}"));
+                }
+            }
+            // raw rows in arrival order must carry the same data the
+            // legacy path scattered into token order
+            for (r, row) in k.rows.iter().enumerate() {
+                let i = row.token;
+                if legacy.slot[i] != row.slot as i32 || legacy.gate[i] != row.gate {
+                    return Err(format!("row {r} metadata diverged"));
+                }
+                for j in 0..d {
+                    if k.raw[r * d + j].to_bits() != legacy.raw[i * d + j].to_bits() {
+                        return Err(format!("raw row {r} diverged"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Multi-rank variable-fan-out wire round trip (the acceptance-criteria
+    /// property): adaptive routing gives tokens different slot counts; the
+    /// counts phase must size every edge exactly, slots must never collide,
+    /// and each surviving token's combine must equal the sum of
+    /// `gate * (its surviving raw rows)`.
+    #[test]
+    fn prop_variable_fanout_wire_round_trip() {
+        run_prop("variable-fanout-round-trip", 40, 4242, |rng: &mut Rng| {
+            let n_ranks = [2usize, 4][rng.below(2) as usize];
+            let topo = Topology::new(n_ranks, n_ranks);
+            let e = topo.n_experts;
+            let d = 1 + rng.below(4) as usize;
+            let stride = HEADER + d;
+            let k_max = 1 + rng.below(3) as usize;
+            let cap = 1 + rng.below(8) as usize;
+            let ts: Vec<usize> = (0..n_ranks).map(|_| 1 + rng.below(16) as usize).collect();
+            let mut assigns = Vec::new();
+            let mut xs = Vec::new();
+            let mut packed = Vec::new();
+            let mut send_counts = Vec::new();
+            for r in 0..n_ranks {
+                let t = ts[r];
+                let mut probs: Vec<f32> = (0..t * e).map(|_| rng.uniform() as f32).collect();
+                for row in probs.chunks_exact_mut(e) {
+                    let s: f32 = row.iter().sum();
+                    for v in row {
+                        *v /= s;
+                    }
+                }
+                let a = adaptive_k(&probs, t, e, 0.6, k_max);
+                let x: Vec<f32> = (0..t * d).map(|_| rng.uniform_in(-2.0, 2.0)).collect();
+                let counts = topo.owner_counts(&a.experts);
+                let bufs = route_pack_k(&topo, &x, d, &a, &counts);
+                for (dst, buf) in bufs.iter().enumerate() {
+                    if buf.len() != counts[dst] * stride {
+                        return Err(format!("rank {r}->{dst}: counts != buffer"));
+                    }
+                }
+                assigns.push(a);
+                xs.push(x);
+                packed.push(bufs);
+                send_counts.push(counts);
+            }
+            let mut returned: Vec<Vec<Vec<f32>>> = vec![vec![Vec::new(); n_ranks]; n_ranks];
+            let mut total_admitted = 0usize;
+            for dst in 0..n_ranks {
+                let arrivals: Vec<Vec<f32>> =
+                    (0..n_ranks).map(|src| packed[src][dst].clone()).collect();
+                let (xe, adm) = route_admit(dst, &topo, &arrivals, d, cap);
+                total_admitted += adm.len();
+                let rc = return_counts(&topo, &adm);
+                let back = return_pack(&topo, &adm, &xe, d, &rc);
+                for (home, buf) in back.iter().enumerate() {
+                    returned[home][dst] = buf.clone();
+                }
+            }
+            let mut total_rows = 0usize;
+            for home in 0..n_ranks {
+                let t = ts[home];
+                let r = return_unpack_k(&returned[home], t, d);
+                total_rows += r.rows.len();
+                // recompute the combine from the raw rows and compare
+                let mut want = vec![0f32; t * d];
+                for (ri, row) in r.rows.iter().enumerate() {
+                    for j in 0..d {
+                        want[row.token * d + j] += row.gate * r.raw[ri * d + j];
+                    }
+                }
+                for i in 0..t * d {
+                    if (want[i] - r.combined[i]).abs() > 1e-5 {
+                        return Err(format!("rank {home}: combine mismatch at {i}"));
+                    }
+                }
+                // every row's gate must match the assign's gate for that
+                // (token, expert) pair
+                for row in &r.rows {
+                    let a = &assigns[home];
+                    let found = a.range(row.token).any(|s| {
+                        a.gates[s] == row.gate && topo.owner_of(a.experts[s]) == row.owner
+                    });
+                    if !found {
+                        return Err(format!("rank {home}: orphan return row"));
+                    }
+                }
+            }
+            if total_rows != total_admitted {
+                return Err(format!("admitted {total_admitted} != returned {total_rows}"));
+            }
+            let total_slots: usize = assigns.iter().map(|a| a.n_slots()).sum();
+            if total_admitted > total_slots {
+                return Err("slot duplicated across ranks".into());
             }
             Ok(())
         });

@@ -96,6 +96,21 @@ pub trait Backend {
     /// The model description this backend was built from.
     fn manifest(&self) -> &Manifest;
 
+    /// Select the router used on routed (non-dropped, non-hash) steps.
+    /// The default accepts `Top1` (every backend's hard-coded behavior
+    /// before routers existed) and rejects anything else, so engines that
+    /// have not been taught multi-expert dispatch fail loudly at config
+    /// time instead of silently running top-1. The pure-Rust engines
+    /// override this with full top-k / adaptive-k support.
+    fn set_router(&mut self, router: crate::moe::Router) -> BackendResult<()> {
+        match router {
+            crate::moe::Router::Top1 => Ok(()),
+            other => Err(BackendError::Unsupported {
+                what: format!("router '{}' on backend '{}'", other.name(), self.name()),
+            }),
+        }
+    }
+
     /// Run one training step. `flags` = (drop_flag, expert_skip,
     /// hash_route) from the coordinator's decision; `seed` drives the
     /// per-step jitter noise.

@@ -87,6 +87,12 @@ impl Backend for ParallelBackend {
         self.inner.manifest()
     }
 
+    fn set_router(&mut self, router: crate::moe::Router) -> BackendResult<()> {
+        // the reference engine's full top-k / adaptive-k support; the
+        // threaded execution path inherits it through the shared kernels
+        self.inner.set_router(router)
+    }
+
     fn train_step(
         &mut self,
         batch: &Batch,

@@ -7,10 +7,11 @@
 //! artifacts execute, at reference scale:
 //!
 //!   embedding (tied in/out, + learned positions)
-//!     -> per MoE layer: gate softmax -> routing (top-1 / hash / local
+//!     -> per MoE layer: gate softmax -> routing (the configured
+//!        [`moe::Router`] -- top-1 / top-k / adaptive-k -- or hash / local
 //!        with Gating Dropout's kept/dropped capacity split, reusing
 //!        [`moe::top1`] / [`moe::gate_of`] / [`moe::hash_expert`])
-//!        -> per-expert 2-layer ReLU FFN -> gated residual combine
+//!        -> per-expert 2-layer ReLU FFN -> gate-weighted residual combine
 //!     -> tied-projection logits -> masked CE + Switch balance loss
 //!   -> manual backward through the whole graph -> Adam update
 //!
@@ -108,6 +109,10 @@ pub struct ReferenceBackend {
     /// `None` = the plain single-thread reference path. Both produce
     /// bit-identical results (see the module docs).
     pool: Option<ThreadPool>,
+    /// Router used on non-dropped, non-hash steps. `Top1` (the default)
+    /// runs the seed's `moe::top1` scan verbatim, so the golden fixture
+    /// and every fixed-seed trace stay bit-identical.
+    router: moe::Router,
 }
 
 /// Per-step routing decision, decoded from the coordinator flags.
@@ -119,18 +124,23 @@ struct StepFlags {
 }
 
 /// Everything the backward pass needs from one MoE layer's forward.
+///
+/// Routing state is CSR over (token, slot) pairs: token `i` occupies the
+/// slots `assign.range(i)` of the per-slot vectors. Under a k=1 router
+/// (the default) every token has exactly one slot, the slot index equals
+/// the token index, and every loop below degenerates to the seed's
+/// per-token layout operation for operation.
 struct LayerCache {
     x: Vec<f32>,            // [t,d] layer input
     gate_in: Vec<f32>,      // [t,d] jittered gate input (== x when eval)
     jit: Option<Vec<f32>>,  // jitter multipliers, None => ones
     probs: Vec<f32>,        // [t,e]
-    idx: Vec<usize>,        // [t] routed expert
-    gate: Vec<f32>,         // [t] combine weight (router prob of idx)
-    kept: Vec<bool>,        // [t] within per-expert capacity
-    f_frac: Vec<f32>,       // [e] fraction of tokens per expert
-    pre: Vec<f32>,          // [t,f] expert pre-activation (0 when not run)
-    hid: Vec<f32>,          // [t,f] relu(pre)
-    ye: Vec<f32>,           // [t,d] expert output before gating
+    assign: moe::RouteAssign, // per-token expert slots + combine weights
+    kept: Vec<bool>,        // [nslots] within per-expert capacity
+    f_frac: Vec<f32>,       // [e] routed slots per expert / t
+    pre: Vec<f32>,          // [nslots,f] expert pre-activation (0 when not run)
+    hid: Vec<f32>,          // [nslots,f] relu(pre)
+    ye: Vec<f32>,           // [nslots,d] expert output before gating
     active: bool,           // expert FFN ran (false on Gate-Expert-Drop)
 }
 
@@ -211,7 +221,13 @@ impl ReferenceBackend {
             params,
             step: 0.0,
             pool: None,
+            router: moe::Router::Top1,
         }
+    }
+
+    /// Router in effect on routed (non-dropped, non-hash) steps.
+    pub fn router(&self) -> moe::Router {
+        self.router
     }
 
     /// Attach a worker pool: subsequent steps run the deterministic
@@ -402,40 +418,52 @@ impl ReferenceBackend {
             self.mm(&mut probs, &gate_in, wr, t, d, e);
             softmax_rows(&mut probs, t, e);
 
-            // routing: local (Gating Dropout) > hash (Hash-Layer) > top-1
+            // routing: local (Gating Dropout) > hash (Hash-Layer) > the
+            // configured router. Dropped/hashed steps force one expert per
+            // token (CSR with offsets 0..=t), so the paper's mechanism is
+            // unchanged no matter which router runs the other steps.
             let forced_gates = |idx: &[usize]| -> Vec<f32> {
                 idx.iter()
                     .enumerate()
                     .map(|(i, &ei)| moe::gate_of(&probs, e, i, ei))
                     .collect()
             };
-            let (idx, gate): (Vec<usize>, Vec<f32>) = if flags.drop {
+            let assign: moe::RouteAssign = if flags.drop {
                 let idx: Vec<usize> = (0..t).map(|i| local_expert_row[i / len] as usize).collect();
                 let gate = forced_gates(&idx);
-                (idx, gate)
+                moe::RouteAssign::from_single(idx, gate)
             } else if flags.hash {
                 let ids = if l < dm.enc_blocks { src } else { tgt_in };
                 let idx: Vec<usize> =
                     ids.iter().map(|&id| moe::hash_expert(id as u32, e)).collect();
                 let gate = forced_gates(&idx);
-                (idx, gate)
+                moe::RouteAssign::from_single(idx, gate)
             } else {
-                moe::top1(&probs, t, e)
+                self.router.route(&probs, t, e)
             };
+            let nslots = assign.n_slots();
 
-            // capacity admission in token order (Switch tie-break),
-            // independently per capacity group; `fill` accumulates the
-            // full-batch counts for the balance loss (identical to the
-            // ungrouped accounting when `groups == [t]`)
+            // capacity admission in token order then selection order
+            // (Switch tie-break), independently per capacity group; the
+            // per-expert cap scales with the router's fan-out bound so a
+            // top-k step admits the same per-token share a top-1 step
+            // does (x1 under any k=1 routing -- bit-identical accounting).
+            // `fill` accumulates the full-batch slot counts for the
+            // balance loss (identical to the ungrouped accounting when
+            // `groups == [t]`).
+            let kmax = if flags.drop || flags.hash { 1 } else { self.router.max_k() };
             let mut fill = vec![0usize; e];
-            let mut kept = Vec::with_capacity(t);
+            let mut kept = Vec::with_capacity(nslots);
             let mut g0 = 0;
             for &gt in groups {
-                let cap = ((cf * gt as f32 / e as f32).ceil() as usize).max(1);
+                let cap = ((cf * gt as f32 / e as f32).ceil() as usize).max(1) * kmax;
                 let mut gfill = vec![0usize; e];
-                for &ei in &idx[g0..g0 + gt] {
-                    gfill[ei] += 1;
-                    kept.push(gfill[ei] <= cap);
+                for i in g0..g0 + gt {
+                    for s in assign.range(i) {
+                        let ei = assign.experts[s];
+                        gfill[ei] += 1;
+                        kept.push(gfill[ei] <= cap);
+                    }
                 }
                 for (fv, &gv) in fill.iter_mut().zip(&gfill) {
                     *fv += gv;
@@ -452,16 +480,18 @@ impl ReferenceBackend {
             let balance: f32 = e as f32
                 * f_frac.iter().zip(&p_mean).map(|(&fv, &pm)| fv * pm / t as f32).sum::<f32>();
             balance_sum += balance;
-            kept_sum += kept.iter().filter(|&&k| k).count() as f32 / t as f32;
+            kept_sum += kept.iter().filter(|&&k| k).count() as f32 / kept.len() as f32;
 
-            // expert FFN + gated residual combine. The threaded path
-            // chunks the token range: every token's pre/hid/ye/y rows are
-            // written by exactly one worker, and the per-token math is the
-            // shared `expert_fwd_tokens`, so the split cannot change bits.
+            // expert FFN + gate-weighted residual combine. The threaded
+            // path chunks the token range (slot ranges follow through the
+            // CSR offsets): every slot's pre/hid/ye rows and every token's
+            // y row are written by exactly one worker, and the per-slot
+            // math is the shared `expert_fwd_tokens`, so the split cannot
+            // change bits.
             let active = !(flags.drop && flags.skip);
-            let mut pre = vec![0f32; t * ff];
-            let mut hid = vec![0f32; t * ff];
-            let mut ye = vec![0f32; t * d];
+            let mut pre = vec![0f32; nslots * ff];
+            let mut hid = vec![0f32; nslots * ff];
+            let mut ye = vec![0f32; nslots * d];
             let mut y = x.clone();
             if active {
                 match self.pool.as_ref().filter(|p| p.workers_for(t * ff) > 1) {
@@ -469,12 +499,12 @@ impl ReferenceBackend {
                         w1,
                         w2,
                         &x,
-                        &idx,
+                        &assign,
                         &kept,
-                        &gate,
                         d,
                         ff,
                         0,
+                        t,
                         &mut pre,
                         &mut hid,
                         &mut ye,
@@ -488,21 +518,22 @@ impl ReferenceBackend {
                         let mut i0 = 0;
                         while i0 < t {
                             let take = tp.min(t - i0);
-                            let (pc, rest) = std::mem::take(&mut pre_r).split_at_mut(take * ff);
+                            let srows = assign.offsets[i0 + take] - assign.offsets[i0];
+                            let (pc, rest) = std::mem::take(&mut pre_r).split_at_mut(srows * ff);
                             pre_r = rest;
-                            let (hc, rest) = std::mem::take(&mut hid_r).split_at_mut(take * ff);
+                            let (hc, rest) = std::mem::take(&mut hid_r).split_at_mut(srows * ff);
                             hid_r = rest;
-                            let (ec, rest) = std::mem::take(&mut ye_r).split_at_mut(take * d);
+                            let (ec, rest) = std::mem::take(&mut ye_r).split_at_mut(srows * d);
                             ye_r = rest;
                             let (yc, rest) = std::mem::take(&mut y_r).split_at_mut(take * d);
                             y_r = rest;
-                            parts.push((i0, pc, hc, ec, yc));
+                            parts.push((i0, take, pc, hc, ec, yc));
                             i0 += take;
                         }
-                        let (x_r, idx_r, kept_r, gate_r) = (&x, &idx, &kept, &gate);
-                        pool.run_parts(parts, &|_, (i0, pc, hc, ec, yc)| {
+                        let (x_r, assign_r, kept_r) = (&x, &assign, &kept);
+                        pool.run_parts(parts, &|_, (i0, take, pc, hc, ec, yc)| {
                             expert_fwd_tokens(
-                                w1, w2, x_r, idx_r, kept_r, gate_r, d, ff, i0, pc, hc, ec, yc,
+                                w1, w2, x_r, assign_r, kept_r, d, ff, i0, take, pc, hc, ec, yc,
                             )
                         });
                     }
@@ -514,8 +545,7 @@ impl ReferenceBackend {
                 gate_in,
                 jit,
                 probs,
-                idx,
-                gate,
+                assign,
                 kept,
                 f_frac,
                 pre,
@@ -623,7 +653,9 @@ impl ReferenceBackend {
     ) -> Vec<f32> {
         let dm = &self.manifest.dims;
         let (d, e, ff) = (dm.d_model, dm.n_experts, dm.d_ff);
-        let t = cache.idx.len();
+        let assign = &cache.assign;
+        let t = assign.n_tokens();
+        let nslots = assign.n_slots();
         let w1 = self.layer_param(l, 1);
         let w2 = self.layer_param(l, 2);
 
@@ -638,46 +670,62 @@ impl ReferenceBackend {
             }
         }
 
+        // per-slot gate cotangents (0 where capacity-dropped); the router
+        // VJP below turns them into dprobs once all slots are in
+        let mut dgates = vec![0f32; nslots];
         if cache.active {
             match self.pool.as_ref().filter(|p| p.workers_for(t * ff) > 1) {
                 None => {
                     let mut dxa = vec![0f32; d];
                     for i in 0..t {
-                        if !cache.kept[i] {
-                            continue;
-                        }
-                        let ei = cache.idx[i];
-                        let dg = expert_token_bwd(
-                            cache,
-                            dy,
-                            w1,
-                            w2,
-                            d,
-                            ff,
-                            i,
-                            &mut dw1[ei * d * ff..(ei + 1) * d * ff],
-                            &mut dw2[ei * ff * d..(ei + 1) * ff * d],
-                            &mut dxa,
-                        );
-                        dprobs[i * e + ei] += dg;
-                        for (dxv, &av) in dx[i * d..(i + 1) * d].iter_mut().zip(&dxa) {
-                            *dxv += av;
+                        for s in assign.range(i) {
+                            if !cache.kept[s] {
+                                continue;
+                            }
+                            let ei = assign.experts[s];
+                            dgates[s] = expert_token_bwd(
+                                cache,
+                                dy,
+                                w1,
+                                w2,
+                                d,
+                                ff,
+                                i,
+                                s,
+                                &mut dw1[ei * d * ff..(ei + 1) * d * ff],
+                                &mut dw2[ei * ff * d..(ei + 1) * ff * d],
+                                &mut dxa,
+                            );
+                            for (dxv, &av) in dx[i * d..(i + 1) * d].iter_mut().zip(&dxa) {
+                                *dxv += av;
+                            }
                         }
                     }
                 }
                 Some(pool) => {
                     // Partition by expert: each worker owns one expert's
-                    // dw1/dw2 slices and walks that expert's tokens in
-                    // ascending order -- the exact order the sequential
-                    // loop feeds that expert's accumulators. Per-token
-                    // dx/dprobs contributions land in worker-local buffers
-                    // and are merged below; every target element receives
-                    // exactly one addition (a token has one expert), so
-                    // the merge cannot change bits.
+                    // dw1/dw2 slices and walks that expert's slots in
+                    // ascending slot order -- the exact order the
+                    // sequential loop (token order, selection order within
+                    // a token) feeds that expert's accumulators. Per-slot
+                    // dx/dgate contributions land in worker-local buffers;
+                    // the merge below walks them back token-major in
+                    // selection order, so dx receives its additions in the
+                    // sequential order (one addition per slot).
                     let mut toks: Vec<Vec<usize>> = vec![Vec::new(); e];
+                    let mut tok_of = vec![0usize; nslots];
                     for i in 0..t {
-                        if cache.kept[i] {
-                            toks[cache.idx[i]].push(i);
+                        for s in assign.range(i) {
+                            tok_of[s] = i;
+                            if cache.kept[s] {
+                                toks[assign.experts[s]].push(s);
+                            }
+                        }
+                    }
+                    let mut pos = vec![0usize; nslots];
+                    for list in &toks {
+                        for (r, &s) in list.iter().enumerate() {
+                            pos[s] = r;
                         }
                     }
                     let mut scat: Vec<(Vec<f32>, Vec<f32>)> =
@@ -689,10 +737,11 @@ impl ReferenceBackend {
                         .zip(scat.iter_mut())
                         .map(|(((tk, w1c), w2c), sc)| (tk, w1c, w2c, sc))
                         .collect();
+                    let tok_of_r = &tok_of;
                     pool.run_parts(parts, &|_, (tk, dw1e, dw2e, out)| {
                         let mut dxa = vec![0f32; tk.len() * d];
                         let mut dga = vec![0f32; tk.len()];
-                        for (r, &i) in tk.iter().enumerate() {
+                        for (r, &s) in tk.iter().enumerate() {
                             dga[r] = expert_token_bwd(
                                 cache,
                                 dy,
@@ -700,7 +749,8 @@ impl ReferenceBackend {
                                 w2,
                                 d,
                                 ff,
-                                i,
+                                tok_of_r[s],
+                                s,
                                 dw1e,
                                 dw2e,
                                 &mut dxa[r * d..(r + 1) * d],
@@ -708,9 +758,14 @@ impl ReferenceBackend {
                         }
                         *out = (dxa, dga);
                     });
-                    for (ei, (dxa, dga)) in scat.iter().enumerate() {
-                        for (r, &i) in toks[ei].iter().enumerate() {
-                            dprobs[i * e + ei] += dga[r];
+                    for i in 0..t {
+                        for s in assign.range(i) {
+                            if !cache.kept[s] {
+                                continue;
+                            }
+                            let (dxa, dga) = &scat[assign.experts[s]];
+                            let r = pos[s];
+                            dgates[s] = dga[r];
                             let dst = &mut dx[i * d..(i + 1) * d];
                             for (dxv, &av) in dst.iter_mut().zip(&dxa[r * d..(r + 1) * d]) {
                                 *dxv += av;
@@ -720,6 +775,10 @@ impl ReferenceBackend {
                 }
             }
         }
+
+        // router VJP: gate cotangents -> routed-prob cotangents, shared by
+        // both execution paths (and by the distributed engine's backward).
+        moe::router_vjp(assign, &cache.probs, &dgates, e, &mut dprobs);
 
         // softmax backward onto the gate logits
         let mut dglogits = vec![0f32; t * e];
@@ -750,61 +809,67 @@ impl ReferenceBackend {
     }
 }
 
-/// Expert FFN forward for the token range `[i0, i0 + rows)`:
-/// `pre`/`hid`/`ye`/`y` are that range's row chunks (token-local), while
-/// `x`/`idx`/`kept`/`gate` stay full-batch. Shared by the sequential path
-/// (one call covering every token) and the threaded path (one call per
-/// token chunk), so the two cannot drift numerically.
+/// Expert FFN forward for the token range `[i0, i0 + rows)` and its slot
+/// range `assign.offsets[i0]..assign.offsets[i0 + rows]`:
+/// `pre`/`hid`/`ye` are that slot range's row chunks, `y` the token
+/// range's, while `x`/`assign`/`kept` stay full-batch. Each token's
+/// expert outputs are combined into its `y` row in selection order,
+/// weighted by the slot gate. Shared by the sequential path (one call
+/// covering every token) and the threaded path (one call per token
+/// chunk), so the two cannot drift numerically.
 #[allow(clippy::too_many_arguments)]
 fn expert_fwd_tokens(
     w1: &[f32],
     w2: &[f32],
     x: &[f32],
-    idx: &[usize],
+    assign: &moe::RouteAssign,
     kept: &[bool],
-    gate: &[f32],
     d: usize,
     ff: usize,
     i0: usize,
+    rows: usize,
     pre: &mut [f32],
     hid: &mut [f32],
     ye: &mut [f32],
     y: &mut [f32],
 ) {
-    let rows = pre.len() / ff;
+    let s0 = assign.offsets[i0];
     for r in 0..rows {
         let i = i0 + r;
-        if !kept[i] {
-            continue;
-        }
-        let ei = idx[i];
-        let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
-        let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
-        let xi = &x[i * d..(i + 1) * d];
-        let pi = &mut pre[r * ff..(r + 1) * ff];
-        for (j, &xv) in xi.iter().enumerate() {
-            if xv != 0.0 {
-                axpy(pi, xv, &w1e[j * ff..(j + 1) * ff]);
+        for s in assign.range(i) {
+            if !kept[s] {
+                continue;
             }
-        }
-        let hi = &mut hid[r * ff..(r + 1) * ff];
-        hi.copy_from_slice(pi);
-        relu(hi);
-        let yi = &mut ye[r * d..(r + 1) * d];
-        for (j, &hv) in hi.iter().enumerate() {
-            if hv != 0.0 {
-                axpy(yi, hv, &w2e[j * d..(j + 1) * d]);
+            let ls = s - s0;
+            let ei = assign.experts[s];
+            let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
+            let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
+            let xi = &x[i * d..(i + 1) * d];
+            let pi = &mut pre[ls * ff..(ls + 1) * ff];
+            for (j, &xv) in xi.iter().enumerate() {
+                if xv != 0.0 {
+                    axpy(pi, xv, &w1e[j * ff..(j + 1) * ff]);
+                }
             }
+            let hi = &mut hid[ls * ff..(ls + 1) * ff];
+            hi.copy_from_slice(pi);
+            relu(hi);
+            let yi = &mut ye[ls * d..(ls + 1) * d];
+            for (j, &hv) in hi.iter().enumerate() {
+                if hv != 0.0 {
+                    axpy(yi, hv, &w2e[j * d..(j + 1) * d]);
+                }
+            }
+            axpy(&mut y[r * d..(r + 1) * d], assign.gates[s], yi);
         }
-        axpy(&mut y[r * d..(r + 1) * d], gate[i], yi);
     }
 }
 
-/// Expert-path backward for one kept token `i`: accumulates into its
-/// expert's `dw1e`/`dw2e` slices, writes the token's input-cotangent
-/// contribution into `dxa` (length `d`, fully overwritten), and returns
-/// the gate cotangent `<dy_i, ye_i>`. Shared by the sequential and
-/// per-expert-parallel paths.
+/// Expert-path backward for one kept slot `s` of token `i`: accumulates
+/// into its expert's `dw1e`/`dw2e` slices, writes the slot's
+/// input-cotangent contribution into `dxa` (length `d`, fully
+/// overwritten), and returns the gate cotangent `<dy_i, ye_s>`. Shared by
+/// the sequential and per-expert-parallel paths.
 #[allow(clippy::too_many_arguments)]
 fn expert_token_bwd(
     cache: &LayerCache,
@@ -814,21 +879,22 @@ fn expert_token_bwd(
     d: usize,
     ff: usize,
     i: usize,
+    s: usize,
     dw1e: &mut [f32],
     dw2e: &mut [f32],
     dxa: &mut [f32],
 ) -> f32 {
-    let ei = cache.idx[i];
+    let ei = cache.assign.experts[s];
     let w1e = &w1[ei * d * ff..(ei + 1) * d * ff];
     let w2e = &w2[ei * ff * d..(ei + 1) * ff * d];
     let dyi = &dy[i * d..(i + 1) * d];
-    let yei = &cache.ye[i * d..(i + 1) * d];
-    // gate path: dgate = <dy, ye>, flows into the routed prob
+    let yei = &cache.ye[s * d..(s + 1) * d];
+    // gate path: dgate = <dy, ye>, flows into the routed prob(s)
     let dg = dot(dyi, yei);
     // expert path
-    let g = cache.gate[i];
-    let hi = &cache.hid[i * ff..(i + 1) * ff];
-    let prei = &cache.pre[i * ff..(i + 1) * ff];
+    let g = cache.assign.gates[s];
+    let hi = &cache.hid[s * ff..(s + 1) * ff];
+    let prei = &cache.pre[s * ff..(s + 1) * ff];
     // dye = gate * dy; dh = dye @ w2^T; dpre = dh * (pre > 0)
     let mut dpre = vec![0f32; ff];
     for j in 0..ff {
@@ -904,6 +970,11 @@ impl Backend for ReferenceBackend {
 
     fn manifest(&self) -> &Manifest {
         &self.manifest
+    }
+
+    fn set_router(&mut self, router: moe::Router) -> BackendResult<()> {
+        self.router = router;
+        Ok(())
     }
 
     fn train_step(

@@ -64,13 +64,18 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: RunConfig, with_decode: bool) -> Result<Trainer> {
-        let engine = default_backend(
+        let mut engine = default_backend(
             &cfg.artifact_dir(),
             &cfg.preset,
             cfg.seed,
             with_decode,
             cfg.threads,
         )?;
+        // routed-step router (dropped steps bypass the gate either way);
+        // backends without top-k support reject non-top1 here, loudly
+        engine
+            .set_router(cfg.router()?)
+            .map_err(|e| crate::err!("configuring router: {e}"))?;
         let dims = engine.manifest().dims.clone();
         let topo = Topology::new(cfg.n_ranks, dims.n_experts);
         let corpus = Corpus::new(CorpusConfig::for_preset(

@@ -1,0 +1,346 @@
+//! Router-seam acceptance suite: the first-class `Router` abstraction
+//! (top-1 / top-k / adaptive-k) threaded through the backends and the
+//! distributed engine.
+//!
+//! Contracts pinned here:
+//! * `topk(k=1)` and `adaptive(thresh=0)` reproduce the seed's top-1
+//!   training run **bit for bit** (metrics, eval, decode, every param).
+//! * Gating-dropout policies compose with any router: on dropped steps
+//!   the gate is bypassed entirely, so the whole run is bit-identical
+//!   across routers when every step drops.
+//! * `backend-par` inherits top-k/adaptive through the shared kernels:
+//!   bit-parity with the reference engine at 1/2/4 threads.
+//! * The distributed engine's variable-fan-out wire keeps the exact
+//!   collective op accounting of the seed (4 payload all-to-alls + 2
+//!   counts phases per full step) while moving strictly more bytes at
+//!   k=2, and its losses stay bit-identical across thread budgets.
+
+use gating_dropout::coordinator::{Coordinator, Policy};
+use gating_dropout::data::{Batcher, Corpus, CorpusConfig, BOS};
+use gating_dropout::distributed::{DistEngine, DistRunConfig};
+use gating_dropout::moe::Router;
+use gating_dropout::runtime::{Backend, ModelDims, RefHyper, ReferenceBackend};
+use gating_dropout::topology::Topology;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 128,
+        d_model: 16,
+        d_ff: 24,
+        n_experts: 4,
+        enc_blocks: 1,
+        dec_blocks: 1,
+        max_len: 8,
+        batch_rows: 4,
+        bos: BOS,
+        param_count: 0,
+    }
+}
+
+const HYPER: RefHyper = RefHyper { lr: 1e-2, warmup: 4.0 };
+const STEPS: u64 = 6;
+
+/// Everything observable about one short training run, as bit patterns.
+struct Trace {
+    metrics: Vec<[u32; 5]>,
+    eval: [u32; 4],
+    decode: Vec<i32>,
+    params: Vec<(String, Vec<u32>)>,
+}
+
+fn run(be: &mut dyn Backend, policy: Policy, seed: u64) -> Trace {
+    let dm = be.manifest().dims.clone();
+    let topo = Topology::new(4, dm.n_experts);
+    let corpus = Corpus::new(CorpusConfig::for_preset(2, dm.vocab, dm.max_len, seed));
+    let mut batcher = Batcher::new(corpus, seed ^ 0xDA7A);
+    let mut coord = Coordinator::new(policy, seed);
+    let mut metrics = Vec::new();
+    let mut last = None;
+    for step in 0..STEPS {
+        let decision = coord.decide(step);
+        let batch = batcher.next_batch(dm.batch_rows, &topo);
+        let m = be.train_step(&batch, decision.as_flags(), step as i32).unwrap();
+        assert!(m.loss.is_finite(), "non-finite loss at step {step}");
+        metrics.push([
+            m.loss.to_bits(),
+            m.ce.to_bits(),
+            m.balance.to_bits(),
+            m.kept_frac.to_bits(),
+            m.lr.to_bits(),
+        ]);
+        last = Some(batch);
+    }
+    let batch = last.unwrap();
+    let ev = be.eval(&batch).unwrap();
+    let eval = [
+        ev.loss.to_bits(),
+        ev.ce.to_bits(),
+        ev.balance.to_bits(),
+        ev.kept_frac.to_bits(),
+    ];
+    let decode = be.decode(&batch.src).unwrap();
+    let params = be
+        .manifest()
+        .params
+        .iter()
+        .map(|s| {
+            let (_, data) = be.param_by_name(&s.name).unwrap();
+            (s.name.clone(), data.iter().map(|v| v.to_bits()).collect())
+        })
+        .collect();
+    Trace { metrics, eval, decode, params }
+}
+
+fn ref_trace(router: Router, policy: Policy, seed: u64) -> Trace {
+    let mut be = ReferenceBackend::from_dims("router-test", dims(), HYPER, seed);
+    be.set_router(router).unwrap();
+    run(&mut be, policy, seed)
+}
+
+fn assert_traces_eq(want: &Trace, got: &Trace, ctx: &str) {
+    assert_eq!(want.metrics, got.metrics, "train metrics diverged: {ctx}");
+    assert_eq!(want.eval, got.eval, "eval metrics diverged: {ctx}");
+    assert_eq!(want.decode, got.decode, "greedy decode diverged: {ctx}");
+    for ((name, w), (_, g)) in want.params.iter().zip(&got.params) {
+        assert_eq!(w, g, "param '{name}' diverged: {ctx}");
+    }
+}
+
+/// The refactor's heart: a k=1 router is indistinguishable from the seed
+/// top-1 path at the bit level, over whole training runs (gate values,
+/// capacity admission, backward scatter, optimizer updates -- all of it).
+#[test]
+fn topk1_and_adaptive0_reproduce_top1_run_bitwise() {
+    for &seed in &[1u64, 2] {
+        for &policy in &[Policy::Baseline, Policy::GateDrop { p: 0.3 }, Policy::HashLayer] {
+            let want = ref_trace(Router::Top1, policy, seed);
+            for router in [
+                Router::TopK { k: 1 },
+                Router::Adaptive { thresh: 0.0, k_max: 1 },
+                Router::Adaptive { thresh: 0.0, k_max: 4 }, // stops at 1 anyway
+            ] {
+                let got = ref_trace(router, policy, seed);
+                let ctx =
+                    format!("seed {seed} policy {} router {}", policy.name(), router.name());
+                assert_traces_eq(&want, &got, &ctx);
+            }
+        }
+    }
+}
+
+/// Top-2 routing actually engages the multi-expert path (the run must
+/// diverge from top-1) while every metric stays finite and the model
+/// still trains end to end.
+#[test]
+fn topk2_runs_and_diverges_from_top1() {
+    let seed = 1;
+    let top1 = ref_trace(Router::Top1, Policy::Baseline, seed);
+    let top2 = ref_trace(Router::TopK { k: 2 }, Policy::Baseline, seed);
+    assert_ne!(
+        top1.metrics, top2.metrics,
+        "k=2 must change the training trajectory (it doubles expert fan-out)"
+    );
+    assert_eq!(top2.decode.len(), top1.decode.len());
+    // k above the expert count clamps to e, and still runs clean
+    let wide = ref_trace(Router::TopK { k: 99 }, Policy::Baseline, seed);
+    assert_ne!(wide.metrics, top1.metrics);
+}
+
+/// Dropout composes with any router: when every step drops (p=1), the
+/// gate is never consulted, so the entire run is bit-identical across
+/// routers. With p in (0,1), only non-dropped steps may differ.
+#[test]
+fn dropped_steps_are_router_independent() {
+    let seed = 2;
+    let want = ref_trace(Router::Top1, Policy::NoAllToAll, seed);
+    for router in [Router::TopK { k: 2 }, Router::Adaptive { thresh: 0.9, k_max: 3 }] {
+        let got = ref_trace(router, Policy::NoAllToAll, seed);
+        assert_traces_eq(&want, &got, &format!("p=1 dropout under router {}", router.name()));
+    }
+    // mixed run: must stay finite and complete under gate-drop + top-2
+    let mixed = ref_trace(Router::TopK { k: 2 }, Policy::GateDrop { p: 0.5 }, seed);
+    assert_eq!(mixed.metrics.len(), STEPS as usize);
+}
+
+/// The unsupported-router contract: a backend that does not override
+/// `set_router` accepts top1 (the seed behavior) and rejects the rest
+/// loudly instead of silently routing top-1.
+#[test]
+fn default_backend_set_router_rejects_unknown() {
+    struct Stub(gating_dropout::runtime::Manifest);
+    impl Backend for Stub {
+        fn name(&self) -> &'static str {
+            "stub"
+        }
+        fn manifest(&self) -> &gating_dropout::runtime::Manifest {
+            &self.0
+        }
+        fn train_step(
+            &mut self,
+            _: &gating_dropout::data::Batch,
+            _: (f32, f32, f32),
+            _: i32,
+        ) -> gating_dropout::runtime::BackendResult<gating_dropout::runtime::TrainMetrics> {
+            unimplemented!()
+        }
+        fn eval(
+            &self,
+            _: &gating_dropout::data::Batch,
+        ) -> gating_dropout::runtime::BackendResult<gating_dropout::runtime::EvalMetrics> {
+            unimplemented!()
+        }
+        fn decode(&self, _: &[i32]) -> gating_dropout::runtime::BackendResult<Vec<i32>> {
+            unimplemented!()
+        }
+        fn step_count(&self) -> f32 {
+            0.0
+        }
+        fn reset(&mut self) -> gating_dropout::runtime::BackendResult<()> {
+            Ok(())
+        }
+        fn save_checkpoint(&self, _: &str) -> gating_dropout::runtime::BackendResult<()> {
+            Ok(())
+        }
+        fn load_checkpoint(&mut self, _: &str) -> gating_dropout::runtime::BackendResult<()> {
+            Ok(())
+        }
+        fn param_by_name(
+            &self,
+            _: &str,
+        ) -> gating_dropout::runtime::BackendResult<(
+            gating_dropout::runtime::TensorSpec,
+            Vec<f32>,
+        )> {
+            unimplemented!()
+        }
+    }
+    let mut stub =
+        Stub(gating_dropout::runtime::Manifest::synthetic("router-test", dims(), Vec::new()));
+    assert!(stub.set_router(Router::Top1).is_ok(), "top1 is every backend's seed behavior");
+    assert!(stub.set_router(Router::TopK { k: 2 }).is_err(), "must reject, not ignore");
+}
+
+/// `backend-par` inherits top-k/adaptive purely through the shared
+/// kernels: bit-parity with the reference engine at 1/2/4 threads, with
+/// the small-work cutoff forced off so every pooled path runs.
+#[cfg(feature = "backend-par")]
+#[test]
+fn parallel_matches_reference_bitwise_under_topk_routers() {
+    use gating_dropout::runtime::ParallelBackend;
+    for &seed in &[1u64, 2] {
+        for router in [Router::TopK { k: 2 }, Router::Adaptive { thresh: 0.5, k_max: 3 }] {
+            for &policy in &[Policy::Baseline, Policy::GateDrop { p: 0.3 }] {
+                let want = ref_trace(router, policy, seed);
+                for threads in [1usize, 2, 4] {
+                    let mut par =
+                        ParallelBackend::from_dims("router-test", dims(), HYPER, seed, threads);
+                    par.set_seq_cutoff(0);
+                    par.set_router(router).unwrap();
+                    let got = run(&mut par, policy, seed);
+                    let ctx = format!(
+                        "seed {seed} policy {} router {} threads {threads}",
+                        policy.name(),
+                        router.name()
+                    );
+                    assert_traces_eq(&want, &got, &ctx);
+                }
+            }
+        }
+    }
+}
+
+// ---- distributed engine ---------------------------------------------------
+
+fn dist_run(
+    router: Router,
+    policy: Policy,
+    steps: u64,
+    seed: u64,
+) -> gating_dropout::distributed::DistRunResult {
+    let cfg = DistRunConfig { policy, steps, seed, router, ..Default::default() };
+    DistEngine::run(&cfg).expect("dist engine failed (XLA builds need `make artifacts`)")
+}
+
+/// A k=1 router over the wire is the seed run, bit for bit: same losses,
+/// same bytes, same op counts.
+#[test]
+fn dist_topk1_is_bitwise_the_seed_run() {
+    let want = dist_run(Router::Top1, Policy::GateDrop { p: 0.4 }, 10, 42);
+    let got = dist_run(Router::TopK { k: 1 }, Policy::GateDrop { p: 0.4 }, 10, 42);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&want.losses), bits(&got.losses), "k=1 wire must be the seed wire");
+    assert_eq!(want.fabric.a2a_ops, got.fabric.a2a_ops);
+    assert_eq!(want.fabric.a2a_bytes, got.fabric.a2a_bytes);
+    assert_eq!(want.fabric.counts_ops, got.fabric.counts_ops);
+}
+
+/// Variable fan-out rides the same two-phase wire: per full step exactly
+/// 4 payload all-to-alls + 2 counts phases (the seed accounting), while
+/// k=2 moves strictly more payload bytes than top-1.
+#[test]
+fn dist_topk2_keeps_balanced_stats_and_moves_more_bytes() {
+    let steps = 12;
+    let top1 = dist_run(Router::Top1, Policy::Baseline, steps, 1);
+    let top2 = dist_run(Router::TopK { k: 2 }, Policy::Baseline, steps, 1);
+    for res in [&top1, &top2] {
+        assert!(res.dense_consistent, "dense replicas diverged");
+        assert_eq!(res.fabric.a2a_ops, steps * 4, "fwd x2 + bwd x2 per step");
+        assert_eq!(res.fabric.counts_ops, steps * 2, "dispatch + return counts phases");
+        assert!(res.losses.iter().all(|l| l.is_finite()));
+    }
+    assert!(
+        top2.fabric.a2a_bytes > top1.fabric.a2a_bytes,
+        "k=2 must move more payload: {} vs {}",
+        top2.fabric.a2a_bytes,
+        top1.fabric.a2a_bytes
+    );
+}
+
+/// Adaptive-k over the wire: fan-out varies per token per step, yet the
+/// collective schedule stays exactly balanced and seed-deterministic.
+#[test]
+fn dist_adaptive_is_balanced_and_deterministic() {
+    let steps = 8;
+    let a = dist_run(Router::Adaptive { thresh: 0.5, k_max: 3 }, Policy::Baseline, steps, 3);
+    let b = dist_run(Router::Adaptive { thresh: 0.5, k_max: 3 }, Policy::Baseline, steps, 3);
+    assert!(a.dense_consistent);
+    assert_eq!(a.fabric.a2a_ops, steps * 4);
+    assert_eq!(a.fabric.counts_ops, steps * 2);
+    assert_eq!(a.losses, b.losses, "same seed must replay the identical run");
+    assert_eq!(a.fabric.a2a_bytes, b.fabric.a2a_bytes);
+}
+
+/// Gating dropout composes with top-k on the wire: dropped steps skip
+/// every collective exactly as the seed did.
+#[test]
+fn dist_gate_drop_composes_with_topk() {
+    let steps = 20;
+    let res = dist_run(Router::TopK { k: 2 }, Policy::GateDrop { p: 0.5 }, steps, 3);
+    assert!(res.dense_consistent);
+    let full_steps = steps - (res.observed_drop_rate * steps as f64).round() as u64;
+    assert_eq!(res.fabric.a2a_ops, full_steps * 4, "a2a only on non-dropped steps");
+    assert!(res.losses.iter().all(|l| l.is_finite()));
+}
+
+/// The PR-5 thread-budget contract extends to variable fan-out: per-rank
+/// pooling must not move a bit under a k=2 router either.
+#[test]
+fn dist_topk_losses_bit_identical_across_thread_budgets() {
+    let run_t = |threads: usize| {
+        let cfg = DistRunConfig {
+            policy: Policy::GateDrop { p: 0.3 },
+            steps: 8,
+            seed: 11,
+            threads,
+            router: Router::TopK { k: 2 },
+            ..Default::default()
+        };
+        DistEngine::run(&cfg).expect("dist engine failed")
+    };
+    let seq = run_t(1);
+    let par = run_t(4);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&seq.losses), bits(&par.losses), "pooling changed a k=2 trajectory");
+    assert_eq!(seq.fabric.a2a_bytes, par.fabric.a2a_bytes);
+    assert!(par.dense_consistent);
+}
