@@ -25,10 +25,18 @@
 //! tokens/sec for both. The batched win comes from amortizing per-forward
 //! overhead and streaming each weight panel across all requests' rows.
 //!
-//! `bench_routing` guards the PR-6 router seam: `topk(k=1)` is asserted
+//! `bench_routing` guards the PR-6 router seam: `topk(1)` is asserted
 //! bit-identical to the seed `top1` scan before any timing, then the
 //! selection + CSR pack cost and the dispatch fan-out (wire rows per
 //! token) are compared across top1 / topk / adaptive.
+//!
+//! `bench_overlap` guards the PR-7 chunked pipelined dispatch: the
+//! distributed engine is run serially (`overlap_chunks=1`) and pipelined
+//! (`overlap_chunks=2`) across k∈{1,2} routers, the losses / parameter
+//! fingerprints / a2a byte+op counts are asserted bit-identical (the
+//! overlap contract: only modeled timing may change), then the modeled
+//! serial vs pipelined step times and the hidden-communication fraction
+//! are reported from the fabric ledger.
 //!
 //! The headline sections also emit machine-readable `BENCH_<section>.json`
 //! artifacts (schema `gd-bench-v1`; `GD_BENCH_DIR` picks the directory)
@@ -41,6 +49,7 @@ use gating_dropout::benchkit::{
 };
 use gating_dropout::collective::{Collective, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
+use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::metrics::corpus_bleu;
 use gating_dropout::moe;
 use gating_dropout::runtime::tensor::{
@@ -423,82 +432,157 @@ fn bench_routing() -> Vec<BenchEntry> {
     entries
 }
 
+/// Serial vs pipelined distributed engine, k=1 and k=2 routers. The
+/// modeled step times come from the fabric's rendezvous ledger (they are
+/// deterministic model outputs, not wall-clock samples), so each config
+/// runs once; what this section *asserts* is the overlap contract --
+/// chunking may only change the timing model, never a bit of the math or
+/// a byte on the wire.
+fn bench_overlap() -> Vec<BenchEntry> {
+    let mut entries = Vec::new();
+    println!("-- bench_overlap: serial vs pipelined dispatch, modeled step time --");
+    for router in [moe::Router::Top1, moe::Router::TopK { k: 2 }] {
+        let run = |chunks: usize| {
+            let cfg = DistRunConfig {
+                artifact_dir: "synthetic".into(),
+                steps: 6,
+                policy: Policy::Baseline,
+                router,
+                overlap_chunks: chunks,
+                ..Default::default()
+            };
+            DistEngine::run(&cfg).unwrap_or_else(|e| panic!("dist run failed: {e}"))
+        };
+        let serial = run(1);
+        let piped = run(2);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(
+            bits(&serial.losses),
+            bits(&piped.losses),
+            "overlap must not change the losses ({})",
+            router.name()
+        );
+        assert_eq!(
+            bits(&serial.param_fingerprint),
+            bits(&piped.param_fingerprint),
+            "overlap must not change the parameters ({})",
+            router.name()
+        );
+        assert_eq!(serial.fabric.a2a_ops, piped.fabric.a2a_ops, "a2a op count");
+        assert_eq!(serial.fabric.a2a_bytes, piped.fabric.a2a_bytes, "a2a byte count");
+
+        let t_serial = serial.fabric.serial_modeled_step_time();
+        let t_piped = piped.fabric.pipelined_modeled_step_time();
+        let hidden = piped.fabric.hidden_comm_fraction();
+        println!(
+            "overlap {:<6} serial {:.2}ms -> pipelined {:.2}ms ({:.2}x, {:.1}% comm hidden)",
+            router.name(),
+            t_serial * 1e3,
+            t_piped * 1e3,
+            t_serial / t_piped,
+            hidden * 100.0
+        );
+        let tag = format!("overlap_{}", router.name());
+        entries.push(BenchEntry::new(format!("{tag}_serial_modeled"), t_serial, "s"));
+        entries.push(BenchEntry::new(format!("{tag}_pipelined_modeled"), t_piped, "s"));
+        entries.push(BenchEntry::new(format!("{tag}_hidden_comm"), hidden, "frac"));
+        entries.push(BenchEntry::new(format!("{tag}_speedup"), t_serial / t_piped, "x"));
+    }
+    entries
+}
+
 fn main() {
-    // coordinator decision stream
-    let mut c = Coordinator::new(Policy::GateDrop { p: 0.3 }, 1);
-    let mut step = 0u64;
-    let s = bench(10, 100, || {
-        for _ in 0..1000 {
-            std::hint::black_box(c.decide(step));
-            step += 1;
-        }
-    });
-    report("coordinator: 1000 decisions", &s);
+    // optional section filter (`cargo bench --bench microbench -- overlap`
+    // runs just that JSON-emitting section; CI uses this to exercise the
+    // BENCH_overlap.json artifact path without the full suite)
+    let filter: Vec<String> = std::env::args().skip(1).collect();
+    let want = |s: &str| filter.is_empty() || filter.iter().any(|f| f == s);
 
-    // routing pack/admit/return round trip, 4 ranks x 256 tokens x d=64
-    let topo = Topology::new(4, 4);
-    let (t, d) = (256usize, 64usize);
-    let mut rng = Rng::new(3);
-    let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
-    let experts: Vec<usize> = (0..t).map(|_| rng.below(4) as usize).collect();
-    let gates = vec![0.5f32; t];
-    let s = bench(5, 50, || {
-        let counts = topo.owner_counts(&experts);
-        let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
-        std::hint::black_box(&packed);
-        // simulate self-arrivals (single-rank view of admit cost)
-        let (xe, adm) = moe::route_admit(0, &topo, &packed[..1], d, t);
-        let rc = moe::return_counts(&topo, &adm);
-        let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
-        std::hint::black_box(moe::return_unpack(&back, t, d));
-    });
-    report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
+    if filter.is_empty() {
+        // coordinator decision stream
+        let mut c = Coordinator::new(Policy::GateDrop { p: 0.3 }, 1);
+        let mut step = 0u64;
+        let s = bench(10, 100, || {
+            for _ in 0..1000 {
+                std::hint::black_box(c.decide(step));
+                step += 1;
+            }
+        });
+        report("coordinator: 1000 decisions", &s);
 
-    for (section, entries) in [
-        ("dispatch", bench_dispatch()),
-        ("routing", bench_routing()),
-        ("matmul_par", {
+        // routing pack/admit/return round trip, 4 ranks x 256 tokens x d=64
+        let topo = Topology::new(4, 4);
+        let (t, d) = (256usize, 64usize);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..t * d).map(|_| rng.uniform() as f32).collect();
+        let experts: Vec<usize> = (0..t).map(|_| rng.below(4) as usize).collect();
+        let gates = vec![0.5f32; t];
+        let s = bench(5, 50, || {
+            let counts = topo.owner_counts(&experts);
+            let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
+            std::hint::black_box(&packed);
+            // simulate self-arrivals (single-rank view of admit cost)
+            let (xe, adm) = moe::route_admit(0, &topo, &packed[..1], d, t);
+            let rc = moe::return_counts(&topo, &adm);
+            let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
+            std::hint::black_box(moe::return_unpack(&back, t, d));
+        });
+        report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
+    }
+
+    let sections: [(&str, fn() -> Vec<BenchEntry>); 5] = [
+        ("dispatch", bench_dispatch),
+        ("routing", bench_routing),
+        ("matmul_par", || {
             bench_pool_dispatch();
             bench_matmul_par()
         }),
-        ("decode", bench_decode()),
-    ] {
+        ("decode", bench_decode),
+        ("overlap", bench_overlap),
+    ];
+    for (section, run_section) in sections {
+        if !want(section) {
+            continue;
+        }
+        let entries = run_section();
         let path = bench_json_path(section);
-        write_bench_json(&path, &entries)
-            .unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        write_bench_json(&path, &entries).unwrap_or_else(|e| panic!("writing {path}: {e}"));
         println!("[bench] wrote {path} ({} entries)", entries.len());
     }
 
-    // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
-    let s = bench(3, 20, || {
-        let fab = Arc::new(ThreadFabric::new(4));
-        let mut hs = Vec::new();
-        for r in 0..4 {
-            let fab = fab.clone();
-            hs.push(std::thread::spawn(move || {
-                let counts = fab.all_to_all_counts(r, &[4096usize; 4]);
-                let out: Vec<Vec<f32>> = (0..4).map(|_| vec![r as f32; 4096]).collect();
-                std::hint::black_box(fab.all_to_all_f32(r, out, &counts));
-            }));
-        }
-        for h in hs {
-            h.join().unwrap();
-        }
-    });
-    report("fabric a2a_f32 (4 ranks x 64KB incl. thread spawn)", &s);
+    if filter.is_empty() {
+        // fabric all-to-all, 4 threads x 64KB each (typed zero-copy path)
+        let s = bench(3, 20, || {
+            let fab = Arc::new(ThreadFabric::new(4));
+            let mut hs = Vec::new();
+            for r in 0..4 {
+                let fab = fab.clone();
+                hs.push(std::thread::spawn(move || {
+                    let counts = fab.all_to_all_counts(r, &[4096usize; 4]);
+                    let out: Vec<Vec<f32>> =
+                        (0..4).map(|_| vec![r as f32; 4096]).collect();
+                    std::hint::black_box(fab.all_to_all_f32(r, out, &counts));
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+        report("fabric a2a_f32 (4 ranks x 64KB incl. thread spawn)", &s);
 
-    // BLEU over 64 pairs of len 30
-    let mut rng = Rng::new(5);
-    let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..64)
-        .map(|_| {
-            let r: Vec<i32> = (0..30).map(|_| rng.below(100) as i32).collect();
-            let mut h = r.clone();
-            h[3] = 999;
-            (h, r)
-        })
-        .collect();
-    let s = bench(5, 100, || {
-        std::hint::black_box(corpus_bleu(&pairs));
-    });
-    report("corpus BLEU (64 pairs x 30 tokens)", &s);
+        // BLEU over 64 pairs of len 30
+        let mut rng = Rng::new(5);
+        let pairs: Vec<(Vec<i32>, Vec<i32>)> = (0..64)
+            .map(|_| {
+                let r: Vec<i32> = (0..30).map(|_| rng.below(100) as i32).collect();
+                let mut h = r.clone();
+                h[3] = 999;
+                (h, r)
+            })
+            .collect();
+        let s = bench(5, 100, || {
+            std::hint::black_box(corpus_bleu(&pairs));
+        });
+        report("corpus BLEU (64 pairs x 30 tokens)", &s);
+    }
 }

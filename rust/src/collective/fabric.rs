@@ -64,17 +64,87 @@ pub struct FabricStats {
     /// Modeled wall time (seconds) these collectives would take on the
     /// configured cluster. Zero when no cluster model is attached.
     pub modeled_time: f64,
+    /// Modeled compute seconds the engine reported alongside chunked
+    /// (pipelined) collectives: the expert-stage work each comm chunk is
+    /// paced against, max over ranks per chunk. Invariant under the chunk
+    /// count -- chunking splits the same work, it never adds any.
+    pub modeled_compute: f64,
+    /// Modeled comm seconds hidden behind compute by chunk pipelining:
+    /// per chunked collective, the sum over adjacent (comm chunk, compute
+    /// chunk) pipeline pairs of `min(comm span, compute span)` at
+    /// slowest-rank pacing. Zero for serial (1-chunk) schedules.
+    pub overlapped_ticks: f64,
+}
+
+impl FabricStats {
+    /// Modeled step time of the serial schedule: every comm span plus
+    /// every reported compute span, end to end.
+    pub fn serial_modeled_step_time(&self) -> f64 {
+        self.modeled_time + self.modeled_compute
+    }
+
+    /// Modeled step time with chunk pipelining: the serial span minus the
+    /// comm that hid behind compute. Always `<=` the serial span, and
+    /// never below the pure-compute floor (`overlapped_ticks` is capped
+    /// by the comm span it hides).
+    pub fn pipelined_modeled_step_time(&self) -> f64 {
+        self.serial_modeled_step_time() - self.overlapped_ticks
+    }
+
+    /// Fraction of modeled communication time hidden behind compute (the
+    /// communication-hiding ratio `repro dist` reports). Zero when no
+    /// cluster model is attached.
+    pub fn hidden_comm_fraction(&self) -> f64 {
+        if self.modeled_time > 0.0 {
+            self.overlapped_ticks / self.modeled_time
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Which pipeline direction a chunked all-to-all overlaps (see
+/// [`ThreadFabric::a2a_pipelined`]):
+///
+/// * `Send` -- comm chunk `c` is in flight while compute chunk `c+1`
+///   runs (post results of chunk `c`, then compute chunk `c+1`: the
+///   return and dxe legs of the distributed engine).
+/// * `Recv` -- comm chunk `c+1` is in flight while compute chunk `c`
+///   runs (receive chunk `c`, compute it while `c+1` arrives: the dye
+///   leg).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverlapKind {
+    Send,
+    Recv,
 }
 
 /// Per-collective rendezvous for the all-to-all time model: each rank
 /// reports its send volume for its k-th all-to-all; the op is charged
 /// once, from the MAX per-rank volume, when the last rank reports.
+///
+/// A chunked (pipelined) collective is still ONE ledger entry on the same
+/// sequence stream -- one `a2a_ops` tick no matter the chunk count -- but
+/// the entry additionally merges per-chunk maxima (bytes and reported
+/// compute seconds) across ranks, so the overlap credit is computed at
+/// slowest-rank pacing per chunk, exactly like the total.
 #[derive(Default)]
 struct A2aLedger {
     /// Next all-to-all sequence number, per rank.
     seq: Vec<u64>,
-    /// seq -> (ranks reported, max per-rank bytes so far).
-    pending: HashMap<u64, (usize, u64)>,
+    /// seq -> merge state of the ranks reported so far.
+    pending: HashMap<u64, PendingA2a>,
+}
+
+/// Merge state of one in-flight all-to-all collective.
+#[derive(Default, Clone)]
+struct PendingA2a {
+    reported: usize,
+    /// Max whole-buffer bytes of any rank (total across chunks).
+    max_total: u64,
+    /// Elementwise max across ranks of per-chunk whole-buffer bytes.
+    chunk_bytes: Vec<u64>,
+    /// Elementwise max across ranks of per-chunk reported compute secs.
+    chunk_compute: Vec<f64>,
 }
 
 /// In-memory fabric for `n` worker threads.
@@ -177,30 +247,226 @@ impl ThreadFabric {
     /// (count + modeled time from the max per-rank total volume) when the
     /// last rank of the collective reports.
     fn account_a2a(&self, rank: usize, bytes_sent: usize, total_bytes: usize) {
-        let (done, max_bytes) = {
+        self.account_a2a_chunked(
+            rank,
+            bytes_sent,
+            total_bytes,
+            &[total_bytes as u64],
+            &[0.0],
+            OverlapKind::Send,
+            false,
+        );
+    }
+
+    /// Chunk-aware variant of [`ThreadFabric::account_a2a`]: one ledger
+    /// entry (= one `a2a_ops` tick) on the same sequence stream, but the
+    /// last rank to report also settles the overlap accounting:
+    ///
+    /// * the op's modeled time is the usual `all_to_all_time` of the max
+    ///   per-rank TOTAL volume -- identical at every chunk count, chunking
+    ///   never changes what the wire moves;
+    /// * that span is split across chunks proportionally to the per-chunk
+    ///   max-rank volumes (equal split if a step moved zero bytes);
+    /// * `overlapped_ticks` earns `min(comm chunk span, paired compute
+    ///   span)` per adjacent pipeline pair -- `(c, c+1)` for
+    ///   [`OverlapKind::Send`], `(c+1, c)` for [`OverlapKind::Recv`] --
+    ///   so a 1-chunk (serial) collective earns exactly zero;
+    /// * `modeled_compute` accumulates the per-chunk max-rank compute
+    ///   seconds when `charge_compute` is set. The dye/dxe legs share one
+    ///   expert-backward span, so only one of them charges it (the other
+    ///   still *pairs* against it -- full duplex: the two legs occupy
+    ///   opposite directions of the links).
+    #[allow(clippy::too_many_arguments)]
+    fn account_a2a_chunked(
+        &self,
+        rank: usize,
+        bytes_sent: usize,
+        total_bytes: usize,
+        chunk_bytes: &[u64],
+        chunk_compute: &[f64],
+        kind: OverlapKind,
+        charge_compute: bool,
+    ) {
+        let done: Option<PendingA2a> = {
             let mut led = self.ledger.lock().unwrap();
             let s = led.seq[rank];
             led.seq[rank] += 1;
-            let e = led.pending.entry(s).or_insert((0, 0));
-            e.0 += 1;
-            e.1 = e.1.max(total_bytes as u64);
-            let snapshot = *e;
-            if snapshot.0 == self.n {
-                led.pending.remove(&s);
+            let e = led.pending.entry(s).or_default();
+            if e.reported == 0 {
+                e.chunk_bytes = vec![0; chunk_bytes.len()];
+                e.chunk_compute = vec![0.0; chunk_compute.len()];
             }
-            (snapshot.0 == self.n, snapshot.1)
+            assert_eq!(
+                e.chunk_bytes.len(),
+                chunk_bytes.len(),
+                "SPMD violation: ranks disagree on the chunk count of a2a #{s}"
+            );
+            e.reported += 1;
+            e.max_total = e.max_total.max(total_bytes as u64);
+            for (m, &v) in e.chunk_bytes.iter_mut().zip(chunk_bytes) {
+                *m = (*m).max(v);
+            }
+            for (m, &v) in e.chunk_compute.iter_mut().zip(chunk_compute) {
+                *m = m.max(v);
+            }
+            if e.reported == self.n {
+                led.pending.remove(&s)
+            } else {
+                None
+            }
         };
         self.account(|st, cl| {
             st.a2a_bytes += bytes_sent as u64;
-            if done {
-                st.a2a_ops += 1;
-                if let Some(c) = cl {
-                    // the slowest rank paces the collective: charge the
-                    // max per-rank volume, not rank 0's.
-                    st.modeled_time += c.all_to_all_time(self.n, max_bytes as f64);
+            let Some(p) = done else { return };
+            st.a2a_ops += 1;
+            if charge_compute {
+                st.modeled_compute += p.chunk_compute.iter().sum::<f64>();
+            }
+            if let Some(c) = cl {
+                // the slowest rank paces the collective: charge the
+                // max per-rank volume, not rank 0's.
+                let t_total = c.all_to_all_time(self.n, p.max_total as f64);
+                st.modeled_time += t_total;
+                let nchunks = p.chunk_bytes.len();
+                if nchunks > 1 {
+                    let vsum: u64 = p.chunk_bytes.iter().sum();
+                    let span = |ci: usize| {
+                        if vsum == 0 {
+                            t_total / nchunks as f64
+                        } else {
+                            t_total * p.chunk_bytes[ci] as f64 / vsum as f64
+                        }
+                    };
+                    let mut hidden = 0.0;
+                    for i in 0..nchunks - 1 {
+                        let (comm, comp) = match kind {
+                            OverlapKind::Send => (span(i), p.chunk_compute[i + 1]),
+                            OverlapKind::Recv => (span(i + 1), p.chunk_compute[i]),
+                        };
+                        hidden += comm.min(comp);
+                    }
+                    st.overlapped_ticks += hidden;
                 }
             }
         });
+    }
+
+    /// Begin one chunked, pipelined all-to-all on the f32 plane. The
+    /// caller alternates [`PipelinedA2a::post_chunk`] (send this chunk's
+    /// per-destination buffers, report the modeled compute span the chunk
+    /// is paced against) with its own expert math, receives arrivals per
+    /// chunk via [`PipelinedA2a::recv_chunk`], and settles accounting with
+    /// [`PipelinedA2a::finish`] -- the whole exchange is ONE `a2a_ops`
+    /// collective regardless of chunk count, with byte totals identical
+    /// to the unchunked [`Collective::all_to_all_rows`] path.
+    ///
+    /// SPMD contract: every rank opens the same pipelined exchanges in the
+    /// same order with the same chunk count; mailbox FIFO per (src,dst)
+    /// then pairs the k-th chunk received with the k-th posted.
+    pub fn a2a_pipelined(
+        &self,
+        rank: usize,
+        kind: OverlapKind,
+        charge_compute: bool,
+    ) -> PipelinedA2a<'_> {
+        PipelinedA2a {
+            fab: self,
+            rank,
+            kind,
+            charge_compute,
+            own: VecDeque::new(),
+            posted: 0,
+            received: 0,
+            bytes_sent: 0,
+            total_bytes: 0,
+            chunk_bytes: Vec::new(),
+            chunk_compute: Vec::new(),
+        }
+    }
+}
+
+/// One in-flight chunked all-to-all (see [`ThreadFabric::a2a_pipelined`]).
+/// Chunk sizes are learned on arrival (the counts phase sized the TOTAL;
+/// how a source's rows split across its chunk boundaries depends on its
+/// local routing) -- callers re-validate reassembled totals against the
+/// counts phase.
+pub struct PipelinedA2a<'a> {
+    fab: &'a ThreadFabric,
+    rank: usize,
+    kind: OverlapKind,
+    charge_compute: bool,
+    /// Self-destined chunks ride this queue instead of the mailboxes.
+    own: VecDeque<Vec<f32>>,
+    posted: usize,
+    received: usize,
+    bytes_sent: usize,
+    total_bytes: usize,
+    chunk_bytes: Vec<u64>,
+    chunk_compute: Vec<f64>,
+}
+
+impl PipelinedA2a<'_> {
+    /// Send one chunk: `bufs[d]` goes to rank `d` (zero-copy ownership
+    /// transfer, non-blocking). `compute_secs` is the modeled span of
+    /// this rank's expert math for this chunk -- what the overlap
+    /// accounting paces the adjacent comm chunk against.
+    pub fn post_chunk(&mut self, bufs: Vec<Vec<f32>>, compute_secs: f64) {
+        assert_eq!(bufs.len(), self.fab.n, "one chunk buffer per destination rank");
+        let total: usize = bufs.iter().map(|b| b.len() * 4).sum();
+        let own_len = bufs[self.rank].len() * 4;
+        self.total_bytes += total;
+        self.bytes_sent += total - own_len;
+        self.chunk_bytes.push(total as u64);
+        self.chunk_compute.push(compute_secs);
+        for (d, chunk) in bufs.into_iter().enumerate() {
+            if d == self.rank {
+                self.own.push_back(chunk);
+            } else {
+                self.fab.fb(self.rank, d).send(chunk);
+            }
+        }
+        self.posted += 1;
+    }
+
+    /// Receive the next chunk: one buffer per source rank (blocking).
+    /// Must follow this rank's own matching `post_chunk` (the self chunk
+    /// comes off the local queue).
+    pub fn recv_chunk(&mut self) -> Vec<Vec<f32>> {
+        assert!(
+            self.received < self.posted,
+            "recv_chunk without a matching post_chunk (chunk {})",
+            self.received
+        );
+        let mut got = Vec::with_capacity(self.fab.n);
+        for s in 0..self.fab.n {
+            got.push(if s == self.rank {
+                self.own.pop_front().unwrap()
+            } else {
+                self.fab.fb(s, self.rank).recv()
+            });
+        }
+        self.received += 1;
+        got
+    }
+
+    /// Settle accounting: exactly one `a2a_ops` tick for the whole
+    /// exchange, with the overlap credit computed at the rendezvous (see
+    /// `account_a2a_chunked`). Panics if chunks were posted but never
+    /// received -- that is a schedule bug, not a stats question.
+    pub fn finish(self) {
+        assert_eq!(
+            self.posted, self.received,
+            "pipelined a2a finished with unreceived chunks"
+        );
+        self.fab.account_a2a_chunked(
+            self.rank,
+            self.bytes_sent,
+            self.total_bytes,
+            &self.chunk_bytes,
+            &self.chunk_compute,
+            self.kind,
+            self.charge_compute,
+        );
     }
 }
 
@@ -525,6 +791,142 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_a2a_routes_like_serial_and_counts_one_op() {
+        // chunked exchange: same arrivals (per-source concat over chunks)
+        // as one serial all_to_all of the concatenated buffers, and ONE
+        // a2a op with identical byte totals regardless of chunk count.
+        let serial = Arc::new(ThreadFabric::new(2));
+        let chunked = Arc::new(ThreadFabric::new(2));
+        let mut hs = Vec::new();
+        for rank in 0..2usize {
+            let serial = serial.clone();
+            let chunked = chunked.clone();
+            hs.push(std::thread::spawn(move || {
+                // chunk c sends [rank*100 + dst*10 + c] repeated (c+1) times
+                let chunk = |c: usize| -> Vec<Vec<f32>> {
+                    (0..2)
+                        .map(|dst| vec![(rank * 100 + dst * 10 + c) as f32; c + 1])
+                        .collect()
+                };
+                let mut pipe = chunked.a2a_pipelined(rank, OverlapKind::Send, false);
+                pipe.post_chunk(chunk(0), 0.0);
+                pipe.post_chunk(chunk(1), 0.0);
+                let mut acc: Vec<Vec<f32>> = vec![Vec::new(); 2];
+                for _ in 0..2 {
+                    for (src, buf) in pipe.recv_chunk().into_iter().enumerate() {
+                        acc[src].extend(buf);
+                    }
+                }
+                pipe.finish();
+                let whole: Vec<Vec<f32>> = (0..2)
+                    .map(|dst| {
+                        let mut v = chunk(0)[dst].clone();
+                        v.extend(&chunk(1)[dst]);
+                        v
+                    })
+                    .collect();
+                let want = serial.all_to_all(rank, whole);
+                assert_eq!(acc, want, "rank {rank}: chunked arrivals must concat to serial");
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let (s, c) = (serial.stats(), chunked.stats());
+        assert_eq!(c.a2a_ops, 1, "a chunked exchange is ONE collective");
+        assert_eq!(c.a2a_bytes, s.a2a_bytes, "chunking must not change wire bytes");
+    }
+
+    #[test]
+    fn send_kind_overlap_pairs_comm_c_with_compute_c_plus_1() {
+        let cluster = crate::netmodel::V100_IB100;
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(cluster)));
+        let comp = [3.0f64, 1e-9]; // chunk 1's compute hides chunk 0's comm
+        let mut hs = Vec::new();
+        for rank in 0..2usize {
+            let fab = fab.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut pipe = fab.a2a_pipelined(rank, OverlapKind::Send, true);
+                for c in 0..2 {
+                    let bufs: Vec<Vec<f32>> = (0..2).map(|_| vec![rank as f32; 50]).collect();
+                    pipe.post_chunk(bufs, comp[c]);
+                }
+                for _ in 0..2 {
+                    let _ = pipe.recv_chunk();
+                }
+                pipe.finish();
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = fab.stats();
+        let t_total = cluster.all_to_all_time(2, 800.0); // 2 chunks x 100 floats/rank
+        // equal chunk volumes: each chunk's span is half the total. Send
+        // pairing overlaps comm chunk 0 against compute chunk 1 (tiny), so
+        // the credit is min(t_total/2, comp[1]) = comp[1].
+        assert!((s.modeled_time - t_total).abs() < 1e-12);
+        assert!((s.modeled_compute - (comp[0] + comp[1])).abs() < 1e-15);
+        assert!((s.overlapped_ticks - comp[1]).abs() < 1e-15, "got {}", s.overlapped_ticks);
+        assert!(s.pipelined_modeled_step_time() <= s.serial_modeled_step_time());
+        assert!(s.hidden_comm_fraction() > 0.0 && s.hidden_comm_fraction() <= 1.0);
+    }
+
+    #[test]
+    fn recv_kind_overlap_pairs_comm_c_plus_1_with_compute_c() {
+        let cluster = crate::netmodel::V100_IB100;
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(cluster)));
+        let comp = [5.0f64, 1e-9]; // chunk 0's compute hides chunk 1's comm
+        let mut hs = Vec::new();
+        for rank in 0..2usize {
+            let fab = fab.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut pipe = fab.a2a_pipelined(rank, OverlapKind::Recv, false);
+                for c in 0..2 {
+                    let bufs: Vec<Vec<f32>> = (0..2).map(|_| vec![0.5f32; 50]).collect();
+                    pipe.post_chunk(bufs, comp[c]);
+                }
+                for _ in 0..2 {
+                    let _ = pipe.recv_chunk();
+                }
+                pipe.finish();
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = fab.stats();
+        let t_total = cluster.all_to_all_time(2, 800.0); // 2 chunks x 100 floats/rank
+        // Recv pairing: comm chunk 1 (span t_total/2) hides behind compute
+        // chunk 0 (huge) -> credit t_total/2, capped by the comm span.
+        assert!((s.overlapped_ticks - t_total / 2.0).abs() < 1e-12);
+        assert_eq!(s.modeled_compute, 0.0, "charge_compute=false legs stay uncharged");
+    }
+
+    #[test]
+    fn single_chunk_pipelined_earns_no_overlap() {
+        let cluster = crate::netmodel::V100_IB100;
+        let fab = Arc::new(ThreadFabric::with_cluster(2, Some(cluster)));
+        let mut hs = Vec::new();
+        for rank in 0..2usize {
+            let fab = fab.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut pipe = fab.a2a_pipelined(rank, OverlapKind::Send, true);
+                pipe.post_chunk((0..2).map(|_| vec![1.0f32; 25]).collect(), 2.5);
+                let _ = pipe.recv_chunk();
+                pipe.finish();
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let s = fab.stats();
+        assert_eq!(s.overlapped_ticks, 0.0, "a 1-chunk schedule is serial");
+        assert!((s.modeled_compute - 2.5).abs() < 1e-15);
+        assert_eq!(s.pipelined_modeled_step_time(), s.serial_modeled_step_time());
+    }
+
+    #[test]
     fn barrier_synchronises() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         static COUNT: AtomicUsize = AtomicUsize::new(0);
@@ -534,5 +936,4 @@ mod tests {
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
         });
     }
-
 }

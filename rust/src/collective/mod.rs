@@ -16,11 +16,20 @@
 //! volume** of the collective (the slowest rank paces everyone under
 //! skewed routing), not rank 0's volume.
 //!
+//! Chunked pipelined exchanges ride [`ThreadFabric::a2a_pipelined`]: one
+//! accounted collective split into expert-dimension chunks whose comm
+//! spans can hide behind per-chunk expert compute. The ledger credits
+//! `FabricStats::overlapped_ticks` with `min(comm span, compute span)`
+//! per adjacent pipeline pair, at slowest-rank pacing, so
+//! `serial_modeled_step_time()` vs `pipelined_modeled_step_time()` is an
+//! honest comparison. See `docs/ARCHITECTURE.md` ("collective" layer)
+//! for the wire format and the timing-model contract.
+//!
 //! [`Cluster`]: crate::netmodel::Cluster
 
 mod fabric;
 
-pub use fabric::{FabricStats, ThreadFabric};
+pub use fabric::{FabricStats, OverlapKind, PipelinedA2a, ThreadFabric};
 
 /// Collective operations as seen by one rank. All calls are collective:
 /// every rank must call the same op in the same order (SPMD), exactly like
@@ -93,6 +102,38 @@ pub trait Collective {
         self.all_to_all_f32(rank, bufs, &expect)
     }
 
+    /// Chunked variant of [`Collective::all_to_all_rows`]: `chunks[c][d]`
+    /// is chunk `c`'s payload for rank `d`; returns per-source buffers
+    /// with the chunks concatenated in chunk order (so the result is
+    /// bit-identical to packing everything into one buffer per
+    /// destination). `send_rows`/`recv_rows` are the TOTAL row counts
+    /// across chunks, exactly the counts-phase values.
+    ///
+    /// This default implementation concatenates and runs one
+    /// [`Collective::all_to_all_rows`] -- correct routing and identical
+    /// byte/op accounting, but no overlap credit. `ThreadFabric`'s
+    /// [`ThreadFabric::a2a_pipelined`] handle is the overlap-earning path
+    /// the distributed engine uses; a future multi-process fabric gets
+    /// this correct-but-serial fallback for free.
+    fn all_to_all_rows_chunked(
+        &self,
+        rank: usize,
+        chunks: Vec<Vec<Vec<f32>>>,
+        send_rows: &[usize],
+        recv_rows: &[usize],
+        stride: usize,
+    ) -> Vec<Vec<f32>> {
+        let n = self.n_ranks();
+        let mut bufs: Vec<Vec<f32>> = vec![Vec::new(); n];
+        for chunk in chunks {
+            debug_assert_eq!(chunk.len(), n, "one chunk buffer per destination");
+            for (dst, part) in chunk.into_iter().enumerate() {
+                bufs[dst].extend(part);
+            }
+        }
+        self.all_to_all_rows(rank, bufs, send_rows, recv_rows, stride)
+    }
+
     /// Element-wise sum across ranks; result replicated to every rank.
     fn all_reduce_sum(&self, rank: usize, data: &mut [f32]);
 
@@ -146,6 +187,36 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// The chunked default splits/concats around one all_to_all_rows, so
+    /// the result equals packing each destination's rows contiguously.
+    #[test]
+    fn all_to_all_rows_chunked_concats_in_chunk_order() {
+        let n = 2;
+        let stride = 2;
+        let fabric = Arc::new(ThreadFabric::new(n));
+        let mut handles = Vec::new();
+        for rank in 0..n {
+            let fabric = fabric.clone();
+            handles.push(std::thread::spawn(move || {
+                // chunk c sends one row [rank, c] to every destination
+                let chunks: Vec<Vec<Vec<f32>>> = (0..3)
+                    .map(|c| (0..n).map(|_| vec![rank as f32, c as f32]).collect())
+                    .collect();
+                let got =
+                    fabric.all_to_all_rows_chunked(rank, chunks, &[3, 3], &[3, 3], stride);
+                for (src, buf) in got.iter().enumerate() {
+                    let want: Vec<f32> =
+                        (0..3).flat_map(|c| vec![src as f32, c as f32]).collect();
+                    assert_eq!(buf, &want, "rank {rank} from {src}");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fabric.stats().a2a_ops, 1, "a chunked exchange is one collective");
     }
 
     /// A send buffer that disagrees with the counts phase must fail loudly

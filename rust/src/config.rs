@@ -54,6 +54,11 @@ pub struct RunConfig {
     pub topk: usize,
     /// Cumulative gate-mass threshold for `--router adaptive`.
     pub adaptive_thresh: f64,
+    /// `repro dist` pipeline depth: the expert capacity is split into this
+    /// many contiguous chunks so all-to-all legs overlap expert compute.
+    /// 1 = fully serial schedule. Bit-identical at every setting; only the
+    /// modeled step time changes (docs/ARCHITECTURE.md, "distributed").
+    pub overlap_chunks: usize,
 }
 
 impl Default for RunConfig {
@@ -79,6 +84,7 @@ impl Default for RunConfig {
             router: "top1".into(),
             topk: 2,
             adaptive_thresh: 0.5,
+            overlap_chunks: 1,
         }
     }
 }
@@ -207,6 +213,9 @@ impl RunConfig {
         if let Some(v) = j.get("adaptive_thresh").and_then(Json::as_f64) {
             self.adaptive_thresh = v;
         }
+        if let Some(v) = j.get("overlap_chunks").and_then(Json::as_usize) {
+            self.overlap_chunks = v;
+        }
         Ok(())
     }
 
@@ -247,6 +256,7 @@ impl RunConfig {
         }
         self.topk = a.usize("topk", self.topk);
         self.adaptive_thresh = a.f64("adaptive-thresh", self.adaptive_thresh);
+        self.overlap_chunks = a.usize("overlap-chunks", self.overlap_chunks);
         // resolve eagerly so a typo'd --router fails at parse time
         self.router()?;
         Ok(())
@@ -293,7 +303,7 @@ mod tests {
         let j = Json::parse(
             r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4,
                 "threads": 6, "max_batch": 16, "max_wait_ticks": 7, "queue_cap": 128,
-                "router": "topk", "topk": 3, "adaptive_thresh": 0.7}"#,
+                "router": "topk", "topk": 3, "adaptive_thresh": 0.7, "overlap_chunks": 4}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -307,6 +317,7 @@ mod tests {
         assert_eq!(c.queue_cap, 128);
         assert_eq!(c.router().unwrap(), crate::moe::Router::TopK { k: 3 });
         assert_eq!(c.adaptive_thresh, 0.7);
+        assert_eq!(c.overlap_chunks, 4);
     }
 
     #[test]
@@ -314,7 +325,7 @@ mod tests {
         let mut c = RunConfig::default();
         let a = Args::parse(
             "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100 --threads 2 \
-             --max-batch 4 --max-wait-ticks 2 --queue-cap 32"
+             --max-batch 4 --max-wait-ticks 2 --queue-cap 32 --overlap-chunks 2"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -326,6 +337,7 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.max_wait_ticks, 2);
         assert_eq!(c.queue_cap, 32);
+        assert_eq!(c.overlap_chunks, 2);
     }
 
     #[test]

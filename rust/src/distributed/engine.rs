@@ -11,6 +11,17 @@
 //!          -> [all-to-all dye] -> expert_bwd -> [all-to-all dxe]
 //!          -> s1_bwd -> all_reduce(dense grads) -> host Adam
 //!
+//! With `overlap_chunks > 1` the expert slot space is split into fixed
+//! contiguous chunks and the return/dye/dxe all-to-all legs are
+//! *pipelined* against the expert math: the return-leg pack of chunk `i`
+//! is posted while `expert_fwd` of chunk `i+1` runs (and symmetrically
+//! for the backward legs). Chunk boundaries are identical on every rank
+//! and all f32 accumulation keeps the serial order -- the pipelined
+//! schedule is **bit-identical** to `overlap_chunks = 1`; only the
+//! modeled step time changes (`FabricStats::overlapped_ticks`). See
+//! `docs/ARCHITECTURE.md` ("distributed" layer) for the schedule and the
+//! slot-order invariant it rides.
+//!
 //! Expert parameters never leave their rank (expert parallelism); dense
 //! parameters stay bit-identical across ranks because they see identical
 //! all-reduced gradients -- asserted after every run.
@@ -20,9 +31,10 @@ use std::time::Instant;
 
 use crate::util::error::Result;
 
-use crate::collective::{Collective, FabricStats, ThreadFabric};
+use crate::collective::{Collective, FabricStats, OverlapKind, ThreadFabric};
 use crate::coordinator::{Decision, DistCoordinator, Policy};
 use crate::moe;
+use crate::netmodel::{Cluster, V100_IB100};
 use crate::runtime::tensor::{resolve_seq_cutoff, resolve_threads_explicit, ThreadPool};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
@@ -54,6 +66,19 @@ pub struct DistRunConfig {
     /// `Adaptive` send each token to multiple experts over the same
     /// two-phase wire (the counts phase already sizes variable fan-out).
     pub router: moe::Router,
+    /// Pipeline depth for the return/dye/dxe all-to-all legs: the expert
+    /// slot space is split into this many fixed contiguous chunks and
+    /// each chunk's wire traffic is posted while the next chunk's expert
+    /// math runs. `1` (the default) is the serial schedule. Bit-identical
+    /// at every setting -- only the modeled step time moves. Values > 1
+    /// require the synthetic manifest (the XLA stage artifacts are
+    /// compiled for full-capacity shapes).
+    pub overlap_chunks: usize,
+    /// Cluster used to model step time (comm spans via `netmodel`
+    /// all-to-all/all-reduce costs, compute spans via `compute_time`).
+    /// `None` disables the timing model: `FabricStats` keeps byte/op
+    /// counts but reports zero modeled time.
+    pub cluster: Option<Cluster>,
 }
 
 impl Default for DistRunConfig {
@@ -74,6 +99,8 @@ impl Default for DistRunConfig {
             lr: 2e-3,
             threads: 0,
             router: moe::Router::Top1,
+            overlap_chunks: 1,
+            cluster: Some(V100_IB100),
         }
     }
 }
@@ -89,6 +116,28 @@ pub struct DistRunResult {
     /// Dense parameters bit-identical across ranks at the end?
     pub dense_consistent: bool,
     pub observed_drop_rate: f64,
+    /// Rank-0 dense parameters followed by every rank's expert
+    /// parameters: the full final model, for bit-parity tests (e.g. the
+    /// `overlap_chunks` invariance suite compares these to_bits).
+    pub param_fingerprint: Vec<f32>,
+}
+
+/// Fixed contiguous chunk bounds over the expert slot space `[0, cap)`:
+/// `c` half-open ranges with sizes differing by at most one, clamped to
+/// `1..=cap` chunks. `cap` is identical on every rank (tokens_per_rank x
+/// router fan-out bound, padding included), so chunk membership is
+/// SPMD-consistent without any extra wire phase.
+fn chunk_bounds(cap: usize, c: usize) -> Vec<(usize, usize)> {
+    let c = c.clamp(1, cap.max(1));
+    let (base, extra) = (cap / c, cap % c);
+    let mut out = Vec::with_capacity(c);
+    let mut lo = 0;
+    for i in 0..c {
+        let hi = lo + base + usize::from(i < extra);
+        out.push((lo, hi));
+        lo = hi;
+    }
+    out
 }
 
 struct WorkerState {
@@ -96,6 +145,10 @@ struct WorkerState {
     topo: Topology,
     runner: StageRunner,
     router: moe::Router,
+    /// Pipeline depth for the chunked wire legs (1 = serial schedule).
+    overlap_chunks: usize,
+    /// Timing model for compute spans; `None` charges zero compute.
+    cluster: Option<Cluster>,
     // dense (replicated)
     w_in: Vec<f32>,
     b_in: Vec<f32>,
@@ -121,6 +174,8 @@ impl WorkerState {
         threads: usize,
         seq_cutoff: usize,
         router: moe::Router,
+        overlap_chunks: usize,
+        cluster: Option<Cluster>,
     ) -> Result<WorkerState> {
         let topo = Topology::new(m.ranks, m.ranks); // one expert per rank
         let w_in = m.load_init("w_in")?;
@@ -141,6 +196,8 @@ impl WorkerState {
             rank,
             topo,
             router,
+            overlap_chunks,
+            cluster,
             o_win: Adam::new(w_in.len(), lr),
             o_bin: Adam::new(b_in.len(), lr),
             o_wr: Adam::new(wr.len(), lr),
@@ -155,6 +212,14 @@ impl WorkerState {
             w2,
             runner,
         })
+    }
+
+    /// Modeled seconds for `flops` of expert math on the configured
+    /// cluster (zero with no cluster attached). The expert stages run
+    /// over the FULL slot range (padding included) on every rank, so
+    /// these spans are identical across ranks and across chunk counts.
+    fn compute_secs(&self, flops: f64) -> f64 {
+        self.cluster.map_or(0.0, |c| c.compute_time(flops))
     }
 
     /// One full training step; returns this rank's loss.
@@ -237,22 +302,7 @@ impl WorkerState {
             moe::route_admit(self.rank, &self.topo, &arrivals, d, cap)
         };
 
-        // ---- expert forward (skipped on Gate-Expert-Drop) --------------------
-        let ye: Option<Vec<f32>> = if decision.runs_expert() {
-            let out = self.runner.run(
-                "expert_fwd",
-                &[
-                    lit2(&self.w1, d, m.d_ff)?,
-                    lit2(&self.w2, m.d_ff, d)?,
-                    lit2(&xe, cap, d)?,
-                ],
-            )?;
-            Some(out.into_iter().next().unwrap())
-        } else {
-            None
-        };
-
-        // ---- combine (+return all-to-all unless dropped) ---------------------
+        // ---- expert forward + combine (+return all-to-all unless dropped) ----
         // admitted tokens per home rank: shared by the return leg and both
         // backward wire legs (they all ride the admission edges).
         let ret_counts: Vec<usize> = if decision.drop {
@@ -265,44 +315,92 @@ impl WorkerState {
         // reuse it (empty on dropped / expert-skipped steps, where no
         // wire runs).
         let mut surviving: Vec<usize> = Vec::new();
+        // Pipeline chunk bounds over the slot space. Local (dropped) steps
+        // never chunk: there is no wire to hide, so they keep the
+        // monolithic stages (and work on XLA artifacts unconditionally).
+        let f = m.d_ff;
+        let bounds = chunk_bounds(cap, if decision.drop { 1 } else { self.overlap_chunks });
         // ret: weighted combine + per-arrival-row records on the home rank.
-        let ret: moe::ReturnedK = match (&ye, decision.drop) {
-            (None, _) => moe::ReturnedK {
+        let ret: moe::ReturnedK = if !decision.runs_expert() {
+            moe::ReturnedK { combined: vec![0.0; t * d], raw: Vec::new(), rows: Vec::new() }
+        } else if decision.drop {
+            // local: token i <-> slot i, one row per token
+            let out = self.runner.run(
+                "expert_fwd",
+                &[
+                    lit2(&self.w1, d, f)?,
+                    lit2(&self.w2, f, d)?,
+                    lit2(&xe, cap, d)?,
+                ],
+            )?;
+            let ye = out.into_iter().next().unwrap();
+            let mut out = moe::ReturnedK {
                 combined: vec![0.0; t * d],
-                raw: Vec::new(),
-                rows: Vec::new(),
-            },
-            (Some(ye), true) => {
-                // local: token i <-> slot i, one row per token
-                let mut out = moe::ReturnedK {
-                    combined: vec![0.0; t * d],
-                    raw: ye.clone(),
-                    rows: (0..t)
-                        .map(|i| moe::RetRow {
-                            token: i,
-                            owner: self.rank,
-                            slot: i,
-                            gate: assign.gates[i],
-                        })
-                        .collect(),
-                };
-                for i in 0..t {
-                    for j in 0..d {
-                        out.combined[i * d + j] = assign.gates[i] * ye[i * d + j];
-                    }
+                rows: (0..t)
+                    .map(|i| moe::RetRow {
+                        token: i,
+                        owner: self.rank,
+                        slot: i,
+                        gate: assign.gates[i],
+                    })
+                    .collect(),
+                raw: ye,
+            };
+            for i in 0..t {
+                for j in 0..d {
+                    out.combined[i * d + j] = assign.gates[i] * out.raw[i * d + j];
                 }
-                out
             }
-            (Some(ye), false) => {
-                // counts phase again: the home rank cannot predict how
-                // many of its rows survived capacity admission here.
-                let recv_rows = fabric.all_to_all_counts(self.rank, &ret_counts);
-                let back = moe::return_pack(&self.topo, &admitted, ye, d, &ret_counts);
-                let arrivals =
-                    fabric.all_to_all_rows(self.rank, back, &ret_counts, &recv_rows, stride);
-                surviving = recv_rows;
-                moe::return_unpack_k(&arrivals, t, d)
+            out
+        } else {
+            // counts phase first (it needs only the admission records):
+            // the home rank cannot predict how many of its rows survived
+            // capacity admission on the owners.
+            let recv_rows = fabric.all_to_all_counts(self.rank, &ret_counts);
+            // Slot-order invariant the chunked pack rides: one expert per
+            // rank means `route_admit` fills slots with a sequential
+            // counter, so `admitted[i].slot == i` and a slot range is an
+            // `admitted` prefix range.
+            debug_assert!(
+                admitted.iter().enumerate().all(|(i, a)| a.slot == i),
+                "slot-order invariant violated: chunked packing would reorder rows"
+            );
+            // Pipelined return leg: expert_fwd of chunk c runs, its pack
+            // is posted, and chunk c+1's math runs while those rows are
+            // in flight (Send pairing: comm chunk c hides behind compute
+            // chunk c+1). expert_fwd costs two matmuls = 4*rows*d*f flops.
+            let mut pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true);
+            for &(lo, hi) in &bounds {
+                let rows = hi - lo;
+                let out = self.runner.run(
+                    "expert_fwd",
+                    &[
+                        lit2(&self.w1, d, f)?,
+                        lit2(&self.w2, f, d)?,
+                        lit2(&xe[lo * d..hi * d], rows, d)?,
+                    ],
+                )?;
+                let msgs = pack_admitted_chunk(&admitted, lo, hi, &out[0], d, r);
+                pipe.post_chunk(msgs, self.compute_secs(4.0 * (rows * d * f) as f64));
             }
+            // Drain and reassemble full per-source buffers in chunk order
+            // (= the serial pack order, by the slot-order invariant), so
+            // the per-token `+=` combine accumulates in the serial order.
+            let mut arrivals: Vec<Vec<f32>> = vec![Vec::new(); r];
+            for _ in &bounds {
+                for (src, part) in pipe.recv_chunk().into_iter().enumerate() {
+                    arrivals[src].extend(part);
+                }
+            }
+            pipe.finish();
+            for (src, buf) in arrivals.iter().enumerate() {
+                crate::ensure!(
+                    buf.len() == recv_rows[src] * stride,
+                    "return-leg chunks disagree with the counts phase (src {src})"
+                );
+            }
+            surviving = recv_rows;
+            moe::return_unpack_k(&arrivals, t, d)
         };
         let mut y = vec![0f32; t * d];
         for i in 0..t * d {
@@ -351,74 +449,168 @@ impl WorkerState {
             // (`ret_counts`), and *sends* one dye row / *receives* one
             // dxe row per own token that survived admission (`surviving`,
             // already delivered by the return-leg counts phase).
-            // dye rows to expert ranks
-            let dye_buf: Vec<f32> = if decision.drop {
-                // local: slot i = token i
-                let mut buf = vec![0f32; cap * d];
+            if decision.drop {
+                // local: slot i = token i, monolithic expert backward
+                let mut dye_buf = vec![0f32; cap * d];
                 for i in 0..t {
                     for j in 0..d {
-                        buf[i * d + j] = assign.gates[i] * dy[i * d + j];
+                        dye_buf[i * d + j] = assign.gates[i] * dy[i * d + j];
                     }
                 }
-                buf
+                let out = self.runner.run(
+                    "expert_bwd",
+                    &[
+                        lit2(&self.w1, d, f)?,
+                        lit2(&self.w2, f, d)?,
+                        lit2(&xe, cap, d)?,
+                        lit2(&dye_buf, cap, d)?,
+                    ],
+                )?;
+                for i in 0..t * d {
+                    dh[i] += out[0][i];
+                }
+                (out[1].clone(), out[2].clone())
             } else {
-                // ship [slot, src_idx, gate, gate*dy_row] to the expert
-                // owner, one message per surviving returned row (rows
-                // arrive owner-major, token-ascending, so per-destination
-                // packing order matches the seed's token scan at k=1)
-                let mut msgs: Vec<Vec<f32>> = surviving
+                // ---- pipelined dye -> expert_bwd -> dxe ---------------
+                // Per-owner row-index lists into ret.rows: each owner's
+                // subsequence is slot-ascending (owners admit with a
+                // sequential fill counter), so slot chunk c takes a
+                // prefix of what remains per owner, and chunk-order
+                // concatenation reproduces the serial dye pack exactly.
+                let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); r];
+                for (ri, row) in ret.rows.iter().enumerate() {
+                    by_owner[row.owner].push(ri);
+                }
+                let bwd_secs: Vec<f64> = bounds
                     .iter()
-                    .map(|&c| Vec::with_capacity(c * stride))
+                    .map(|&(lo, hi)| self.compute_secs(6.0 * ((hi - lo) * d * f) as f64))
                     .collect();
-                for row in &ret.rows {
-                    let msg = &mut msgs[row.owner];
-                    msg.extend_from_slice(&[row.slot as f32, row.token as f32, row.gate]);
-                    msg.extend(
-                        dy[row.token * d..(row.token + 1) * d].iter().map(|&v| row.gate * v),
+                // the dw tail runs once after the chunk loop, while the
+                // in-flight dxe chunks drain: fold its span into the last
+                // chunk's compute on the Send pipe
+                let dw_secs = self.compute_secs(4.0 * (cap * d * f) as f64);
+                // dye leg, Recv pairing: chunk c+1's rows are in flight
+                // while expert_bwd of chunk c runs. All chunks post up
+                // front (they need only dy + the returned-row records).
+                // charge_compute stays false: the dxe pipe charges these
+                // same expert-bwd spans, and the two legs run in opposite
+                // directions (full duplex), so each may hide behind the
+                // same compute window without double-charging compute.
+                let mut dye_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Recv, false);
+                let mut cursor = vec![0usize; r];
+                for (c, &(_, hi)) in bounds.iter().enumerate() {
+                    let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
+                    for (owner, msg) in msgs.iter_mut().enumerate() {
+                        while let Some(&ri) = by_owner[owner].get(cursor[owner]) {
+                            let row = &ret.rows[ri];
+                            if row.slot >= hi {
+                                break;
+                            }
+                            msg.extend_from_slice(&[
+                                row.slot as f32,
+                                row.token as f32,
+                                row.gate,
+                            ]);
+                            msg.extend(
+                                dy[row.token * d..(row.token + 1) * d]
+                                    .iter()
+                                    .map(|&v| row.gate * v),
+                            );
+                            cursor[owner] += 1;
+                        }
+                    }
+                    dye_pipe.post_chunk(msgs, bwd_secs[c]);
+                }
+                let mut dye_buf = vec![0f32; cap * d];
+                let mut dye_got = vec![0usize; r];
+                let mut dxe_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true);
+                let dw12: (Vec<f32>, Vec<f32>) = if bounds.len() == 1 {
+                    // serial schedule on the pipelined handles: one
+                    // chunk, identical wire buffers, zero overlap credit,
+                    // and the monolithic "expert_bwd" stage -- the one
+                    // the XLA artifacts compile.
+                    scatter_dye_chunk(&mut dye_buf, &mut dye_got, &dye_pipe.recv_chunk(), d);
+                    let out = self.runner.run(
+                        "expert_bwd",
+                        &[
+                            lit2(&self.w1, d, f)?,
+                            lit2(&self.w2, f, d)?,
+                            lit2(&xe, cap, d)?,
+                            lit2(&dye_buf, cap, d)?,
+                        ],
+                    )?;
+                    let msgs = pack_admitted_chunk(&admitted, 0, cap, &out[0], d, r);
+                    dxe_pipe.post_chunk(msgs, bwd_secs[0] + dw_secs);
+                    (out[1].clone(), out[2].clone())
+                } else {
+                    // fused loop: receive chunk c's cotangents, run its
+                    // expert-backward slice, post its dxe rows -- chunk
+                    // c+1's dye rows are already in flight underneath.
+                    let mut hid = Vec::with_capacity(cap * f);
+                    let mut dpre = Vec::with_capacity(cap * f);
+                    for (c, &(lo, hi)) in bounds.iter().enumerate() {
+                        let rows = hi - lo;
+                        scatter_dye_chunk(
+                            &mut dye_buf,
+                            &mut dye_got,
+                            &dye_pipe.recv_chunk(),
+                            d,
+                        );
+                        let out = self.runner.run(
+                            "expert_bwd_chunk",
+                            &[
+                                lit2(&self.w1, d, f)?,
+                                lit2(&self.w2, f, d)?,
+                                lit2(&xe[lo * d..hi * d], rows, d)?,
+                                lit2(&dye_buf[lo * d..hi * d], rows, d)?,
+                            ],
+                        )?;
+                        hid.extend_from_slice(&out[1]);
+                        dpre.extend_from_slice(&out[2]);
+                        let dw_tail = if c == bounds.len() - 1 { dw_secs } else { 0.0 };
+                        let msgs = pack_admitted_chunk(&admitted, lo, hi, &out[0], d, r);
+                        dxe_pipe.post_chunk(msgs, bwd_secs[c] + dw_tail);
+                    }
+                    // weight gradients: ONE pass over the concatenated
+                    // buffers, so dw1/dw2 keep the monolithic token-axis
+                    // accumulation order bit for bit.
+                    let dw = self.runner.run(
+                        "expert_bwd_dw",
+                        &[
+                            lit2(&xe, cap, d)?,
+                            lit2(&hid, cap, f)?,
+                            lit2(&dpre, cap, f)?,
+                            lit2(&dye_buf, cap, d)?,
+                        ],
+                    )?;
+                    let mut it = dw.into_iter();
+                    (it.next().unwrap(), it.next().unwrap())
+                };
+                dye_pipe.finish();
+                for (src, &got) in dye_got.iter().enumerate() {
+                    crate::ensure!(
+                        got == ret_counts[src] * stride,
+                        "dye-leg chunks disagree with the admission counts (src {src})"
                     );
                 }
-                let arrivals =
-                    fabric.all_to_all_rows(self.rank, msgs, &surviving, &ret_counts, stride);
-                let mut buf = vec![0f32; cap * d];
-                for msg in &arrivals {
-                    for tok in msg.chunks_exact(stride) {
-                        let slot = tok[0] as usize;
-                        buf[slot * d..(slot + 1) * d].copy_from_slice(&tok[moe::HEADER..]);
+                // dxe receive: reassemble full per-source buffers first
+                // (chunk order = the serial pack order), then scatter in
+                // source-major order -- `dh +=` rows from different
+                // sources can hit the same token, so the accumulation
+                // order must stay exactly serial.
+                let mut arrivals: Vec<Vec<f32>> = vec![Vec::new(); r];
+                for _ in &bounds {
+                    for (src, part) in dxe_pipe.recv_chunk().into_iter().enumerate() {
+                        arrivals[src].extend(part);
                     }
                 }
-                buf
-            };
-            let out = self.runner.run(
-                "expert_bwd",
-                &[
-                    lit2(&self.w1, d, m.d_ff)?,
-                    lit2(&self.w2, m.d_ff, d)?,
-                    lit2(&xe, cap, d)?,
-                    lit2(&dye_buf, cap, d)?,
-                ],
-            )?;
-            let dxe = &out[0];
-            let dw1 = out[1].clone();
-            let dw2 = out[2].clone();
-            // route dxe rows back to token home ranks -> dh += dxe
-            if decision.drop {
-                for i in 0..t * d {
-                    dh[i] += dxe[i];
+                dxe_pipe.finish();
+                for (src, buf) in arrivals.iter().enumerate() {
+                    crate::ensure!(
+                        buf.len() == surviving[src] * stride,
+                        "dxe-leg chunks disagree with the return counts (src {src})"
+                    );
                 }
-            } else {
-                // dxe retraces the admission edges in reverse: sender
-                // sizes from `ret_counts`, home ranks expect `surviving`
-                let mut msgs: Vec<Vec<f32>> = ret_counts
-                    .iter()
-                    .map(|&c| Vec::with_capacity(c * stride))
-                    .collect();
-                for a in &admitted {
-                    let msg = &mut msgs[a.src_rank];
-                    msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
-                    msg.extend_from_slice(&dxe[a.slot * d..(a.slot + 1) * d]);
-                }
-                let arrivals =
-                    fabric.all_to_all_rows(self.rank, msgs, &ret_counts, &surviving, stride);
                 for msg in &arrivals {
                     for tok in msg.chunks_exact(stride) {
                         let i = tok[1] as usize;
@@ -427,8 +619,8 @@ impl WorkerState {
                         }
                     }
                 }
+                dw12
             }
-            (dw1, dw2)
         } else {
             (vec![0f32; self.w1.len()], vec![0f32; self.w2.len()])
         };
@@ -471,6 +663,47 @@ impl WorkerState {
     }
 }
 
+/// Pack the admitted rows of slot chunk `[lo, hi)` into per-destination
+/// wire buffers of `[slot, src_idx, gate, row..]`, with the payload row
+/// taken from `data_c`, a chunk-local `[hi-lo, d]` buffer. Relies on the
+/// slot-order invariant (`admitted[i].slot == i` at one expert per rank):
+/// a slot range is an `admitted` prefix range, and iterating it in order
+/// means concatenating chunk buffers per destination reproduces the
+/// serial pack byte for byte.
+fn pack_admitted_chunk(
+    admitted: &[moe::Admitted],
+    lo: usize,
+    hi: usize,
+    data_c: &[f32],
+    d: usize,
+    n: usize,
+) -> Vec<Vec<f32>> {
+    let (a_lo, a_hi) = (lo.min(admitted.len()), hi.min(admitted.len()));
+    let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); n];
+    for a in &admitted[a_lo..a_hi] {
+        let msg = &mut msgs[a.src_rank];
+        msg.extend_from_slice(&[a.slot as f32, a.src_idx as f32, a.gate]);
+        msg.extend_from_slice(&data_c[(a.slot - lo) * d..(a.slot - lo + 1) * d]);
+    }
+    msgs
+}
+
+/// Scatter one chunk of dye arrivals into the expert cotangent buffer
+/// and tally the received f32 elements per source (validated against the
+/// admission counts after the last chunk). Pure per-slot assignment --
+/// each admitted slot receives exactly one cotangent row -- so scattering
+/// chunk by chunk cannot reorder any f32 accumulation.
+fn scatter_dye_chunk(buf: &mut [f32], got: &mut [usize], arrivals: &[Vec<f32>], d: usize) {
+    let stride = moe::HEADER + d;
+    for (src, msg) in arrivals.iter().enumerate() {
+        got[src] += msg.len();
+        for tok in msg.chunks_exact(stride) {
+            let slot = tok[0] as usize;
+            buf[slot * d..(slot + 1) * d].copy_from_slice(&tok[moe::HEADER..]);
+        }
+    }
+}
+
 pub struct DistEngine;
 
 impl DistEngine {
@@ -485,6 +718,12 @@ impl DistEngine {
             cfg.n_ranks
         );
         let n = manifest.ranks;
+        crate::ensure!(cfg.overlap_chunks >= 1, "overlap_chunks must be >= 1");
+        crate::ensure!(
+            cfg.overlap_chunks == 1 || manifest.synthetic_seed.is_some(),
+            "overlap_chunks > 1 requires the synthetic manifest: the XLA stage \
+             artifacts are compiled for full-capacity shapes only"
+        );
         // Per-rank thread budget for the stage math. Explicit requests
         // (CLI --threads / config "threads" / GD_THREADS env) are taken
         // as workers PER RANK; auto (0) divides the machine's available
@@ -498,7 +737,7 @@ impl DistEngine {
         // resolve the cutoff once here so a garbage GD_SEQ_CUTOFF is a
         // clean launch error, not a panic inside every rank thread
         let seq_cutoff = resolve_seq_cutoff()?;
-        let fabric = Arc::new(ThreadFabric::new(n));
+        let fabric = Arc::new(ThreadFabric::with_cluster(n, cfg.cluster));
         let task = Arc::new(ClusterTask::new(
             manifest.d_in,
             manifest.n_classes,
@@ -512,7 +751,7 @@ impl DistEngine {
             let task = task.clone();
             let manifest = manifest.clone();
             let cfg = cfg.clone();
-            type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64);
+            type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, Vec<f32>, f64);
             handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
                 let mut w = WorkerState::new(
                     rank,
@@ -521,6 +760,8 @@ impl DistEngine {
                     per_rank_threads,
                     seq_cutoff,
                     cfg.router,
+                    cfg.overlap_chunks,
+                    cfg.cluster,
                 )?;
                 let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
                 let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
@@ -546,21 +787,28 @@ impl DistEngine {
                     .filter(|&&b| crate::coordinator::Decision::decode(b).drop)
                     .count() as f64
                     / cfg.steps.max(1) as f64;
-                // dense-param fingerprint for the consistency check
+                // dense-param fingerprint for the consistency check, plus
+                // this rank's resident expert for the full-model one
                 let mut fp = w.w_in.clone();
                 fp.extend_from_slice(&w.wr);
                 fp.extend_from_slice(&w.w_out);
-                Ok((losses, walls, fp, drop_rate))
+                let mut efp = w.w1.clone();
+                efp.extend_from_slice(&w.w2);
+                Ok((losses, walls, fp, efp, drop_rate))
             }));
         }
-        let mut all: Vec<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, f64)> = Vec::new();
+        let mut all: Vec<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, Vec<f32>, f64)> = Vec::new();
         for h in handles {
             all.push(h.join().map_err(|_| crate::err!("worker panicked"))??);
         }
         let dense_consistent = all.windows(2).all(|w| w[0].2 == w[1].2);
         let losses = all[0].0.clone();
         let step_wall = all[0].1.clone();
-        let observed_drop_rate = all[0].3;
+        let observed_drop_rate = all[0].4;
+        let mut param_fingerprint = all[0].2.clone();
+        for a in &all {
+            param_fingerprint.extend_from_slice(&a.3);
+        }
         Ok(DistRunResult {
             losses,
             fabric: fabric.stats(),
@@ -568,6 +816,7 @@ impl DistEngine {
             step_wall,
             dense_consistent,
             observed_drop_rate,
+            param_fingerprint,
         })
     }
 }
@@ -590,5 +839,30 @@ mod tests {
         let cfg = DistRunConfig { artifact_dir: "/nonexistent".into(), ..Default::default() };
         let err = DistEngine::run(&cfg).unwrap_err().to_string();
         assert!(err.contains("manifest"), "got: {err}");
+    }
+
+    #[test]
+    fn chunk_bounds_cover_the_slot_space_contiguously() {
+        for (cap, c) in [(7usize, 3usize), (8, 4), (5, 9), (1, 1), (256, 2), (6, 1)] {
+            let b = chunk_bounds(cap, c);
+            assert_eq!(b.len(), c.clamp(1, cap), "cap {cap} chunks {c}");
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, cap);
+            assert!(b.windows(2).all(|w| w[0].1 == w[1].0), "gaps: {b:?}");
+            let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (mn, mx) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced chunks for {cap}/{c}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn zero_overlap_chunks_is_rejected() {
+        let cfg = DistRunConfig {
+            artifact_dir: "synthetic".into(),
+            overlap_chunks: 0,
+            ..Default::default()
+        };
+        let err = DistEngine::run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("overlap_chunks"), "got: {err}");
     }
 }

@@ -26,6 +26,19 @@
 //! bit-identical to the sequential ones, so the budget changes wall
 //! time, never losses -- pinned by
 //! `tests/integration_distributed.rs::dist_losses_bit_identical_across_thread_budgets`.
+//!
+//! With `DistRunConfig::overlap_chunks > 1` the engine splits the expert
+//! capacity into fixed contiguous chunks and pipelines the return / dye /
+//! dxe all-to-all legs against per-chunk expert compute through
+//! [`ThreadFabric`]'s chunked handles: the fabric ledger then charges
+//! `max(comm, compute)` per pipeline stage instead of their sum, and
+//! reports the hidden-communication fraction. The schedule is
+//! bit-identical to serial at any chunk count -- only modeled timing
+//! changes (pinned by `tests/overlap.rs`). See `docs/ARCHITECTURE.md`
+//! ("distributed" layer) for the 4-leg schedule and the timing-model
+//! contract.
+//!
+//! [`ThreadFabric`]: crate::collective::ThreadFabric
 
 mod engine;
 mod optim;

@@ -408,6 +408,49 @@ pub fn ref_stage(
             mm_bt(pool, &mut dxe, &dpre, w1, t, f, d);
             Ok(vec![dxe, dw1, dw2])
         }
+        // Row-chunked slice of expert_bwd for the pipelined schedule: the
+        // token-axis ops of a contiguous slot range. Returns (dxe_c,
+        // hid_c, dpre_c); the caller concatenates hid_c/dpre_c across
+        // chunks and runs "expert_bwd_dw" ONCE so dw1/dw2 keep the
+        // monolithic accumulation order (mm_at sums over the token axis,
+        // so per-chunk dw matmuls would reorder f32 adds). The per-row
+        // ops here are bit-identical to the same rows inside a monolithic
+        // expert_bwd because mm/mm_bt accumulate per (row, col) over k
+        // only -- row subsets never change any row's bits.
+        "expert_bwd_chunk" => {
+            let (w1, d, f) = f2(args, 0, name)?;
+            let (w2, _, _) = f2(args, 1, name)?;
+            let (xe, t, _) = f2(args, 2, name)?;
+            let (dye, _, _) = f2(args, 3, name)?;
+            let mut pre = vec![0f32; t * f];
+            mm(pool, &mut pre, xe, w1, t, d, f);
+            let mut hid = pre.clone();
+            relu(&mut hid);
+            let mut dpre = vec![0f32; t * f];
+            mm_bt(pool, &mut dpre, dye, w2, t, d, f);
+            for (dp, &pr) in dpre.iter_mut().zip(&pre) {
+                if pr <= 0.0 {
+                    *dp = 0.0;
+                }
+            }
+            let mut dxe = vec![0f32; t * d];
+            mm_bt(pool, &mut dxe, &dpre, w1, t, f, d);
+            Ok(vec![dxe, hid, dpre])
+        }
+        // Weight-gradient tail of the chunked expert backward: one pass
+        // over the FULL (concatenated) buffers, so the token-axis sums in
+        // dw1/dw2 run in exactly the monolithic expert_bwd order.
+        "expert_bwd_dw" => {
+            let (xe, t, d) = f2(args, 0, name)?;
+            let (hid, _, f) = f2(args, 1, name)?;
+            let (dpre, _, _) = f2(args, 2, name)?;
+            let (dye, _, _) = f2(args, 3, name)?;
+            let mut dw2 = vec![0f32; f * d];
+            mm_at(pool, &mut dw2, hid, dye, t, f, d);
+            let mut dw1 = vec![0f32; d * f];
+            mm_at(pool, &mut dw1, xe, dpre, t, d, f);
+            Ok(vec![dw1, dw2])
+        }
         // VJP of s1_fwd given cotangents for h and probs: (dw_in, db_in, dwr)
         "s1_bwd" => {
             let (w_in, din, d) = f2(args, 0, name)?;
@@ -655,6 +698,124 @@ mod tests {
             }
         }
         assert!(checked > 0, "every probe hit a kink (suspicious)");
+    }
+
+    /// The chunked expert backward (per-chunk "expert_bwd_chunk" + one
+    /// trailing "expert_bwd_dw" over the concatenated buffers) must
+    /// reconstruct the monolithic "expert_bwd" outputs BITWISE at any
+    /// chunk count -- this is the contract that lets the distributed
+    /// engine pipeline the dye/dxe legs without changing a single bit.
+    #[test]
+    fn chunked_expert_bwd_reconstructs_monolithic_bitwise() {
+        let (t, d, f) = (10usize, 6usize, 9usize);
+        let mut rng = Rng::new(17);
+        let rand_vec = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+        };
+        let w1 = rand_vec(&mut rng, d * f);
+        let w2 = rand_vec(&mut rng, f * d);
+        let xe = rand_vec(&mut rng, t * d);
+        let dye = rand_vec(&mut rng, t * d);
+        let mono = ref_stage(
+            "expert_bwd",
+            &[
+                lit2(&w1, d, f).unwrap(),
+                lit2(&w2, f, d).unwrap(),
+                lit2(&xe, t, d).unwrap(),
+                lit2(&dye, t, d).unwrap(),
+            ],
+            None,
+        )
+        .unwrap();
+        for nchunks in [1usize, 2, 3] {
+            let mut dxe = Vec::new();
+            let mut hid = Vec::new();
+            let mut dpre = Vec::new();
+            let mut row = 0usize;
+            for c in 0..nchunks {
+                let rows = t / nchunks + usize::from(c < t % nchunks);
+                let out = ref_stage(
+                    "expert_bwd_chunk",
+                    &[
+                        lit2(&w1, d, f).unwrap(),
+                        lit2(&w2, f, d).unwrap(),
+                        lit2(&xe[row * d..(row + rows) * d], rows, d).unwrap(),
+                        lit2(&dye[row * d..(row + rows) * d], rows, d).unwrap(),
+                    ],
+                    None,
+                )
+                .unwrap();
+                dxe.extend_from_slice(&out[0]);
+                hid.extend_from_slice(&out[1]);
+                dpre.extend_from_slice(&out[2]);
+                row += rows;
+            }
+            assert_eq!(row, t);
+            let dw = ref_stage(
+                "expert_bwd_dw",
+                &[
+                    lit2(&xe, t, d).unwrap(),
+                    lit2(&hid, t, f).unwrap(),
+                    lit2(&dpre, t, f).unwrap(),
+                    lit2(&dye, t, d).unwrap(),
+                ],
+                None,
+            )
+            .unwrap();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&dxe), bits(&mono[0]), "dxe diverged at {nchunks} chunks");
+            assert_eq!(bits(&dw[0]), bits(&mono[1]), "dw1 diverged at {nchunks} chunks");
+            assert_eq!(bits(&dw[1]), bits(&mono[2]), "dw2 diverged at {nchunks} chunks");
+        }
+    }
+
+    /// The new chunked arms honor the same pooled-vs-sequential bitwise
+    /// contract as every other stage.
+    #[test]
+    fn chunked_arms_pooled_match_sequential_bitwise() {
+        let (t, d, f) = (8usize, 6usize, 7usize);
+        let mut rng = Rng::new(31);
+        let rand_vec = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+        };
+        let w1 = rand_vec(&mut rng, d * f);
+        let w2 = rand_vec(&mut rng, f * d);
+        let xe = rand_vec(&mut rng, t * d);
+        let dye = rand_vec(&mut rng, t * d);
+        let hid = rand_vec(&mut rng, t * f);
+        let dpre = rand_vec(&mut rng, t * f);
+        let stages: Vec<(&str, Vec<StageArg>)> = vec![
+            (
+                "expert_bwd_chunk",
+                vec![
+                    lit2(&w1, d, f).unwrap(),
+                    lit2(&w2, f, d).unwrap(),
+                    lit2(&xe, t, d).unwrap(),
+                    lit2(&dye, t, d).unwrap(),
+                ],
+            ),
+            (
+                "expert_bwd_dw",
+                vec![
+                    lit2(&xe, t, d).unwrap(),
+                    lit2(&hid, t, f).unwrap(),
+                    lit2(&dpre, t, f).unwrap(),
+                    lit2(&dye, t, d).unwrap(),
+                ],
+            ),
+        ];
+        for (name, args) in &stages {
+            let want = ref_stage(name, args, None).unwrap();
+            for threads in [2usize, 4] {
+                let pool = ThreadPool::with_cutoff(threads, 0);
+                let got = ref_stage(name, args, Some(&pool)).unwrap();
+                for (oi, (w, g)) in want.iter().zip(&got).enumerate() {
+                    let same = w.len() == g.len()
+                        && w.iter().zip(g).all(|(a, b)| a.to_bits() == b.to_bits());
+                    assert!(same, "{name} output {oi} diverged at {threads} threads");
+                }
+            }
+        }
     }
 
     #[test]

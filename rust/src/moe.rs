@@ -35,6 +35,18 @@
 //! The seed's growable-vec packers survive as [`route_pack_naive`] /
 //! [`return_pack_naive`] so `bench_dispatch` (rust/benches/microbench.rs)
 //! can keep measuring the win of the flat path over the seed path.
+//!
+//! # Slot-order invariant
+//!
+//! With one expert per rank, [`route_admit`] assigns expert slots from a
+//! sequential counter in arrival order, so `admitted[i].slot == i` and a
+//! contiguous slot range is a contiguous prefix of the admitted list.
+//! The distributed engine's chunked pipelined dispatch
+//! (`distributed::engine`, knob `overlap_chunks`) splits the expert
+//! dimension on exactly this property: per-chunk packs concatenate back
+//! to the serial wire buffers byte for byte. This module is the
+//! "moe" layer of `docs/ARCHITECTURE.md`, which maps how the routing
+//! CSR, the wire format, and that invariant thread through the stack.
 
 use crate::topology::Topology;
 

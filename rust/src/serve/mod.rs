@@ -43,6 +43,9 @@
 //! condvar wakeup, and the re-tuned 2Ki default cutoff lets moderately
 //! sized ragged batches ride the `backend-par` pool -- bit-identical
 //! either way, so summaries and output hashes are unchanged.
+//!
+//! This is the "serve" layer of `docs/ARCHITECTURE.md`, which maps how
+//! it sits on the runtime backends and the shared ThreadPool seam.
 
 pub mod metrics;
 pub mod queue;

@@ -1,0 +1,142 @@
+//! Pinned contract of the chunked pipelined dispatch (PR 7): at any
+//! `overlap_chunks` setting the distributed engine must produce the SAME
+//! training run — losses, parameters, and wire traffic bit-for-bit — as
+//! the serial schedule; only the modeled step time may change, and only
+//! downward. See docs/ARCHITECTURE.md ("distributed" layer) for the
+//! schedule and the timing-model contract these tests enforce.
+
+use gating_dropout::coordinator::Policy;
+use gating_dropout::distributed::{DistEngine, DistRunConfig, DistRunResult};
+use gating_dropout::moe::Router;
+
+/// Tiny synthetic run, small enough for tier-1 CI: 4 ranks, 6 steps.
+fn run(router: Router, policy: Policy, overlap_chunks: usize) -> DistRunResult {
+    let cfg = DistRunConfig {
+        artifact_dir: "synthetic".into(),
+        steps: 6,
+        policy,
+        router,
+        overlap_chunks,
+        ..Default::default()
+    };
+    DistEngine::run(&cfg).unwrap_or_else(|e| panic!("dist run failed: {e}"))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// f64 relative closeness: the serial modeled step time is the same sum
+/// of comm + compute at any chunking, but chunked runs add the per-chunk
+/// compute terms in a different association order, so the totals may
+/// differ in the last ulps.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1e-300)
+}
+
+/// The headline pin: chunking the expert dimension changes NOTHING about
+/// the run except the modeled timing — losses, parameter fingerprints,
+/// payload bytes/ops, and counts-phase ops are bit-identical at
+/// `overlap_chunks` ∈ {1, 2, 4} across routers × dropout policies.
+#[test]
+fn pipelined_schedule_is_bit_identical_to_serial() {
+    for router in [Router::Top1, Router::TopK { k: 2 }] {
+        for policy in [Policy::Baseline, Policy::GateDrop { p: 0.3 }] {
+            let serial = run(router, policy, 1);
+            assert!(serial.dense_consistent, "{} serial run desynced", router.name());
+            assert_eq!(
+                serial.fabric.overlapped_ticks, 0.0,
+                "a 1-chunk schedule has nothing to overlap"
+            );
+            for chunks in [2usize, 4] {
+                let piped = run(router, policy, chunks);
+                let tag = format!("{}/{} at {chunks} chunks", router.name(), policy.name());
+                assert_eq!(
+                    bits(&serial.losses),
+                    bits(&piped.losses),
+                    "losses must be bit-identical ({tag})"
+                );
+                assert_eq!(
+                    bits(&serial.param_fingerprint),
+                    bits(&piped.param_fingerprint),
+                    "parameters must be bit-identical ({tag})"
+                );
+                assert_eq!(serial.fabric.a2a_ops, piped.fabric.a2a_ops, "a2a ops ({tag})");
+                assert_eq!(serial.fabric.a2a_bytes, piped.fabric.a2a_bytes, "a2a bytes ({tag})");
+                assert_eq!(
+                    serial.fabric.counts_ops, piped.fabric.counts_ops,
+                    "chunking must not add counts phases ({tag})"
+                );
+                assert_eq!(
+                    serial.fabric.counts_bytes, piped.fabric.counts_bytes,
+                    "counts bytes ({tag})"
+                );
+                assert_eq!(
+                    serial.observed_drop_rate, piped.observed_drop_rate,
+                    "drop schedule ({tag})"
+                );
+            }
+        }
+    }
+}
+
+/// Timing-model monotonicity: the serial modeled step time is invariant
+/// under chunking (same comm volume, same compute, modulo f64 addition
+/// order), and the pipelined time is ≤ serial — strictly < whenever full
+/// steps ran, because every full step has nonzero chunk compute for the
+/// comm spans to hide behind.
+#[test]
+fn pipelined_modeled_time_is_monotone() {
+    for router in [Router::Top1, Router::TopK { k: 2 }] {
+        for policy in [Policy::Baseline, Policy::GateDrop { p: 0.3 }] {
+            let serial = run(router, policy, 1);
+            for chunks in [2usize, 4] {
+                let piped = run(router, policy, chunks);
+                let tag = format!("{}/{} at {chunks} chunks", router.name(), policy.name());
+                assert!(
+                    close(
+                        serial.fabric.serial_modeled_step_time(),
+                        piped.fabric.serial_modeled_step_time()
+                    ),
+                    "serial modeled time must be chunking-invariant ({tag}): {} vs {}",
+                    serial.fabric.serial_modeled_step_time(),
+                    piped.fabric.serial_modeled_step_time()
+                );
+                let t_serial = piped.fabric.serial_modeled_step_time();
+                let t_piped = piped.fabric.pipelined_modeled_step_time();
+                assert!(
+                    t_piped <= t_serial,
+                    "pipelined modeled time must never exceed serial ({tag})"
+                );
+                if piped.fabric.a2a_ops > 0 {
+                    assert!(
+                        piped.fabric.overlapped_ticks > 0.0,
+                        "full steps ran but no comm was hidden ({tag})"
+                    );
+                    assert!(
+                        t_piped < t_serial,
+                        "nonzero chunk compute must strictly shrink the step ({tag})"
+                    );
+                }
+                let hidden = piped.fabric.hidden_comm_fraction();
+                assert!(
+                    (0.0..=1.0).contains(&hidden),
+                    "hidden-comm fraction out of range ({tag}): {hidden}"
+                );
+            }
+        }
+    }
+}
+
+/// The dropped-step fast path never touches the wire, so a run that
+/// drops everything earns no overlap at any chunking — and still matches
+/// the serial schedule bit for bit.
+#[test]
+fn all_dropped_runs_have_nothing_to_hide() {
+    let serial = run(Router::Top1, Policy::GateDrop { p: 1.0 }, 1);
+    let piped = run(Router::Top1, Policy::GateDrop { p: 1.0 }, 4);
+    assert_eq!(bits(&serial.losses), bits(&piped.losses));
+    assert_eq!(bits(&serial.param_fingerprint), bits(&piped.param_fingerprint));
+    assert_eq!(piped.fabric.a2a_ops, 0, "dropped steps must stay off the wire");
+    assert_eq!(piped.fabric.overlapped_ticks, 0.0);
+}
