@@ -378,8 +378,10 @@ fn bench_decode() -> Vec<BenchEntry> {
             fmt_tps(tokens / bat.median_secs()),
         );
         let tag = format!("decode_{n_reqs}reqs");
-        entries.push(BenchEntry::new(format!("{tag}_seq_tps"), tokens / seq.median_secs(), "tok/s"));
-        entries.push(BenchEntry::new(format!("{tag}_bat_tps"), tokens / bat.median_secs(), "tok/s"));
+        entries
+            .push(BenchEntry::new(format!("{tag}_seq_tps"), tokens / seq.median_secs(), "tok/s"));
+        entries
+            .push(BenchEntry::new(format!("{tag}_bat_tps"), tokens / bat.median_secs(), "tok/s"));
         entries.push(BenchEntry::new(format!("{tag}_speedup"), seq.median_ns / bat.median_ns, "x"));
     }
     entries
@@ -491,6 +493,59 @@ fn bench_overlap() -> Vec<BenchEntry> {
     entries
 }
 
+/// The soak harness at scheduler scale on the decode-only stub engine:
+/// wall time of the streaming windowed fold over a heavy-traffic load.
+/// The determinism contract (repeat-run equality of the full report) is
+/// asserted before any timing, mirroring the other sections.
+fn bench_soak() -> Vec<BenchEntry> {
+    use gating_dropout::data::BOS;
+    use gating_dropout::runtime::{ModelDims, StubBackend};
+    use gating_dropout::serve::{soak, HeavySpec, Scenario, ServeConfig, SoakConfig};
+
+    let be = StubBackend::new(ModelDims {
+        vocab: 512,
+        d_model: 64,
+        d_ff: 128,
+        n_experts: 4,
+        enc_blocks: 1,
+        dec_blocks: 1,
+        max_len: 16,
+        batch_rows: 8,
+        bos: BOS,
+        param_count: 0,
+    });
+    let mut entries = Vec::new();
+    println!("-- bench_soak: streaming windowed fold over the stub engine --");
+    for (n, warmup, iters) in [(20_000usize, 1, 5), (100_000, 1, 3)] {
+        let cfg = SoakConfig {
+            serve: ServeConfig {
+                n_requests: n,
+                mean_gap_ticks: 2,
+                seed: 21,
+                ..ServeConfig::default()
+            },
+            scenario: Scenario::Heavy(HeavySpec::default()),
+            window_ticks: 1024,
+            hist_buckets: 512,
+            hist_width: 4,
+            ..SoakConfig::default()
+        };
+        let a = soak(&be, &cfg).unwrap();
+        assert_eq!(a, soak(&be, &cfg).unwrap(), "soak must be a pure function of the seed");
+        let s = bench(warmup, iters, || {
+            std::hint::black_box(soak(&be, &cfg).unwrap());
+        });
+        let name = format!("soak {n} reqs ({} windows)", a.windows.len());
+        report(&name, &s);
+        println!("{name:<44} {} req/s", fmt_tps(n as f64 / s.median_secs()));
+        let tag = format!("soak_{n}");
+        entries.push(BenchEntry::new(format!("{tag}_median"), s.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_rps"), n as f64 / s.median_secs(), "req/s"));
+        entries.push(BenchEntry::new(format!("{tag}_windows"), a.windows.len() as f64, "windows"));
+    }
+    entries
+}
+
 fn main() {
     // optional section filter (`cargo bench --bench microbench -- overlap`
     // runs just that JSON-emitting section; CI uses this to exercise the
@@ -530,7 +585,7 @@ fn main() {
         report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
     }
 
-    let sections: [(&str, fn() -> Vec<BenchEntry>); 5] = [
+    let sections: [(&str, fn() -> Vec<BenchEntry>); 6] = [
         ("dispatch", bench_dispatch),
         ("routing", bench_routing),
         ("matmul_par", || {
@@ -539,6 +594,7 @@ fn main() {
         }),
         ("decode", bench_decode),
         ("overlap", bench_overlap),
+        ("soak", bench_soak),
     ];
     for (section, run_section) in sections {
         if !want(section) {

@@ -46,6 +46,10 @@ pub struct RunConfig {
     /// Serving: waiting requests beyond this are shed at admission
     /// (Switch-style load shedding).
     pub queue_cap: usize,
+    /// Serving (`repro soak`): queue depth at dispatch that forces
+    /// local-fallback decode -- expert dispatch stays on-device, the
+    /// serving analogue of gating dropout. 0 disables the valve.
+    pub fallback_depth: usize,
     /// Router on non-dropped steps: `top1` (seed default), `topk`,
     /// `adaptive`. Resolved into a [`moe::Router`] by
     /// [`RunConfig::router`].
@@ -81,6 +85,7 @@ impl Default for RunConfig {
             max_batch: 8,
             max_wait_ticks: 4,
             queue_cap: 64,
+            fallback_depth: 0,
             router: "top1".into(),
             topk: 2,
             adaptive_thresh: 0.5,
@@ -204,6 +209,9 @@ impl RunConfig {
         if let Some(v) = j.get("queue_cap").and_then(Json::as_usize) {
             self.queue_cap = v;
         }
+        if let Some(v) = j.get("fallback_depth").and_then(Json::as_usize) {
+            self.fallback_depth = v;
+        }
         if let Some(v) = j.get("router").and_then(Json::as_str) {
             self.router = v.to_string();
         }
@@ -238,6 +246,7 @@ impl RunConfig {
         self.max_batch = a.usize("max-batch", self.max_batch);
         self.max_wait_ticks = a.u64("max-wait-ticks", self.max_wait_ticks);
         self.queue_cap = a.usize("queue-cap", self.queue_cap);
+        self.fallback_depth = a.usize("fallback-depth", self.fallback_depth);
         if let Some(c) = a.get("cluster") {
             self.cluster = cluster_by_name(c)?;
         }
@@ -303,7 +312,8 @@ mod tests {
         let j = Json::parse(
             r#"{"policy": "gate-drop:0.4", "steps": 77, "cluster": "a100", "n_ranks": 4,
                 "threads": 6, "max_batch": 16, "max_wait_ticks": 7, "queue_cap": 128,
-                "router": "topk", "topk": 3, "adaptive_thresh": 0.7, "overlap_chunks": 4}"#,
+                "fallback_depth": 24, "router": "topk", "topk": 3,
+                "adaptive_thresh": 0.7, "overlap_chunks": 4}"#,
         )
         .unwrap();
         c.apply_json(&j).unwrap();
@@ -315,6 +325,7 @@ mod tests {
         assert_eq!(c.max_batch, 16);
         assert_eq!(c.max_wait_ticks, 7);
         assert_eq!(c.queue_cap, 128);
+        assert_eq!(c.fallback_depth, 24);
         assert_eq!(c.router().unwrap(), crate::moe::Router::TopK { k: 3 });
         assert_eq!(c.adaptive_thresh, 0.7);
         assert_eq!(c.overlap_chunks, 4);
@@ -325,7 +336,8 @@ mod tests {
         let mut c = RunConfig::default();
         let a = Args::parse(
             "--policy gate-expert-drop:0.2 --steps 5 --decay-to 0.0@100 --threads 2 \
-             --max-batch 4 --max-wait-ticks 2 --queue-cap 32 --overlap-chunks 2"
+             --max-batch 4 --max-wait-ticks 2 --queue-cap 32 --fallback-depth 6 \
+             --overlap-chunks 2"
                 .split_whitespace()
                 .map(String::from),
         );
@@ -337,6 +349,7 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert_eq!(c.max_wait_ticks, 2);
         assert_eq!(c.queue_cap, 32);
+        assert_eq!(c.fallback_depth, 6);
         assert_eq!(c.overlap_chunks, 2);
     }
 

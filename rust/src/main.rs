@@ -9,15 +9,20 @@
 //!   eval        holdout BLEU/loss of a checkpoint
 //!   serve       deterministic micro-batched decode serving run
 //!   bench-serve batched vs sequential serving throughput (wall clock)
+//!   soak        heavy-traffic scheduler soak with windowed metrics,
+//!               per-window SLOs and the local-fallback overload valve
 
 use gating_dropout::bail;
-use gating_dropout::benchkit::{bench, fmt_tps, report_tps_speedup, Table};
+use gating_dropout::benchkit::{
+    bench, bench_json_path, fmt_tps, report_tps_speedup, BenchEntry, Table,
+};
 use gating_dropout::config::{cluster_by_name, RunConfig};
 use gating_dropout::coordinator::Policy;
+use gating_dropout::data::BOS;
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::netmodel::MoeWorkload;
-use gating_dropout::runtime::{default_backend, Backend};
-use gating_dropout::serve::{self, ServeConfig};
+use gating_dropout::runtime::{default_backend, Backend, ModelDims, StubBackend};
+use gating_dropout::serve::{self, HeavySpec, Scenario, ServeConfig, SoakConfig};
 use gating_dropout::simengine;
 use gating_dropout::train::Trainer;
 use gating_dropout::util::cli::Args;
@@ -64,6 +69,20 @@ COMMANDS:
            (same load served batched vs max-batch=1; asserts the decoded
             tokens are bit-identical, then reports the wall tokens/sec
             speedup. --smoke = tiny preset + load for CI)
+  soak     [--requests N] [--mean-gap T] [--scenario heavy|uniform]
+           [--max-batch B] [--max-wait-ticks W] [--queue-cap C]
+           [--fallback-depth D] [--window-ticks T] [--hist-buckets N]
+           [--hist-width T] [--max-shed-rate R] [--max-p99 T] [--seed S]
+           [--smoke] [--model]
+           (heavy-traffic scheduler soak: bounded-Pareto gaps and fills,
+            flash-crowd phases and multi-row requests folded into windowed
+            summaries with O(windows) memory -- a million requests by
+            default, ~20k under --smoke. Queue depth >= --fallback-depth
+            at dispatch forces local-fallback decode, the serving
+            analogue of gating dropout; per-window SLO breaches
+            (--max-shed-rate, --max-p99) are reported, and BENCH_soak.json
+            (schema gd-bench-v1) is written. Runs on the decode-only stub
+            engine unless --model serves the configured backend instead)
 
 Policies: baseline | gate-drop[:p] | gate-expert-drop[:p] | hash-layer | no-alltoall
 ";
@@ -84,6 +103,7 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
+        "soak" => cmd_soak(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -417,6 +437,93 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         "batched",
         t_bat.median_secs(),
     );
+    Ok(())
+}
+
+fn cmd_soak(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    let mut cfg = load_config(args)?;
+    if smoke && args.get("run-preset").is_none() && args.get("config").is_none() {
+        cfg = RunConfig::preset_named("tiny")?;
+        cfg.apply_args(args)?;
+    }
+    let mut scfg = serve_config(&cfg, args);
+    // soak-scale defaults: a million requests (the acceptance bar), way
+    // down for --smoke so CI stays fast
+    if args.get("requests").is_none() {
+        scfg.n_requests = if smoke { 20_000 } else { 1_000_000 };
+    }
+    if args.get("mean-gap").is_none() {
+        scfg.mean_gap_ticks = 2;
+    }
+    let scenario = match args.get_or("scenario", "heavy") {
+        "uniform" => Scenario::Uniform,
+        "heavy" => Scenario::Heavy(HeavySpec::default()),
+        other => bail!("unknown scenario '{other}' (heavy|uniform)"),
+    };
+    let soak_cfg = SoakConfig {
+        serve: scfg,
+        scenario,
+        window_ticks: args.u64("window-ticks", 1024),
+        hist_buckets: args.usize("hist-buckets", 512),
+        hist_width: args.u64("hist-width", 4),
+        max_shed_rate: args.f64("max-shed-rate", 1.0),
+        max_p99_total_ticks: args.u64("max-p99", 0),
+    };
+    eprintln!(
+        "[soak] requests={} scenario={} window_ticks={} queue_cap={} fallback_depth={}",
+        soak_cfg.serve.n_requests,
+        args.get_or("scenario", "heavy"),
+        soak_cfg.window_ticks,
+        soak_cfg.serve.queue_cap,
+        soak_cfg.serve.fallback_depth
+    );
+    let report = if args.flag("model") {
+        // serve the real configured backend (pass --requests: a million
+        // transformer decodes is a model benchmark, not a scheduler one)
+        let mut backend =
+            default_backend(&cfg.artifact_dir(), &cfg.preset, cfg.seed, true, cfg.threads)?;
+        backend
+            .set_router(cfg.router()?)
+            .map_err(|e| gating_dropout::err!("configuring router: {e}"))?;
+        eprintln!("[soak] backend={}", backend.name());
+        serve::soak(backend.as_ref(), &soak_cfg)?
+    } else {
+        // the decode-only stub mixer: O(tokens) per request, so the run
+        // measures the scheduler fold, not the transformer
+        let backend = StubBackend::new(ModelDims {
+            vocab: 512,
+            d_model: 64,
+            d_ff: 128,
+            n_experts: 4,
+            enc_blocks: 1,
+            dec_blocks: 1,
+            max_len: 16,
+            batch_rows: 8,
+            bos: BOS,
+            param_count: 0,
+        });
+        eprintln!("[soak] backend={}", backend.name());
+        serve::soak(&backend, &soak_cfg)?
+    };
+    report.print(&soak_cfg, 12);
+    let s = &report.summary;
+    let entries = [
+        BenchEntry::new("soak_offered", s.offered as f64, "requests"),
+        BenchEntry::new("soak_completed", s.completed as f64, "requests"),
+        BenchEntry::new("soak_rejected", s.rejected as f64, "requests"),
+        BenchEntry::new("soak_total_ticks", s.total_ticks as f64, "ticks"),
+        BenchEntry::new("soak_tokens_per_tick", s.tokens_per_tick(), "tokens/tick"),
+        BenchEntry::new("soak_p99_total_ticks", s.p99_total_ticks as f64, "ticks"),
+        BenchEntry::new("soak_windows", report.windows.len() as f64, "windows"),
+        BenchEntry::new("soak_fallback_batches", report.fallback_batches as f64, "batches"),
+        BenchEntry::new("soak_peak_queue_depth", report.peak_queue_depth as f64, "requests"),
+        BenchEntry::new("soak_slo_violations", report.violations.len() as f64, "windows"),
+    ];
+    let path = bench_json_path("soak");
+    gating_dropout::benchkit::write_bench_json(&path, &entries)
+        .map_err(|e| gating_dropout::err!("writing {path}: {e}"))?;
+    println!("[soak] wrote {path} (hash {:016x})", s.output_hash);
     Ok(())
 }
 

@@ -94,8 +94,13 @@ impl Cluster {
 /// *per rank* (tokens are sharded data-parallel).
 #[derive(Debug, Clone, Copy)]
 pub struct MoeWorkload {
-    /// Tokens processed per rank per step.
+    /// Tokens processed per step by the *most loaded* rank: with a global
+    /// batch that does not divide evenly, the remainder ranks carry one
+    /// extra ceil-share and the step time is bounded by them.
     pub tokens_per_rank: usize,
+    /// Exact global batch in tokens per step (what throughput divides by;
+    /// `tokens_per_rank * n_ranks` overstates it by the padding share).
+    pub global_tokens: usize,
     /// Model (hidden) dimension.
     pub d_model: usize,
     /// FFN dimension of each expert.
@@ -108,12 +113,21 @@ pub struct MoeWorkload {
     pub wire_bytes: usize,
 }
 
+/// The paper's Section 4.1 global batch: 435k tokens per step, fixed
+/// across cluster sizes (scaling sweeps vary ranks, never the batch).
+pub const GLOBAL_BATCH_TOKENS: usize = 435_000;
+
 impl MoeWorkload {
     /// Paper Section 4.1 shapes: transformer-base-ish with MoE every other
-    /// FFN. tokens_per_rank derives from the 435k-token global batch.
+    /// FFN. The global batch stays exactly [`GLOBAL_BATCH_TOKENS`] at
+    /// every rank count; per-rank tokens are the ceiling share (the
+    /// straggler rank that bounds step time). The old `435_000 / n_ranks`
+    /// truncation shrank the modeled global batch as ranks grew, which
+    /// silently flattered large-cluster throughput comparisons.
     pub fn wmt10(n_ranks: usize) -> MoeWorkload {
         MoeWorkload {
-            tokens_per_rank: 435_000 / n_ranks,
+            tokens_per_rank: GLOBAL_BATCH_TOKENS.div_ceil(n_ranks.max(1)),
+            global_tokens: GLOBAL_BATCH_TOKENS,
             d_model: 1024,
             d_ff: 4096,
             moe_layers: 9,  // (12 enc + 6 dec) / 2
@@ -124,7 +138,8 @@ impl MoeWorkload {
 
     pub fn web50(n_ranks: usize) -> MoeWorkload {
         MoeWorkload {
-            tokens_per_rank: 435_000 / n_ranks,
+            tokens_per_rank: GLOBAL_BATCH_TOKENS.div_ceil(n_ranks.max(1)),
+            global_tokens: GLOBAL_BATCH_TOKENS,
             d_model: 1024,
             d_ff: 8192,
             moe_layers: 18, // (24 enc + 12 dec) / 2
@@ -176,9 +191,11 @@ pub fn step_time(cluster: &Cluster, n_ranks: usize, w: &MoeWorkload, shape: Step
     compute + comm
 }
 
-/// Tokens/second across the whole cluster for a fixed step shape.
+/// Tokens/second across the whole cluster for a fixed step shape: the
+/// exact global batch over the straggler-bounded step time (padding
+/// tokens on ceil-share ranks cost time but produce no throughput).
 pub fn throughput(cluster: &Cluster, n_ranks: usize, w: &MoeWorkload, shape: StepShape) -> f64 {
-    (w.tokens_per_rank * n_ranks) as f64 / step_time(cluster, n_ranks, w, shape)
+    w.global_tokens as f64 / step_time(cluster, n_ranks, w, shape)
 }
 
 /// Expected step time under Gating Dropout with rate `p`:
@@ -216,6 +233,26 @@ mod tests {
     #[test]
     fn a2a_zero_for_single_rank() {
         assert_eq!(V100_IB100.all_to_all_time(1, 1e9), 0.0);
+    }
+
+    /// The global batch must stay exactly 435k tokens at every rank count
+    /// (the truncating `435_000 / n` shrank it by up to n-1 tokens per
+    /// rank), and the per-rank share must be the minimal ceiling cover.
+    #[test]
+    fn global_batch_is_exact_at_every_rank_count() {
+        for n in [1usize, 7, 8, 16, 32, 64, 128] {
+            for w in [MoeWorkload::wmt10(n), MoeWorkload::web50(n)] {
+                assert_eq!(w.global_tokens, GLOBAL_BATCH_TOKENS);
+                assert!(w.tokens_per_rank * n >= GLOBAL_BATCH_TOKENS, "n={n}: ranks must cover");
+                assert!(
+                    (w.tokens_per_rank - 1) * n < GLOBAL_BATCH_TOKENS,
+                    "n={n}: ceil share must be minimal"
+                );
+            }
+        }
+        // the regression itself: 435_000 / 128 truncates to 3398 (global
+        // 434_944); the ceiling share covers with 3399
+        assert_eq!(MoeWorkload::wmt10(128).tokens_per_rank, 3399);
     }
 
     #[test]

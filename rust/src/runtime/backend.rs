@@ -176,6 +176,24 @@ pub trait Backend {
         srcs.iter().map(|s| self.decode(s)).collect()
     }
 
+    /// [`Backend::decode_batch`] with expert dispatch forced *local*:
+    /// every token routes to a fixed expert chosen by its row position
+    /// instead of by the gate, skipping the (virtual) all-to-all -- the
+    /// serving analogue of the paper's gating dropout, used by the soak
+    /// scheduler as a pressure valve under overload.
+    ///
+    /// Same per-request contract as `decode_batch`: element `i` is
+    /// bit-identical to a solo local-fallback decode of `srcs[i]`. The
+    /// default declines, so engines without a local-dispatch path fail
+    /// loudly at the first fallback dispatch instead of silently serving
+    /// gated outputs.
+    fn decode_batch_local(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        let _ = srcs;
+        Err(BackendError::Unsupported {
+            what: format!("local-fallback decode on backend '{}'", self.name()),
+        })
+    }
+
     /// Optimizer steps taken so far (f32: it round-trips through the
     /// artifact state tuple on the XLA backend).
     fn step_count(&self) -> f32;

@@ -18,6 +18,11 @@
 //!   [`ReferenceBackend`] at any thread count. The same pool type carries
 //!   the distributed engine's per-rank stage math.
 //!
+//! [`StubBackend`] (always compiled) is a fourth, decode-only engine:
+//! a deterministic FNV token mixer with no model math, for
+//! scheduler-scale soak runs where the transformer would be the
+//! bottleneck being measured by accident.
+//!
 //! `manifest` parses `artifacts/<preset>/manifest.json` (all shapes and
 //! dtypes are manifest-driven -- nothing is hard-coded) and can also
 //! synthesize a manifest from preset dims for the reference backend.
@@ -29,6 +34,7 @@ mod manifest;
 #[cfg(feature = "backend-par")]
 mod parallel;
 mod reference;
+mod stub;
 pub mod tensor;
 
 pub use backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
@@ -38,6 +44,7 @@ pub use manifest::{DType, Manifest, ModelDims, TensorSpec};
 #[cfg(feature = "backend-par")]
 pub use parallel::ParallelBackend;
 pub use reference::{RefHyper, ReferenceBackend};
+pub use stub::StubBackend;
 
 #[cfg(not(any(feature = "backend-xla", feature = "backend-ref", feature = "backend-par")))]
 compile_error!(

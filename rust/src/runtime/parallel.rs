@@ -116,6 +116,12 @@ impl Backend for ParallelBackend {
         self.inner.decode_batch(srcs)
     }
 
+    fn decode_batch_local(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        // same forced-local path as the reference engine (not the
+        // trait's declining default)
+        self.inner.decode_batch_local(srcs)
+    }
+
     fn step_count(&self) -> f32 {
         self.inner.step_count()
     }

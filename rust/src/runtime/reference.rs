@@ -268,12 +268,28 @@ impl ReferenceBackend {
     /// stream into per-request capacity groups. Shared by `decode` (one
     /// group) and `decode_batch` (one group per request) so the two paths
     /// cannot drift.
-    fn greedy_decode(&self, src: &[i32], groups: &[usize]) -> Vec<i32> {
+    ///
+    /// `local` forces expert dispatch local (the gating-dropout `drop`
+    /// flag): row `j` *within its request* routes to expert `j %
+    /// n_experts`, so a request's routing is independent of where it
+    /// sits in the batch and batched local decode stays bit-identical to
+    /// solo local decode -- the same per-request contract the gated path
+    /// has.
+    fn greedy_decode(&self, src: &[i32], groups: &[usize], local: bool) -> Vec<i32> {
         let dm = &self.manifest.dims;
         let (len, vocab) = (dm.max_len, dm.vocab);
         let rows = src.len() / len;
-        let rows_local = vec![0i32; rows];
-        let sf = StepFlags { drop: false, skip: false, hash: false };
+        let rows_local: Vec<i32> = if local {
+            let e = dm.n_experts as i32;
+            let mut v = Vec::with_capacity(rows);
+            for &g in groups {
+                v.extend((0..(g / len) as i32).map(|j| j % e));
+            }
+            v
+        } else {
+            vec![0i32; rows] // ignored: `drop` is off
+        };
+        let sf = StepFlags { drop: local, skip: false, hash: false };
         let mut tgt_in = vec![dm.bos; rows * len];
         let mut out = vec![0i32; rows * len];
         for p in 0..len {
@@ -288,6 +304,45 @@ impl ReferenceBackend {
             }
         }
         out
+    }
+
+    /// Validate + flatten a ragged request batch, run one
+    /// [`Self::greedy_decode`] over it with per-request capacity groups,
+    /// and split the result back per request. Shared by `decode_batch`
+    /// (gated routing) and `decode_batch_local` (forced-local routing)
+    /// so the two serve paths differ only in the `local` flag.
+    fn ragged_decode(&self, srcs: &[&[i32]], local: bool) -> BackendResult<Vec<Vec<i32>>> {
+        let len = self.manifest.dims.max_len;
+        let mut groups = Vec::with_capacity(srcs.len());
+        let mut total = 0usize;
+        for (i, s) in srcs.iter().enumerate() {
+            if s.is_empty() || s.len() % len != 0 {
+                return Err(BackendError::Shape {
+                    detail: format!(
+                        "decode_batch request {i} length {} is not a non-zero multiple of \
+                         max_len {len}",
+                        s.len()
+                    ),
+                });
+            }
+            groups.push(s.len());
+            total += s.len();
+        }
+        if srcs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut src = Vec::with_capacity(total);
+        for s in srcs {
+            src.extend_from_slice(s);
+        }
+        let flat = self.greedy_decode(&src, &groups, local);
+        let mut out = Vec::with_capacity(srcs.len());
+        let mut off = 0;
+        for &g in &groups {
+            out.push(flat[off..off + g].to_vec());
+            off += g;
+        }
+        Ok(out)
     }
 
     /// Deterministic init: embeddings at std 0.02, matrices at
@@ -1105,7 +1160,7 @@ impl Backend for ReferenceBackend {
         // one capacity group spanning the whole call: a decode call is one
         // request, with the same joint admission the fixed-batch path
         // always had
-        Ok(self.greedy_decode(src, &[src.len()]))
+        Ok(self.greedy_decode(src, &[src.len()], false))
     }
 
     /// Batched greedy decode: every request's rows run through the
@@ -1117,37 +1172,11 @@ impl Backend for ReferenceBackend {
     /// sequential per-request decodes -- the contract `decode_batch`
     /// documents and `rust/tests/serve_decode.rs` pins.
     fn decode_batch(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
-        let len = self.manifest.dims.max_len;
-        let mut groups = Vec::with_capacity(srcs.len());
-        let mut total = 0usize;
-        for (i, s) in srcs.iter().enumerate() {
-            if s.is_empty() || s.len() % len != 0 {
-                return Err(BackendError::Shape {
-                    detail: format!(
-                        "decode_batch request {i} length {} is not a non-zero multiple of \
-                         max_len {len}",
-                        s.len()
-                    ),
-                });
-            }
-            groups.push(s.len());
-            total += s.len();
-        }
-        if srcs.is_empty() {
-            return Ok(Vec::new());
-        }
-        let mut src = Vec::with_capacity(total);
-        for s in srcs {
-            src.extend_from_slice(s);
-        }
-        let flat = self.greedy_decode(&src, &groups);
-        let mut out = Vec::with_capacity(srcs.len());
-        let mut off = 0;
-        for &g in &groups {
-            out.push(flat[off..off + g].to_vec());
-            off += g;
-        }
-        Ok(out)
+        self.ragged_decode(srcs, false)
+    }
+
+    fn decode_batch_local(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        self.ragged_decode(srcs, true)
     }
 
     fn step_count(&self) -> f32 {

@@ -1,0 +1,192 @@
+//! A decode-only stub engine for scheduler-scale experiments.
+//!
+//! The soak harness wants million-request runs; the reference engine's
+//! real transformer decode makes that ~10^13 MACs, which is a model
+//! benchmark, not a scheduler benchmark. [`StubBackend`] implements the
+//! [`Backend`] decode surface with a deterministic FNV-1a token mixer:
+//! O(tokens) per request, bit-identical across runs and platforms, and
+//! honouring the same per-request contracts the real engines pin --
+//! element `i` of a batched decode equals the solo decode of `srcs[i]`,
+//! and the local-fallback path produces *different* tokens than the
+//! gated path (it folds in a marker constant), so scheduler tests can
+//! tell the two apart. Everything that needs real model math
+//! (train/eval/checkpoints) declines with a typed `Unsupported`.
+
+use crate::data::Batch;
+
+use super::backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
+use super::manifest::{Manifest, ModelDims, TensorSpec};
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+/// Folded into the row hash on the local-fallback path so fallback
+/// outputs are distinguishable from gated outputs.
+const LOCAL_MARK: u64 = 0xD05E_D05E_D05E_D05E;
+
+/// Deterministic decode-only engine: tokens out are a pure integer
+/// function of tokens in. See the module docs.
+pub struct StubBackend {
+    manifest: Manifest,
+}
+
+impl StubBackend {
+    /// A stub over `dims` (only `vocab`, `max_len`, and `bos` matter; the
+    /// manifest carries the rest for callers that inspect it).
+    pub fn new(dims: ModelDims) -> StubBackend {
+        assert!(dims.vocab > 3, "stub needs content vocab above PAD/BOS/EOS");
+        assert!(dims.max_len > 0, "stub needs a non-zero max_len");
+        let specs: Vec<TensorSpec> = Vec::new(); // no parameters at all
+        StubBackend { manifest: Manifest::synthetic("stub", dims, specs) }
+    }
+
+    fn unsupported<T>(&self, what: &str) -> BackendResult<T> {
+        Err(BackendError::Unsupported { what: format!("{what} on backend '{}'", self.name()) })
+    }
+
+    /// One request's tokens: per row, FNV-1a over the row's source
+    /// tokens, then a position-keyed stream of content-range ids.
+    fn decode_one(&self, src: &[i32], local: bool) -> BackendResult<Vec<i32>> {
+        let (len, vocab) = (self.manifest.dims.max_len, self.manifest.dims.vocab as u64);
+        if src.is_empty() || src.len() % len != 0 {
+            return Err(BackendError::Shape {
+                detail: format!(
+                    "decode src length {} is not a non-zero multiple of max_len {len}",
+                    src.len()
+                ),
+            });
+        }
+        let mut out = Vec::with_capacity(src.len());
+        for row in src.chunks_exact(len) {
+            let mut h = FNV_OFFSET;
+            for &t in row {
+                h = (h ^ t as u32 as u64).wrapping_mul(FNV_PRIME);
+            }
+            if local {
+                h = (h ^ LOCAL_MARK).wrapping_mul(FNV_PRIME);
+            }
+            for p in 0..len as u64 {
+                out.push((3 + h.wrapping_add(p.wrapping_mul(FNV_PRIME)) % (vocab - 3)) as i32);
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Backend for StubBackend {
+    fn name(&self) -> &'static str {
+        "stub-decode"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &mut self,
+        _batch: &Batch,
+        _flags: (f32, f32, f32),
+        _seed: i32,
+    ) -> BackendResult<TrainMetrics> {
+        self.unsupported("train_step")
+    }
+
+    fn eval(&self, _batch: &Batch) -> BackendResult<EvalMetrics> {
+        self.unsupported("eval")
+    }
+
+    fn decode(&self, src: &[i32]) -> BackendResult<Vec<i32>> {
+        self.decode_one(src, false)
+    }
+
+    // decode_batch inherits the per-request default loop: row hashes are
+    // per-request by construction, so batching cannot change outputs
+
+    fn decode_batch_local(&self, srcs: &[&[i32]]) -> BackendResult<Vec<Vec<i32>>> {
+        srcs.iter().map(|s| self.decode_one(s, true)).collect()
+    }
+
+    fn step_count(&self) -> f32 {
+        0.0
+    }
+
+    fn reset(&mut self) -> BackendResult<()> {
+        Ok(())
+    }
+
+    fn save_checkpoint(&self, _dir: &str) -> BackendResult<()> {
+        self.unsupported("save_checkpoint")
+    }
+
+    fn load_checkpoint(&mut self, _dir: &str) -> BackendResult<()> {
+        self.unsupported("load_checkpoint")
+    }
+
+    fn param_by_name(&self, _name: &str) -> BackendResult<(TensorSpec, Vec<f32>)> {
+        self.unsupported("param_by_name")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BOS;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64,
+            d_model: 8,
+            d_ff: 12,
+            n_experts: 2,
+            enc_blocks: 1,
+            dec_blocks: 0,
+            max_len: 4,
+            batch_rows: 2,
+            bos: BOS,
+            param_count: 0,
+        }
+    }
+
+    #[test]
+    fn decode_is_deterministic_content_range_and_input_sensitive() {
+        let be = StubBackend::new(dims());
+        let a = be.decode(&[3, 4, 5, 6]).unwrap();
+        assert_eq!(a, be.decode(&[3, 4, 5, 6]).unwrap());
+        assert_eq!(a.len(), 4);
+        assert!(a.iter().all(|&t| (3..64).contains(&t)), "{a:?}");
+        assert_ne!(a, be.decode(&[3, 4, 5, 7]).unwrap(), "outputs depend on input");
+    }
+
+    #[test]
+    fn batched_equals_solo_and_local_differs() {
+        let be = StubBackend::new(dims());
+        let (r0, r1) = ([3, 4, 5, 6], [7, 8, 9, 10, 11, 12, 13, 14]);
+        let batched = be.decode_batch(&[&r0, &r1]).unwrap();
+        assert_eq!(batched[0], be.decode(&r0).unwrap());
+        assert_eq!(batched[1], be.decode(&r1).unwrap());
+        let local = be.decode_batch_local(&[&r0, &r1]).unwrap();
+        assert_eq!(local[0], be.decode_batch_local(&[&r0]).unwrap()[0], "solo == batched");
+        assert_ne!(local, batched, "fallback outputs carry the local mark");
+        assert!(local.iter().flatten().all(|&t| (3..64).contains(&t)));
+    }
+
+    #[test]
+    fn non_decode_surfaces_decline_loudly() {
+        let be = StubBackend::new(dims());
+        let empty = Batch {
+            src: Vec::new(),
+            tgt_in: Vec::new(),
+            tgt_out: Vec::new(),
+            local_expert_row: Vec::new(),
+            rows: 0,
+            len: 0,
+        };
+        match be.eval(&empty) {
+            Err(BackendError::Unsupported { what }) => assert!(what.contains("stub-decode")),
+            other => panic!("expected Unsupported, got {other:?}"),
+        }
+        match be.decode(&[3, 4, 5]) {
+            Err(BackendError::Shape { .. }) => {}
+            other => panic!("expected Shape error, got {other:?}"),
+        }
+    }
+}

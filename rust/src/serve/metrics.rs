@@ -27,20 +27,120 @@ pub fn quantile(sorted: &[u64], p: f64) -> u64 {
 /// batched serving of the same load hash equal exactly when every
 /// request decoded to the same tokens (the `decode_batch` contract).
 pub fn output_hash(outputs: &[(usize, Vec<i32>)]) -> u64 {
-    let mut h = 0xcbf2_9ce4_8422_2325u64;
-    let mut mix = |v: u64| {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3);
-        }
-    };
+    let mut h = OutputHash::new();
     for (id, toks) in outputs {
-        mix(*id as u64);
-        for &t in toks {
-            mix(t as u64);
+        h.fold(*id, toks);
+    }
+    h.finish()
+}
+
+/// Incrementally folded [`output_hash`]: the streaming soak cannot hold
+/// (let alone sort) a million decoded outputs, so it folds each one at
+/// completion time. Because the scheduler admits requests in id order and
+/// the queue is FIFO, completions occur in request-id order among the
+/// completed set -- folding in completion order produces **exactly** the
+/// hash `output_hash` computes over the id-sorted collected outputs
+/// (pinned by the fallback-off soak ≡ `serve()` test in
+/// `rust/tests/soak.rs`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutputHash {
+    h: u64,
+}
+
+impl Default for OutputHash {
+    fn default() -> OutputHash {
+        OutputHash::new()
+    }
+}
+
+impl OutputHash {
+    /// The FNV-1a offset basis (an empty fold hashes to it).
+    pub fn new() -> OutputHash {
+        OutputHash { h: 0xcbf2_9ce4_8422_2325 }
+    }
+
+    fn mix(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.h ^= b as u64;
+            self.h = self.h.wrapping_mul(0x100_0000_01b3);
         }
     }
-    h
+
+    /// Fold one completed request's decoded tokens.
+    pub fn fold(&mut self, id: usize, toks: &[i32]) {
+        self.mix(id as u64);
+        for &t in toks {
+            self.mix(t as u64);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.h
+    }
+}
+
+/// Fixed-bucket integer histogram over tick values: O(buckets) memory no
+/// matter how many samples stream through -- the soak's replacement for
+/// "collect every latency and sort". Values at or past the top bucket
+/// clamp into it (a documented saturation, not an error: size the range
+/// via `--hist-buckets`/`--hist-width`). With `width == 1` and all values
+/// inside the range, [`TickHistogram::quantile`] is **exactly**
+/// [`quantile`] over the sorted samples (same floor-index rank), which is
+/// what lets the soak's summary compare equal to `serve()`'s.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TickHistogram {
+    width: u64,
+    counts: Vec<u64>,
+    n: u64,
+}
+
+impl TickHistogram {
+    /// `buckets` fixed buckets of `width` ticks each (both >= 1).
+    pub fn new(buckets: usize, width: u64) -> TickHistogram {
+        assert!(buckets > 0, "TickHistogram wants at least one bucket");
+        assert!(width > 0, "TickHistogram wants a positive bucket width");
+        TickHistogram { width, counts: vec![0; buckets], n: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = ((v / self.width) as usize).min(self.counts.len() - 1);
+        self.counts[b] += 1;
+        self.n += 1;
+    }
+
+    /// Samples recorded.
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Deterministic quantile: the lower bound of the bucket holding the
+    /// rank-`floor((n-1) * p)` sample (0 when empty) -- the histogram
+    /// analogue of [`quantile`]'s floor-index formula, bit-equal to it
+    /// when `width == 1` and no sample clamped.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.n == 0 {
+            return 0;
+        }
+        let rank = ((self.n - 1) as f64 * p) as u64;
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return b as u64 * self.width;
+            }
+        }
+        (self.counts.len() as u64 - 1) * self.width
+    }
+
+    /// Forget every sample (the soak reuses one histogram per window).
+    pub fn reset(&mut self) {
+        self.counts.fill(0);
+        self.n = 0;
+    }
 }
 
 /// The deterministic result of one serve run.
@@ -52,6 +152,13 @@ pub struct ServeSummary {
     pub completed: u64,
     /// Requests shed at admission (queue at capacity).
     pub rejected: u64,
+    /// Requests still queued or decoding when the summary was taken. A
+    /// drained `serve()` run always reports 0; the soak's windowed folds
+    /// see live sessions, and the old `debug_assert!` made that case a
+    /// silent miscount (`completed + rejected != offered`) in release
+    /// builds. Conservation now holds by construction:
+    /// `completed + rejected + in_flight == offered`.
+    pub in_flight: u64,
     /// Micro-batches dispatched.
     pub batches: u64,
     /// Rows across all dispatched micro-batches.
@@ -82,6 +189,7 @@ impl ServeSummary {
         let mut total_lat = Vec::new();
         let mut completed = 0u64;
         let mut rejected = 0u64;
+        let mut in_flight = 0u64;
         let mut dispatched_rows = 0u64;
         let mut tokens_out = 0u64;
         for s in sessions {
@@ -94,9 +202,10 @@ impl ServeSummary {
                     total_lat.push(s.total_ticks());
                 }
                 RequestState::Rejected => rejected += 1,
-                RequestState::Queued | RequestState::Decoding => {
-                    debug_assert!(false, "serve must drain every session");
-                }
+                // live sessions are counted, not debug-asserted away: a
+                // release build folding an undrained run used to report
+                // completed + rejected < offered with no trace of why
+                RequestState::Queued | RequestState::Decoding => in_flight += 1,
             }
         }
         queue_ticks.sort_unstable();
@@ -105,6 +214,7 @@ impl ServeSummary {
             offered: sessions.len() as u64,
             completed,
             rejected,
+            in_flight,
             batches,
             dispatched_rows,
             tokens_out,
@@ -191,6 +301,7 @@ mod tests {
         assert_eq!(s.offered, 3);
         assert_eq!(s.completed, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.in_flight, 0, "a drained run has no live sessions");
         assert_eq!(s.tokens_out, 16);
         assert_eq!(s.dispatched_rows, 2);
         assert_eq!(s.p50_queue_ticks, 1); // sorted [1, 2] -> floor(0.5) = idx 0
@@ -199,5 +310,83 @@ mod tests {
         assert!((s.tokens_per_tick() - 16.0 / 5.0).abs() < 1e-12);
         assert!((s.mean_batch_rows() - 2.0).abs() < 1e-12);
         s.print(); // smoke: no panic
+    }
+
+    /// The satellite regression: live (Queued/Decoding) sessions used to
+    /// vanish behind a `debug_assert!`, so release builds reported
+    /// `completed + rejected < offered` with nothing accounting for the
+    /// gap. They must be an explicit `in_flight` count that conserves.
+    #[test]
+    fn live_sessions_are_counted_not_lost() {
+        let mut done = Session::queued(0, 1, 0);
+        done.dispatch(1, 0);
+        done.complete(3, 8);
+        let queued = Session::queued(1, 1, 2);
+        let mut decoding = Session::queued(2, 2, 2);
+        decoding.dispatch(4, 1);
+        let rej = Session::rejected(3, 1, 5);
+        let s = ServeSummary::from_sessions(&[done, queued, decoding, rej], 2, 6, 0);
+        assert_eq!(s.in_flight, 2);
+        assert_eq!(s.completed + s.rejected + s.in_flight, s.offered, "conservation");
+        // only terminal Done sessions contribute rows/tokens/latencies
+        assert_eq!(s.dispatched_rows, 1);
+        assert_eq!(s.tokens_out, 8);
+    }
+
+    #[test]
+    fn incremental_hash_matches_batch_hash() {
+        let outs = vec![(0usize, vec![5i32, 6]), (2, vec![7]), (9, vec![8, 9, 10])];
+        let mut inc = OutputHash::new();
+        for (id, toks) in &outs {
+            inc.fold(*id, toks);
+        }
+        assert_eq!(inc.finish(), output_hash(&outs));
+        assert_ne!(inc.finish(), OutputHash::new().finish());
+    }
+
+    #[test]
+    fn histogram_quantiles_match_exact_on_small_n() {
+        // width 1, in-range values: bit-equal to the sorted floor-index
+        // quantile at every p, including the edges
+        let samples = [3u64, 0, 7, 7, 2, 5, 1, 7, 4, 2, 0, 6];
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        let mut h = TickHistogram::new(16, 1);
+        for &v in &samples {
+            h.record(v);
+        }
+        for p in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile(p), quantile(&sorted, p), "p={p}");
+        }
+        assert_eq!(h.len(), samples.len() as u64);
+    }
+
+    #[test]
+    fn histogram_edge_cases() {
+        // empty
+        let h = TickHistogram::new(4, 1);
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
+        // single sample: every quantile is that sample
+        let mut h = TickHistogram::new(8, 1);
+        h.record(5);
+        for p in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(p), 5, "p={p}");
+        }
+        assert_eq!(quantile(&[5], 1.0), 5, "exact quantile single-sample p=1.0");
+        // clamping: values past the range land in the top bucket
+        let mut h = TickHistogram::new(4, 1);
+        h.record(1_000_000);
+        assert_eq!(h.quantile(1.0), 3, "overflow clamps to the top bucket");
+        // width > 1 buckets report the bucket's lower bound
+        let mut h = TickHistogram::new(4, 10);
+        h.record(25);
+        assert_eq!(h.quantile(0.5), 20);
+        // reset forgets everything
+        let mut h = TickHistogram::new(4, 1);
+        h.record(2);
+        h.reset();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0);
     }
 }

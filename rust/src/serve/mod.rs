@@ -18,7 +18,12 @@
 //! * [`session`] -- per-request lifecycle records in integer ticks;
 //! * [`metrics`] -- the fold into [`ServeSummary`]: p50/p99 queue and
 //!   end-to-end latency, tokens per tick, batch occupancy, and an
-//!   output-token hash.
+//!   output-token hash -- plus the fixed-bucket [`TickHistogram`] and
+//!   incremental `OutputHash` the streaming paths fold through;
+//! * [`soak`](mod@soak) -- the heavy-traffic harness: the same scheduler core
+//!   folded into windowed summaries (O(windows) memory at a million
+//!   requests), SLO assertions per window, and the pressure-triggered
+//!   local-fallback decode valve (`fallback_depth`).
 //!
 //! Determinism guarantee (pinned by `rust/tests/serve_decode.rs`): a
 //! fixed-seed serve run produces an identical [`ServeSummary`] -- every
@@ -51,11 +56,13 @@ pub mod metrics;
 pub mod queue;
 pub mod scheduler;
 pub mod session;
+pub mod soak;
 
-pub use metrics::ServeSummary;
-pub use queue::{LoadGen, Request, RequestQueue};
+pub use metrics::{ServeSummary, TickHistogram};
+pub use queue::{HeavySpec, LoadGen, Request, RequestQueue, Scenario};
 pub use scheduler::{serve, ServeReport};
 pub use session::{RequestState, Session};
+pub use soak::{soak, SloViolation, SoakConfig, SoakReport, WindowSummary};
 
 use crate::config::RunConfig;
 
@@ -80,6 +87,16 @@ pub struct ServeConfig {
     pub batch_ticks: u64,
     /// Marginal virtual cost per request row in a micro-batch.
     pub row_ticks: u64,
+    /// Queue depth at dispatch that forces local-fallback decode
+    /// (`Backend::decode_batch_local`): expert dispatch stays on-device,
+    /// skipping the all-to-all -- the serving analogue of gating
+    /// dropout. `0` disables the valve (the seed behaviour).
+    pub fallback_depth: usize,
+    /// Fixed virtual cost per *fallback* micro-batch (cheaper than
+    /// `batch_ticks`: no cross-device dispatch to amortize).
+    pub fallback_batch_ticks: u64,
+    /// Marginal virtual cost per row in a fallback micro-batch.
+    pub fallback_row_ticks: u64,
     pub seed: u64,
 }
 
@@ -93,6 +110,9 @@ impl Default for ServeConfig {
             queue_cap: 64,
             batch_ticks: 4,
             row_ticks: 1,
+            fallback_depth: 0,
+            fallback_batch_ticks: 1,
+            fallback_row_ticks: 1,
             seed: 42,
         }
     }
@@ -106,6 +126,7 @@ impl ServeConfig {
             max_batch: cfg.max_batch,
             max_wait_ticks: cfg.max_wait_ticks,
             queue_cap: cfg.queue_cap,
+            fallback_depth: cfg.fallback_depth,
             seed: cfg.seed,
             ..ServeConfig::default()
         }
@@ -128,6 +149,7 @@ mod tests {
             max_batch: 12,
             max_wait_ticks: 9,
             queue_cap: 33,
+            fallback_depth: 24,
             seed: 5,
             ..RunConfig::default()
         };
@@ -135,6 +157,7 @@ mod tests {
         assert_eq!(sc.max_batch, 12);
         assert_eq!(sc.max_wait_ticks, 9);
         assert_eq!(sc.queue_cap, 33);
+        assert_eq!(sc.fallback_depth, 24);
         assert_eq!(sc.seed, 5);
         let seq = sc.sequential();
         assert_eq!(seq.max_batch, 1);

@@ -2,11 +2,14 @@
 //!
 //! The serving path has no socket front-end yet (ROADMAP follow-up), so
 //! load is *synthesized*: [`LoadGen`] derives inter-arrival gaps, fill
-//! lengths, and content tokens from three forked SplitMix64 streams
-//! ([`crate::util::rng::Rng`]) -- the offered load is a pure function of
-//! the seed, which is what lets `rust/tests/serve_decode.rs` assert a
-//! whole serve run's metrics summary is identical across invocations and
-//! thread counts.
+//! lengths, content tokens, traffic phases, and the request-row mix from
+//! five forked SplitMix64 streams ([`crate::util::rng::Rng`]) -- the
+//! offered load is a pure function of the seed, which is what lets
+//! `rust/tests/serve_decode.rs` and `rust/tests/soak.rs` assert a whole
+//! serve run's metrics summary is identical across invocations and
+//! thread counts. [`Scenario::Uniform`] is the seed's easy traffic;
+//! [`Scenario::Heavy`] layers bounded-Pareto gaps/fills, flash-crowd
+//! phases, and multi-row requests on top for the soak harness.
 //!
 //! [`RequestQueue`] is a bounded FIFO with Switch-style admission
 //! control: arrivals beyond the capacity are *dropped*, exactly like
@@ -33,24 +36,91 @@ pub struct Request {
     pub src: Vec<i32>,
 }
 
-/// Seeded open-loop load: per request, an inter-arrival gap uniform in
-/// `[0, 2*mean_gap]` ticks, a fill length uniform in `[1, max_len]`, and
-/// content tokens uniform over the non-special vocab, padded with `PAD`
-/// -- each drawn from its own forked stream so changing one knob never
-/// shifts another stream's draws.
+/// Largest accepted mean inter-arrival gap. A gap draw is bounded by
+/// `2 * mean_gap`, times a heavy-tail multiplier of at most
+/// [`MAX_TAIL`], so any admitted configuration keeps single gaps below
+/// `2^58` and the virtual clock accumulates with saturating adds -- the
+/// old `2 * mean_gap + 1` / `clock +=` arithmetic wrapped `u64` on
+/// absurd-but-representable configs and handed the scheduler a
+/// *decreasing* arrival sequence.
+pub const MAX_MEAN_GAP: u64 = 1 << 40;
+
+/// Largest accepted heavy-tail bound (`HeavySpec::tail`).
+pub const MAX_TAIL: u64 = 1 << 16;
+
+/// Row counts the heavy scenario's request mix draws from (weights in
+/// [`HeavySpec::row_weights`]).
+pub const ROW_CHOICES: [usize; 3] = [1, 2, 4];
+
+/// Knobs of the heavy-traffic scenario (see [`Scenario::Heavy`]). All
+/// integer processes: the bounded-Pareto draws are `tail / u` with `u`
+/// uniform in `[1, tail]` -- `P(mult >= k) ~ 1/k`, capped at `tail` --
+/// so the load stays a pure function of the seed on every platform.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeavySpec {
+    /// Bounded-Pareto cap: gap and fill multipliers land in `[1, tail]`.
+    pub tail: u64,
+    /// Mean requests per traffic phase; each phase's length is uniform
+    /// in `[1, 2*phase_len]`.
+    pub phase_len: u64,
+    /// Inter-arrival gaps divide by this during a flash-crowd phase.
+    pub flash_boost: u64,
+    /// Probability weight of a flash phase in the phase mix.
+    pub flash_weight: f64,
+    /// Unnormalised weights over [`ROW_CHOICES`] for the per-request row
+    /// count (multi-row requests are the `decode`-shaped general case).
+    pub row_weights: [f64; 3],
+}
+
+impl Default for HeavySpec {
+    fn default() -> HeavySpec {
+        HeavySpec {
+            tail: 64,
+            phase_len: 256,
+            flash_boost: 8,
+            flash_weight: 0.25,
+            row_weights: [8.0, 3.0, 1.0],
+        }
+    }
+}
+
+/// Which synthetic load the generator produces.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scenario {
+    /// The seed load: uniform gaps in `[0, 2*mean_gap]`, uniform fills,
+    /// single-row requests. Draw-for-draw identical to the pre-scenario
+    /// `LoadGen`, so every existing fixed-seed serve test still sees the
+    /// exact same request stream.
+    Uniform,
+    /// Heavy traffic: bounded-Pareto inter-arrival gaps and fill
+    /// lengths, flash-crowd phases (gaps divided by `flash_boost`), and
+    /// a weighted multi-row request mix.
+    Heavy(HeavySpec),
+}
+
+/// Seeded open-loop load: gaps, fill lengths, content tokens, traffic
+/// phases and the row mix each come from their own forked stream so
+/// changing one knob never shifts another stream's draws.
 pub struct LoadGen {
     arrivals: Rng,
     lengths: Rng,
     contents: Rng,
+    phases: Rng,
+    mix: Rng,
+    scenario: Scenario,
     max_len: usize,
     vocab: usize,
     mean_gap: u64,
     n_requests: usize,
     next_id: usize,
     clock: u64,
+    /// Requests left in the current traffic phase (heavy scenario).
+    phase_left: u64,
+    in_flash: bool,
 }
 
 impl LoadGen {
+    /// The seed's uniform single-row load (see [`Scenario::Uniform`]).
     pub fn new(
         seed: u64,
         n_requests: usize,
@@ -58,19 +128,59 @@ impl LoadGen {
         max_len: usize,
         vocab: usize,
     ) -> LoadGen {
+        Self::with_scenario(seed, n_requests, mean_gap_ticks, max_len, vocab, Scenario::Uniform)
+    }
+
+    pub fn with_scenario(
+        seed: u64,
+        n_requests: usize,
+        mean_gap_ticks: u64,
+        max_len: usize,
+        vocab: usize,
+        scenario: Scenario,
+    ) -> LoadGen {
         assert!(vocab as u64 > CONTENT0, "vocab too small for synthetic load");
         assert!(max_len > 0, "zero max_len");
+        assert!(
+            mean_gap_ticks <= MAX_MEAN_GAP,
+            "mean_gap {mean_gap_ticks} ticks is absurd (max {MAX_MEAN_GAP}): the virtual \
+             clock would saturate instead of ticking"
+        );
+        if let Scenario::Heavy(spec) = &scenario {
+            assert!(
+                (1..=MAX_TAIL).contains(&spec.tail),
+                "heavy tail bound {} out of [1, {MAX_TAIL}]",
+                spec.tail
+            );
+            assert!(spec.phase_len >= 1, "zero phase_len");
+            assert!(spec.flash_boost >= 1, "zero flash_boost");
+            assert!(
+                (0.0..=1.0).contains(&spec.flash_weight),
+                "flash_weight {} out of [0, 1]",
+                spec.flash_weight
+            );
+            assert!(
+                spec.row_weights.iter().all(|&w| w >= 0.0)
+                    && spec.row_weights.iter().sum::<f64>() > 0.0,
+                "row_weights must be non-negative with a positive total"
+            );
+        }
         let root = Rng::new(seed ^ 0x5E47_E000);
         LoadGen {
             arrivals: root.fork(1),
             lengths: root.fork(2),
             contents: root.fork(3),
+            phases: root.fork(4),
+            mix: root.fork(5),
+            scenario,
             max_len,
             vocab,
             mean_gap: mean_gap_ticks,
             n_requests,
             next_id: 0,
             clock: 0,
+            phase_left: 0,
+            in_flash: false,
         }
     }
 
@@ -79,19 +189,64 @@ impl LoadGen {
         self.n_requests - self.next_id
     }
 
+    /// Bounded-Pareto multiplier in `[1, tail]`: `tail / u` with `u`
+    /// uniform in `[1, tail]`, so `P(mult >= k) ~ 1/k`. Pure integer
+    /// arithmetic -- no `powf`/`ln`, whose libm rounding varies across
+    /// platforms and would fork the "deterministic" load.
+    fn pareto_mult(rng: &mut Rng, tail: u64) -> u64 {
+        let u = 1 + rng.below(tail);
+        tail / u
+    }
+
     /// The next request, with a monotonically non-decreasing arrival
     /// tick; `None` once `n_requests` have been generated.
     pub fn next_request(&mut self) -> Option<Request> {
         if self.next_id >= self.n_requests {
             return None;
         }
-        self.clock += self.arrivals.below(2 * self.mean_gap + 1);
-        let fill = 1 + self.lengths.below(self.max_len as u64) as usize;
-        let mut src = vec![PAD; self.max_len];
-        for slot in src.iter_mut().take(fill) {
-            *slot = (CONTENT0 + self.contents.below(self.vocab as u64 - CONTENT0)) as i32;
+        // 2*mean_gap+1 cannot wrap under the MAX_MEAN_GAP construction
+        // bound, but the arithmetic stays saturating so no future knob
+        // can reintroduce the wrap silently
+        let base_gap = self.arrivals.below(2u64.saturating_mul(self.mean_gap).saturating_add(1));
+        let (gap, rows) = match &self.scenario {
+            Scenario::Uniform => (base_gap, 1),
+            Scenario::Heavy(spec) => {
+                let spec = spec.clone();
+                // phase process: redraw the calm/flash mix when the
+                // current phase runs out of requests
+                if self.phase_left == 0 {
+                    self.in_flash =
+                        self.phases.weighted(&[1.0 - spec.flash_weight, spec.flash_weight]) == 1;
+                    self.phase_left = 1 + self.phases.below(2 * spec.phase_len);
+                }
+                self.phase_left -= 1;
+                let mult = Self::pareto_mult(&mut self.arrivals, spec.tail);
+                let mut gap = base_gap.saturating_mul(mult);
+                if self.in_flash {
+                    gap /= spec.flash_boost;
+                }
+                let rows = ROW_CHOICES[self.mix.weighted(&spec.row_weights)];
+                (gap, rows)
+            }
+        };
+        self.clock = self.clock.saturating_add(gap);
+        let mut src = vec![PAD; rows * self.max_len];
+        for r in 0..rows {
+            let fill = match &self.scenario {
+                Scenario::Uniform => 1 + self.lengths.below(self.max_len as u64) as usize,
+                Scenario::Heavy(spec) => {
+                    // heavy-tailed toward long rows: mostly minimal
+                    // fills, a ~1/tail share at the full max_len
+                    let m = Self::pareto_mult(&mut self.lengths, spec.tail);
+                    ((self.max_len as u64 * m) / spec.tail).max(1) as usize
+                }
+            };
+            let row = &mut src[r * self.max_len..(r + 1) * self.max_len];
+            for slot in row.iter_mut().take(fill) {
+                *slot = (CONTENT0 + self.contents.below(self.vocab as u64 - CONTENT0)) as i32;
+            }
         }
-        let req = Request { id: self.next_id, arrival_tick: self.clock, rows: 1, src };
+        let req = Request { id: self.next_id, arrival_tick: self.clock, rows, src };
         self.next_id += 1;
         Some(req)
     }
@@ -191,6 +346,94 @@ mod tests {
             seen_short |= fill <= 2;
         }
         assert!(seen_full && seen_short, "lengths should spread over [1, max_len]");
+    }
+
+    #[test]
+    #[should_panic(expected = "absurd")]
+    fn mean_gap_beyond_bound_is_rejected() {
+        LoadGen::new(1, 4, MAX_MEAN_GAP + 1, 8, 64);
+    }
+
+    #[test]
+    fn max_mean_gap_keeps_arrivals_monotone() {
+        // regression for the `2 * mean_gap + 1` / `clock +=` wrap: at
+        // the largest admitted gap the clock must still only move
+        // forward (saturating adds, no u64 wrap-around)
+        let mut g = LoadGen::new(5, 50, MAX_MEAN_GAP, 8, 64);
+        let mut last = 0u64;
+        while let Some(r) = g.next_request() {
+            assert!(r.arrival_tick >= last, "clock wrapped: {} < {last}", r.arrival_tick);
+            last = r.arrival_tick;
+        }
+        assert!(last > 0 && last < u64::MAX);
+    }
+
+    #[test]
+    fn uniform_scenario_matches_the_default_constructor() {
+        let collect = |g: &mut LoadGen| -> Vec<Request> {
+            std::iter::from_fn(|| g.next_request()).collect()
+        };
+        let a = collect(&mut LoadGen::new(7, 20, 2, 8, 64));
+        let b = collect(&mut LoadGen::with_scenario(7, 20, 2, 8, 64, Scenario::Uniform));
+        assert_eq!(a, b);
+    }
+
+    fn heavy_spec() -> HeavySpec {
+        // short phases so a few hundred requests cross many of them
+        HeavySpec { phase_len: 16, ..HeavySpec::default() }
+    }
+
+    #[test]
+    fn heavy_load_is_deterministic_and_well_formed() {
+        let collect = || -> Vec<Request> {
+            let mut g = LoadGen::with_scenario(21, 300, 2, 8, 64, Scenario::Heavy(heavy_spec()));
+            std::iter::from_fn(|| g.next_request()).collect()
+        };
+        let reqs = collect();
+        assert_eq!(reqs, collect(), "heavy load is a pure function of the seed");
+        let mut last = 0u64;
+        let mut rows_seen = [0usize; 3];
+        let (mut full_fills, mut short_fills) = (0usize, 0usize);
+        for r in &reqs {
+            assert!(r.arrival_tick >= last, "arrivals must be non-decreasing");
+            last = r.arrival_tick;
+            assert!(ROW_CHOICES.contains(&r.rows));
+            rows_seen[ROW_CHOICES.iter().position(|&c| c == r.rows).unwrap()] += 1;
+            assert_eq!(r.src.len(), r.rows * 8);
+            for row in r.src.chunks(8) {
+                assert!(row[0] >= 3, "every row starts with content");
+                assert!(row.iter().all(|&t| t == PAD || (3..64).contains(&t)));
+                let fill = row.iter().filter(|&&t| t != PAD).count();
+                full_fills += (fill == 8) as usize;
+                short_fills += (fill == 1) as usize;
+            }
+        }
+        // simulated for seed 21: 204/73/23 row-count split, 7 full and
+        // 408 minimal fills over 442 rows -- the mix and the Pareto tail
+        // both actually fire
+        assert!(rows_seen.iter().all(|&c| c > 0), "row mix covers {ROW_CHOICES:?}: {rows_seen:?}");
+        assert!(full_fills > 0 && short_fills > 0, "fills must spread: {full_fills}/{short_fills}");
+    }
+
+    #[test]
+    fn flash_phases_compress_arrivals_without_touching_content() {
+        let drain = |fw: f64| -> Vec<Request> {
+            let spec = HeavySpec { flash_weight: fw, ..heavy_spec() };
+            let mut g = LoadGen::with_scenario(21, 300, 2, 8, 64, Scenario::Heavy(spec));
+            std::iter::from_fn(|| g.next_request()).collect()
+        };
+        let calm = drain(0.0);
+        let flash = drain(1.0);
+        assert!(
+            flash.last().unwrap().arrival_tick < calm.last().unwrap().arrival_tick,
+            "all-flash traffic must arrive compressed"
+        );
+        // the phase knob only touches gaps: rows and content are drawn
+        // from their own streams and stay identical
+        for (c, f) in calm.iter().zip(&flash) {
+            assert_eq!(c.rows, f.rows);
+            assert_eq!(c.src, f.src);
+        }
     }
 
     #[test]

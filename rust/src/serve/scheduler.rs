@@ -15,6 +15,22 @@
 //!   ticks (a fixed dispatch cost amortized over rows -- the same shape
 //!   as the paper's per-step all-to-all cost, which is why batching pays).
 //!
+//! The loop itself is a *streaming fold*: the crate-private `run_core`
+//! owns only the bounded queue plus the single in-flight micro-batch and
+//! emits `ServeEvent`s in non-decreasing tick order to a caller-supplied
+//! sink. [`serve`] is the collecting sink (every session + output, the
+//! seed behaviour); `serve::soak` folds the same stream into windowed
+//! summaries so a million-request run costs O(windows) memory, not
+//! O(requests).
+//!
+//! Overload has a second valve beyond admission control: when the queue
+//! depth at dispatch reaches `fallback_depth`, the batch is decoded via
+//! [`Backend::decode_batch_local`] -- expert dispatch forced local,
+//! skipping the all-to-all, exactly the serving-time analogue of the
+//! paper's gating dropout -- and charged the (cheaper) fallback tick
+//! costs. `fallback_depth = 0` disables the valve and the loop is
+//! bit-identical to the pre-fallback scheduler.
+//!
 //! Determinism: the load is a pure function of the seed, the event order
 //! is a pure function of the load and the knobs, and the decoded tokens
 //! are bit-identical at any thread count (the `decode_batch` contract),
@@ -39,49 +55,102 @@ pub struct ServeReport {
     pub outputs: Vec<(usize, Vec<i32>)>,
 }
 
-/// Run the micro-batching serve loop over `cfg`'s synthetic load.
-pub fn serve(backend: &dyn Backend, cfg: &ServeConfig) -> BackendResult<ServeReport> {
-    let dm = backend.manifest().dims.clone();
+/// One scheduler occurrence, emitted in non-decreasing virtual-tick
+/// order (rejections stamp their arrival tick, dispatches the dispatch
+/// tick, completions the finish tick -- the loop defers completion
+/// emission until the clock actually reaches the batch's finish).
+#[derive(Debug, Clone)]
+pub(crate) enum ServeEvent {
+    /// Admission failed: the queue was at capacity when the request
+    /// arrived (`session.arrival_tick` is the stamp).
+    Rejected { session: Session },
+    /// A micro-batch left the queue at `tick`. `depth` is the queue
+    /// depth just before the take (what the fallback valve examined);
+    /// `fallback` when local-expert decode was forced.
+    Dispatched { tick: u64, rows: u64, service_ticks: u64, fallback: bool, depth: usize },
+    /// A request finished decoding (`session.done_tick` is the stamp).
+    /// Within a batch, completions arrive in FIFO = id order.
+    Completed { session: Session, tokens: Vec<i32> },
+}
+
+/// What the core loop knows at the end that no event carries.
+pub(crate) struct LoopStats {
+    pub batches: u64,
+    pub end_tick: u64,
+}
+
+/// The event loop shared by [`serve`] and `serve::soak`: drains `gen`
+/// through the admission gate and micro-batcher, calling `emit` for
+/// every rejection, dispatch, and completion. Holds O(queue_cap +
+/// max_batch) state regardless of request count.
+pub(crate) fn run_core(
+    backend: &dyn Backend,
+    cfg: &ServeConfig,
+    gen: &mut LoadGen,
+    emit: &mut dyn FnMut(ServeEvent),
+) -> BackendResult<LoopStats> {
     // clamp like RequestQueue does for queue_cap: max_batch = 0 would
     // dispatch empty batches forever without ever draining the queue
     let max_batch = cfg.max_batch.max(1);
-    let mut gen = LoadGen::new(cfg.seed, cfg.n_requests, cfg.mean_gap_ticks, dm.max_len, dm.vocab);
     let mut queue = RequestQueue::new(cfg.queue_cap);
-    let mut sessions: Vec<Session> = Vec::with_capacity(cfg.n_requests);
-    let mut outputs: Vec<(usize, Vec<i32>)> = Vec::new();
     let mut pending = gen.next_request();
     let mut now = 0u64;
     let mut busy_until = 0u64;
     let mut batches = 0u64;
+    // the in-flight batch's finished sessions, held until `now` reaches
+    // `busy_until` so the emitted stream stays monotone in tick: later
+    // rejections and dispatches would otherwise carry earlier stamps
+    let mut inflight: Vec<(Session, Vec<i32>)> = Vec::new();
 
     loop {
         // Admit everything that has arrived by `now` (in arrival = id
-        // order, so `sessions[id]` indexes directly).
+        // order).
         while pending.as_ref().is_some_and(|r| r.arrival_tick <= now) {
             let r = pending.take().unwrap();
             let (id, rows, at) = (r.id, r.rows, r.arrival_tick);
-            match queue.offer(r) {
-                Ok(()) => sessions.push(Session::queued(id, rows, at)),
-                Err(_dropped) => sessions.push(Session::rejected(id, rows, at)),
+            if queue.offer(r).is_err() {
+                emit(ServeEvent::Rejected { session: Session::rejected(id, rows, at) });
             }
             pending = gen.next_request();
         }
 
         let engine_free = now >= busy_until;
+        // The clock has caught up with the in-flight batch: its
+        // completions are now the past, flush them before dispatching
+        // anything new.
+        if engine_free && !inflight.is_empty() {
+            for (session, tokens) in inflight.drain(..) {
+                emit(ServeEvent::Completed { session, tokens });
+            }
+        }
+
         if engine_free && !queue.is_empty() {
             let deadline = queue.front_arrival().unwrap().saturating_add(cfg.max_wait_ticks);
             let flush = pending.is_none(); // no more load: waiting gains nothing
             if queue.len() >= max_batch || now >= deadline || flush {
+                let depth = queue.len();
+                let fallback = cfg.fallback_depth > 0 && depth >= cfg.fallback_depth;
                 let batch = queue.take(max_batch);
                 let srcs: Vec<&[i32]> = batch.iter().map(|r| r.src.as_slice()).collect();
-                let outs = backend.decode_batch(&srcs)?;
+                let outs = if fallback {
+                    backend.decode_batch_local(&srcs)?
+                } else {
+                    backend.decode_batch(&srcs)?
+                };
                 let rows: u64 = batch.iter().map(|r| r.rows as u64).sum();
-                busy_until = now + (cfg.batch_ticks + rows * cfg.row_ticks).max(1);
-                for (r, toks) in batch.iter().zip(outs) {
-                    debug_assert_eq!(sessions[r.id].id, r.id);
-                    sessions[r.id].dispatch(now, batches);
-                    sessions[r.id].complete(busy_until, toks.len() as u64);
-                    outputs.push((r.id, toks));
+                let (bt, rt) = if fallback {
+                    (cfg.fallback_batch_ticks, cfg.fallback_row_ticks)
+                } else {
+                    (cfg.batch_ticks, cfg.row_ticks)
+                };
+                let service_ticks = (bt + rows * rt).max(1);
+                busy_until = now + service_ticks;
+                emit(ServeEvent::Dispatched { tick: now, rows, service_ticks, fallback, depth });
+                for (r, toks) in batch.into_iter().zip(outs) {
+                    let mut s = Session::queued(r.id, r.rows, r.arrival_tick);
+                    s.dispatch(now, batches);
+                    s.complete(busy_until, toks.len() as u64);
+                    inflight.push((s, toks));
                 }
                 batches += 1;
                 continue; // engine is busy now; fall through to advance time
@@ -107,10 +176,33 @@ pub fn serve(backend: &dyn Backend, cfg: &ServeConfig) -> BackendResult<ServeRep
         }
         now = next;
     }
+    debug_assert!(inflight.is_empty(), "loop exited with an undelivered batch");
+    Ok(LoopStats { batches, end_tick: now })
+}
 
-    outputs.sort_unstable_by_key(|o| o.0);
+/// Run the micro-batching serve loop over `cfg`'s synthetic load,
+/// collecting every session and output (the O(requests) view; see
+/// `serve::soak` for the O(windows) fold over the same core).
+pub fn serve(backend: &dyn Backend, cfg: &ServeConfig) -> BackendResult<ServeReport> {
+    let dm = backend.manifest().dims.clone();
+    let mut gen = LoadGen::new(cfg.seed, cfg.n_requests, cfg.mean_gap_ticks, dm.max_len, dm.vocab);
+    let mut sessions: Vec<Option<Session>> = vec![None; cfg.n_requests];
+    let mut outputs: Vec<(usize, Vec<i32>)> = Vec::new();
+    let stats = run_core(backend, cfg, &mut gen, &mut |ev| match ev {
+        ServeEvent::Rejected { session } => sessions[session.id] = Some(session),
+        ServeEvent::Completed { session, tokens } => {
+            outputs.push((session.id, tokens));
+            sessions[session.id] = Some(session);
+        }
+        ServeEvent::Dispatched { .. } => {}
+    })?;
+    let sessions: Vec<Session> = sessions
+        .into_iter()
+        .map(|s| s.expect("every offered request ends rejected or completed"))
+        .collect();
+    outputs.sort_unstable_by_key(|o| o.0); // already sorted: FIFO completes in id order
     let hash = output_hash(&outputs);
-    let summary = ServeSummary::from_sessions(&sessions, batches, now, hash);
+    let summary = ServeSummary::from_sessions(&sessions, stats.batches, stats.end_tick, hash);
     Ok(ServeReport { summary, sessions, outputs })
 }
 
@@ -151,6 +243,7 @@ mod tests {
             batch_ticks: 4,
             row_ticks: 1,
             seed: 11,
+            ..ServeConfig::default()
         }
     }
 
@@ -161,6 +254,7 @@ mod tests {
         assert_eq!(r.summary.offered, 24);
         assert_eq!(r.summary.completed + r.summary.rejected, 24);
         assert_eq!(r.summary.rejected, 0, "cap 64 never sheds 24 requests");
+        assert_eq!(r.summary.in_flight, 0, "the loop drains");
         assert_eq!(r.summary.tokens_out, r.summary.completed * 4);
         assert_eq!(r.outputs.len(), r.summary.completed as usize);
         assert!(r.summary.batches > 0 && r.summary.batches <= 24);
@@ -219,6 +313,43 @@ mod tests {
         assert_eq!(a.summary, b.summary);
         assert_eq!(a.sessions, b.sessions);
         assert_eq!(a.outputs, b.outputs);
+    }
+
+    /// The raw event stream must be monotone in tick stamp -- the
+    /// contract the windowed soak fold depends on -- and conserve
+    /// requests exactly.
+    #[test]
+    fn event_stream_is_tick_monotone_and_conserving() {
+        let be = tiny_backend();
+        let c = cfg(32, 4, 8);
+        let dm = be.manifest().dims.clone();
+        let mut gen = LoadGen::new(c.seed, c.n_requests, c.mean_gap_ticks, dm.max_len, dm.vocab);
+        let mut last = 0u64;
+        let (mut rejected, mut completed, mut dispatched_rows, mut row_sum) =
+            (0u64, 0u64, 0u64, 0u64);
+        run_core(&be, &c, &mut gen, &mut |ev| {
+            let stamp = match &ev {
+                ServeEvent::Rejected { session } => session.arrival_tick,
+                ServeEvent::Dispatched { tick, rows, .. } => {
+                    dispatched_rows += rows;
+                    *tick
+                }
+                ServeEvent::Completed { session, .. } => session.done_tick,
+            };
+            assert!(stamp >= last, "event stamp went backwards: {stamp} < {last}");
+            last = stamp;
+            match ev {
+                ServeEvent::Rejected { .. } => rejected += 1,
+                ServeEvent::Completed { session, .. } => {
+                    completed += 1;
+                    row_sum += session.rows as u64;
+                }
+                ServeEvent::Dispatched { .. } => {}
+            }
+        })
+        .unwrap();
+        assert_eq!(completed + rejected, 32, "every request resolves exactly once");
+        assert_eq!(dispatched_rows, row_sum, "dispatched rows == completed session rows");
     }
 
     /// Every dispatch must have a reason: the batch was full, the oldest

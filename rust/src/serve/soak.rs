@@ -1,0 +1,579 @@
+//! The heavy-traffic soak harness: the scheduler core folded into
+//! windowed summaries with O(windows) memory, SLO assertions, and the
+//! overload fallback valve.
+//!
+//! `serve()` collects every session and output -- the right shape for
+//! correctness suites, and exactly the wrong one for a million-request
+//! soak (a Vec of a million sessions plus every decoded token, sorted at
+//! the end). [`soak`] drives the *same* crate-private `run_core` event
+//! loop through a streaming fold instead:
+//!
+//! * events arrive in non-decreasing tick order (the core's contract),
+//!   so a single current-window accumulator suffices: when an event
+//!   lands past the window boundary, the accumulator is sealed into a
+//!   [`WindowSummary`] and reset. Windows nobody touched are skipped,
+//!   not materialised (a `mean_gap` of 2^40 must not allocate 2^30
+//!   empty windows) -- each summary carries its window index, so gaps
+//!   are visible.
+//! * latency quantiles come from fixed-bucket [`TickHistogram`]s (two
+//!   per window, reused; two global), not from collected samples. With
+//!   `hist_width == 1` and an in-range load the global quantiles are
+//!   bit-equal to `serve()`'s sort-based ones -- the parity
+//!   `rust/tests/soak.rs` pins.
+//! * the output fingerprint folds incrementally ([`OutputHash`]) in
+//!   completion order, which FIFO scheduling makes request-id order, so
+//!   it equals `serve()`'s id-sorted
+//!   [`output_hash`](super::metrics::output_hash).
+//!
+//! Per-window SLOs (`max_shed_rate`, `max_p99_total_ticks`) are checked
+//! at seal time and reported as typed [`SloViolation`]s rather than
+//! panics: the overloaded-config tests assert they fire, the CLI prints
+//! them, and callers decide whether they are fatal.
+//!
+//! Attribution rules (all deterministic, all documented here because
+//! they are the windowing semantics): a rejection lands in the window
+//! of its arrival tick (rejection *is* resolution); a completion in the
+//! window of its finish tick; a dispatch -- rows, busy ticks, queue
+//! depth, fallback flag -- in the window of its dispatch tick. Service
+//! that crosses a boundary is charged entirely to the dispatch window,
+//! so a window's `busy_ticks` may exceed `window_ticks`.
+
+use crate::runtime::{Backend, BackendResult};
+
+use super::metrics::{OutputHash, ServeSummary, TickHistogram};
+use super::queue::{LoadGen, Scenario};
+use super::scheduler::{run_core, ServeEvent};
+use super::ServeConfig;
+
+/// Knobs of one soak run: the serve loop's knobs plus the load scenario,
+/// the windowing grid, and the per-window SLOs.
+#[derive(Debug, Clone)]
+pub struct SoakConfig {
+    /// The scheduler knobs (including the fallback valve's
+    /// `fallback_depth` and tick costs).
+    pub serve: ServeConfig,
+    /// The load process (default: heavy traffic -- that is the point).
+    pub scenario: Scenario,
+    /// Width of one summary window in virtual ticks.
+    pub window_ticks: u64,
+    /// Buckets per latency histogram (per-window and global).
+    pub hist_buckets: usize,
+    /// Ticks per histogram bucket (1 = exact up to `hist_buckets` ticks).
+    pub hist_width: u64,
+    /// Per-window SLO: sealed windows with `rejected / resolved` above
+    /// this record a [`SloViolation::ShedRate`]. `>= 1.0` disables.
+    pub max_shed_rate: f64,
+    /// Per-window SLO: sealed windows whose p99 end-to-end latency
+    /// exceeds this record a [`SloViolation::P99Total`]. `0` disables.
+    pub max_p99_total_ticks: u64,
+}
+
+impl Default for SoakConfig {
+    fn default() -> SoakConfig {
+        SoakConfig {
+            serve: ServeConfig::default(),
+            scenario: Scenario::Heavy(super::queue::HeavySpec::default()),
+            window_ticks: 1024,
+            hist_buckets: 512,
+            hist_width: 4,
+            max_shed_rate: 1.0,
+            max_p99_total_ticks: 0,
+        }
+    }
+}
+
+/// One sealed window of the soak fold. Every field is an integer so two
+/// runs of the same seed compare `==` field-for-field.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowSummary {
+    /// Window index on the tick grid (gaps mean untouched windows).
+    pub window: u64,
+    /// First tick of the window (`window * window_ticks`).
+    pub start_tick: u64,
+    /// Requests completing in this window.
+    pub completed: u64,
+    /// Requests shed in this window (stamped at arrival).
+    pub rejected: u64,
+    /// Micro-batches dispatched in this window.
+    pub batches: u64,
+    /// Dispatches the fallback valve forced local.
+    pub fallback_batches: u64,
+    /// Rows across this window's dispatches.
+    pub dispatched_rows: u64,
+    /// Tokens produced by this window's completions.
+    pub tokens_out: u64,
+    /// Engine-busy ticks charged to this window's dispatches.
+    pub busy_ticks: u64,
+    /// Deepest pre-dispatch queue seen at this window's dispatches.
+    pub max_queue_depth: u64,
+    pub p50_queue_ticks: u64,
+    pub p99_queue_ticks: u64,
+    pub p50_total_ticks: u64,
+    pub p99_total_ticks: u64,
+}
+
+impl WindowSummary {
+    /// Requests that reached a terminal state in this window.
+    pub fn resolved(&self) -> u64 {
+        self.completed + self.rejected
+    }
+
+    /// Shed fraction among this window's resolved requests.
+    pub fn shed_rate(&self) -> f64 {
+        self.rejected as f64 / self.resolved().max(1) as f64
+    }
+
+    /// Engine-busy fraction of the window (may exceed 1.0: service
+    /// crossing the boundary is charged to the dispatch window).
+    pub fn occupancy(&self, window_ticks: u64) -> f64 {
+        self.busy_ticks as f64 / window_ticks.max(1) as f64
+    }
+
+    /// Tokens per tick of window width.
+    pub fn tokens_per_tick(&self, window_ticks: u64) -> f64 {
+        self.tokens_out as f64 / window_ticks.max(1) as f64
+    }
+}
+
+/// A per-window SLO breach. Integer payloads (the shed rate in
+/// thousandths) so reports stay `Eq`-comparable across runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SloViolation {
+    /// `rejected / resolved` exceeded `max_shed_rate` in `window`.
+    ShedRate { window: u64, rate_milli: u64 },
+    /// Windowed p99 end-to-end latency exceeded `max_p99_total_ticks`.
+    P99Total { window: u64, p99_ticks: u64 },
+}
+
+/// Everything one soak run produced: the global summary (same type the
+/// collecting path reports), the sealed windows, and the SLO breaches.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SoakReport {
+    pub summary: ServeSummary,
+    pub windows: Vec<WindowSummary>,
+    pub violations: Vec<SloViolation>,
+    /// Dispatches the pressure valve forced local, whole run.
+    pub fallback_batches: u64,
+    /// Deepest pre-dispatch queue seen anywhere in the run.
+    pub peak_queue_depth: u64,
+}
+
+impl SoakReport {
+    /// Print the run summary plus up to `max_windows` windows (head and
+    /// tail; soaks can seal thousands).
+    pub fn print(&self, cfg: &SoakConfig, max_windows: usize) {
+        self.summary.print();
+        println!(
+            "fallback batches: {} / {}   peak queue depth: {}   violations: {}",
+            self.fallback_batches,
+            self.summary.batches,
+            self.peak_queue_depth,
+            self.violations.len()
+        );
+        let mut t = crate::benchkit::Table::new(&[
+            "window",
+            "resolved",
+            "shed%",
+            "batches",
+            "fallback",
+            "occupancy",
+            "p50/p99 total",
+            "depth",
+        ]);
+        let head = max_windows.div_ceil(2).min(self.windows.len());
+        let tail_start = self.windows.len().saturating_sub(max_windows - head).max(head);
+        let mut rows: Vec<&WindowSummary> = self.windows[..head].iter().collect();
+        rows.extend(&self.windows[tail_start..]);
+        for w in rows {
+            t.row(&[
+                w.window.to_string(),
+                w.resolved().to_string(),
+                format!("{:.1}", 100.0 * w.shed_rate()),
+                w.batches.to_string(),
+                w.fallback_batches.to_string(),
+                format!("{:.2}", w.occupancy(cfg.window_ticks)),
+                format!("{}/{}", w.p50_total_ticks, w.p99_total_ticks),
+                w.max_queue_depth.to_string(),
+            ]);
+        }
+        t.print();
+        if self.windows.len() > max_windows {
+            println!("({} of {} windows shown)", max_windows, self.windows.len());
+        }
+        for v in self.violations.iter().take(8) {
+            match v {
+                SloViolation::ShedRate { window, rate_milli } => {
+                    println!("SLO: window {window} shed {}.{}%", rate_milli / 10, rate_milli % 10)
+                }
+                SloViolation::P99Total { window, p99_ticks } => {
+                    println!("SLO: window {window} p99 latency {p99_ticks} ticks")
+                }
+            }
+        }
+    }
+}
+
+/// The streaming fold over the scheduler event stream.
+struct Fold {
+    window_ticks: u64,
+    max_shed_rate: f64,
+    max_p99_total_ticks: u64,
+    // current window accumulator (reset at each seal)
+    idx: u64,
+    events: u64,
+    completed: u64,
+    rejected: u64,
+    batches: u64,
+    fallback_batches: u64,
+    dispatched_rows: u64,
+    tokens_out: u64,
+    busy_ticks: u64,
+    max_depth: u64,
+    queue_hist: TickHistogram,
+    total_hist: TickHistogram,
+    // whole-run state
+    windows: Vec<WindowSummary>,
+    violations: Vec<SloViolation>,
+    g_completed: u64,
+    g_rejected: u64,
+    g_rows: u64,
+    g_tokens: u64,
+    g_fallback: u64,
+    peak_depth: u64,
+    g_queue_hist: TickHistogram,
+    g_total_hist: TickHistogram,
+    hash: OutputHash,
+}
+
+impl Fold {
+    fn new(cfg: &SoakConfig) -> Fold {
+        Fold {
+            window_ticks: cfg.window_ticks,
+            max_shed_rate: cfg.max_shed_rate,
+            max_p99_total_ticks: cfg.max_p99_total_ticks,
+            idx: 0,
+            events: 0,
+            completed: 0,
+            rejected: 0,
+            batches: 0,
+            fallback_batches: 0,
+            dispatched_rows: 0,
+            tokens_out: 0,
+            busy_ticks: 0,
+            max_depth: 0,
+            queue_hist: TickHistogram::new(cfg.hist_buckets, cfg.hist_width),
+            total_hist: TickHistogram::new(cfg.hist_buckets, cfg.hist_width),
+            windows: Vec::new(),
+            violations: Vec::new(),
+            g_completed: 0,
+            g_rejected: 0,
+            g_rows: 0,
+            g_tokens: 0,
+            g_fallback: 0,
+            peak_depth: 0,
+            g_queue_hist: TickHistogram::new(cfg.hist_buckets, cfg.hist_width),
+            g_total_hist: TickHistogram::new(cfg.hist_buckets, cfg.hist_width),
+            hash: OutputHash::new(),
+        }
+    }
+
+    /// Seal the current window into a [`WindowSummary`], check its SLOs,
+    /// and reset the accumulator.
+    fn seal(&mut self) {
+        let w = WindowSummary {
+            window: self.idx,
+            start_tick: self.idx * self.window_ticks,
+            completed: self.completed,
+            rejected: self.rejected,
+            batches: self.batches,
+            fallback_batches: self.fallback_batches,
+            dispatched_rows: self.dispatched_rows,
+            tokens_out: self.tokens_out,
+            busy_ticks: self.busy_ticks,
+            max_queue_depth: self.max_depth,
+            p50_queue_ticks: self.queue_hist.quantile(0.5),
+            p99_queue_ticks: self.queue_hist.quantile(0.99),
+            p50_total_ticks: self.total_hist.quantile(0.5),
+            p99_total_ticks: self.total_hist.quantile(0.99),
+        };
+        if self.max_shed_rate < 1.0 && w.resolved() > 0 && w.shed_rate() > self.max_shed_rate {
+            self.violations.push(SloViolation::ShedRate {
+                window: w.window,
+                rate_milli: w.rejected * 1000 / w.resolved(),
+            });
+        }
+        if self.max_p99_total_ticks > 0
+            && w.completed > 0
+            && w.p99_total_ticks > self.max_p99_total_ticks
+        {
+            self.violations
+                .push(SloViolation::P99Total { window: w.window, p99_ticks: w.p99_total_ticks });
+        }
+        self.windows.push(w);
+        self.events = 0;
+        self.completed = 0;
+        self.rejected = 0;
+        self.batches = 0;
+        self.fallback_batches = 0;
+        self.dispatched_rows = 0;
+        self.tokens_out = 0;
+        self.busy_ticks = 0;
+        self.max_depth = 0;
+        self.queue_hist.reset();
+        self.total_hist.reset();
+    }
+
+    /// Move the accumulator to `stamp`'s window, sealing the old one if
+    /// it saw any events (untouched windows are skipped, not stored).
+    fn roll(&mut self, stamp: u64) {
+        let w = stamp / self.window_ticks;
+        debug_assert!(w >= self.idx || self.events == 0, "event stream regressed across windows");
+        if w != self.idx {
+            if self.events > 0 {
+                self.seal();
+            }
+            self.idx = w;
+        }
+    }
+
+    fn on_event(&mut self, ev: ServeEvent) {
+        match ev {
+            ServeEvent::Rejected { session } => {
+                self.roll(session.arrival_tick);
+                self.events += 1;
+                self.rejected += 1;
+                self.g_rejected += 1;
+            }
+            ServeEvent::Dispatched { tick, rows, service_ticks, fallback, depth } => {
+                self.roll(tick);
+                self.events += 1;
+                self.batches += 1;
+                self.fallback_batches += fallback as u64;
+                self.dispatched_rows += rows;
+                self.busy_ticks += service_ticks;
+                self.max_depth = self.max_depth.max(depth as u64);
+                self.g_fallback += fallback as u64;
+                self.peak_depth = self.peak_depth.max(depth as u64);
+            }
+            ServeEvent::Completed { session, tokens } => {
+                self.roll(session.done_tick);
+                self.events += 1;
+                self.completed += 1;
+                self.tokens_out += session.tokens_out;
+                self.queue_hist.record(session.queue_ticks());
+                self.total_hist.record(session.total_ticks());
+                self.g_completed += 1;
+                self.g_rows += session.rows as u64;
+                self.g_tokens += session.tokens_out;
+                self.g_queue_hist.record(session.queue_ticks());
+                self.g_total_hist.record(session.total_ticks());
+                self.hash.fold(session.id, &tokens);
+            }
+        }
+    }
+}
+
+/// Run the soak: `cfg.scenario`'s load through the shared scheduler
+/// core, folded into windows. Memory is O(`hist_buckets` + sealed
+/// windows + queue), independent of `n_requests`.
+pub fn soak(backend: &dyn Backend, cfg: &SoakConfig) -> BackendResult<SoakReport> {
+    assert!(cfg.window_ticks > 0, "soak wants a positive window width");
+    let dm = backend.manifest().dims.clone();
+    let mut gen = LoadGen::with_scenario(
+        cfg.serve.seed,
+        cfg.serve.n_requests,
+        cfg.serve.mean_gap_ticks,
+        dm.max_len,
+        dm.vocab,
+        cfg.scenario.clone(),
+    );
+    let mut fold = Fold::new(cfg);
+    let stats = run_core(backend, &cfg.serve, &mut gen, &mut |ev| fold.on_event(ev))?;
+    if fold.events > 0 {
+        fold.seal();
+    }
+    let summary = ServeSummary {
+        // the loop drains: every offered request resolved, none in flight
+        offered: fold.g_completed + fold.g_rejected,
+        completed: fold.g_completed,
+        rejected: fold.g_rejected,
+        in_flight: 0,
+        batches: stats.batches,
+        dispatched_rows: fold.g_rows,
+        tokens_out: fold.g_tokens,
+        total_ticks: stats.end_tick,
+        p50_queue_ticks: fold.g_queue_hist.quantile(0.5),
+        p99_queue_ticks: fold.g_queue_hist.quantile(0.99),
+        p50_total_ticks: fold.g_total_hist.quantile(0.5),
+        p99_total_ticks: fold.g_total_hist.quantile(0.99),
+        output_hash: fold.hash.finish(),
+    };
+    Ok(SoakReport {
+        summary,
+        windows: fold.windows,
+        violations: fold.violations,
+        fallback_batches: fold.g_fallback,
+        peak_queue_depth: fold.peak_depth,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BOS;
+    use crate::runtime::{ModelDims, StubBackend};
+    use crate::serve::queue::HeavySpec;
+
+    fn stub() -> StubBackend {
+        StubBackend::new(ModelDims {
+            vocab: 64,
+            d_model: 8,
+            d_ff: 12,
+            n_experts: 2,
+            enc_blocks: 1,
+            dec_blocks: 0,
+            max_len: 8,
+            batch_rows: 2,
+            bos: BOS,
+            param_count: 0,
+        })
+    }
+
+    fn heavy_cfg(n: usize) -> SoakConfig {
+        SoakConfig {
+            serve: ServeConfig {
+                n_requests: n,
+                mean_gap_ticks: 2,
+                max_batch: 8,
+                max_wait_ticks: 4,
+                queue_cap: 32,
+                batch_ticks: 4,
+                row_ticks: 1,
+                seed: 21,
+                ..ServeConfig::default()
+            },
+            scenario: Scenario::Heavy(HeavySpec { phase_len: 16, ..HeavySpec::default() }),
+            window_ticks: 64,
+            hist_buckets: 256,
+            hist_width: 1,
+            ..SoakConfig::default()
+        }
+    }
+
+    /// The all-at-tick-0 overload: `mean_gap 0` makes every gap draw
+    /// `below(1) == 0`, so all requests arrive at tick 0 *regardless of
+    /// seed* -- with `queue_cap 8`, exactly `n - 8` are shed in window
+    /// 0. SLO firing is structural, not simulated.
+    fn overload_cfg() -> SoakConfig {
+        SoakConfig {
+            serve: ServeConfig {
+                n_requests: 512,
+                mean_gap_ticks: 0,
+                max_batch: 4,
+                max_wait_ticks: 4,
+                queue_cap: 8,
+                batch_ticks: 16,
+                row_ticks: 1,
+                seed: 3,
+                ..ServeConfig::default()
+            },
+            scenario: Scenario::Uniform,
+            window_ticks: 64,
+            hist_buckets: 64,
+            hist_width: 1,
+            max_shed_rate: 0.25,
+            max_p99_total_ticks: 16,
+        }
+    }
+
+    #[test]
+    fn windows_conserve_and_repeat_runs_are_identical() {
+        let be = stub();
+        let a = soak(&be, &heavy_cfg(600)).unwrap();
+        let b = soak(&be, &heavy_cfg(600)).unwrap();
+        assert_eq!(a, b, "soak is a pure function of the seed");
+        assert_eq!(a.summary.offered, 600);
+        assert_eq!(
+            a.summary.completed + a.summary.rejected + a.summary.in_flight,
+            a.summary.offered,
+            "conservation"
+        );
+        let wc: u64 = a.windows.iter().map(|w| w.completed).sum();
+        let wr: u64 = a.windows.iter().map(|w| w.rejected).sum();
+        let wb: u64 = a.windows.iter().map(|w| w.batches).sum();
+        let wrows: u64 = a.windows.iter().map(|w| w.dispatched_rows).sum();
+        let wtok: u64 = a.windows.iter().map(|w| w.tokens_out).sum();
+        assert_eq!(wc, a.summary.completed, "window completions partition the run");
+        assert_eq!(wr, a.summary.rejected);
+        assert_eq!(wb, a.summary.batches);
+        assert_eq!(wrows, a.summary.dispatched_rows, "dispatched rows == completed rows");
+        assert_eq!(wtok, a.summary.tokens_out);
+        // window indices strictly increase (gaps allowed, duplicates not)
+        for pair in a.windows.windows(2) {
+            assert!(pair[1].window > pair[0].window);
+        }
+        assert!(
+            a.windows.len() as u64 <= a.summary.total_ticks / 64 + 1,
+            "at most one sealed window per grid slot"
+        );
+        a.print(&heavy_cfg(600), 8); // smoke: no panic
+    }
+
+    #[test]
+    fn overloaded_config_fires_both_slos() {
+        let be = stub();
+        let r = soak(&be, &overload_cfg()).unwrap();
+        assert_eq!(r.summary.rejected, 512 - 8, "cap 8, all at tick 0: 504 shed");
+        assert!(
+            r.violations.iter().any(|v| matches!(v, SloViolation::ShedRate { window: 0, .. })),
+            "shed SLO must fire: {:?}",
+            r.violations
+        );
+        assert!(
+            r.violations.iter().any(|v| matches!(v, SloViolation::P99Total { .. })),
+            "p99 SLO must fire: {:?}",
+            r.violations
+        );
+        assert_eq!(r.peak_queue_depth, 8);
+    }
+
+    #[test]
+    fn fallback_valve_fires_under_pressure_and_changes_decodes() {
+        let be = stub();
+        let base = overload_cfg();
+        let mut with_valve = base.clone();
+        with_valve.serve.fallback_depth = 4;
+        with_valve.serve.fallback_batch_ticks = 1;
+        with_valve.serve.fallback_row_ticks = 1;
+        let a = soak(&be, &base).unwrap();
+        let b = soak(&be, &with_valve).unwrap();
+        assert_eq!(a.fallback_batches, 0, "no valve, no fallback");
+        assert!(b.fallback_batches > 0, "depth 8 >= threshold 4 must trip the valve");
+        assert_ne!(
+            a.summary.output_hash, b.summary.output_hash,
+            "stub fallback decodes carry the local mark"
+        );
+        assert!(
+            b.summary.total_ticks < a.summary.total_ticks,
+            "cheaper fallback service must finish sooner: {} vs {}",
+            b.summary.total_ticks,
+            a.summary.total_ticks
+        );
+        // same admission decisions either way: the valve acts at
+        // dispatch, after the queue gate
+        assert_eq!(a.summary.rejected, b.summary.rejected);
+    }
+
+    #[test]
+    fn unreachable_threshold_is_bit_identical_to_no_valve() {
+        let be = stub();
+        let base = heavy_cfg(400);
+        let mut unreachable = base.clone();
+        // depth at dispatch is at most queue_cap, so cap + 1 never trips
+        unreachable.serve.fallback_depth = unreachable.serve.queue_cap + 1;
+        let a = soak(&be, &base).unwrap();
+        let b = soak(&be, &unreachable).unwrap();
+        assert_eq!(a, b, "a threshold that never fires must not change one bit");
+        assert_eq!(b.fallback_batches, 0);
+    }
+}

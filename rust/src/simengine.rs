@@ -40,7 +40,9 @@ pub fn simulate_run(
             StepShape { alltoall: d.needs_alltoall(), expert_ffn: d.runs_expert() },
         );
     }
-    let tokens = (workload.tokens_per_rank * n_gpus) as f64 * steps as f64;
+    // exact global batch per step, not the per-rank ceil share x ranks
+    // (padding on remainder ranks costs time but yields no tokens)
+    let tokens = workload.global_tokens as f64 * steps as f64;
     SweepRow {
         n_gpus,
         policy: policy.name(),

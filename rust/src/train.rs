@@ -97,7 +97,8 @@ impl Trainer {
         // Virtual-time workload: paper-shaped model on the configured
         // cluster, scaled to the artifact's layer counts.
         let workload = MoeWorkload {
-            tokens_per_rank: dims.batch_rows * dims.max_len / cfg.n_ranks.max(1),
+            tokens_per_rank: (dims.batch_rows * dims.max_len).div_ceil(cfg.n_ranks.max(1)),
+            global_tokens: dims.batch_rows * dims.max_len,
             d_model: dims.d_model,
             d_ff: dims.d_ff,
             moe_layers: dims.enc_blocks + dims.dec_blocks,

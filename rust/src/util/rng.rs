@@ -86,8 +86,20 @@ impl Rng {
     }
 
     /// Sample an index from unnormalised non-negative weights.
+    ///
+    /// Panics on an empty vector, a negative/non-finite weight, or an
+    /// all-zero total: every one of those used to fall through to
+    /// "return the last index", which silently biased any caller that
+    /// built its weights from live counters (the soak harness's
+    /// phase-mix sampler does exactly that).
     pub fn weighted(&mut self, weights: &[f64]) -> usize {
-        let total: f64 = weights.iter().sum();
+        assert!(!weights.is_empty(), "weighted: empty weight vector");
+        let mut total = 0.0f64;
+        for (i, w) in weights.iter().enumerate() {
+            assert!(w.is_finite() && *w >= 0.0, "weighted: bad weight {w} at index {i}");
+            total += w;
+        }
+        assert!(total > 0.0, "weighted: weights sum to zero");
         let mut u = self.uniform() * total;
         for (i, w) in weights.iter().enumerate() {
             if u < *w {
@@ -95,7 +107,9 @@ impl Rng {
             }
             u -= w;
         }
-        weights.len() - 1
+        // float round-off can leave a sliver of `u` past the last
+        // positive weight; land on it rather than on a zero-weight tail
+        weights.iter().rposition(|&w| w > 0.0).unwrap()
     }
 }
 
@@ -172,5 +186,34 @@ mod tests {
         }
         assert_eq!(counts[1], 0);
         assert!(counts[2] > 8 * counts[0] / 2);
+    }
+
+    #[test]
+    fn weighted_handles_a_zero_weight_tail() {
+        // round-off must never land on a zero-weight index, even when it
+        // sits last (the old code's silent fallthrough target)
+        let mut r = Rng::new(13);
+        let w = [2.0, 5.0, 0.0];
+        for _ in 0..10_000 {
+            assert_ne!(r.weighted(&w), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "empty weight vector")]
+    fn weighted_rejects_empty() {
+        Rng::new(1).weighted(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "weights sum to zero")]
+    fn weighted_rejects_all_zero() {
+        Rng::new(1).weighted(&[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad weight")]
+    fn weighted_rejects_negative() {
+        Rng::new(1).weighted(&[1.0, -0.5]);
     }
 }

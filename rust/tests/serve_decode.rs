@@ -121,7 +121,49 @@ fn serve_cfg() -> ServeConfig {
         batch_ticks: 4,
         row_ticks: 1,
         seed: 9,
+        ..ServeConfig::default()
     }
+}
+
+/// The local-fallback decode path carries the same per-request contract
+/// as the gated one: element `i` of a batched local decode equals the
+/// solo local decode of `srcs[i]`, including across multi-row requests
+/// (the per-request-relative local expert assignment is what makes
+/// batching invisible here too).
+#[test]
+fn decode_batch_local_matches_per_request_local_decode() {
+    for seed in [1u64, 2] {
+        let be = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, seed);
+        let rows = request_rows(seed * 500, 4);
+        let multi: Vec<i32> = rows[0].iter().chain(&rows[1]).copied().collect();
+        let mixed = vec![multi, rows[2].clone(), rows[3].clone()];
+        let srcs: Vec<&[i32]> = mixed.iter().map(|r| r.as_slice()).collect();
+        let batched = be.decode_batch_local(&srcs).unwrap();
+        assert_eq!(batched.len(), mixed.len());
+        for (i, r) in mixed.iter().enumerate() {
+            let solo = be.decode_batch_local(&[r.as_slice()]).unwrap();
+            assert_eq!(
+                batched[i], solo[0],
+                "seed {seed}: local-fallback request {i} diverged from its solo decode"
+            );
+        }
+    }
+}
+
+/// Acceptance: with the pressure threshold set where the queue can never
+/// reach it (depth at dispatch is at most `queue_cap`), the fallback
+/// wiring must leave the whole serve run bit-identical to the valve-off
+/// path -- sessions, outputs, and every summary field.
+#[test]
+fn unreachable_fallback_threshold_leaves_serve_bit_identical() {
+    let be = ReferenceBackend::from_dims("serve-parity", dims(), HYPER, 3);
+    let off = serve::serve(&be, &serve_cfg()).unwrap();
+    let mut armed = serve_cfg();
+    armed.fallback_depth = armed.queue_cap + 1;
+    let on = serve::serve(&be, &armed).unwrap();
+    assert_eq!(off.summary, on.summary, "a threshold that never fires must not change a bit");
+    assert_eq!(off.sessions, on.sessions);
+    assert_eq!(off.outputs, on.outputs);
 }
 
 #[test]

@@ -1,0 +1,248 @@
+//! Soak-harness acceptance suite: the streaming windowed fold at
+//! million-request scale, its parity with the collecting `serve()` path,
+//! the per-window SLO assertions, and the pressure-triggered
+//! local-fallback valve end to end.
+//!
+//! The determinism bar mirrors `rust/tests/serve_decode.rs`: everything
+//! here is a pure function of the seed, so reports are asserted *equal*,
+//! not approximately similar. The parity tests pin the conditions under
+//! which the fold's histogram quantiles are bit-equal to `serve()`'s
+//! sort-based ones (`hist_width == 1`, range wide enough that no sample
+//! clamps) and that the incrementally folded output hash equals the
+//! id-sorted collected one.
+
+use gating_dropout::data::BOS;
+use gating_dropout::runtime::{ModelDims, RefHyper, ReferenceBackend, StubBackend};
+use gating_dropout::serve::{self, HeavySpec, Scenario, ServeConfig, SloViolation, SoakConfig};
+
+const HYPER: RefHyper = RefHyper { lr: 1e-2, warmup: 4.0 };
+
+fn stub() -> StubBackend {
+    StubBackend::new(ModelDims {
+        vocab: 64,
+        d_model: 8,
+        d_ff: 12,
+        n_experts: 2,
+        enc_blocks: 1,
+        dec_blocks: 0,
+        max_len: 8,
+        batch_rows: 2,
+        bos: BOS,
+        param_count: 0,
+    })
+}
+
+fn ref_dims() -> ModelDims {
+    ModelDims {
+        vocab: 128,
+        d_model: 16,
+        d_ff: 24,
+        n_experts: 4,
+        enc_blocks: 1,
+        dec_blocks: 1,
+        max_len: 8,
+        batch_rows: 4,
+        bos: BOS,
+        param_count: 0,
+    }
+}
+
+/// A soak config whose global metrics are exactly comparable to
+/// `serve()`: same Uniform load, width-1 histogram buckets covering far
+/// more ticks than any latency this load can produce (nothing clamps).
+fn parity_cfg(serve: ServeConfig) -> SoakConfig {
+    SoakConfig {
+        serve,
+        scenario: Scenario::Uniform,
+        window_ticks: 64,
+        hist_buckets: 4096,
+        hist_width: 1,
+        ..SoakConfig::default()
+    }
+}
+
+/// The acceptance bar: a 1,000,000-request heavy-traffic run on the
+/// decode-only stub engine, deterministic across repeat runs, with the
+/// fold's footprint bounded by touched windows rather than requests.
+#[test]
+fn million_request_soak_is_deterministic_in_o_windows_memory() {
+    let be = stub();
+    let cfg = SoakConfig {
+        serve: ServeConfig {
+            n_requests: 1_000_000,
+            mean_gap_ticks: 2,
+            max_batch: 8,
+            max_wait_ticks: 4,
+            queue_cap: 64,
+            batch_ticks: 4,
+            row_ticks: 1,
+            seed: 77,
+            ..ServeConfig::default()
+        },
+        scenario: Scenario::Heavy(HeavySpec::default()),
+        window_ticks: 4096,
+        hist_buckets: 512,
+        hist_width: 4,
+        ..SoakConfig::default()
+    };
+    let a = serve::soak(&be, &cfg).unwrap();
+    let b = serve::soak(&be, &cfg).unwrap();
+    assert_eq!(a, b, "repeat-run equality at a million requests");
+    assert_eq!(a.summary.offered, 1_000_000);
+    assert_eq!(a.summary.in_flight, 0, "the loop drains");
+    assert_eq!(
+        a.summary.completed + a.summary.rejected + a.summary.in_flight,
+        a.summary.offered,
+        "conservation"
+    );
+    // O(windows): one sealed summary per *touched* grid slot, and far
+    // fewer slots than requests (the whole point of the fold)
+    assert!(
+        (a.windows.len() as u64) <= a.summary.total_ticks / cfg.window_ticks + 1,
+        "at most one sealed window per grid slot"
+    );
+    assert!(
+        a.windows.len() > 100 && a.windows.len() < 10_000,
+        "windowing must compress a million requests: {} windows",
+        a.windows.len()
+    );
+    // the windows partition the run exactly
+    let wc: u64 = a.windows.iter().map(|w| w.completed).sum();
+    let wr: u64 = a.windows.iter().map(|w| w.rejected).sum();
+    let wb: u64 = a.windows.iter().map(|w| w.batches).sum();
+    let wtok: u64 = a.windows.iter().map(|w| w.tokens_out).sum();
+    assert_eq!(wc, a.summary.completed);
+    assert_eq!(wr, a.summary.rejected);
+    assert_eq!(wb, a.summary.batches);
+    assert_eq!(wtok, a.summary.tokens_out);
+}
+
+/// Satellite: with the valve off, the soak's global summary must equal
+/// the collecting `serve()` path field-for-field -- counts, quantiles,
+/// and the output hash -- on the same Uniform load.
+#[test]
+fn fallback_off_soak_summary_equals_serve_on_the_stub() {
+    let be = stub();
+    let scfg = ServeConfig {
+        n_requests: 500,
+        mean_gap_ticks: 1,
+        max_batch: 8,
+        max_wait_ticks: 4,
+        queue_cap: 32,
+        batch_ticks: 4,
+        row_ticks: 1,
+        seed: 13,
+        ..ServeConfig::default()
+    };
+    let collected = serve::serve(&be, &scfg).unwrap();
+    let folded = serve::soak(&be, &parity_cfg(scfg)).unwrap();
+    assert_eq!(
+        folded.summary, collected.summary,
+        "the streaming fold must reproduce the collecting path exactly"
+    );
+    assert_eq!(folded.fallback_batches, 0);
+    assert!(collected.summary.rejected > 0, "this load should actually shed");
+}
+
+/// Same parity bar through a real transformer backend (the engine
+/// `repro serve` uses), so the fold is pinned against genuine decodes,
+/// not just the stub mixer.
+#[test]
+fn fallback_off_soak_summary_equals_serve_on_the_reference_model() {
+    let be = ReferenceBackend::from_dims("soak-parity", ref_dims(), HYPER, 3);
+    let scfg = ServeConfig {
+        n_requests: 48,
+        mean_gap_ticks: 1,
+        max_batch: 6,
+        max_wait_ticks: 3,
+        queue_cap: 16,
+        batch_ticks: 4,
+        row_ticks: 1,
+        seed: 9,
+        ..ServeConfig::default()
+    };
+    let collected = serve::serve(&be, &scfg).unwrap();
+    let folded = serve::soak(&be, &parity_cfg(scfg)).unwrap();
+    assert_eq!(folded.summary, collected.summary);
+    assert_eq!(folded.summary.output_hash, collected.summary.output_hash);
+}
+
+/// The deliberately-overloaded config: `mean_gap 0` lands the whole
+/// load on tick 0 regardless of seed, so with `queue_cap 8` exactly
+/// `512 - 8` requests shed in window 0 and the slow batches push p99 far
+/// past the limit -- both SLO assertions must fire.
+#[test]
+fn overloaded_config_fires_the_slo_assertions() {
+    let be = stub();
+    let cfg = SoakConfig {
+        serve: ServeConfig {
+            n_requests: 512,
+            mean_gap_ticks: 0,
+            max_batch: 4,
+            max_wait_ticks: 4,
+            queue_cap: 8,
+            batch_ticks: 16,
+            row_ticks: 1,
+            seed: 3,
+            ..ServeConfig::default()
+        },
+        scenario: Scenario::Uniform,
+        window_ticks: 64,
+        hist_buckets: 64,
+        hist_width: 1,
+        max_shed_rate: 0.25,
+        max_p99_total_ticks: 16,
+    };
+    let r = serve::soak(&be, &cfg).unwrap();
+    assert_eq!(r.summary.rejected, 512 - 8, "cap 8 against a tick-0 burst of 512");
+    assert!(
+        r.violations.iter().any(|v| matches!(v, SloViolation::ShedRate { window: 0, .. })),
+        "shed-rate SLO must fire in window 0: {:?}",
+        r.violations
+    );
+    assert!(
+        r.violations.iter().any(|v| matches!(v, SloViolation::P99Total { .. })),
+        "windowed-p99 SLO must fire: {:?}",
+        r.violations
+    );
+}
+
+/// The overload valve end to end on the reference transformer: a tick-0
+/// burst drives the queue past the threshold, every dispatch goes out as
+/// a local-fallback decode, admission is untouched, and the cheaper
+/// fallback tick costs finish the run sooner.
+#[test]
+fn pressure_valve_serves_through_the_reference_backend() {
+    let be = ReferenceBackend::from_dims("soak-valve", ref_dims(), HYPER, 3);
+    let base = ServeConfig {
+        n_requests: 24,
+        mean_gap_ticks: 0,
+        max_batch: 4,
+        max_wait_ticks: 4,
+        queue_cap: 16,
+        batch_ticks: 8,
+        row_ticks: 1,
+        seed: 5,
+        ..ServeConfig::default()
+    };
+    let mut valved = base.clone();
+    valved.fallback_depth = 4; // burst depths run 16, 12, 8, 4: all trip
+    let off = serve::soak(&be, &parity_cfg(base)).unwrap();
+    let on = serve::soak(&be, &parity_cfg(valved)).unwrap();
+    assert_eq!(off.fallback_batches, 0);
+    assert_eq!(
+        on.fallback_batches, on.summary.batches,
+        "every dispatch of the burst sits at or above the threshold"
+    );
+    assert_eq!(
+        off.summary.rejected, on.summary.rejected,
+        "the valve acts at dispatch, after the admission gate"
+    );
+    assert_eq!(off.summary.completed, on.summary.completed);
+    assert!(
+        on.summary.total_ticks < off.summary.total_ticks,
+        "fallback service must finish the burst sooner: {} vs {}",
+        on.summary.total_ticks,
+        off.summary.total_ticks
+    );
+}
