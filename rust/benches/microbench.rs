@@ -38,6 +38,14 @@
 //! serial vs pipelined step times and the hidden-communication fraction
 //! are reported from the fabric ledger.
 //!
+//! `bench_netfabric` is the first *measured* (not modeled) point on the
+//! fabric perf trajectory: a 4-rank all-to-all over the in-process
+//! `ThreadFabric` vs the same collective over a loopback TCP `NetFabric`
+//! mesh. Arrival bit-equality is asserted before any timing (the parity
+//! contract `tests/net_parity.rs` pins end to end), then payload
+//! bytes/sec for both fabrics plus the TCP path's measured
+//! `wall_a2a_nanos` are reported.
+//!
 //! The headline sections also emit machine-readable `BENCH_<section>.json`
 //! artifacts (schema `gd-bench-v1`; `GD_BENCH_DIR` picks the directory)
 //! so sweeps can diff runs without scraping the stdout tables.
@@ -47,7 +55,7 @@ use std::sync::Arc;
 use gating_dropout::benchkit::{
     bench, bench_json_path, fmt_ns, fmt_tps, report, write_bench_json, BenchEntry,
 };
-use gating_dropout::collective::{Collective, ThreadFabric};
+use gating_dropout::collective::{Collective, FabricStats, NetConfig, NetFabric, ThreadFabric};
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::distributed::{DistEngine, DistRunConfig};
 use gating_dropout::metrics::corpus_bleu;
@@ -546,6 +554,125 @@ fn bench_soak() -> Vec<BenchEntry> {
     entries
 }
 
+/// Deterministic per-pair payload so both fabrics move identical bits:
+/// the value encodes (src, dst, index) and survives the f32 round trip
+/// exactly (all values are small integers).
+fn pair_payload(src: usize, dst: usize, rows: usize) -> Vec<f32> {
+    (0..rows).map(|i| (src * 1_000_000 + dst * 10_000 + i) as f32).collect()
+}
+
+/// Bring up a full loopback NetFabric mesh in-process: rank 0 pre-binds
+/// the coord listener (no port race), ranks 1.. dial it from threads.
+fn connect_loopback(world: usize) -> Vec<NetFabric> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let coord = listener.local_addr().unwrap().to_string();
+    let mut hs = Vec::new();
+    for rank in 1..world {
+        let coord = coord.clone();
+        hs.push(std::thread::spawn(move || {
+            NetFabric::connect(&NetConfig::new(rank, world, coord)).unwrap()
+        }));
+    }
+    let mut fabs =
+        vec![NetFabric::connect_with(&NetConfig::new(0, world, coord), Some(listener)).unwrap()];
+    for h in hs {
+        fabs.push(h.join().unwrap());
+    }
+    fabs
+}
+
+/// One counts+payload all-to-all round across every rank, each rank on
+/// its own thread -- the same two-phase schedule the dispatch leg runs.
+/// Works over any `Collective`, so ThreadFabric and NetFabric take the
+/// identical code path.
+fn a2a_round<C: Collective + Sync>(fabs: &[&C], rows: usize) -> Vec<Vec<Vec<f32>>> {
+    let world = fabs.len();
+    std::thread::scope(|s| {
+        let mut hs = Vec::new();
+        for (r, fab) in fabs.iter().copied().enumerate() {
+            hs.push(s.spawn(move || {
+                let counts = fab.all_to_all_counts(r, &vec![rows; world]).unwrap();
+                let out: Vec<Vec<f32>> =
+                    (0..world).map(|d| pair_payload(r, d, rows)).collect();
+                fab.all_to_all_f32(r, out, &counts).unwrap()
+            }));
+        }
+        hs.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// First *measured* point on the fabric perf trajectory: 4-rank
+/// all-to-all over in-process mailboxes (ThreadFabric) vs loopback TCP
+/// (NetFabric). Arrival bit-equality is asserted before any timing --
+/// the same parity contract `tests/net_parity.rs` pins through the full
+/// training engine -- then payload throughput for both, plus the TCP
+/// path's measured wall-clock wire rate from the fabric ledger.
+fn bench_netfabric() -> Vec<BenchEntry> {
+    let mut entries = Vec::new();
+    println!("-- bench_netfabric: 4-rank all-to-all, in-process mailboxes vs loopback TCP --");
+    let world = 4usize;
+    let tf = ThreadFabric::new(world);
+    let t_refs: Vec<&ThreadFabric> = (0..world).map(|_| &tf).collect();
+    let nf = connect_loopback(world);
+    let n_refs: Vec<&NetFabric> = nf.iter().collect();
+
+    // bit-equality first: identical arrivals, rank by rank, chunk by chunk
+    let a = a2a_round(&t_refs, 1024);
+    let b = a2a_round(&n_refs, 1024);
+    assert_eq!(a, b, "loopback NetFabric arrivals must be bit-identical to ThreadFabric");
+    println!("netfabric parity: arrivals bit-identical across fabrics (1024 f32s/dest)");
+
+    for (rows, warmup, iters) in [(256usize, 3usize, 30usize), (4096, 2, 15)] {
+        let st = bench(warmup, iters, || {
+            std::hint::black_box(a2a_round(&t_refs, rows));
+        });
+        let sn = bench(warmup, iters, || {
+            std::hint::black_box(a2a_round(&n_refs, rows));
+        });
+        let payload = (world * world * rows * 4) as f64; // bytes per round
+        let name = format!("netfabric a2a rows/dest={rows}");
+        report(&format!("{name} [thread]"), &st);
+        report(&format!("{name} [tcp]"), &sn);
+        println!(
+            "{name:<44} thread {:.3} GB/s  tcp {:.3} GB/s  (tcp/thread {:.2}x time)",
+            payload / st.median_secs() / 1e9,
+            payload / sn.median_secs() / 1e9,
+            sn.median_ns / st.median_ns,
+        );
+        let tag = format!("netfabric_r{rows}");
+        entries.push(BenchEntry::new(format!("{tag}_thread_median"), st.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_tcp_median"), sn.median_ns, "ns"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_thread_gbps"),
+            payload / st.median_secs() / 1e9,
+            "GB/s",
+        ));
+        entries.push(BenchEntry::new(
+            format!("{tag}_tcp_gbps"),
+            payload / sn.median_secs() / 1e9,
+            "GB/s",
+        ));
+        entries.push(BenchEntry::new(format!("{tag}_tcp_over_thread"), sn.median_ns / st.median_ns, "x"));
+    }
+
+    // measured wire rate over the whole run, straight from the ledger's
+    // wall counters (per-rank average: summed bytes over summed seconds)
+    let merged = FabricStats::merge_ranks(&nf.iter().map(|f| f.stats()).collect::<Vec<_>>());
+    if merged.wall_a2a_nanos > 0 {
+        let wire_gbps = merged.wall_bytes as f64 / (merged.wall_a2a_nanos as f64 / 1e9) / 1e9;
+        println!(
+            "netfabric measured wire rate: {wire_gbps:.3} GB/s framed ({} bytes in {} rank-ms)",
+            merged.wall_bytes,
+            merged.wall_a2a_nanos / 1_000_000,
+        );
+        entries.push(BenchEntry::new("netfabric_tcp_wire_gbps", wire_gbps, "GB/s"));
+    }
+    for f in &nf {
+        f.shutdown().unwrap();
+    }
+    entries
+}
+
 fn main() {
     // optional section filter (`cargo bench --bench microbench -- overlap`
     // runs just that JSON-emitting section; CI uses this to exercise the
@@ -585,7 +712,7 @@ fn main() {
         report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
     }
 
-    let sections: [(&str, fn() -> Vec<BenchEntry>); 6] = [
+    let sections: [(&str, fn() -> Vec<BenchEntry>); 7] = [
         ("dispatch", bench_dispatch),
         ("routing", bench_routing),
         ("matmul_par", || {
@@ -595,6 +722,7 @@ fn main() {
         ("decode", bench_decode),
         ("overlap", bench_overlap),
         ("soak", bench_soak),
+        ("netfabric", bench_netfabric),
     ];
     for (section, run_section) in sections {
         if !want(section) {
@@ -614,10 +742,10 @@ fn main() {
             for r in 0..4 {
                 let fab = fab.clone();
                 hs.push(std::thread::spawn(move || {
-                    let counts = fab.all_to_all_counts(r, &[4096usize; 4]);
+                    let counts = fab.all_to_all_counts(r, &[4096usize; 4]).unwrap();
                     let out: Vec<Vec<f32>> =
                         (0..4).map(|_| vec![r as f32; 4096]).collect();
-                    std::hint::black_box(fab.all_to_all_f32(r, out, &counts));
+                    std::hint::black_box(fab.all_to_all_f32(r, out, &counts).unwrap());
                 }));
             }
             for h in hs {

@@ -14,9 +14,11 @@
 use std::collections::HashMap;
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 use super::Collective;
 use crate::netmodel::Cluster;
+use crate::util::error::Result;
 
 /// One point-to-point mailbox (src -> dst) carrying messages of type `T`.
 struct Mailbox<T> {
@@ -74,6 +76,17 @@ pub struct FabricStats {
     /// chunk) pipeline pairs of `min(comm span, compute span)` at
     /// slowest-rank pacing. Zero for serial (1-chunk) schedules.
     pub overlapped_ticks: f64,
+    /// MEASURED nanoseconds this rank spent inside payload all-to-all
+    /// collectives (serial exchanges and pipelined post/recv/finish),
+    /// wall clock -- the counterpart the modeled times finally sit next
+    /// to. Accumulated per rank; sums across ranks under
+    /// [`FabricStats::merge_ranks`].
+    pub wall_a2a_nanos: u64,
+    /// MEASURED bytes this rank put on the wire for those collectives:
+    /// off-rank payload bytes on the thread fabric (ownership transfer
+    /// has no framing), full frame bytes (headers included) on the TCP
+    /// fabric.
+    pub wall_bytes: u64,
 }
 
 impl FabricStats {
@@ -100,6 +113,85 @@ impl FabricStats {
         } else {
             0.0
         }
+    }
+
+    /// Merge per-rank stats (the TCP fabric counts locally at each
+    /// process) into the whole-fabric totals the shared-ledger
+    /// `ThreadFabric` reports directly:
+    ///
+    /// * op counters take the MAX across ranks -- every participating
+    ///   rank counts the same collective once (or only the root does, for
+    ///   broadcast), so max de-duplicates without under-counting;
+    /// * byte counters SUM -- each rank charges only what it sent;
+    /// * modeled seconds take the MAX -- every rank derives the identical
+    ///   whole-collective charge from the exchanged per-rank volumes;
+    /// * measured wall counters SUM -- real ranks burn real time and
+    ///   bytes each.
+    pub fn merge_ranks(per_rank: &[FabricStats]) -> FabricStats {
+        let mut m = FabricStats::default();
+        for s in per_rank {
+            m.a2a_ops = m.a2a_ops.max(s.a2a_ops);
+            m.counts_ops = m.counts_ops.max(s.counts_ops);
+            m.allreduce_ops = m.allreduce_ops.max(s.allreduce_ops);
+            m.broadcast_ops = m.broadcast_ops.max(s.broadcast_ops);
+            m.a2a_bytes += s.a2a_bytes;
+            m.counts_bytes += s.counts_bytes;
+            m.allreduce_bytes += s.allreduce_bytes;
+            m.broadcast_bytes += s.broadcast_bytes;
+            m.modeled_time = m.modeled_time.max(s.modeled_time);
+            m.modeled_compute = m.modeled_compute.max(s.modeled_compute);
+            m.overlapped_ticks = m.overlapped_ticks.max(s.overlapped_ticks);
+            m.wall_a2a_nanos += s.wall_a2a_nanos;
+            m.wall_bytes += s.wall_bytes;
+        }
+        m
+    }
+
+    /// Fixed-layout little-endian encoding (13 x 8 bytes, field order
+    /// below) -- how a TCP rank ships its local counters to rank 0 for
+    /// the merged end-of-run report. Bit-exact round trip.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(13 * 8);
+        for v in [
+            self.a2a_ops,
+            self.a2a_bytes,
+            self.counts_ops,
+            self.counts_bytes,
+            self.allreduce_ops,
+            self.allreduce_bytes,
+            self.broadcast_ops,
+            self.broadcast_bytes,
+            self.wall_a2a_nanos,
+            self.wall_bytes,
+        ] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [self.modeled_time, self.modeled_compute, self.overlapped_ticks] {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    /// Inverse of [`FabricStats::to_le_bytes`].
+    pub fn from_le_bytes(b: &[u8]) -> Result<FabricStats> {
+        crate::ensure!(b.len() == 13 * 8, "FabricStats blob is {} bytes, want 104", b.len());
+        let u = |i: usize| u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        let f = |i: usize| f64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap());
+        Ok(FabricStats {
+            a2a_ops: u(0),
+            a2a_bytes: u(1),
+            counts_ops: u(2),
+            counts_bytes: u(3),
+            allreduce_ops: u(4),
+            allreduce_bytes: u(5),
+            broadcast_ops: u(6),
+            broadcast_bytes: u(7),
+            wall_a2a_nanos: u(8),
+            wall_bytes: u(9),
+            modeled_time: f(10),
+            modeled_compute: f(11),
+            overlapped_ticks: f(12),
+        })
     }
 }
 
@@ -381,6 +473,7 @@ impl ThreadFabric {
             total_bytes: 0,
             chunk_bytes: Vec::new(),
             chunk_compute: Vec::new(),
+            wall_nanos: 0,
         }
     }
 }
@@ -403,6 +496,9 @@ pub struct PipelinedA2a<'a> {
     total_bytes: usize,
     chunk_bytes: Vec<u64>,
     chunk_compute: Vec<f64>,
+    /// Measured nanoseconds spent posting + receiving chunks, settled
+    /// into `FabricStats::wall_a2a_nanos` at finish.
+    wall_nanos: u64,
 }
 
 impl PipelinedA2a<'_> {
@@ -412,6 +508,7 @@ impl PipelinedA2a<'_> {
     /// accounting paces the adjacent comm chunk against.
     pub fn post_chunk(&mut self, bufs: Vec<Vec<f32>>, compute_secs: f64) {
         assert_eq!(bufs.len(), self.fab.n, "one chunk buffer per destination rank");
+        let t0 = Instant::now();
         let total: usize = bufs.iter().map(|b| b.len() * 4).sum();
         let own_len = bufs[self.rank].len() * 4;
         self.total_bytes += total;
@@ -426,6 +523,7 @@ impl PipelinedA2a<'_> {
             }
         }
         self.posted += 1;
+        self.wall_nanos += t0.elapsed().as_nanos() as u64;
     }
 
     /// Receive the next chunk: one buffer per source rank (blocking).
@@ -437,6 +535,7 @@ impl PipelinedA2a<'_> {
             "recv_chunk without a matching post_chunk (chunk {})",
             self.received
         );
+        let t0 = Instant::now();
         let mut got = Vec::with_capacity(self.fab.n);
         for s in 0..self.fab.n {
             got.push(if s == self.rank {
@@ -446,6 +545,7 @@ impl PipelinedA2a<'_> {
             });
         }
         self.received += 1;
+        self.wall_nanos += t0.elapsed().as_nanos() as u64;
         got
     }
 
@@ -467,6 +567,11 @@ impl PipelinedA2a<'_> {
             self.kind,
             self.charge_compute,
         );
+        let (nanos, bytes) = (self.wall_nanos, self.bytes_sent as u64);
+        self.fab.account(|st, _| {
+            st.wall_a2a_nanos += nanos;
+            st.wall_bytes += bytes;
+        });
     }
 }
 
@@ -475,10 +580,16 @@ impl Collective for ThreadFabric {
         self.n
     }
 
-    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
         let (result, bytes_sent, total_bytes) = self.exchange_f32(rank, out);
+        let nanos = t0.elapsed().as_nanos() as u64;
         self.account_a2a(rank, bytes_sent, total_bytes);
-        result
+        self.account(|st, _| {
+            st.wall_a2a_nanos += nanos;
+            st.wall_bytes += bytes_sent as u64;
+        });
+        Ok(result)
     }
 
     fn all_to_all_f32(
@@ -486,22 +597,30 @@ impl Collective for ThreadFabric {
         rank: usize,
         bufs: Vec<Vec<f32>>,
         counts: &[usize],
-    ) -> Vec<Vec<f32>> {
-        assert_eq!(counts.len(), self.n, "one expected count per source rank");
+    ) -> Result<Vec<Vec<f32>>> {
+        crate::ensure!(counts.len() == self.n, "one expected count per source rank");
+        let t0 = Instant::now();
         let (result, bytes_sent, total_bytes) = self.exchange_f32(rank, bufs);
+        let nanos = t0.elapsed().as_nanos() as u64;
         for (s, chunk) in result.iter().enumerate() {
-            assert_eq!(
+            crate::ensure!(
+                chunk.len() == counts[s],
+                "rank {rank}: arrival from {s} disagrees with counts phase \
+                 ({} f32s != expected {})",
                 chunk.len(),
                 counts[s],
-                "rank {rank}: arrival from {s} disagrees with counts phase"
             );
         }
         self.account_a2a(rank, bytes_sent, total_bytes);
-        result
+        self.account(|st, _| {
+            st.wall_a2a_nanos += nanos;
+            st.wall_bytes += bytes_sent as u64;
+        });
+        Ok(result)
     }
 
-    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Vec<usize> {
-        assert_eq!(counts.len(), self.n, "one count per destination rank");
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Result<Vec<usize>> {
+        crate::ensure!(counts.len() == self.n, "one count per destination rank");
         for d in 0..self.n {
             if d != rank {
                 self.cb(rank, d).send(counts[d]);
@@ -529,20 +648,24 @@ impl Collective for ThreadFabric {
                 }
             }
         });
-        got
+        Ok(got)
     }
 
-    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) {
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) -> Result<()> {
         self.all_reduce_impl(rank, data, true);
+        Ok(())
     }
 
-    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) {
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) -> Result<()> {
         self.all_reduce_impl(rank, data, false);
+        Ok(())
     }
 
-    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8> {
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Result<Vec<u8>> {
         let out = if rank == root {
-            let payload = data.expect("root must supply broadcast payload");
+            let Some(payload) = data else {
+                crate::bail!("rank {rank}: broadcast root must supply a payload");
+            };
             for d in 0..self.n {
                 if d != root {
                     self.bb(root, d).send(payload.clone());
@@ -564,11 +687,12 @@ impl Collective for ThreadFabric {
                 }
             }
         });
-        out
+        Ok(out)
     }
 
-    fn barrier(&self, _rank: usize) {
+    fn barrier(&self, _rank: usize) -> Result<()> {
         self.barrier.wait();
+        Ok(())
     }
 }
 
@@ -640,7 +764,7 @@ mod tests {
         run_ranks(4, |rank, fab| {
             // rank r sends [r*10 + d] to rank d
             let out: Vec<Vec<f32>> = (0..4).map(|d| vec![(rank * 10 + d) as f32]).collect();
-            let got = fab.all_to_all(rank, out);
+            let got = fab.all_to_all(rank, out).unwrap();
             for (s, chunk) in got.iter().enumerate() {
                 assert_eq!(chunk, &vec![(s * 10 + rank) as f32]);
             }
@@ -651,7 +775,7 @@ mod tests {
     fn all_to_all_preserves_total_payload() {
         run_ranks(3, |rank, fab| {
             let out: Vec<Vec<f32>> = (0..3).map(|d| vec![rank as f32; d + 1]).collect();
-            let got = fab.all_to_all(rank, out);
+            let got = fab.all_to_all(rank, out).unwrap();
             let total: usize = got.iter().map(|c| c.len()).sum();
             assert_eq!(total, 3 * (rank + 1)); // each src sends rank+1 floats to me
         });
@@ -663,11 +787,11 @@ mod tests {
             // rank r sends r+1 copies of (r*10+d) to rank d; counts phase
             // first, then the flat exchange sized from it.
             let send_rows: Vec<usize> = vec![rank + 1; 4];
-            let recv_rows = fab.all_to_all_counts(rank, &send_rows);
+            let recv_rows = fab.all_to_all_counts(rank, &send_rows).unwrap();
             assert_eq!(recv_rows, vec![1, 2, 3, 4]);
             let bufs: Vec<Vec<f32>> =
                 (0..4).map(|d| vec![(rank * 10 + d) as f32; rank + 1]).collect();
-            let got = fab.all_to_all_f32(rank, bufs, &recv_rows);
+            let got = fab.all_to_all_f32(rank, bufs, &recv_rows).unwrap();
             for (s, chunk) in got.iter().enumerate() {
                 assert_eq!(chunk, &vec![(s * 10 + rank) as f32; s + 1]);
             }
@@ -694,7 +818,7 @@ mod tests {
     fn all_reduce_sums() {
         run_ranks(4, |rank, fab| {
             let mut data = vec![rank as f32, 1.0];
-            fab.all_reduce_sum(rank, &mut data);
+            fab.all_reduce_sum(rank, &mut data).unwrap();
             assert_eq!(data, vec![0.0 + 1.0 + 2.0 + 3.0, 4.0]);
         });
     }
@@ -705,11 +829,11 @@ mod tests {
         let f2 = fab.clone();
         let h = std::thread::spawn(move || {
             let mut d = vec![2.0f32];
-            f2.all_reduce_sum_unaccounted(1, &mut d);
+            f2.all_reduce_sum_unaccounted(1, &mut d).unwrap();
             assert_eq!(d, vec![3.0]);
         });
         let mut d = vec![1.0f32];
-        fab.all_reduce_sum_unaccounted(0, &mut d);
+        fab.all_reduce_sum_unaccounted(0, &mut d).unwrap();
         assert_eq!(d, vec![3.0]);
         h.join().unwrap();
         assert_eq!(fab.stats(), FabricStats::default());
@@ -719,7 +843,7 @@ mod tests {
     fn broadcast_delivers_root_payload() {
         run_ranks(4, |rank, fab| {
             let payload = if rank == 2 { Some(vec![42u8, 7]) } else { None };
-            let got = fab.broadcast(rank, 2, payload);
+            let got = fab.broadcast(rank, 2, payload).unwrap();
             assert_eq!(got, vec![42, 7]);
         });
     }
@@ -825,7 +949,7 @@ mod tests {
                         v
                     })
                     .collect();
-                let want = serial.all_to_all(rank, whole);
+                let want = serial.all_to_all(rank, whole).unwrap();
                 assert_eq!(acc, want, "rank {rank}: chunked arrivals must concat to serial");
             }));
         }
@@ -927,12 +1051,70 @@ mod tests {
     }
 
     #[test]
+    fn stats_le_bytes_round_trip_bit_exact() {
+        let s = FabricStats {
+            a2a_ops: 3,
+            a2a_bytes: 12345,
+            counts_ops: 2,
+            counts_bytes: 64,
+            allreduce_ops: 9,
+            allreduce_bytes: 4096,
+            broadcast_ops: 30,
+            broadcast_bytes: 30,
+            modeled_time: 0.125,
+            modeled_compute: 3.5e-4,
+            overlapped_ticks: 1.0 / 3.0,
+            wall_a2a_nanos: 987654321,
+            wall_bytes: 555,
+        };
+        let back = FabricStats::from_le_bytes(&s.to_le_bytes()).unwrap();
+        assert_eq!(back, s);
+        assert!(FabricStats::from_le_bytes(&[0u8; 7]).is_err());
+    }
+
+    #[test]
+    fn merge_ranks_maxes_ops_and_sums_bytes() {
+        let a = FabricStats {
+            a2a_ops: 4,
+            a2a_bytes: 100,
+            counts_ops: 2,
+            counts_bytes: 8,
+            broadcast_ops: 6, // root rank counts every broadcast...
+            broadcast_bytes: 6,
+            modeled_time: 1.5,
+            wall_a2a_nanos: 10,
+            wall_bytes: 100,
+            ..Default::default()
+        };
+        let b = FabricStats {
+            a2a_ops: 4, // ...while symmetric ops are counted on every rank
+            a2a_bytes: 300,
+            counts_ops: 2,
+            counts_bytes: 8,
+            modeled_time: 1.5,
+            wall_a2a_nanos: 30,
+            wall_bytes: 300,
+            ..Default::default()
+        };
+        let m = FabricStats::merge_ranks(&[a, b]);
+        assert_eq!(m.a2a_ops, 4, "symmetric op counters de-duplicate via max");
+        assert_eq!(m.a2a_bytes, 400, "byte counters sum what each rank sent");
+        assert_eq!(m.counts_ops, 2);
+        assert_eq!(m.counts_bytes, 16);
+        assert_eq!(m.broadcast_ops, 6, "root-only counters survive the max");
+        assert_eq!(m.broadcast_bytes, 6);
+        assert_eq!(m.modeled_time, 1.5, "identical per-rank model charges stay single");
+        assert_eq!(m.wall_a2a_nanos, 40, "measured wall time sums across real ranks");
+        assert_eq!(m.wall_bytes, 400);
+    }
+
+    #[test]
     fn barrier_synchronises() {
         use std::sync::atomic::{AtomicUsize, Ordering};
         static COUNT: AtomicUsize = AtomicUsize::new(0);
         run_ranks(4, |rank, fab| {
             COUNT.fetch_add(1, Ordering::SeqCst);
-            fab.barrier(rank);
+            fab.barrier(rank).unwrap();
             assert_eq!(COUNT.load(Ordering::SeqCst), 4);
         });
     }

@@ -1,40 +1,61 @@
-//! In-memory collective fabric: the communication substrate the paper's
+//! Collective fabrics: the communication substrate the paper's
 //! DeepSpeed/NCCL stack provides on real clusters.
 //!
-//! `ThreadFabric` connects N worker threads through per-(src,dst) mailboxes
-//! and implements the collectives the MoE training path needs:
-//! the flat-buffer `all_to_all_f32` (with its `all_to_all_counts`
-//! companion -- the counts-first phase of the dispatch wire format, see
-//! `moe`), the legacy `all_to_all`, `all_reduce_sum`, `broadcast` (the
-//! coordinator's 1-bit decision rides this) and `barrier`.
+//! Two interchangeable implementations of the [`Collective`] trait:
+//!
+//! * [`ThreadFabric`] connects N worker threads through per-(src,dst)
+//!   mailboxes -- zero-copy ownership transfer, the simulated-cluster
+//!   engine's default;
+//! * [`NetFabric`] (`net`) connects N *processes* over std-only TCP:
+//!   length-prefixed little-endian frames tagged `(seq, leg, src)` with an
+//!   FNV-1a checksum, a rank-0 rendezvous that hands out the peer mesh,
+//!   bounded connect retry, read timeouts, and a shutdown handshake, so a
+//!   dead peer surfaces as a typed error naming the rank and leg instead
+//!   of a hang.
+//!
+//! Both implement the collectives the MoE training path needs: the
+//! flat-buffer `all_to_all_f32` (with its `all_to_all_counts` companion --
+//! the counts-first phase of the dispatch wire format, see `moe`), the
+//! legacy `all_to_all`, `all_reduce_sum`, `broadcast` (the coordinator's
+//! 1-bit decision rides this) and `barrier`.
 //!
 //! Every operation is *accounted*: byte counts per collective type and the
 //! modeled wall time it would take on a configured [`Cluster`]
-//! (`netmodel`), so the thread engine can report virtual cluster
-//! throughput while running real data movement on CPU threads. The
-//! modeled all-to-all time is charged from the **max per-rank send
-//! volume** of the collective (the slowest rank paces everyone under
-//! skewed routing), not rank 0's volume.
+//! (`netmodel`), so the engines can report virtual cluster throughput
+//! while running real data movement. The modeled all-to-all time is
+//! charged from the **max per-rank send volume** of the collective (the
+//! slowest rank paces everyone under skewed routing), not rank 0's
+//! volume. [`FabricStats`] additionally carries *measured* wall counters
+//! (`wall_a2a_nanos`, `wall_bytes`) so modeled ticks can sit next to real
+//! nanoseconds on the TCP path.
 //!
-//! Chunked pipelined exchanges ride [`ThreadFabric::a2a_pipelined`]: one
+//! Chunked pipelined exchanges ride [`Fabric::a2a_pipelined`]: one
 //! accounted collective split into expert-dimension chunks whose comm
-//! spans can hide behind per-chunk expert compute. The ledger credits
-//! `FabricStats::overlapped_ticks` with `min(comm span, compute span)`
-//! per adjacent pipeline pair, at slowest-rank pacing, so
+//! spans can hide behind per-chunk expert compute. The thread ledger
+//! credits `FabricStats::overlapped_ticks` with `min(comm span, compute
+//! span)` per adjacent pipeline pair, at slowest-rank pacing, so
 //! `serial_modeled_step_time()` vs `pipelined_modeled_step_time()` is an
-//! honest comparison. See `docs/ARCHITECTURE.md` ("collective" layer)
-//! for the wire format and the timing-model contract.
+//! honest comparison; the TCP path streams the same chunk frames but
+//! claims no modeled overlap credit (its overlap is *measured* instead).
+//! See `docs/ARCHITECTURE.md` ("collective" layer) for the wire format
+//! and the timing-model contract.
 //!
 //! [`Cluster`]: crate::netmodel::Cluster
 
 mod fabric;
+pub mod net;
 
 pub use fabric::{FabricStats, OverlapKind, PipelinedA2a, ThreadFabric};
+pub use net::{NetConfig, NetFabric, NetPipe};
+
+use crate::util::error::Result;
 
 /// Collective operations as seen by one rank. All calls are collective:
 /// every rank must call the same op in the same order (SPMD), exactly like
-/// NCCL. Deadlocks on misuse are prevented by unbounded sends; receives
-/// block.
+/// NCCL. On the thread fabric deadlocks on misuse are prevented by
+/// unbounded sends; on the TCP fabric a lost peer surfaces as a typed
+/// error within the read timeout. Every op returns `Result` so wire
+/// failures (and SPMD desyncs) propagate instead of panicking mid-step.
 pub trait Collective {
     fn n_ranks(&self) -> usize;
 
@@ -44,23 +65,25 @@ pub trait Collective {
     /// Legacy variably-sized exchange: the receiver learns chunk sizes
     /// only on arrival. Prefer [`Collective::all_to_all_f32`] with a
     /// preceding [`Collective::all_to_all_counts`] on hot paths.
-    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Vec<Vec<f32>>;
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>>;
 
     /// Typed flat-buffer exchange (phase 2 of the two-phase dispatch).
     ///
     /// `bufs[d]` is one contiguous f32 payload for rank `d`, moved through
-    /// the fabric without serialization. `counts[s]` is the f32 element
-    /// count this rank expects FROM rank `s` (known from the counts
-    /// phase); the fabric asserts every arrival matches, so a routing /
-    /// sizing desync fails loudly at the wire instead of corrupting the
-    /// expert buffers downstream. Byte accounting is identical to
-    /// [`Collective::all_to_all`]: 4 bytes per off-rank element.
+    /// the fabric without copies on the thread path (and as little-endian
+    /// frames on the TCP path -- f32 round-trips bit-exactly). `counts[s]`
+    /// is the f32 element count this rank expects FROM rank `s` (known
+    /// from the counts phase); the fabric checks every arrival matches, so
+    /// a routing / sizing desync fails loudly at the wire instead of
+    /// corrupting the expert buffers downstream. Byte accounting is
+    /// identical to [`Collective::all_to_all`]: 4 bytes per off-rank
+    /// element.
     fn all_to_all_f32(
         &self,
         rank: usize,
         bufs: Vec<Vec<f32>>,
         counts: &[usize],
-    ) -> Vec<Vec<f32>>;
+    ) -> Result<Vec<Vec<f32>>>;
 
     /// Phase 1 of the two-phase dispatch: exchange per-destination element
     /// counts. `counts[d]` is how many payload rows this rank will send to
@@ -68,17 +91,19 @@ pub trait Collective {
     /// size (one word per peer), accounted separately from payload
     /// all-to-alls (`counts_ops` / `counts_bytes`) so the paper's
     /// comm-savings numbers stay comparable with the seed.
-    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Vec<usize>;
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Result<Vec<usize>>;
 
     /// Row-counted wrapper over [`Collective::all_to_all_f32`]: the caller
     /// passes the per-destination **row** counts it packed (`send_rows`,
     /// its own counts-phase input) and the per-source row counts it
     /// expects (`recv_rows`, the counts-phase output), plus the row
-    /// `stride` in f32 elements. Debug builds assert every send buffer's
-    /// length equals `send_rows[dst] * stride` -- so a variable-fan-out
-    /// packing bug fails loudly at the wire, before it can desync the
-    /// receiver -- and the receive expectation is derived here instead of
-    /// at every call site.
+    /// `stride` in f32 elements and the schedule `leg` this exchange
+    /// implements ("dispatch", "return", ...). Every send buffer's length
+    /// is checked against `send_rows[dst] * stride` -- so a
+    /// variable-fan-out packing bug fails loudly at the wire, naming the
+    /// rank, leg, destination, and expected-vs-actual rows, before it can
+    /// desync the receiver -- and the receive expectation is derived here
+    /// instead of at every call site. Shared by both fabrics.
     fn all_to_all_rows(
         &self,
         rank: usize,
@@ -86,14 +111,19 @@ pub trait Collective {
         send_rows: &[usize],
         recv_rows: &[usize],
         stride: usize,
-    ) -> Vec<Vec<f32>> {
-        debug_assert_eq!(bufs.len(), send_rows.len(), "one send buffer per destination");
+        leg: &str,
+    ) -> Result<Vec<Vec<f32>>> {
+        crate::ensure!(
+            bufs.len() == send_rows.len(),
+            "rank {rank} {leg} leg: {} send buffers for {} destinations",
+            bufs.len(),
+            send_rows.len(),
+        );
         for (dst, b) in bufs.iter().enumerate() {
-            debug_assert_eq!(
-                b.len(),
-                send_rows[dst] * stride,
-                "send buffer for dst {dst} disagrees with the counts phase \
-                 (len {} != {} rows x stride {stride})",
+            crate::ensure!(
+                b.len() == send_rows[dst] * stride,
+                "rank {rank} {leg} leg: send buffer for dst {dst} disagrees with the \
+                 counts phase (len {} != {} rows x stride {stride})",
                 b.len(),
                 send_rows[dst],
             );
@@ -111,10 +141,8 @@ pub trait Collective {
     ///
     /// This default implementation concatenates and runs one
     /// [`Collective::all_to_all_rows`] -- correct routing and identical
-    /// byte/op accounting, but no overlap credit. `ThreadFabric`'s
-    /// [`ThreadFabric::a2a_pipelined`] handle is the overlap-earning path
-    /// the distributed engine uses; a future multi-process fabric gets
-    /// this correct-but-serial fallback for free.
+    /// byte/op accounting, but no overlap credit. The overlap-earning
+    /// path the distributed engine uses is [`Fabric::a2a_pipelined`].
     fn all_to_all_rows_chunked(
         &self,
         rank: usize,
@@ -122,34 +150,202 @@ pub trait Collective {
         send_rows: &[usize],
         recv_rows: &[usize],
         stride: usize,
-    ) -> Vec<Vec<f32>> {
+        leg: &str,
+    ) -> Result<Vec<Vec<f32>>> {
         let n = self.n_ranks();
         let mut bufs: Vec<Vec<f32>> = vec![Vec::new(); n];
-        for chunk in chunks {
-            debug_assert_eq!(chunk.len(), n, "one chunk buffer per destination");
+        for (c, chunk) in chunks.into_iter().enumerate() {
+            crate::ensure!(
+                chunk.len() == n,
+                "rank {rank} {leg} leg: chunk {c} has {} buffers for {n} destinations",
+                chunk.len(),
+            );
             for (dst, part) in chunk.into_iter().enumerate() {
                 bufs[dst].extend(part);
             }
         }
-        self.all_to_all_rows(rank, bufs, send_rows, recv_rows, stride)
+        self.all_to_all_rows(rank, bufs, send_rows, recv_rows, stride, leg)
     }
 
     /// Element-wise sum across ranks; result replicated to every rank.
-    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]);
+    /// Both fabrics reduce in source-rank order at rank 0, so the f32
+    /// accumulation order (and thus the result bits) is fabric-invariant.
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) -> Result<()>;
 
     /// [`Collective::all_reduce_sum`] that stays OUT of the fabric stats:
     /// for diagnostics (per-step loss reporting) that a real training job
     /// would not pay for on the training path. Default implementation
     /// falls back to the accounted variant.
-    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) {
-        self.all_reduce_sum(rank, data);
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) -> Result<()> {
+        self.all_reduce_sum(rank, data)
     }
 
     /// Root's payload is delivered to every rank (root passes Some).
-    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Vec<u8>;
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Result<Vec<u8>>;
 
     /// Rendezvous of all ranks.
-    fn barrier(&self, rank: usize);
+    fn barrier(&self, rank: usize) -> Result<()>;
+}
+
+/// Either fabric behind one type, so the distributed engine runs the
+/// identical SPMD schedule whether its ranks are in-process threads or
+/// TCP peers. Delegates the whole [`Collective`] surface and exposes the
+/// fabric-specific extras (`stats`, pipelined handles) uniformly.
+pub enum Fabric {
+    Thread(ThreadFabric),
+    Net(NetFabric),
+}
+
+impl Fabric {
+    /// This fabric's accounting snapshot. Thread: whole-fabric totals
+    /// (all ranks share one ledger). Net: THIS rank's local counters --
+    /// merge across ranks with [`FabricStats::merge_ranks`].
+    pub fn stats(&self) -> FabricStats {
+        match self {
+            Fabric::Thread(f) => f.stats(),
+            Fabric::Net(f) => f.stats(),
+        }
+    }
+
+    /// The TCP fabric behind this handle, if that is what it is (the
+    /// engine uses this for end-of-run result gathering and shutdown).
+    pub fn as_net(&self) -> Option<&NetFabric> {
+        match self {
+            Fabric::Net(f) => Some(f),
+            Fabric::Thread(_) => None,
+        }
+    }
+
+    /// Begin one chunked, pipelined all-to-all: ONE accounted collective
+    /// posted as a sequence of chunks, each paced against the modeled
+    /// compute seconds the caller reports. See
+    /// [`ThreadFabric::a2a_pipelined`] for the overlap-credit contract;
+    /// the TCP path streams one checksummed frame per chunk per peer
+    /// (measured wall time, no modeled overlap credit). `leg` names the
+    /// schedule leg in wire-failure errors.
+    pub fn a2a_pipelined(
+        &self,
+        rank: usize,
+        kind: OverlapKind,
+        charge_compute: bool,
+        leg: &'static str,
+    ) -> Pipe<'_> {
+        match self {
+            Fabric::Thread(f) => Pipe::Thread(f.a2a_pipelined(rank, kind, charge_compute)),
+            Fabric::Net(f) => Pipe::Net(f.a2a_pipelined(rank, charge_compute, leg)),
+        }
+    }
+}
+
+impl Collective for Fabric {
+    fn n_ranks(&self) -> usize {
+        match self {
+            Fabric::Thread(f) => f.n_ranks(),
+            Fabric::Net(f) => f.n_ranks(),
+        }
+    }
+
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Fabric::Thread(f) => f.all_to_all(rank, out),
+            Fabric::Net(f) => f.all_to_all(rank, out),
+        }
+    }
+
+    fn all_to_all_f32(
+        &self,
+        rank: usize,
+        bufs: Vec<Vec<f32>>,
+        counts: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Fabric::Thread(f) => f.all_to_all_f32(rank, bufs, counts),
+            Fabric::Net(f) => f.all_to_all_f32(rank, bufs, counts),
+        }
+    }
+
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Result<Vec<usize>> {
+        match self {
+            Fabric::Thread(f) => f.all_to_all_counts(rank, counts),
+            Fabric::Net(f) => f.all_to_all_counts(rank, counts),
+        }
+    }
+
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) -> Result<()> {
+        match self {
+            Fabric::Thread(f) => f.all_reduce_sum(rank, data),
+            Fabric::Net(f) => f.all_reduce_sum(rank, data),
+        }
+    }
+
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) -> Result<()> {
+        match self {
+            Fabric::Thread(f) => f.all_reduce_sum_unaccounted(rank, data),
+            Fabric::Net(f) => f.all_reduce_sum_unaccounted(rank, data),
+        }
+    }
+
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        match self {
+            Fabric::Thread(f) => f.broadcast(rank, root, data),
+            Fabric::Net(f) => f.broadcast(rank, root, data),
+        }
+    }
+
+    fn barrier(&self, rank: usize) -> Result<()> {
+        match self {
+            Fabric::Thread(f) => f.barrier(rank),
+            Fabric::Net(f) => f.barrier(rank),
+        }
+    }
+}
+
+/// One in-flight chunked all-to-all over either fabric (see
+/// [`Fabric::a2a_pipelined`]). Thread chunks ride the mailbox planes with
+/// modeled overlap credit; net chunks ride one checksummed frame per
+/// (chunk, peer) with measured wall time. Identical arrivals either way:
+/// the k-th received chunk pairs with every source's k-th posted chunk.
+pub enum Pipe<'a> {
+    Thread(PipelinedA2a<'a>),
+    Net(NetPipe<'a>),
+}
+
+impl Pipe<'_> {
+    /// Send one chunk: `bufs[d]` goes to rank `d` (non-blocking).
+    /// `compute_secs` is the modeled span of this rank's expert math for
+    /// this chunk -- what the overlap accounting paces the adjacent comm
+    /// chunk against.
+    pub fn post_chunk(&mut self, bufs: Vec<Vec<f32>>, compute_secs: f64) -> Result<()> {
+        match self {
+            Pipe::Thread(p) => {
+                p.post_chunk(bufs, compute_secs);
+                Ok(())
+            }
+            Pipe::Net(p) => p.post_chunk(bufs, compute_secs),
+        }
+    }
+
+    /// Receive the next chunk: one buffer per source rank (blocking; on
+    /// the net path a dead peer fails this within the read timeout).
+    pub fn recv_chunk(&mut self) -> Result<Vec<Vec<f32>>> {
+        match self {
+            Pipe::Thread(p) => Ok(p.recv_chunk()),
+            Pipe::Net(p) => p.recv_chunk(),
+        }
+    }
+
+    /// Settle accounting: exactly one `a2a_ops` tick for the whole
+    /// exchange regardless of chunk count. Fails if chunks were posted
+    /// but never received -- that is a schedule bug, not a stats question.
+    pub fn finish(self) -> Result<()> {
+        match self {
+            Pipe::Thread(p) => {
+                p.finish();
+                Ok(())
+            }
+            Pipe::Net(p) => p.finish(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -177,7 +373,9 @@ mod tests {
                     .enumerate()
                     .map(|(dst, &rows)| vec![(rank * 10 + dst) as f32; rows * stride])
                     .collect();
-                let got = fabric.all_to_all_rows(rank, bufs, &send, &recv, stride);
+                let got = fabric
+                    .all_to_all_rows(rank, bufs, &send, &recv, stride, "test")
+                    .unwrap();
                 for (src, buf) in got.iter().enumerate() {
                     assert_eq!(buf.len(), recv[src] * stride, "rank {rank} from {src}");
                     assert!(buf.iter().all(|&v| v == (src * 10 + rank) as f32));
@@ -204,8 +402,9 @@ mod tests {
                 let chunks: Vec<Vec<Vec<f32>>> = (0..3)
                     .map(|c| (0..n).map(|_| vec![rank as f32, c as f32]).collect())
                     .collect();
-                let got =
-                    fabric.all_to_all_rows_chunked(rank, chunks, &[3, 3], &[3, 3], stride);
+                let got = fabric
+                    .all_to_all_rows_chunked(rank, chunks, &[3, 3], &[3, 3], stride, "test")
+                    .unwrap();
                 for (src, buf) in got.iter().enumerate() {
                     let want: Vec<f32> =
                         (0..3).flat_map(|c| vec![src as f32, c as f32]).collect();
@@ -220,13 +419,19 @@ mod tests {
     }
 
     /// A send buffer that disagrees with the counts phase must fail loudly
-    /// at the wire (debug builds), not corrupt rows downstream.
-    #[cfg(debug_assertions)]
+    /// at the wire -- with an error naming the rank, leg, and
+    /// expected-vs-actual rows -- not corrupt rows downstream.
     #[test]
-    #[should_panic(expected = "disagrees with the counts phase")]
     fn all_to_all_rows_rejects_desynced_buffer() {
         let fabric = ThreadFabric::new(1);
         // claims 1 row of stride 4 but packs only 3 elements
-        fabric.all_to_all_rows(0, vec![vec![0f32; 3]], &[1], &[1], 4);
+        let e = fabric
+            .all_to_all_rows(0, vec![vec![0f32; 3]], &[1], &[1], 4, "dispatch")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("disagrees with the counts phase"), "got: {e}");
+        assert!(e.contains("rank 0"), "error must name the rank: {e}");
+        assert!(e.contains("dispatch leg"), "error must name the leg: {e}");
+        assert!(e.contains("len 3 != 1 rows x stride 4"), "expected-vs-actual: {e}");
     }
 }

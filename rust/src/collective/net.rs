@@ -1,0 +1,1239 @@
+//! `NetFabric`: the [`Collective`] trait over real TCP sockets -- N
+//! *processes* instead of N threads, std-only (no tokio, no serde).
+//!
+//! # Wire format
+//!
+//! Every message is one length-prefixed little-endian frame:
+//!
+//! ```text
+//! magic   u32   0x464e4447 ("GDNF")
+//! src     u16   sender rank
+//! leg     u8    frame kind (hello/mesh/counts/a2a/allreduce/bcast/...)
+//! flags   u8    reserved, 0
+//! seq     u64   per-leg collective sequence number (SPMD stream)
+//! total   u64   sender's whole contributed volume for this collective,
+//!               in bytes -- lets every rank derive the identical
+//!               max-per-rank modeled time with no extra round trips
+//! len     u64   payload bytes that follow
+//! check   u64   FNV-1a 64 of the payload
+//! payload [len bytes]
+//! ```
+//!
+//! A header mismatch (wrong magic, wrong src, wrong leg, wrong seq) or a
+//! checksum failure is a typed error naming the seq, leg, and source
+//! rank -- never silent corruption. f32 payloads are `to_le_bytes`
+//! round-trips, so arrivals are bit-identical to the in-process
+//! [`ThreadFabric`](super::ThreadFabric) mailboxes.
+//!
+//! # Rendezvous
+//!
+//! Rank 0 listens at the agreed `--coord HOST:PORT`. Every other rank
+//! connects there (bounded retry with backoff, so stragglers and
+//! out-of-order launches converge), sends a `hello` frame advertising
+//! its own ephemeral data listener, and receives back a `mesh` frame
+//! with every peer's address once all ranks have checked in. The coord
+//! connection itself becomes the (0, j) data link; for the remaining
+//! pairs, rank i dials every lower rank j (i > j > 0) and accepts from
+//! every higher one -- a full mesh with one TCP stream per pair.
+//!
+//! # Failure semantics
+//!
+//! Sends never block the SPMD schedule: each peer has a writer thread
+//! fed by an unbounded channel, mirroring the thread fabric's unbounded
+//! mailboxes. Reads carry an `io_timeout_ms` deadline, so a peer that
+//! died mid-step surfaces as `rank R: timed out ... waiting for <leg>
+//! frame from rank S` within the timeout instead of hanging the job. A
+//! clean run ends with a `shutdown` handshake (everyone sends, everyone
+//! drains) so no rank drops the connection while a peer still has
+//! frames in flight.
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+use std::io::{BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{Collective, FabricStats};
+use crate::netmodel::Cluster;
+use crate::util::error::{Context, Result};
+
+/// Frame magic: "GDNF" as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"GDNF");
+/// Fixed frame header length in bytes.
+pub const HEADER_LEN: usize = 40;
+
+/// Frame kinds (the `leg` byte). Rendezvous legs (`hello`/`mesh`) only
+/// appear before the mesh is up; `shutdown` only after the last
+/// collective.
+pub const LEG_HELLO: u8 = 0;
+pub const LEG_MESH: u8 = 1;
+pub const LEG_COUNTS: u8 = 2;
+pub const LEG_A2A: u8 = 3;
+pub const LEG_ALLREDUCE: u8 = 4;
+pub const LEG_BCAST: u8 = 5;
+pub const LEG_BARRIER: u8 = 6;
+pub const LEG_GATHER: u8 = 7;
+pub const LEG_SHUTDOWN: u8 = 8;
+const N_LEGS: usize = 9;
+
+/// Human name of a frame leg, for error messages.
+pub fn leg_name(leg: u8) -> &'static str {
+    match leg {
+        LEG_HELLO => "hello",
+        LEG_MESH => "mesh",
+        LEG_COUNTS => "counts",
+        LEG_A2A => "a2a",
+        LEG_ALLREDUCE => "allreduce",
+        LEG_BCAST => "broadcast",
+        LEG_BARRIER => "barrier",
+        LEG_GATHER => "gather",
+        LEG_SHUTDOWN => "shutdown",
+        _ => "unknown",
+    }
+}
+
+/// FNV-1a 64-bit: the frame checksum. Not cryptographic -- it catches
+/// bit flips and desynced streams, which is what a training fabric
+/// needs to fail loudly on.
+pub fn fnv1a64(data: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in data {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Decoded frame header (see the module docs for the layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub src: u16,
+    pub leg: u8,
+    pub seq: u64,
+    /// Sender's whole contributed volume for the collective this frame
+    /// belongs to (bytes) -- feeds the max-per-rank time model.
+    pub sender_total: u64,
+    pub payload_len: u64,
+    pub checksum: u64,
+}
+
+/// Encode one frame: header + payload, ready for `write_all`.
+pub fn encode_frame(src: u16, leg: u8, seq: u64, sender_total: u64, payload: &[u8]) -> Vec<u8> {
+    let mut f = Vec::with_capacity(HEADER_LEN + payload.len());
+    f.extend_from_slice(&MAGIC.to_le_bytes());
+    f.extend_from_slice(&src.to_le_bytes());
+    f.push(leg);
+    f.push(0); // flags, reserved
+    f.extend_from_slice(&seq.to_le_bytes());
+    f.extend_from_slice(&sender_total.to_le_bytes());
+    f.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    f.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    f.extend_from_slice(payload);
+    f
+}
+
+/// Parse a frame header; rejects a wrong magic (a desynced or
+/// non-protocol stream) before trusting any field.
+pub fn parse_header(b: &[u8]) -> Result<FrameHeader> {
+    crate::ensure!(b.len() == HEADER_LEN, "frame header is {} bytes, want {HEADER_LEN}", b.len());
+    let magic = u32::from_le_bytes(b[0..4].try_into().unwrap());
+    crate::ensure!(
+        magic == MAGIC,
+        "bad frame magic {magic:#010x} (want {MAGIC:#010x}) -- stream desynced or not a \
+         NetFabric peer"
+    );
+    Ok(FrameHeader {
+        src: u16::from_le_bytes(b[4..6].try_into().unwrap()),
+        leg: b[6],
+        seq: u64::from_le_bytes(b[8..16].try_into().unwrap()),
+        sender_total: u64::from_le_bytes(b[16..24].try_into().unwrap()),
+        payload_len: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+        checksum: u64::from_le_bytes(b[32..40].try_into().unwrap()),
+    })
+}
+
+/// Decode one whole frame from a byte buffer (header, payload, checksum
+/// verification). The checksum failure names the seq, leg, and source
+/// rank -- the fault-injection tests flip payload bytes through here.
+pub fn decode_frame(bytes: &[u8]) -> Result<(FrameHeader, Vec<u8>)> {
+    crate::ensure!(bytes.len() >= HEADER_LEN, "frame truncated at {} bytes", bytes.len());
+    let h = parse_header(&bytes[..HEADER_LEN])?;
+    let want = HEADER_LEN + h.payload_len as usize;
+    crate::ensure!(
+        bytes.len() == want,
+        "{} frame seq {} from rank {}: {} bytes on the wire, header promises {want}",
+        leg_name(h.leg),
+        h.seq,
+        h.src,
+        bytes.len(),
+    );
+    let payload = bytes[HEADER_LEN..].to_vec();
+    verify_checksum(&h, &payload)?;
+    Ok((h, payload))
+}
+
+fn verify_checksum(h: &FrameHeader, payload: &[u8]) -> Result<()> {
+    let got = fnv1a64(payload);
+    crate::ensure!(
+        got == h.checksum,
+        "checksum mismatch on {} frame seq {} from rank {}: payload hashes to {got:#018x}, \
+         header says {:#018x} -- corrupt bytes on the wire",
+        leg_name(h.leg),
+        h.seq,
+        h.src,
+        h.checksum,
+    );
+    Ok(())
+}
+
+/// Read one frame off a blocking stream (header, then exactly-sized
+/// payload), verifying the checksum. IO errors bubble as `io::Error`
+/// via `?` for the caller to contextualize with who/what it was waiting
+/// for.
+fn read_frame(rd: &mut impl Read) -> Result<(FrameHeader, Vec<u8>)> {
+    let mut hdr = [0u8; HEADER_LEN];
+    rd.read_exact(&mut hdr)?;
+    let h = parse_header(&hdr)?;
+    crate::ensure!(
+        h.payload_len <= 1 << 31,
+        "{} frame seq {} from rank {} promises an absurd {} byte payload",
+        leg_name(h.leg),
+        h.seq,
+        h.src,
+        h.payload_len,
+    );
+    let mut payload = vec![0u8; h.payload_len as usize];
+    rd.read_exact(&mut payload)?;
+    verify_checksum(&h, &payload)?;
+    Ok((h, payload))
+}
+
+fn f32s_to_le(v: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+fn le_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    crate::ensure!(b.len() % 4 == 0, "f32 payload of {} bytes is not 4-aligned", b.len());
+    Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// How one rank joins the TCP fabric.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    pub rank: usize,
+    pub world: usize,
+    /// Rank 0's rendezvous address, `HOST:PORT`. Rank 0 binds it; every
+    /// other rank dials it.
+    pub coord: String,
+    /// Bounded connect retry: attempts before giving up on a peer.
+    pub connect_retries: u32,
+    /// Backoff between connect attempts, milliseconds.
+    pub retry_backoff_ms: u64,
+    /// Read deadline per frame: a peer silent for longer than this is
+    /// reported dead (typed error), never waited on forever.
+    pub io_timeout_ms: u64,
+    /// Optional cluster model for modeled-time accounting, exactly like
+    /// `ThreadFabric::with_cluster`.
+    pub cluster: Option<Cluster>,
+}
+
+impl NetConfig {
+    pub fn new(rank: usize, world: usize, coord: impl Into<String>) -> NetConfig {
+        NetConfig {
+            rank,
+            world,
+            coord: coord.into(),
+            connect_retries: 80,
+            retry_backoff_ms: 25,
+            io_timeout_ms: 10_000,
+            cluster: None,
+        }
+    }
+}
+
+/// One live TCP peer: a writer thread draining an unbounded channel
+/// (sends never block the SPMD schedule, mirroring the thread fabric's
+/// unbounded mailboxes) and a buffered, deadline-guarded reader.
+struct Peer {
+    tx: Mutex<Option<mpsc::Sender<Vec<u8>>>>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+    write_err: Arc<Mutex<Option<String>>>,
+    rd: Mutex<BufReader<TcpStream>>,
+}
+
+impl Peer {
+    fn spawn(stream: TcpStream, io_timeout: Duration) -> Result<Peer> {
+        stream.set_read_timeout(Some(io_timeout)).context("setting peer read timeout")?;
+        // frames are latency-sensitive and already coalesced
+        let _ = stream.set_nodelay(true);
+        let mut wr = stream.try_clone().context("cloning peer stream for the writer")?;
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        let write_err = Arc::new(Mutex::new(None::<String>));
+        let we = write_err.clone();
+        let writer = std::thread::spawn(move || {
+            while let Ok(frame) = rx.recv() {
+                if let Err(e) = wr.write_all(&frame) {
+                    *we.lock().unwrap() = Some(e.to_string());
+                    return;
+                }
+            }
+            let _ = wr.flush();
+        });
+        Ok(Peer {
+            tx: Mutex::new(Some(tx)),
+            writer: Mutex::new(Some(writer)),
+            write_err,
+            rd: Mutex::new(BufReader::new(stream)),
+        })
+    }
+
+    /// Drop the channel (writer drains remaining frames and exits) and
+    /// join the writer thread.
+    fn close(&self) {
+        drop(self.tx.lock().unwrap().take());
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Multi-process TCP implementation of [`Collective`]. One instance per
+/// OS process; `rank`/`world` are fixed at connect time, and every
+/// `Collective` call must pass the same rank (SPMD). Accounting is
+/// LOCAL to this rank -- merge per-rank snapshots with
+/// [`FabricStats::merge_ranks`] for whole-fabric totals comparable to
+/// `ThreadFabric::stats()`.
+pub struct NetFabric {
+    rank: usize,
+    n: usize,
+    peers: Vec<Option<Peer>>, // None at self index (and everywhere when n == 1)
+    stats: Mutex<FabricStats>,
+    /// Next sequence number per frame leg. SPMD ordering makes every
+    /// rank assign identical seqs to identical collectives, which is
+    /// what the receive path verifies.
+    seqs: Mutex<[u64; N_LEGS]>,
+    cluster: Option<Cluster>,
+    io_timeout_ms: u64,
+}
+
+impl NetFabric {
+    /// Join the fabric: rendezvous at `cfg.coord`, build the full peer
+    /// mesh, return once every pair is connected.
+    pub fn connect(cfg: &NetConfig) -> Result<NetFabric> {
+        Self::connect_with(cfg, None)
+    }
+
+    /// [`NetFabric::connect`] with an optionally pre-bound rendezvous
+    /// listener for rank 0 -- in-process tests bind port 0 first and
+    /// pass the listener in, so there is no bind race on a fixed port.
+    pub fn connect_with(cfg: &NetConfig, coord_listener: Option<TcpListener>) -> Result<NetFabric> {
+        crate::ensure!(cfg.world > 0, "world must be at least 1");
+        crate::ensure!(
+            cfg.rank < cfg.world,
+            "rank {} out of range for world {}",
+            cfg.rank,
+            cfg.world
+        );
+        let mut peers: Vec<Option<Peer>> = (0..cfg.world).map(|_| None).collect();
+        if cfg.world > 1 {
+            let io_timeout = Duration::from_millis(cfg.io_timeout_ms);
+            let streams = if cfg.rank == 0 {
+                rendezvous_root(cfg, coord_listener)?
+            } else {
+                rendezvous_member(cfg)?
+            };
+            for (r, s) in streams {
+                peers[r] = Some(Peer::spawn(s, io_timeout)?);
+            }
+            for (r, p) in peers.iter().enumerate() {
+                crate::ensure!(
+                    r == cfg.rank || p.is_some(),
+                    "rank {}: mesh incomplete, no connection to rank {r}",
+                    cfg.rank
+                );
+            }
+        }
+        Ok(NetFabric {
+            rank: cfg.rank,
+            n: cfg.world,
+            peers,
+            stats: Mutex::new(FabricStats::default()),
+            seqs: Mutex::new([0; N_LEGS]),
+            cluster: cfg.cluster,
+            io_timeout_ms: cfg.io_timeout_ms,
+        })
+    }
+
+    /// This rank's fixed rank id.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// THIS rank's local accounting (see [`FabricStats::merge_ranks`]).
+    pub fn stats(&self) -> FabricStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn reset_stats(&self) {
+        *self.stats.lock().unwrap() = FabricStats::default();
+    }
+
+    fn account(&self, f: impl FnOnce(&mut FabricStats, Option<&Cluster>)) {
+        let mut s = self.stats.lock().unwrap();
+        f(&mut s, self.cluster.as_ref());
+    }
+
+    fn next_seq(&self, leg: u8) -> u64 {
+        let mut seqs = self.seqs.lock().unwrap();
+        let s = seqs[leg as usize];
+        seqs[leg as usize] += 1;
+        s
+    }
+
+    fn peer(&self, r: usize) -> Result<&Peer> {
+        crate::ensure!(r < self.n && r != self.rank, "rank {}: no peer {r}", self.rank);
+        self.peers[r]
+            .as_ref()
+            .with_context(|| format!("rank {}: connection to rank {r} is gone", self.rank))
+    }
+
+    /// Queue one pre-encoded frame to `dst`. Never blocks; a writer
+    /// that already died surfaces its IO error here.
+    fn send_frame(&self, dst: usize, frame: Vec<u8>) -> Result<()> {
+        let p = self.peer(dst)?;
+        if let Some(e) = p.write_err.lock().unwrap().clone() {
+            crate::bail!("rank {}: send to rank {dst} failed: {e}", self.rank);
+        }
+        let tx = p.tx.lock().unwrap();
+        let Some(tx) = tx.as_ref() else {
+            crate::bail!("rank {}: connection to rank {dst} already shut down", self.rank);
+        };
+        tx.send(frame)
+            .map_err(|_| crate::err!("rank {}: writer thread for rank {dst} is gone", self.rank))
+    }
+
+    /// Read the next frame from `src`, insisting it is `(leg, seq)` --
+    /// anything else is an SPMD desync or a dead/corrupt peer, reported
+    /// as a typed error naming the rank and leg within the IO timeout.
+    fn recv_frame(&self, src: usize, leg: u8, seq: u64) -> Result<(FrameHeader, Vec<u8>)> {
+        let p = self.peer(src)?;
+        let mut rd = p.rd.lock().unwrap();
+        let (h, payload) = read_frame(&mut *rd).map_err(|e| {
+            crate::err!(
+                "rank {}: waiting for {} frame seq {seq} from rank {src}: {e} \
+                 (io timeout {}ms -- peer dead, killed, or desynced)",
+                self.rank,
+                leg_name(leg),
+                self.io_timeout_ms,
+            )
+        })?;
+        crate::ensure!(
+            h.src as usize == src,
+            "rank {}: frame on the rank-{src} stream claims src {} -- mesh corrupted",
+            self.rank,
+            h.src,
+        );
+        crate::ensure!(
+            h.leg == leg && h.seq == seq,
+            "rank {}: expected {} frame seq {seq} from rank {src}, got {} seq {} \
+             (SPMD schedule desync)",
+            self.rank,
+            leg_name(leg),
+            leg_name(h.leg),
+            h.seq,
+        );
+        Ok((h, payload))
+    }
+
+    /// Begin one chunked all-to-all: each posted chunk streams as one
+    /// checksummed frame per peer immediately (the writer threads make
+    /// this non-blocking), so chunk k's arrivals pair with every
+    /// source's chunk k exactly like the thread fabric's mailbox FIFO.
+    /// ONE `a2a_ops` collective regardless of chunk count; wall time is
+    /// measured, modeled overlap credit is honestly zero (this fabric
+    /// *measures* its overlap instead of modeling it).
+    pub fn a2a_pipelined(
+        &self,
+        rank: usize,
+        charge_compute: bool,
+        leg: &'static str,
+    ) -> NetPipe<'_> {
+        assert_eq!(rank, self.rank, "NetFabric rank is fixed at connect time");
+        NetPipe {
+            fab: self,
+            charge_compute,
+            leg,
+            seqs: Vec::new(),
+            posted: 0,
+            received: 0,
+            own: VecDeque::new(),
+            bytes_sent: 0,
+            total_bytes: 0,
+            src_totals: vec![0; self.n],
+            compute_secs: 0.0,
+            wall_nanos: 0,
+        }
+    }
+
+    /// Unaccounted gather of opaque payloads to rank 0 (end-of-run
+    /// result collection: losses, fingerprints, per-rank stats).
+    /// Returns `Some(per_rank_payloads)` on rank 0, `None` elsewhere.
+    pub fn gather_bytes(&self, payload: Vec<u8>) -> Result<Option<Vec<Vec<u8>>>> {
+        let seq = self.next_seq(LEG_GATHER);
+        if self.rank != 0 {
+            let frame = encode_frame(self.rank as u16, LEG_GATHER, seq, 0, &payload);
+            self.send_frame(0, frame)?;
+            return Ok(None);
+        }
+        let mut out = Vec::with_capacity(self.n);
+        for s in 0..self.n {
+            if s == 0 {
+                out.push(payload.clone());
+            } else {
+                let (_, p) = self.recv_frame(s, LEG_GATHER, seq)?;
+                out.push(p);
+            }
+        }
+        Ok(Some(out))
+    }
+
+    /// The end-of-run handshake: send a `shutdown` frame to every peer,
+    /// then drain one from each. Receiving a peer's shutdown proves its
+    /// stream delivered everything before it; only then is it safe to
+    /// drop connections without racing a trailing frame.
+    pub fn shutdown(&self) -> Result<()> {
+        if self.n == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq(LEG_SHUTDOWN);
+        for d in 0..self.n {
+            if d != self.rank {
+                self.send_frame(d, encode_frame(self.rank as u16, LEG_SHUTDOWN, seq, 0, &[]))?;
+            }
+        }
+        for s in 0..self.n {
+            if s != self.rank {
+                self.recv_frame(s, LEG_SHUTDOWN, seq)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Drop for NetFabric {
+    fn drop(&mut self) {
+        for p in self.peers.iter().flatten() {
+            p.close();
+        }
+    }
+}
+
+/// Dial `addr` with bounded retry + backoff: stragglers (a rendezvous
+/// listener that is not up yet) converge; a truly absent peer becomes a
+/// typed error naming the address and attempt count.
+fn connect_retry(addr: &str, who: &str, retries: u32, backoff_ms: u64) -> Result<TcpStream> {
+    let mut last = String::new();
+    for attempt in 0..retries.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt + 1 < retries.max(1) {
+            std::thread::sleep(Duration::from_millis(backoff_ms));
+        }
+    }
+    Err(crate::err!(
+        "{who}: could not reach {addr} after {} attempts ({last})",
+        retries.max(1)
+    ))
+}
+
+/// Rank 0's side of the rendezvous: accept `world - 1` hellos, hand the
+/// full mesh back, keep each coord stream as the (0, j) data link.
+fn rendezvous_root(
+    cfg: &NetConfig,
+    pre_bound: Option<TcpListener>,
+) -> Result<HashMap<usize, TcpStream>> {
+    let listener = match pre_bound {
+        Some(l) => l,
+        None => bind_retry(&cfg.coord, cfg.connect_retries, cfg.retry_backoff_ms)?,
+    };
+    listener.set_nonblocking(true).context("rendezvous listener nonblocking")?;
+    // generous deadline: every member gets its full retry budget
+    let deadline = Instant::now()
+        + Duration::from_millis(
+            cfg.io_timeout_ms + cfg.connect_retries as u64 * cfg.retry_backoff_ms,
+        );
+    let mut streams: HashMap<usize, TcpStream> = HashMap::new();
+    let mut addrs: Vec<String> = vec![String::new(); cfg.world];
+    while streams.len() < cfg.world - 1 {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("rendezvous peer to blocking")?;
+                stream
+                    .set_read_timeout(Some(Duration::from_millis(cfg.io_timeout_ms)))
+                    .context("rendezvous peer read timeout")?;
+                // unbuffered read: a BufReader here could slurp frames
+                // that belong to the post-rendezvous data stream
+                let (h, payload) =
+                    read_frame(&mut (&stream)).context("rank 0: reading rendezvous hello")?;
+                crate::ensure!(
+                    h.leg == LEG_HELLO,
+                    "rank 0: rendezvous expected a hello frame, got {}",
+                    leg_name(h.leg)
+                );
+                let r = h.src as usize;
+                crate::ensure!(
+                    r > 0 && r < cfg.world,
+                    "rank 0: hello from out-of-range rank {r} (world {})",
+                    cfg.world
+                );
+                crate::ensure!(
+                    !streams.contains_key(&r),
+                    "rank 0: two peers both claim rank {r}"
+                );
+                addrs[r] = String::from_utf8(payload)
+                    .ok()
+                    .context("rank 0: hello payload is not UTF-8")?;
+                streams.insert(r, stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                crate::ensure!(
+                    Instant::now() < deadline,
+                    "rank 0: rendezvous timed out with {}/{} peers checked in",
+                    streams.len(),
+                    cfg.world - 1
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).context("rank 0: rendezvous accept"),
+        }
+    }
+    // the mesh: "rank addr" per line, ranks 1..world (rank 0 needs no
+    // data listener -- these very streams are its links)
+    let mesh: String = (1..cfg.world).map(|r| format!("{r} {}\n", addrs[r])).collect();
+    let frame = encode_frame(0, LEG_MESH, 0, 0, mesh.as_bytes());
+    for (r, stream) in streams.iter_mut() {
+        let mut s = stream.try_clone().context("cloning for mesh send")?;
+        s.write_all(&frame)
+            .with_context(|| format!("rank 0: sending mesh to rank {r}"))?;
+    }
+    Ok(streams)
+}
+
+/// A member rank's side: dial the coordinator (retry), advertise a data
+/// listener, learn the mesh, then dial every lower rank and accept
+/// every higher one.
+fn rendezvous_member(cfg: &NetConfig) -> Result<HashMap<usize, TcpStream>> {
+    let who = format!("rank {}", cfg.rank);
+    let coord = connect_retry(
+        &cfg.coord,
+        &format!("{who}: rendezvous"),
+        cfg.connect_retries,
+        cfg.retry_backoff_ms,
+    )?;
+    coord
+        .set_read_timeout(Some(Duration::from_millis(cfg.io_timeout_ms)))
+        .context("coord read timeout")?;
+    // data listener on the same interface we reached the coordinator
+    // from, so the advertised address is routable for every peer that
+    // can also reach the coordinator
+    let local_ip = coord.local_addr().context("coord local addr")?.ip();
+    let data = TcpListener::bind((local_ip, 0))
+        .with_context(|| format!("{who}: binding data listener on {local_ip}"))?;
+    let data_addr = data.local_addr().context("data listener addr")?;
+    let hello = encode_frame(
+        cfg.rank as u16,
+        LEG_HELLO,
+        0,
+        0,
+        data_addr.to_string().as_bytes(),
+    );
+    let mut coord_wr = coord.try_clone().context("cloning coord stream")?;
+    coord_wr.write_all(&hello).with_context(|| format!("{who}: sending hello"))?;
+    // unbuffered read: rank 0 may push its first data frame right after
+    // the mesh, and a BufReader would swallow it with the mesh bytes
+    let (h, payload) = read_frame(&mut (&coord))
+        .with_context(|| format!("{who}: waiting for the mesh from rank 0"))?;
+    crate::ensure!(
+        h.leg == LEG_MESH && h.src == 0,
+        "{who}: expected the mesh frame from rank 0, got {} from rank {}",
+        leg_name(h.leg),
+        h.src
+    );
+    let mesh_text = String::from_utf8(payload).ok().context("mesh payload is not UTF-8")?;
+    let mut addrs: Vec<String> = vec![String::new(); cfg.world];
+    for line in mesh_text.lines() {
+        let (r, addr) = line
+            .split_once(' ')
+            .with_context(|| format!("{who}: malformed mesh line {line:?}"))?;
+        let r: usize = r.parse().ok().with_context(|| format!("{who}: bad mesh rank {r:?}"))?;
+        crate::ensure!(r > 0 && r < cfg.world, "{who}: mesh names out-of-range rank {r}");
+        addrs[r] = addr.to_string();
+    }
+    let mut streams: HashMap<usize, TcpStream> = HashMap::new();
+    streams.insert(0, coord);
+    // dial every lower non-zero rank (their listeners were bound before
+    // they said hello, and the mesh only exists after every hello)
+    for j in 1..cfg.rank {
+        let s = connect_retry(
+            &addrs[j],
+            &format!("{who}: data link to rank {j}"),
+            cfg.connect_retries,
+            cfg.retry_backoff_ms,
+        )?;
+        let mut wr = s.try_clone().context("cloning data stream")?;
+        wr.write_all(&encode_frame(cfg.rank as u16, LEG_HELLO, 0, 0, &[]))
+            .with_context(|| format!("{who}: hello to rank {j}"))?;
+        streams.insert(j, s);
+    }
+    // accept every higher rank
+    data.set_nonblocking(true).context("data listener nonblocking")?;
+    let deadline = Instant::now()
+        + Duration::from_millis(
+            cfg.io_timeout_ms + cfg.connect_retries as u64 * cfg.retry_backoff_ms,
+        );
+    while streams.len() < cfg.world - 1 {
+        match data.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).context("data peer to blocking")?;
+                stream
+                    .set_read_timeout(Some(Duration::from_millis(cfg.io_timeout_ms)))
+                    .context("data peer read timeout")?;
+                // unbuffered: the dialer's data frames may follow its
+                // hello immediately; they must stay in the socket buffer
+                let (h, _) = read_frame(&mut (&stream))
+                    .with_context(|| format!("{who}: data-link hello"))?;
+                crate::ensure!(
+                    h.leg == LEG_HELLO,
+                    "{who}: data link expected hello, got {}",
+                    leg_name(h.leg)
+                );
+                let r = h.src as usize;
+                crate::ensure!(
+                    r > cfg.rank && r < cfg.world,
+                    "{who}: unexpected data-link hello from rank {r}"
+                );
+                crate::ensure!(
+                    !streams.contains_key(&r),
+                    "{who}: duplicate data link from rank {r}"
+                );
+                streams.insert(r, stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                crate::ensure!(
+                    Instant::now() < deadline,
+                    "{who}: mesh build timed out with {}/{} links up",
+                    streams.len(),
+                    cfg.world - 1
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(e).with_context(|| format!("{who}: data accept")),
+        }
+    }
+    Ok(streams)
+}
+
+/// Bind with retry: the tcp-local launcher probes a free port, drops
+/// the probe socket, and hands the port to the rank-0 child -- a tiny
+/// window where the rebind can transiently fail.
+fn bind_retry(addr: &str, retries: u32, backoff_ms: u64) -> Result<TcpListener> {
+    let mut last = String::new();
+    for attempt in 0..retries.max(1) {
+        match TcpListener::bind(addr) {
+            Ok(l) => return Ok(l),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt + 1 < retries.max(1) {
+            std::thread::sleep(Duration::from_millis(backoff_ms));
+        }
+    }
+    Err(crate::err!("rank 0: could not bind rendezvous {addr} after retries ({last})"))
+}
+
+/// One in-flight chunked all-to-all over TCP (see
+/// [`NetFabric::a2a_pipelined`]). Every posted chunk is already on its
+/// way when `post_chunk` returns; `recv_chunk` pairs arrivals with the
+/// k-th chunk every source posted, enforced by the per-chunk seq.
+pub struct NetPipe<'a> {
+    fab: &'a NetFabric,
+    charge_compute: bool,
+    leg: &'static str,
+    /// The a2a seq assigned to each posted chunk; the k-th receive
+    /// insists on the k-th seq (SPMD gives every rank the same stream).
+    seqs: Vec<u64>,
+    posted: usize,
+    received: usize,
+    /// Self-destined chunks never touch the wire.
+    own: VecDeque<Vec<f32>>,
+    bytes_sent: u64,
+    total_bytes: u64,
+    /// Per-source accumulated `sender_total` -- at finish, the max
+    /// across ranks (self included) prices the modeled collective
+    /// exactly like the thread ledger's rendezvous.
+    src_totals: Vec<u64>,
+    compute_secs: f64,
+    wall_nanos: u64,
+}
+
+impl NetPipe<'_> {
+    /// Send one chunk: `bufs[d]` goes to rank `d`, one checksummed
+    /// frame per peer, queued without blocking. `compute_secs` is the
+    /// modeled expert span this chunk is paced against (kept for the
+    /// `modeled_compute` report; the TCP path earns no modeled overlap
+    /// credit).
+    pub fn post_chunk(&mut self, mut bufs: Vec<Vec<f32>>, compute_secs: f64) -> Result<()> {
+        let (rank, n) = (self.fab.rank, self.fab.n);
+        crate::ensure!(
+            bufs.len() == n,
+            "rank {rank} {} leg: chunk has {} buffers for {n} destinations",
+            self.leg,
+            bufs.len(),
+        );
+        let t0 = Instant::now();
+        let seq = self.fab.next_seq(LEG_A2A);
+        self.seqs.push(seq);
+        let total: u64 = bufs.iter().map(|b| b.len() as u64 * 4).sum();
+        let own = std::mem::take(&mut bufs[rank]);
+        self.total_bytes += total;
+        self.bytes_sent += total - own.len() as u64 * 4;
+        self.own.push_back(own);
+        for (d, buf) in bufs.iter().enumerate() {
+            if d == rank {
+                continue;
+            }
+            let frame =
+                encode_frame(rank as u16, LEG_A2A, seq, total, &f32s_to_le(buf));
+            self.fab
+                .send_frame(d, frame)
+                .with_context(|| format!("rank {rank} {} leg", self.leg))?;
+        }
+        if self.charge_compute {
+            self.compute_secs += compute_secs;
+        }
+        self.posted += 1;
+        self.wall_nanos += t0.elapsed().as_nanos() as u64;
+        Ok(())
+    }
+
+    /// Receive the next chunk: one buffer per source rank. Blocks at
+    /// most the fabric's IO timeout per peer; a dead peer is a typed
+    /// error naming the rank and this schedule leg.
+    pub fn recv_chunk(&mut self) -> Result<Vec<Vec<f32>>> {
+        let (rank, n) = (self.fab.rank, self.fab.n);
+        crate::ensure!(
+            self.received < self.posted,
+            "rank {rank} {} leg: recv_chunk without a matching post_chunk (chunk {})",
+            self.leg,
+            self.received,
+        );
+        let t0 = Instant::now();
+        let seq = self.seqs[self.received];
+        let mut got = Vec::with_capacity(n);
+        for s in 0..n {
+            if s == rank {
+                got.push(self.own.pop_front().unwrap());
+            } else {
+                let (h, payload) = self
+                    .fab
+                    .recv_frame(s, LEG_A2A, seq)
+                    .with_context(|| format!("rank {rank} {} leg", self.leg))?;
+                self.src_totals[s] += h.sender_total;
+                got.push(le_to_f32s(&payload)?);
+            }
+        }
+        self.received += 1;
+        self.wall_nanos += t0.elapsed().as_nanos() as u64;
+        Ok(got)
+    }
+
+    /// Settle accounting: ONE `a2a_ops` tick, off-rank payload bytes,
+    /// measured wall time, and the modeled charge at max-per-rank total
+    /// volume (bit-compatible with the thread ledger's rendezvous).
+    pub fn finish(self) -> Result<()> {
+        crate::ensure!(
+            self.posted == self.received,
+            "rank {} {} leg: pipelined a2a finished with {} posted but {} received chunks",
+            self.fab.rank,
+            self.leg,
+            self.posted,
+            self.received,
+        );
+        let max_total =
+            self.src_totals.iter().copied().fold(self.total_bytes, u64::max);
+        let frames = (self.posted * (self.fab.n - 1)) as u64;
+        let wire_bytes = self.bytes_sent + frames * HEADER_LEN as u64;
+        let (nanos, bytes_sent) = (self.wall_nanos, self.bytes_sent);
+        let (charge, compute, n) = (self.charge_compute, self.compute_secs, self.fab.n);
+        self.fab.account(|st, cl| {
+            st.a2a_ops += 1;
+            st.a2a_bytes += bytes_sent;
+            st.wall_a2a_nanos += nanos;
+            st.wall_bytes += wire_bytes;
+            if charge {
+                st.modeled_compute += compute;
+            }
+            if let Some(c) = cl {
+                st.modeled_time += c.all_to_all_time(n, max_total as f64);
+            }
+        });
+        Ok(())
+    }
+}
+
+impl Collective for NetFabric {
+    fn n_ranks(&self) -> usize {
+        self.n
+    }
+
+    fn all_to_all(&self, rank: usize, out: Vec<Vec<f32>>) -> Result<Vec<Vec<f32>>> {
+        crate::ensure!(
+            rank == self.rank,
+            "NetFabric is rank {} but was called as rank {rank}",
+            self.rank
+        );
+        let mut pipe = self.a2a_pipelined(rank, false, "a2a");
+        pipe.post_chunk(out, 0.0)?;
+        let got = pipe.recv_chunk()?;
+        pipe.finish()?;
+        Ok(got)
+    }
+
+    fn all_to_all_f32(
+        &self,
+        rank: usize,
+        bufs: Vec<Vec<f32>>,
+        counts: &[usize],
+    ) -> Result<Vec<Vec<f32>>> {
+        crate::ensure!(counts.len() == self.n, "one expected count per source rank");
+        let result = self.all_to_all(rank, bufs)?;
+        for (s, chunk) in result.iter().enumerate() {
+            crate::ensure!(
+                chunk.len() == counts[s],
+                "rank {rank}: arrival from {s} disagrees with counts phase \
+                 ({} f32s != expected {})",
+                chunk.len(),
+                counts[s],
+            );
+        }
+        Ok(result)
+    }
+
+    fn all_to_all_counts(&self, rank: usize, counts: &[usize]) -> Result<Vec<usize>> {
+        crate::ensure!(
+            rank == self.rank,
+            "NetFabric is rank {} but was called as rank {rank}",
+            self.rank
+        );
+        crate::ensure!(counts.len() == self.n, "one count per destination rank");
+        let seq = self.next_seq(LEG_COUNTS);
+        for d in 0..self.n {
+            if d != rank {
+                let payload = (counts[d] as u64).to_le_bytes();
+                self.send_frame(d, encode_frame(rank as u16, LEG_COUNTS, seq, 8, &payload))?;
+            }
+        }
+        let mut got = Vec::with_capacity(self.n);
+        for s in 0..self.n {
+            if s == rank {
+                got.push(counts[rank]);
+            } else {
+                let (_, payload) = self.recv_frame(s, LEG_COUNTS, seq)?;
+                crate::ensure!(
+                    payload.len() == 8,
+                    "rank {rank}: counts frame from {s} has {} payload bytes, want 8",
+                    payload.len()
+                );
+                got.push(u64::from_le_bytes(payload.try_into().unwrap()) as usize);
+            }
+        }
+        // same convention as the thread fabric: one u32-sized word per
+        // off-rank peer, charged per rank (actual framed wire bytes are
+        // a wall_bytes concern, not a model-comparability one)
+        let bytes = 4 * (self.n - 1);
+        self.account(|st, cl| {
+            st.counts_bytes += bytes as u64;
+            st.counts_ops += 1;
+            if let Some(c) = cl {
+                st.modeled_time += c.all_to_all_time(self.n, (4 * self.n) as f64);
+            }
+        });
+        Ok(got)
+    }
+
+    fn all_reduce_sum(&self, rank: usize, data: &mut [f32]) -> Result<()> {
+        self.all_reduce_impl(rank, data, true)
+    }
+
+    fn all_reduce_sum_unaccounted(&self, rank: usize, data: &mut [f32]) -> Result<()> {
+        self.all_reduce_impl(rank, data, false)
+    }
+
+    fn broadcast(&self, rank: usize, root: usize, data: Option<Vec<u8>>) -> Result<Vec<u8>> {
+        crate::ensure!(
+            rank == self.rank,
+            "NetFabric is rank {} but was called as rank {rank}",
+            self.rank
+        );
+        crate::ensure!(root < self.n, "broadcast root {root} out of range");
+        let seq = self.next_seq(LEG_BCAST);
+        let out = if rank == root {
+            let Some(payload) = data else {
+                crate::bail!("rank {rank}: broadcast root must supply a payload");
+            };
+            for d in 0..self.n {
+                if d != root {
+                    self.send_frame(
+                        d,
+                        encode_frame(rank as u16, LEG_BCAST, seq, payload.len() as u64, &payload),
+                    )?;
+                }
+            }
+            payload
+        } else {
+            let (_, payload) = self.recv_frame(root, LEG_BCAST, seq)?;
+            payload
+        };
+        self.account(|st, cl| {
+            if rank == root {
+                st.broadcast_ops += 1;
+                st.broadcast_bytes += out.len() as u64;
+                if let Some(c) = cl {
+                    let rounds = (self.n as f64).log2().ceil();
+                    st.modeled_time += rounds * c.alpha;
+                }
+            }
+        });
+        Ok(out)
+    }
+
+    fn barrier(&self, rank: usize) -> Result<()> {
+        crate::ensure!(
+            rank == self.rank,
+            "NetFabric is rank {} but was called as rank {rank}",
+            self.rank
+        );
+        if self.n == 1 {
+            return Ok(());
+        }
+        let seq = self.next_seq(LEG_BARRIER);
+        if rank == 0 {
+            for s in 1..self.n {
+                self.recv_frame(s, LEG_BARRIER, seq)?;
+            }
+            for d in 1..self.n {
+                self.send_frame(d, encode_frame(0, LEG_BARRIER, seq, 0, &[]))?;
+            }
+        } else {
+            self.send_frame(0, encode_frame(rank as u16, LEG_BARRIER, seq, 0, &[]))?;
+            self.recv_frame(0, LEG_BARRIER, seq)?;
+        }
+        Ok(())
+    }
+}
+
+impl NetFabric {
+    /// Gather-to-root + broadcast-back, summing at rank 0 in source
+    /// order -- the exact accumulation order of the thread fabric, so
+    /// the result bits are fabric-invariant.
+    fn all_reduce_impl(&self, rank: usize, data: &mut [f32], accounted: bool) -> Result<()> {
+        crate::ensure!(
+            rank == self.rank,
+            "NetFabric is rank {} but was called as rank {rank}",
+            self.rank
+        );
+        let bytes = data.len() * 4;
+        let seq = self.next_seq(LEG_ALLREDUCE);
+        if self.n > 1 {
+            if rank == 0 {
+                for s in 1..self.n {
+                    let (_, payload) = self.recv_frame(s, LEG_ALLREDUCE, seq)?;
+                    let part = le_to_f32s(&payload)?;
+                    crate::ensure!(
+                        part.len() == data.len(),
+                        "rank 0: all_reduce from rank {s} carries {} f32s, want {}",
+                        part.len(),
+                        data.len()
+                    );
+                    for (a, b) in data.iter_mut().zip(part) {
+                        *a += b;
+                    }
+                }
+                let result = f32s_to_le(data);
+                for d in 1..self.n {
+                    self.send_frame(
+                        d,
+                        encode_frame(0, LEG_ALLREDUCE, seq, result.len() as u64, &result),
+                    )?;
+                }
+            } else {
+                let payload = f32s_to_le(data);
+                self.send_frame(
+                    0,
+                    encode_frame(rank as u16, LEG_ALLREDUCE, seq, payload.len() as u64, &payload),
+                )?;
+                let (_, result) = self.recv_frame(0, LEG_ALLREDUCE, seq)?;
+                let part = le_to_f32s(&result)?;
+                crate::ensure!(
+                    part.len() == data.len(),
+                    "rank {rank}: all_reduce result carries {} f32s, want {}",
+                    part.len(),
+                    data.len()
+                );
+                data.copy_from_slice(&part);
+            }
+        }
+        if !accounted {
+            return Ok(());
+        }
+        self.account(|st, cl| {
+            st.allreduce_bytes += bytes as u64;
+            st.allreduce_ops += 1;
+            if let Some(c) = cl {
+                let n = self.n as f64;
+                let vol = 2.0 * (n - 1.0) / n * bytes as f64;
+                let link = c.node_net_bw / c.gpus_per_node as f64;
+                st.modeled_time += vol / link + 2.0 * (n - 1.0) * c.alpha;
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // the canonical FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85dd_1e2d_b9cc_f10d);
+    }
+
+    #[test]
+    fn frame_round_trips() {
+        let payload = f32s_to_le(&[1.5f32, -2.25, 0.0, f32::MIN_POSITIVE]);
+        let frame = encode_frame(3, LEG_A2A, 42, 160, &payload);
+        assert_eq!(frame.len(), HEADER_LEN + payload.len());
+        let (h, p) = decode_frame(&frame).unwrap();
+        assert_eq!(h.src, 3);
+        assert_eq!(h.leg, LEG_A2A);
+        assert_eq!(h.seq, 42);
+        assert_eq!(h.sender_total, 160);
+        assert_eq!(p, payload);
+        let back = le_to_f32s(&p).unwrap();
+        assert_eq!(
+            back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "f32 <-> le bytes must be bit-exact"
+        );
+    }
+
+    /// The corrupted-frame fault injection: one flipped payload byte
+    /// must fail the checksum with an error naming seq, leg, and src.
+    #[test]
+    fn flipped_payload_byte_fails_checksum_naming_seq_leg_src() {
+        let payload = f32s_to_le(&[3.0f32; 8]);
+        let mut frame = encode_frame(2, LEG_A2A, 7, 32, &payload);
+        frame[HEADER_LEN + 5] ^= 0x10;
+        let e = decode_frame(&frame).unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "got: {e}");
+        assert!(e.contains("seq 7"), "error must name the seq: {e}");
+        assert!(e.contains("a2a frame"), "error must name the leg: {e}");
+        assert!(e.contains("rank 2"), "error must name the source rank: {e}");
+    }
+
+    #[test]
+    fn bad_magic_and_truncation_are_rejected() {
+        let mut frame = encode_frame(1, LEG_COUNTS, 0, 8, &8u64.to_le_bytes());
+        frame[0] ^= 0xff;
+        let e = decode_frame(&frame).unwrap_err().to_string();
+        assert!(e.contains("bad frame magic"), "got: {e}");
+        let short = encode_frame(1, LEG_COUNTS, 0, 8, &8u64.to_le_bytes());
+        let e = decode_frame(&short[..HEADER_LEN + 3]).unwrap_err().to_string();
+        assert!(e.contains("bytes on the wire"), "got: {e}");
+    }
+
+    /// End-to-end loopback smoke at world=2, in-process: the rendezvous
+    /// (pre-bound listener, no port race), one typed all-to-all, an
+    /// all-reduce, a broadcast, a barrier, and the shutdown handshake.
+    #[test]
+    fn loopback_world2_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let coord = listener.local_addr().unwrap().to_string();
+        let mk = |rank: usize| {
+            let mut c = NetConfig::new(rank, 2, coord.clone());
+            c.io_timeout_ms = 5_000;
+            c
+        };
+        let c1 = mk(1);
+        let peer = std::thread::spawn(move || {
+            let fab = NetFabric::connect(&c1).unwrap();
+            let counts = fab.all_to_all_counts(1, &[3, 1]).unwrap();
+            assert_eq!(counts, vec![2, 1]);
+            let got = fab
+                .all_to_all_f32(1, vec![vec![10.0; 3], vec![11.0]], &[2, 1])
+                .unwrap();
+            assert_eq!(got, vec![vec![1.0; 2], vec![11.0]]);
+            let mut d = vec![1.0f32, 2.0];
+            fab.all_reduce_sum(1, &mut d).unwrap();
+            assert_eq!(d, vec![1.5, 4.0]);
+            let b = fab.broadcast(1, 0, None).unwrap();
+            assert_eq!(b, vec![9, 9]);
+            fab.barrier(1).unwrap();
+            fab.shutdown().unwrap();
+            fab.stats()
+        });
+        let fab = NetFabric::connect_with(&mk(0), Some(listener)).unwrap();
+        let counts = fab.all_to_all_counts(0, &[2, 2]).unwrap();
+        assert_eq!(counts, vec![2, 3]);
+        let got = fab
+            .all_to_all_f32(0, vec![vec![0.5; 2], vec![1.0; 2]], &[2, 3])
+            .unwrap();
+        assert_eq!(got, vec![vec![0.5; 2], vec![10.0; 3]]);
+        let mut d = vec![0.5f32, 2.0];
+        fab.all_reduce_sum(0, &mut d).unwrap();
+        assert_eq!(d, vec![1.5, 4.0]);
+        let b = fab.broadcast(0, 0, Some(vec![9, 9])).unwrap();
+        assert_eq!(b, vec![9, 9]);
+        fab.barrier(0).unwrap();
+        fab.shutdown().unwrap();
+        let s0 = fab.stats();
+        let s1 = peer.join().unwrap();
+        let m = FabricStats::merge_ranks(&[s0, s1]);
+        assert_eq!(m.a2a_ops, 1);
+        assert_eq!(m.counts_ops, 1);
+        assert_eq!(m.allreduce_ops, 1);
+        assert_eq!(m.broadcast_ops, 1);
+        // off-rank payload bytes: rank 0 sent 2 f32s, rank 1 sent 3
+        assert_eq!(m.a2a_bytes, (2 + 3) * 4);
+        assert_eq!(m.counts_bytes, 2 * 4);
+        assert!(m.wall_a2a_nanos > 0, "wall time must be measured on the TCP path");
+        assert!(m.wall_bytes >= m.a2a_bytes, "framed wire bytes include headers");
+    }
+
+    /// world=1 degenerates to pure local ops, no sockets at all.
+    #[test]
+    fn world1_is_local() {
+        let fab = NetFabric::connect(&NetConfig::new(0, 1, "127.0.0.1:1")).unwrap();
+        let got = fab.all_to_all(0, vec![vec![7.0f32; 3]]).unwrap();
+        assert_eq!(got, vec![vec![7.0f32; 3]]);
+        let mut d = vec![2.0f32];
+        fab.all_reduce_sum(0, &mut d).unwrap();
+        assert_eq!(d, vec![2.0]);
+        fab.barrier(0).unwrap();
+        fab.shutdown().unwrap();
+        assert_eq!(fab.stats().a2a_ops, 1);
+        assert_eq!(fab.stats().a2a_bytes, 0, "nothing left the rank");
+    }
+}

@@ -14,6 +14,7 @@
 use std::sync::Arc;
 
 use crate::collective::Collective;
+use crate::util::error::Result;
 
 use super::{Coordinator, Decision, DropSchedule, Policy};
 
@@ -40,13 +41,16 @@ impl<C: Collective> DistCoordinator<C> {
         self
     }
 
-    /// Collective call: every rank must call it with the same step.
-    pub fn decide(&mut self, step: u64) -> Decision {
+    /// Collective call: every rank must call it with the same step. The
+    /// broadcast can fail on a real fabric (dead leader, timeout) -- the
+    /// error names the rank and leg.
+    pub fn decide(&mut self, step: u64) -> Result<Decision> {
         let payload = self.leader.as_mut().map(|l| vec![l.decide(step).encode()]);
-        let got = self.fabric.broadcast(self.rank, Self::LEADER, payload);
+        let got = self.fabric.broadcast(self.rank, Self::LEADER, payload)?;
+        crate::ensure!(got.len() == 1, "decision broadcast carries one byte, got {}", got.len());
         let d = Decision::decode(got[0]);
         self.audit.push(d.encode());
-        d
+        Ok(d)
     }
 
     /// The decoded decision stream this rank observed (consensus audits).
@@ -86,7 +90,7 @@ mod tests {
                 hs.push(std::thread::spawn(move || {
                     let mut c = DistCoordinator::new(rank, fabric, policy, 1234);
                     for s in 0..200 {
-                        c.decide(s);
+                        c.decide(s).unwrap();
                     }
                     logs.lock().unwrap()[rank] = c.audit_log().to_vec();
                 }));
@@ -109,7 +113,7 @@ mod tests {
         let mut dist = DistCoordinator::new(0, fabric, Policy::GateDrop { p: 0.3 }, 77);
         let mut local = Coordinator::new(Policy::GateDrop { p: 0.3 }, 77);
         for s in 0..500 {
-            assert_eq!(dist.decide(s), local.decide(s));
+            assert_eq!(dist.decide(s).unwrap(), local.decide(s));
         }
     }
 
@@ -125,7 +129,7 @@ mod tests {
                 let mut c =
                     DistCoordinator::new(rank, fabric.clone(), Policy::GateDrop { p: 0.3 }, 5);
                 for s in 0..100 {
-                    c.decide(s);
+                    c.decide(s).unwrap();
                 }
             }));
         }

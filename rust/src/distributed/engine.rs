@@ -26,12 +26,15 @@
 //! parameters stay bit-identical across ranks because they see identical
 //! all-reduced gradients -- asserted after every run.
 
+use std::net::TcpListener;
+use std::process::{Command, Stdio};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::util::error::Result;
+use crate::util::error::{Context, Result};
 
-use crate::collective::{Collective, FabricStats, OverlapKind, ThreadFabric};
+use crate::collective::net::{fnv1a64, NetConfig, NetFabric};
+use crate::collective::{Collective, Fabric, FabricStats, OverlapKind, ThreadFabric};
 use crate::coordinator::{Decision, DistCoordinator, Policy};
 use crate::moe;
 use crate::netmodel::{Cluster, V100_IB100};
@@ -225,7 +228,7 @@ impl WorkerState {
     /// One full training step; returns this rank's loss.
     fn step(
         &mut self,
-        fabric: &ThreadFabric,
+        fabric: &Fabric,
         decision: Decision,
         x: &[f32],
         labels: &[i32],
@@ -295,10 +298,10 @@ impl WorkerState {
             // wire row per (token, slot) -- variable fan-out rides the
             // same counts phase).
             let counts = self.topo.owner_counts(&assign.experts);
-            let recv_rows = fabric.all_to_all_counts(self.rank, &counts);
+            let recv_rows = fabric.all_to_all_counts(self.rank, &counts)?;
             let packed = moe::route_pack_k(&self.topo, h, d, &assign, &counts);
             let arrivals =
-                fabric.all_to_all_rows(self.rank, packed, &counts, &recv_rows, stride);
+                fabric.all_to_all_rows(self.rank, packed, &counts, &recv_rows, stride, "dispatch")?;
             moe::route_admit(self.rank, &self.topo, &arrivals, d, cap)
         };
 
@@ -356,7 +359,7 @@ impl WorkerState {
             // counts phase first (it needs only the admission records):
             // the home rank cannot predict how many of its rows survived
             // capacity admission on the owners.
-            let recv_rows = fabric.all_to_all_counts(self.rank, &ret_counts);
+            let recv_rows = fabric.all_to_all_counts(self.rank, &ret_counts)?;
             // Slot-order invariant the chunked pack rides: one expert per
             // rank means `route_admit` fills slots with a sequential
             // counter, so `admitted[i].slot == i` and a slot range is an
@@ -369,7 +372,7 @@ impl WorkerState {
             // is posted, and chunk c+1's math runs while those rows are
             // in flight (Send pairing: comm chunk c hides behind compute
             // chunk c+1). expert_fwd costs two matmuls = 4*rows*d*f flops.
-            let mut pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true);
+            let mut pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true, "return");
             for &(lo, hi) in &bounds {
                 let rows = hi - lo;
                 let out = self.runner.run(
@@ -381,18 +384,18 @@ impl WorkerState {
                     ],
                 )?;
                 let msgs = pack_admitted_chunk(&admitted, lo, hi, &out[0], d, r);
-                pipe.post_chunk(msgs, self.compute_secs(4.0 * (rows * d * f) as f64));
+                pipe.post_chunk(msgs, self.compute_secs(4.0 * (rows * d * f) as f64))?;
             }
             // Drain and reassemble full per-source buffers in chunk order
             // (= the serial pack order, by the slot-order invariant), so
             // the per-token `+=` combine accumulates in the serial order.
             let mut arrivals: Vec<Vec<f32>> = vec![Vec::new(); r];
             for _ in &bounds {
-                for (src, part) in pipe.recv_chunk().into_iter().enumerate() {
+                for (src, part) in pipe.recv_chunk()?.into_iter().enumerate() {
                     arrivals[src].extend(part);
                 }
             }
-            pipe.finish();
+            pipe.finish()?;
             for (src, buf) in arrivals.iter().enumerate() {
                 crate::ensure!(
                     buf.len() == recv_rows[src] * stride,
@@ -496,7 +499,7 @@ impl WorkerState {
                 // same expert-bwd spans, and the two legs run in opposite
                 // directions (full duplex), so each may hide behind the
                 // same compute window without double-charging compute.
-                let mut dye_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Recv, false);
+                let mut dye_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Recv, false, "dye");
                 let mut cursor = vec![0usize; r];
                 for (c, &(_, hi)) in bounds.iter().enumerate() {
                     let mut msgs: Vec<Vec<f32>> = vec![Vec::new(); r];
@@ -519,17 +522,17 @@ impl WorkerState {
                             cursor[owner] += 1;
                         }
                     }
-                    dye_pipe.post_chunk(msgs, bwd_secs[c]);
+                    dye_pipe.post_chunk(msgs, bwd_secs[c])?;
                 }
                 let mut dye_buf = vec![0f32; cap * d];
                 let mut dye_got = vec![0usize; r];
-                let mut dxe_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true);
+                let mut dxe_pipe = fabric.a2a_pipelined(self.rank, OverlapKind::Send, true, "dxe");
                 let dw12: (Vec<f32>, Vec<f32>) = if bounds.len() == 1 {
                     // serial schedule on the pipelined handles: one
                     // chunk, identical wire buffers, zero overlap credit,
                     // and the monolithic "expert_bwd" stage -- the one
                     // the XLA artifacts compile.
-                    scatter_dye_chunk(&mut dye_buf, &mut dye_got, &dye_pipe.recv_chunk(), d);
+                    scatter_dye_chunk(&mut dye_buf, &mut dye_got, &dye_pipe.recv_chunk()?, d);
                     let out = self.runner.run(
                         "expert_bwd",
                         &[
@@ -540,7 +543,7 @@ impl WorkerState {
                         ],
                     )?;
                     let msgs = pack_admitted_chunk(&admitted, 0, cap, &out[0], d, r);
-                    dxe_pipe.post_chunk(msgs, bwd_secs[0] + dw_secs);
+                    dxe_pipe.post_chunk(msgs, bwd_secs[0] + dw_secs)?;
                     (out[1].clone(), out[2].clone())
                 } else {
                     // fused loop: receive chunk c's cotangents, run its
@@ -553,7 +556,7 @@ impl WorkerState {
                         scatter_dye_chunk(
                             &mut dye_buf,
                             &mut dye_got,
-                            &dye_pipe.recv_chunk(),
+                            &dye_pipe.recv_chunk()?,
                             d,
                         );
                         let out = self.runner.run(
@@ -569,7 +572,7 @@ impl WorkerState {
                         dpre.extend_from_slice(&out[2]);
                         let dw_tail = if c == bounds.len() - 1 { dw_secs } else { 0.0 };
                         let msgs = pack_admitted_chunk(&admitted, lo, hi, &out[0], d, r);
-                        dxe_pipe.post_chunk(msgs, bwd_secs[c] + dw_tail);
+                        dxe_pipe.post_chunk(msgs, bwd_secs[c] + dw_tail)?;
                     }
                     // weight gradients: ONE pass over the concatenated
                     // buffers, so dw1/dw2 keep the monolithic token-axis
@@ -586,7 +589,7 @@ impl WorkerState {
                     let mut it = dw.into_iter();
                     (it.next().unwrap(), it.next().unwrap())
                 };
-                dye_pipe.finish();
+                dye_pipe.finish()?;
                 for (src, &got) in dye_got.iter().enumerate() {
                     crate::ensure!(
                         got == ret_counts[src] * stride,
@@ -600,11 +603,11 @@ impl WorkerState {
                 // order must stay exactly serial.
                 let mut arrivals: Vec<Vec<f32>> = vec![Vec::new(); r];
                 for _ in &bounds {
-                    for (src, part) in dxe_pipe.recv_chunk().into_iter().enumerate() {
+                    for (src, part) in dxe_pipe.recv_chunk()?.into_iter().enumerate() {
                         arrivals[src].extend(part);
                     }
                 }
-                dxe_pipe.finish();
+                dxe_pipe.finish()?;
                 for (src, buf) in arrivals.iter().enumerate() {
                     crate::ensure!(
                         buf.len() == surviving[src] * stride,
@@ -641,10 +644,10 @@ impl WorkerState {
 
         // ---- dense all-reduce + host Adam -------------------------------------
         let mut dw_out = dw_out;
-        fabric.all_reduce_sum(self.rank, &mut dw_in);
-        fabric.all_reduce_sum(self.rank, &mut db_in);
-        fabric.all_reduce_sum(self.rank, &mut dwr);
-        fabric.all_reduce_sum(self.rank, &mut dw_out);
+        fabric.all_reduce_sum(self.rank, &mut dw_in)?;
+        fabric.all_reduce_sum(self.rank, &mut db_in)?;
+        fabric.all_reduce_sum(self.rank, &mut dwr)?;
+        fabric.all_reduce_sum(self.rank, &mut dw_out)?;
         let scale = 1.0 / r as f32;
         for g in [&mut dw_in, &mut db_in, &mut dwr, &mut dw_out] {
             for v in g.iter_mut() {
@@ -704,6 +707,220 @@ fn scatter_dye_chunk(buf: &mut [f32], got: &mut [usize], arrivals: &[Vec<f32>], 
     }
 }
 
+/// What one rank's run loop produces: (losses, per-step walls, dense
+/// fingerprint, resident expert fingerprint, observed drop rate).
+type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, Vec<f32>, f64);
+
+/// One rank's whole training loop, fabric-agnostic: the thread engine
+/// runs this on N threads over one shared `Fabric::Thread`, the net
+/// engine runs it once per process over its `Fabric::Net`. SPMD: every
+/// rank must execute the identical collective sequence.
+///
+/// `die_at_step`: fault injection for the net path -- the process exits
+/// hard (code 3) right before that step's collectives, no goodbye, so
+/// surviving ranks must surface the dead peer by read timeout.
+#[allow(clippy::too_many_arguments)]
+fn run_rank(
+    rank: usize,
+    fabric: Arc<Fabric>,
+    manifest: DistManifest,
+    cfg: &DistRunConfig,
+    per_rank_threads: usize,
+    seq_cutoff: usize,
+    task: &ClusterTask,
+    die_at_step: Option<u64>,
+) -> Result<WorkerOut> {
+    let mut w = WorkerState::new(
+        rank,
+        manifest,
+        cfg.lr,
+        per_rank_threads,
+        seq_cutoff,
+        cfg.router,
+        cfg.overlap_chunks,
+        cfg.cluster,
+    )?;
+    let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
+    let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
+    let mut losses = Vec::new();
+    let mut walls = Vec::new();
+    let t = w.runner.manifest.tokens_per_rank;
+    for step in 0..cfg.steps {
+        if die_at_step == Some(step) {
+            std::process::exit(3);
+        }
+        let decision = coord.decide(step)?;
+        let (x, labels, token_ids) = task.sample(rank, t, &mut rng);
+        let t0 = Instant::now();
+        let mut loss = w.step(&fabric, decision, &x, &labels, &token_ids)?;
+        walls.push((decision.drop, t0.elapsed().as_secs_f64()));
+        // rank-mean loss for reporting: diagnostics only, so it
+        // must stay OUT of the training-communication stats
+        let mut lbuf = vec![loss];
+        fabric.all_reduce_sum_unaccounted(rank, &mut lbuf)?;
+        loss = lbuf[0] / cfg.n_ranks as f32;
+        losses.push(loss);
+    }
+    let drop_rate = coord
+        .audit_log()
+        .iter()
+        .filter(|&&b| crate::coordinator::Decision::decode(b).drop)
+        .count() as f64
+        / cfg.steps.max(1) as f64;
+    // dense-param fingerprint for the consistency check, plus
+    // this rank's resident expert for the full-model one
+    let mut fp = w.w_in.clone();
+    fp.extend_from_slice(&w.wr);
+    fp.extend_from_slice(&w.w_out);
+    let mut efp = w.w1.clone();
+    efp.extend_from_slice(&w.w2);
+    Ok((losses, walls, fp, efp, drop_rate))
+}
+
+fn f32s_le(v: &[f32]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+    b
+}
+
+impl DistRunResult {
+    /// FNV-1a 64 over the little-endian bits of the full final model --
+    /// the compact cross-process parity token (`fp_hash` in the net
+    /// path's result line).
+    pub fn fingerprint_hash(&self) -> u64 {
+        fnv1a64(&f32s_le(&self.param_fingerprint))
+    }
+}
+
+/// How one process joins (or locally launches) the TCP fabric.
+#[derive(Debug, Clone)]
+pub struct NetOpts {
+    pub rank: usize,
+    pub world: usize,
+    /// Rank 0's rendezvous address, `HOST:PORT`.
+    pub coord: String,
+    pub timeout_ms: u64,
+    pub retries: u32,
+    pub backoff_ms: u64,
+    /// Fault injection: this process exits hard right before the given
+    /// step (under `tcp-local`, applied to the last rank).
+    pub die_at_step: Option<u64>,
+}
+
+impl NetOpts {
+    pub fn new(rank: usize, world: usize, coord: impl Into<String>) -> NetOpts {
+        NetOpts {
+            rank,
+            world,
+            coord: coord.into(),
+            timeout_ms: 10_000,
+            retries: 80,
+            backoff_ms: 25,
+            die_at_step: None,
+        }
+    }
+}
+
+/// What a `--fabric tcp` run reports on rank 0 -- exactly the fields the
+/// ThreadFabric parity bar compares. The `tcp-local` launcher parses it
+/// back from the rank-0 child's stdout via [`NetRunReport::result_line`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetRunReport {
+    /// Rank-mean loss per step (identical on every rank by construction;
+    /// parity asserts the f32 bits against the thread run).
+    pub losses: Vec<f32>,
+    /// Per-rank local stats merged with [`FabricStats::merge_ranks`].
+    pub fabric: FabricStats,
+    pub dense_consistent: bool,
+    /// FNV-1a 64 of the full final model in the thread-mode
+    /// `param_fingerprint` order (rank-0 dense, then every expert).
+    pub fingerprint_hash: u64,
+    pub observed_drop_rate: f64,
+}
+
+impl NetRunReport {
+    /// One machine-readable stdout line (`GDNET_RESULT v1 ...`). Floats
+    /// travel as hex bit patterns so the round trip is exact.
+    pub fn result_line(&self) -> String {
+        let losses: Vec<String> =
+            self.losses.iter().map(|l| format!("{:08x}", l.to_bits())).collect();
+        let stats: String =
+            self.fabric.to_le_bytes().iter().map(|b| format!("{b:02x}")).collect();
+        format!(
+            "GDNET_RESULT v1 losses={} stats={} dense={} fp_hash={:016x} drop_rate={:016x}",
+            if losses.is_empty() { "-".to_string() } else { losses.join(",") },
+            stats,
+            u8::from(self.dense_consistent),
+            self.fingerprint_hash,
+            self.observed_drop_rate.to_bits(),
+        )
+    }
+
+    /// Find and parse the `GDNET_RESULT v1` line in a rank-0 transcript.
+    pub fn parse_result_line(text: &str) -> Result<NetRunReport> {
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("GDNET_RESULT v1 "))
+            .context("no GDNET_RESULT line in the rank-0 output")?;
+        let mut kv = std::collections::HashMap::new();
+        for part in line.split_whitespace().skip(2) {
+            if let Some((k, v)) = part.split_once('=') {
+                kv.insert(k, v);
+            }
+        }
+        let get = |k: &str| {
+            kv.get(k).copied().with_context(|| format!("GDNET_RESULT line is missing {k}="))
+        };
+        let losses_s = get("losses")?;
+        let losses: Vec<f32> = if losses_s == "-" {
+            Vec::new()
+        } else {
+            losses_s
+                .split(',')
+                .map(|h| {
+                    u32::from_str_radix(h, 16)
+                        .map(f32::from_bits)
+                        .map_err(|e| crate::err!("bad loss bits {h:?}: {e}"))
+                })
+                .collect::<Result<_>>()?
+        };
+        let stats_s = get("stats")?;
+        crate::ensure!(stats_s.len() % 2 == 0, "stats hex has odd length {}", stats_s.len());
+        let stats_bytes: Vec<u8> = (0..stats_s.len() / 2)
+            .map(|i| {
+                u8::from_str_radix(&stats_s[2 * i..2 * i + 2], 16)
+                    .map_err(|e| crate::err!("bad stats hex: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let fp_hash = u64::from_str_radix(get("fp_hash")?, 16)
+            .map_err(|e| crate::err!("bad fp_hash: {e}"))?;
+        let drop_bits = u64::from_str_radix(get("drop_rate")?, 16)
+            .map_err(|e| crate::err!("bad drop_rate: {e}"))?;
+        Ok(NetRunReport {
+            losses,
+            fabric: FabricStats::from_le_bytes(&stats_bytes)?,
+            dense_consistent: get("dense")? == "1",
+            fingerprint_hash: fp_hash,
+            observed_drop_rate: f64::from_bits(drop_bits),
+        })
+    }
+}
+
+/// The `--policy` flag string that `Policy::parse` maps back to exactly
+/// this policy. `Policy::name()` is NOT enough: it drops the rate, and a
+/// child process re-parsing "gate-drop" would silently run p=0.3.
+pub fn policy_flag(p: Policy) -> String {
+    match p {
+        Policy::Baseline => "baseline".to_string(),
+        Policy::GateDrop { p } => format!("gate-drop:{p}"),
+        Policy::GateExpertDrop { p } => format!("gate-expert-drop:{p}"),
+        Policy::HashLayer => "hash-layer".to_string(),
+        Policy::NoAllToAll => "no-alltoall".to_string(),
+    }
+}
+
 pub struct DistEngine;
 
 impl DistEngine {
@@ -737,7 +954,7 @@ impl DistEngine {
         // resolve the cutoff once here so a garbage GD_SEQ_CUTOFF is a
         // clean launch error, not a panic inside every rank thread
         let seq_cutoff = resolve_seq_cutoff()?;
-        let fabric = Arc::new(ThreadFabric::with_cluster(n, cfg.cluster));
+        let fabric = Arc::new(Fabric::Thread(ThreadFabric::with_cluster(n, cfg.cluster)));
         let task = Arc::new(ClusterTask::new(
             manifest.d_in,
             manifest.n_classes,
@@ -751,53 +968,20 @@ impl DistEngine {
             let task = task.clone();
             let manifest = manifest.clone();
             let cfg = cfg.clone();
-            type WorkerOut = (Vec<f32>, Vec<(bool, f64)>, Vec<f32>, Vec<f32>, f64);
             handles.push(std::thread::spawn(move || -> Result<WorkerOut> {
-                let mut w = WorkerState::new(
+                run_rank(
                     rank,
+                    fabric,
                     manifest,
-                    cfg.lr,
+                    &cfg,
                     per_rank_threads,
                     seq_cutoff,
-                    cfg.router,
-                    cfg.overlap_chunks,
-                    cfg.cluster,
-                )?;
-                let mut coord = DistCoordinator::new(rank, fabric.clone(), cfg.policy, cfg.seed);
-                let mut rng = Rng::new(cfg.seed).fork(100 + rank as u64);
-                let mut losses = Vec::new();
-                let mut walls = Vec::new();
-                let t = w.runner.manifest.tokens_per_rank;
-                for step in 0..cfg.steps {
-                    let decision = coord.decide(step);
-                    let (x, labels, token_ids) = task.sample(rank, t, &mut rng);
-                    let t0 = Instant::now();
-                    let mut loss = w.step(&fabric, decision, &x, &labels, &token_ids)?;
-                    walls.push((decision.drop, t0.elapsed().as_secs_f64()));
-                    // rank-mean loss for reporting: diagnostics only, so it
-                    // must stay OUT of the training-communication stats
-                    let mut lbuf = vec![loss];
-                    fabric.all_reduce_sum_unaccounted(rank, &mut lbuf);
-                    loss = lbuf[0] / cfg.n_ranks as f32;
-                    losses.push(loss);
-                }
-                let drop_rate = coord
-                    .audit_log()
-                    .iter()
-                    .filter(|&&b| crate::coordinator::Decision::decode(b).drop)
-                    .count() as f64
-                    / cfg.steps.max(1) as f64;
-                // dense-param fingerprint for the consistency check, plus
-                // this rank's resident expert for the full-model one
-                let mut fp = w.w_in.clone();
-                fp.extend_from_slice(&w.wr);
-                fp.extend_from_slice(&w.w_out);
-                let mut efp = w.w1.clone();
-                efp.extend_from_slice(&w.w2);
-                Ok((losses, walls, fp, efp, drop_rate))
+                    &task,
+                    None,
+                )
             }));
         }
-        let mut all: Vec<(Vec<f32>, Vec<(bool, f64)>, Vec<f32>, Vec<f32>, f64)> = Vec::new();
+        let mut all: Vec<WorkerOut> = Vec::new();
         for h in handles {
             all.push(h.join().map_err(|_| crate::err!("worker panicked"))??);
         }
@@ -818,6 +1002,166 @@ impl DistEngine {
             observed_drop_rate,
             param_fingerprint,
         })
+    }
+
+    /// Run THIS process's rank over the TCP fabric (`--fabric tcp`).
+    /// Returns `Some(report)` on rank 0 after the end-of-run gathers and
+    /// the shutdown handshake; `None` on every other rank.
+    pub fn run_net(cfg: &DistRunConfig, net: &NetOpts) -> Result<Option<NetRunReport>> {
+        let manifest = DistManifest::load(&cfg.artifact_dir)?;
+        crate::ensure!(
+            net.world == manifest.ranks,
+            "artifact exported for {} ranks, requested world {}",
+            manifest.ranks,
+            net.world
+        );
+        crate::ensure!(
+            cfg.n_ranks == net.world,
+            "--ranks {} disagrees with --world {}",
+            cfg.n_ranks,
+            net.world
+        );
+        crate::ensure!(cfg.overlap_chunks >= 1, "overlap_chunks must be >= 1");
+        crate::ensure!(
+            cfg.overlap_chunks == 1 || manifest.synthetic_seed.is_some(),
+            "overlap_chunks > 1 requires the synthetic manifest: the XLA stage \
+             artifacts are compiled for full-capacity shapes only"
+        );
+        // auto thread budget assumes the common tcp-local case of `world`
+        // sibling processes on this host; cross-host launches should pass
+        // --threads explicitly
+        let per_rank_threads = match resolve_threads_explicit(cfg.threads)? {
+            Some(explicit) => explicit,
+            None => {
+                (std::thread::available_parallelism().map_or(1, |p| p.get()) / net.world).max(1)
+            }
+        };
+        let seq_cutoff = resolve_seq_cutoff()?;
+        let mut ncfg = NetConfig::new(net.rank, net.world, net.coord.clone());
+        ncfg.io_timeout_ms = net.timeout_ms;
+        ncfg.connect_retries = net.retries;
+        ncfg.retry_backoff_ms = net.backoff_ms;
+        ncfg.cluster = cfg.cluster;
+        let fabric = Arc::new(Fabric::Net(NetFabric::connect(&ncfg)?));
+        let task = ClusterTask::new(manifest.d_in, manifest.n_classes, net.world, cfg.seed);
+        let (losses, _walls, fp, efp, drop_rate) = run_rank(
+            net.rank,
+            fabric.clone(),
+            manifest,
+            cfg,
+            per_rank_threads,
+            seq_cutoff,
+            &task,
+            net.die_at_step,
+        )?;
+        // end-of-run collection to rank 0, off the accounted books: the
+        // dense fingerprints (consistency check), the resident experts
+        // (full-model hash), and each rank's local stats blob
+        let netfab = fabric.as_net().expect("run_net built a net fabric");
+        let dense = netfab.gather_bytes(f32s_le(&fp))?;
+        let experts = netfab.gather_bytes(f32s_le(&efp))?;
+        let stats = netfab.gather_bytes(netfab.stats().to_le_bytes())?;
+        netfab.shutdown()?;
+        let (Some(dense), Some(experts), Some(stats)) = (dense, experts, stats) else {
+            return Ok(None);
+        };
+        let dense_consistent = dense.windows(2).all(|w| w[0] == w[1]);
+        // the thread-mode fingerprint order: rank-0 dense parameters,
+        // then every rank's resident expert
+        let mut all = dense[0].clone();
+        for e in &experts {
+            all.extend_from_slice(e);
+        }
+        let per_rank: Vec<FabricStats> =
+            stats.iter().map(|b| FabricStats::from_le_bytes(b)).collect::<Result<_>>()?;
+        Ok(Some(NetRunReport {
+            losses,
+            fabric: FabricStats::merge_ranks(&per_rank),
+            dense_consistent,
+            fingerprint_hash: fnv1a64(&all),
+            observed_drop_rate: drop_rate,
+        }))
+    }
+
+    /// The `--fabric tcp-local` launcher: spawn `net.world` child
+    /// `repro dist --fabric tcp` processes over loopback and parse the
+    /// rank-0 result line. `exe` is the repro binary (tests pass
+    /// `env!("CARGO_BIN_EXE_repro")`; the CLI passes its own path). With
+    /// `net.die_at_step` set, the LAST rank gets the kill switch -- the
+    /// launcher then reports the survivors' typed errors.
+    pub fn run_tcp_local(cfg: &DistRunConfig, net: &NetOpts, exe: &str) -> Result<NetRunReport> {
+        let world = net.world;
+        crate::ensure!(world >= 1, "tcp-local world must be >= 1");
+        // probe a free loopback port and hand it to the children; rank 0
+        // rebinds it (NetFabric's bind retry covers the tiny race)
+        let coord = {
+            let l = TcpListener::bind("127.0.0.1:0").context("probing a loopback port")?;
+            l.local_addr().context("probe addr")?.to_string()
+        };
+        let mut children = Vec::new();
+        for rank in 0..world {
+            let mut c = Command::new(exe);
+            c.arg("dist")
+                .args(["--fabric", "tcp"])
+                .args(["--rank", &rank.to_string()])
+                .args(["--world", &world.to_string()])
+                .args(["--coord", &coord])
+                .args(["--artifacts", &cfg.artifact_dir])
+                .args(["--ranks", &world.to_string()])
+                .args(["--steps", &cfg.steps.to_string()])
+                .args(["--seed", &cfg.seed.to_string()])
+                .args(["--lr", &format!("{}", cfg.lr)])
+                .args(["--threads", &cfg.threads.to_string()])
+                .args(["--policy", &policy_flag(cfg.policy)])
+                .args(["--overlap-chunks", &cfg.overlap_chunks.to_string()])
+                .args(["--net-timeout-ms", &net.timeout_ms.to_string()])
+                .args(["--net-retries", &net.retries.to_string()])
+                .args(["--net-backoff-ms", &net.backoff_ms.to_string()]);
+            match cfg.router {
+                moe::Router::Top1 => {
+                    c.args(["--router", "top1"]);
+                }
+                moe::Router::TopK { k } => {
+                    c.args(["--router", "topk", "--topk", &k.to_string()]);
+                }
+                moe::Router::Adaptive { thresh, k_max } => {
+                    c.args(["--router", "adaptive", "--topk", &k_max.to_string()]);
+                    c.args(["--adaptive-thresh", &format!("{thresh}")]);
+                }
+            }
+            if rank == world - 1 {
+                if let Some(s) = net.die_at_step {
+                    c.args(["--net-die-at-step", &s.to_string()]);
+                }
+            }
+            c.stdout(if rank == 0 { Stdio::piped() } else { Stdio::null() });
+            c.stderr(Stdio::inherit());
+            let child = c
+                .spawn()
+                .with_context(|| format!("spawning tcp-local rank {rank} ({exe})"))?;
+            children.push(child);
+        }
+        let mut rank0_out = String::new();
+        let mut failures = Vec::new();
+        for (rank, mut child) in children.into_iter().enumerate() {
+            if rank == 0 {
+                if let Some(mut out) = child.stdout.take() {
+                    use std::io::Read as _;
+                    let _ = out.read_to_string(&mut rank0_out);
+                }
+            }
+            let status =
+                child.wait().with_context(|| format!("waiting on tcp-local rank {rank}"))?;
+            if !status.success() {
+                failures.push(format!("rank {rank} exited with {status}"));
+            }
+        }
+        crate::ensure!(
+            failures.is_empty(),
+            "tcp-local ranks failed: {}",
+            failures.join("; ")
+        );
+        NetRunReport::parse_result_line(&rank0_out)
     }
 }
 
@@ -852,6 +1196,55 @@ mod tests {
             let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
             let (mn, mx) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
             assert!(mx - mn <= 1, "unbalanced chunks for {cap}/{c}: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn result_line_round_trips_bit_exact() {
+        let report = NetRunReport {
+            losses: vec![1.25, -0.5, f32::MIN_POSITIVE, 3.0e-7],
+            fabric: FabricStats {
+                a2a_ops: 12,
+                a2a_bytes: 34_567,
+                counts_ops: 24,
+                counts_bytes: 288,
+                allreduce_ops: 120,
+                allreduce_bytes: 99_000,
+                broadcast_ops: 30,
+                broadcast_bytes: 30,
+                modeled_time: 0.012_345,
+                modeled_compute: 3.5e-4,
+                overlapped_ticks: 1.0 / 3.0,
+                wall_a2a_nanos: 1_234_567,
+                wall_bytes: 40_000,
+            },
+            dense_consistent: true,
+            fingerprint_hash: 0xdead_beef_cafe_f00d,
+            observed_drop_rate: 0.3,
+        };
+        let line = report.result_line();
+        let back = NetRunReport::parse_result_line(&format!("noise\n{line}\nmore"))
+            .expect("round trip");
+        assert_eq!(back, report);
+        // empty-loss runs still carry a parseable line
+        let empty = NetRunReport { losses: Vec::new(), ..report };
+        assert_eq!(NetRunReport::parse_result_line(&empty.result_line()).unwrap(), empty);
+        let err = NetRunReport::parse_result_line("no result here").unwrap_err().to_string();
+        assert!(err.contains("GDNET_RESULT"), "got: {err}");
+    }
+
+    #[test]
+    fn policy_flag_round_trips_through_parse() {
+        for p in [
+            Policy::Baseline,
+            Policy::GateDrop { p: 0.3 },
+            Policy::GateDrop { p: 0.25 },
+            Policy::GateExpertDrop { p: 0.4 },
+            Policy::HashLayer,
+            Policy::NoAllToAll,
+        ] {
+            let flag = policy_flag(p);
+            assert_eq!(Policy::parse(&flag), Some(p), "flag {flag:?} must parse back");
         }
     }
 

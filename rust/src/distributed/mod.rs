@@ -38,6 +38,17 @@
 //! ("distributed" layer) for the 4-leg schedule and the timing-model
 //! contract.
 //!
+//! The same per-rank loop also runs over real sockets: `repro dist
+//! --fabric tcp` joins a [`NetFabric`](crate::collective::NetFabric)
+//! mesh as ONE process per rank ([`DistEngine::run_net`]), and
+//! `--fabric tcp-local` ([`DistEngine::run_tcp_local`]) spawns the
+//! whole world as child processes over loopback, collecting rank 0's
+//! machine-readable [`NetRunReport`] result line. Fixed-seed losses and
+//! the merged `a2a_ops`/`a2a_bytes`/`counts_ops` are bit-identical
+//! between the two fabrics (pinned by `tests/net_parity.rs`); the TCP
+//! path adds *measured* `wall_a2a_nanos`/`wall_bytes` beside the
+//! modeled times.
+//!
 //! [`ThreadFabric`]: crate::collective::ThreadFabric
 
 mod engine;
@@ -45,7 +56,9 @@ mod optim;
 mod stages;
 mod task;
 
-pub use engine::{DistEngine, DistRunConfig, DistRunResult};
+pub use engine::{
+    policy_flag, DistEngine, DistRunConfig, DistRunResult, NetOpts, NetRunReport,
+};
 pub use optim::Adam;
 pub use stages::{DistManifest, StageRunner};
 pub use task::ClusterTask;

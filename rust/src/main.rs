@@ -19,7 +19,7 @@ use gating_dropout::benchkit::{
 use gating_dropout::config::{cluster_by_name, RunConfig};
 use gating_dropout::coordinator::Policy;
 use gating_dropout::data::BOS;
-use gating_dropout::distributed::{DistEngine, DistRunConfig};
+use gating_dropout::distributed::{DistEngine, DistRunConfig, NetOpts};
 use gating_dropout::netmodel::MoeWorkload;
 use gating_dropout::runtime::{default_backend, Backend, ModelDims, StubBackend};
 use gating_dropout::serve::{self, HeavySpec, Scenario, ServeConfig, SoakConfig};
@@ -58,6 +58,24 @@ COMMANDS:
             compute; 1 = serial schedule. Bit-identical at any N -- only
             the modeled step time drops; reported as the hidden-comm
             fraction. N>1 needs the synthetic manifest)
+           [--fabric thread|tcp|tcp-local]  (thread = the in-process
+            ThreadFabric, the default. tcp = join a real multi-process
+            TCP mesh: this invocation runs ONE rank and also needs
+            --rank I --world N --coord HOST:PORT, where rank 0 binds
+            the coord address and every rank dials it. tcp-local =
+            spawn the whole world as child processes over loopback and
+            report rank 0's result. Fixed-seed losses and a2a/counts
+            accounting are bit-identical across all three)
+           [--rank I] [--world N] [--coord HOST:PORT]
+           [--net-timeout-ms T] [--net-retries N] [--net-backoff-ms T]
+           (per-frame read deadline -- a dead peer is a typed error
+            within T, never a hang -- and the bounded connect retry
+            that lets rendezvous stragglers converge)
+           [--net-die-at-step S]  (fault injection: exit hard before
+            step S; under tcp-local the last rank gets the kill switch)
+           [--parity-check]  (tcp-local only: rerun the same seed on the
+            ThreadFabric and insist losses + wire accounting match bit
+            for bit -- the CI loopback smoke)
   eval     --run-preset P --checkpoint DIR
   serve    --run-preset P [--requests N] [--mean-gap T] [--max-batch B]
            [--max-wait-ticks W] [--queue-cap C] [--seed S] [--threads N]
@@ -307,16 +325,98 @@ fn cmd_dist(args: &Args) -> Result<()> {
         overlap_chunks: args.usize("overlap-chunks", def.overlap_chunks),
         cluster: def.cluster,
     };
-    eprintln!(
-        "[dist] policy={} router={} ranks={} steps={} threads/rank={} overlap_chunks={}",
-        policy.name(),
-        cfg.router.name(),
-        cfg.n_ranks,
-        cfg.steps,
-        if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
-        cfg.overlap_chunks
-    );
-    let res = DistEngine::run(&cfg)?;
+    let fabric_kind = args.get_or("fabric", "thread").to_string();
+    match fabric_kind.as_str() {
+        "thread" => {
+            eprintln!(
+                "[dist] policy={} router={} ranks={} steps={} threads/rank={} overlap_chunks={}",
+                policy.name(),
+                cfg.router.name(),
+                cfg.n_ranks,
+                cfg.steps,
+                if cfg.threads == 0 { "auto".to_string() } else { cfg.threads.to_string() },
+                cfg.overlap_chunks
+            );
+            let res = DistEngine::run(&cfg)?;
+            print_dist_result(&res);
+        }
+        "tcp" => {
+            let mut net = net_opts(args, 0, cfg.n_ranks)?;
+            net.rank = args.usize("rank", 0);
+            net.coord = args
+                .get("coord")
+                .ok_or_else(|| gating_dropout::err!("--fabric tcp needs --coord HOST:PORT"))?
+                .to_string();
+            let mut cfg = cfg;
+            cfg.n_ranks = net.world;
+            eprintln!(
+                "[dist] tcp rank {}/{} coord={} policy={} steps={} overlap_chunks={}",
+                net.rank,
+                net.world,
+                net.coord,
+                policy.name(),
+                cfg.steps,
+                cfg.overlap_chunks
+            );
+            match DistEngine::run_net(&cfg, &net)? {
+                Some(report) => {
+                    // the machine-readable line first: tcp-local parses it
+                    println!("{}", report.result_line());
+                    print_net_report(&report);
+                }
+                None => eprintln!("[dist] tcp rank {}/{}: done", net.rank, net.world),
+            }
+        }
+        "tcp-local" => {
+            let net = net_opts(args, 0, cfg.n_ranks)?;
+            let mut cfg = cfg;
+            cfg.n_ranks = net.world;
+            let exe = std::env::current_exe()
+                .map_err(|e| gating_dropout::err!("locating the repro binary: {e}"))?;
+            let exe = exe.to_str().ok_or_else(|| {
+                gating_dropout::err!("repro binary path is not UTF-8: {exe:?}")
+            })?;
+            eprintln!(
+                "[dist] tcp-local world={} policy={} steps={} overlap_chunks={}",
+                net.world,
+                policy.name(),
+                cfg.steps,
+                cfg.overlap_chunks
+            );
+            let report = DistEngine::run_tcp_local(&cfg, &net, exe)?;
+            print_net_report(&report);
+            if args.flag("parity-check") {
+                let thread = DistEngine::run(&cfg)?;
+                check_net_parity(&report, &thread)?;
+                println!(
+                    "[dist] parity-check: OK ({} steps bit-identical across fabrics)",
+                    report.losses.len()
+                );
+            }
+        }
+        other => bail!("unknown --fabric '{other}' (thread|tcp|tcp-local)"),
+    }
+    Ok(())
+}
+
+/// The shared `--net-*` knobs for both tcp modes.
+fn net_opts(args: &Args, rank: usize, default_world: usize) -> Result<NetOpts> {
+    let world = args.usize("world", default_world);
+    let mut net = NetOpts::new(rank, world, String::new());
+    net.timeout_ms = args.u64("net-timeout-ms", net.timeout_ms);
+    net.retries = args.u64("net-retries", net.retries as u64) as u32;
+    net.backoff_ms = args.u64("net-backoff-ms", net.backoff_ms);
+    net.die_at_step = match args.get("net-die-at-step") {
+        Some(s) => Some(
+            s.parse::<u64>()
+                .map_err(|e| gating_dropout::err!("bad --net-die-at-step '{s}': {e}"))?,
+        ),
+        None => None,
+    };
+    Ok(net)
+}
+
+fn print_dist_result(res: &gating_dropout::distributed::DistRunResult) {
     let first = res.losses.first().copied().unwrap_or(f32::NAN);
     let last = res.losses.last().copied().unwrap_or(f32::NAN);
     let dropped: Vec<f64> = res.step_wall.iter().filter(|(d, _)| *d).map(|(_, s)| *s).collect();
@@ -339,6 +439,56 @@ fn cmd_dist(args: &Args) -> Result<()> {
         res.fabric.pipelined_modeled_step_time() * 1e3,
         res.fabric.hidden_comm_fraction() * 100.0
     );
+}
+
+fn print_net_report(report: &gating_dropout::distributed::NetRunReport) {
+    let first = report.losses.first().copied().unwrap_or(f32::NAN);
+    let last = report.losses.last().copied().unwrap_or(f32::NAN);
+    println!(
+        "[dist] loss {first:.4} -> {last:.4} | dense consistent: {} | observed drop rate {:.2}",
+        report.dense_consistent, report.observed_drop_rate
+    );
+    println!(
+        "[dist] a2a ops={} bytes={} | measured wire: {:.2}ms, {} framed bytes",
+        report.fabric.a2a_ops,
+        report.fabric.a2a_bytes,
+        report.fabric.wall_a2a_nanos as f64 / 1e6,
+        report.fabric.wall_bytes
+    );
+    println!(
+        "[dist] modeled beside it: serial={:.1}ms pipelined={:.1}ms",
+        report.fabric.serial_modeled_step_time() * 1e3,
+        report.fabric.pipelined_modeled_step_time() * 1e3
+    );
+}
+
+/// The acceptance bar, as a typed check: fixed-seed losses and the wire
+/// accounting must be bit-identical across fabrics.
+fn check_net_parity(
+    net: &gating_dropout::distributed::NetRunReport,
+    thread: &gating_dropout::distributed::DistRunResult,
+) -> Result<()> {
+    let nb: Vec<u32> = net.losses.iter().map(|l| l.to_bits()).collect();
+    let tb: Vec<u32> = thread.losses.iter().map(|l| l.to_bits()).collect();
+    gating_dropout::ensure!(
+        nb == tb,
+        "loss bits diverge between tcp-local and ThreadFabric:\n  tcp    {nb:x?}\n  thread {tb:x?}"
+    );
+    for (name, n, t) in [
+        ("a2a_ops", net.fabric.a2a_ops, thread.fabric.a2a_ops),
+        ("a2a_bytes", net.fabric.a2a_bytes, thread.fabric.a2a_bytes),
+        ("counts_ops", net.fabric.counts_ops, thread.fabric.counts_ops),
+        ("counts_bytes", net.fabric.counts_bytes, thread.fabric.counts_bytes),
+    ] {
+        gating_dropout::ensure!(n == t, "{name} diverges: tcp-local {n} != thread {t}");
+    }
+    gating_dropout::ensure!(
+        net.fingerprint_hash == thread.fingerprint_hash(),
+        "final model fingerprints diverge: tcp-local {:016x} != thread {:016x}",
+        net.fingerprint_hash,
+        thread.fingerprint_hash()
+    );
+    gating_dropout::ensure!(net.dense_consistent, "tcp-local dense params diverged across ranks");
     Ok(())
 }
 

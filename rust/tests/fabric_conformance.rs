@@ -1,0 +1,255 @@
+//! Fabric conformance: one SPMD exercise of the entire [`Collective`]
+//! trait, run byte-for-byte identically against the in-process
+//! `ThreadFabric` and a loopback TCP `NetFabric` mesh. The contract the
+//! distributed engine leans on is that the two fabrics are
+//! *interchangeable*: identical arrivals (bit-exact f32 round trips),
+//! identical accounting (after [`FabricStats::merge_ranks`] folds the
+//! per-rank TCP ledgers), and identical wire-guard error text.
+//!
+//! `tests/net_parity.rs` pins the same property through the full
+//! training engine; this file pins it at the collective layer, where a
+//! divergence is cheap to localize.
+
+use std::sync::Arc;
+
+use gating_dropout::collective::{Collective, FabricStats, NetConfig, NetFabric, ThreadFabric};
+use gating_dropout::netmodel::V100_IB100;
+
+/// Deterministic payload for the counts+f32 phase: rank `src` sends
+/// `src + dst + 1` elements to `dst`, every value a small exact integer
+/// encoding (src, dst, index).
+fn f32_payload(src: usize, dst: usize) -> Vec<f32> {
+    (0..src + dst + 1).map(|i| (src * 1000 + dst * 100 + i) as f32).collect()
+}
+
+/// One full SPMD conformance pass: counts + typed payload, the legacy
+/// variably-sized exchange, the row-counted wrapper, the chunked
+/// wrapper, both all-reduce flavours, a broadcast, and a barrier --
+/// with asymmetric volumes so src/dst mixups cannot cancel out. Every
+/// arrival is asserted against the closed-form expectation inside the
+/// rank thread.
+fn exercise<C: Collective + Send + Sync + 'static>(fabs: &[Arc<C>]) {
+    let n = fabs.len();
+    let mut hs = Vec::new();
+    for (r, fab) in fabs.iter().enumerate() {
+        let fab = fab.clone();
+        hs.push(std::thread::spawn(move || {
+            // phase 1+2: counts, then exactly-sized typed payloads
+            let send_counts: Vec<usize> = (0..n).map(|d| r + d + 1).collect();
+            let got_counts = fab.all_to_all_counts(r, &send_counts).unwrap();
+            let want_counts: Vec<usize> = (0..n).map(|s| s + r + 1).collect();
+            assert_eq!(got_counts, want_counts, "rank {r}: counts phase");
+            let bufs: Vec<Vec<f32>> = (0..n).map(|d| f32_payload(r, d)).collect();
+            let got = fab.all_to_all_f32(r, bufs, &got_counts).unwrap();
+            for (s, buf) in got.iter().enumerate() {
+                assert_eq!(buf, &f32_payload(s, r), "rank {r}: f32 arrival from {s}");
+            }
+
+            // legacy exchange: sizes known only on arrival
+            let out: Vec<Vec<f32>> = (0..n)
+                .map(|d| (0..r + 1).map(|i| (r * 100 + d * 10 + i) as f32).collect())
+                .collect();
+            let got = fab.all_to_all(r, out).unwrap();
+            for (s, buf) in got.iter().enumerate() {
+                let want: Vec<f32> =
+                    (0..s + 1).map(|i| (s * 100 + r * 10 + i) as f32).collect();
+                assert_eq!(buf, &want, "rank {r}: legacy arrival from {s}");
+            }
+
+            // row-counted wrapper: send_rows[dst] = dst+1, stride 3
+            let stride = 3usize;
+            let send_rows: Vec<usize> = (0..n).map(|d| d + 1).collect();
+            let recv_rows: Vec<usize> = vec![r + 1; n];
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|d| {
+                    (0..(d + 1) * stride).map(|j| (r * 1000 + d * 100 + j) as f32).collect()
+                })
+                .collect();
+            let got = fab
+                .all_to_all_rows(r, bufs, &send_rows, &recv_rows, stride, "conformance")
+                .unwrap();
+            for (s, buf) in got.iter().enumerate() {
+                let want: Vec<f32> =
+                    (0..(r + 1) * stride).map(|j| (s * 1000 + r * 100 + j) as f32).collect();
+                assert_eq!(buf, &want, "rank {r}: rows arrival from {s}");
+            }
+
+            // chunked wrapper: 2 chunks x 1 row, concat in chunk order
+            let chunks: Vec<Vec<Vec<f32>>> = (0..2)
+                .map(|c| {
+                    (0..n).map(|d| vec![(r * 100 + d * 10 + c) as f32, c as f32]).collect()
+                })
+                .collect();
+            let got = fab
+                .all_to_all_rows_chunked(r, chunks, &vec![2; n], &vec![2; n], 2, "conformance")
+                .unwrap();
+            for (s, buf) in got.iter().enumerate() {
+                let want = vec![
+                    (s * 100 + r * 10) as f32,
+                    0.0,
+                    (s * 100 + r * 10 + 1) as f32,
+                    1.0,
+                ];
+                assert_eq!(buf, &want, "rank {r}: chunked arrival from {s}");
+            }
+
+            // all-reduce: rank-order sum, identical bits on every rank
+            let mut v = vec![(r + 1) as f32, 0.25];
+            fab.all_reduce_sum(r, &mut v).unwrap();
+            assert_eq!(v, vec![(n * (n + 1) / 2) as f32, 0.25 * n as f32], "rank {r}");
+            let mut w = vec![1.0f32];
+            fab.all_reduce_sum_unaccounted(r, &mut w).unwrap();
+            assert_eq!(w, vec![n as f32], "rank {r}: unaccounted all-reduce");
+
+            // broadcast from root 0 + final barrier
+            let payload = (r == 0).then(|| vec![1u8, 2, 3]);
+            let got = fab.broadcast(r, 0, payload).unwrap();
+            assert_eq!(got, vec![1, 2, 3], "rank {r}: broadcast");
+            fab.barrier(r).unwrap();
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+/// The exercise's closed-form off-rank payload bytes (what `a2a_bytes`
+/// must read afterwards, on either fabric).
+fn expected_a2a_bytes(n: usize) -> u64 {
+    let mut elems = 0usize;
+    for r in 0..n {
+        for d in 0..n {
+            if d == r {
+                continue;
+            }
+            elems += r + d + 1; // counts+f32 phase
+            elems += r + 1; // legacy exchange
+            elems += (d + 1) * 3; // rows wrapper, stride 3
+            elems += 2 * 2; // chunked wrapper, 2 chunks x 1 row x stride 2
+        }
+    }
+    (elems * 4) as u64
+}
+
+/// The op/byte ledger the exercise must leave behind, identically on
+/// both fabrics.
+fn assert_exercise_ledger(s: &FabricStats, n: usize, what: &str) {
+    assert_eq!(s.counts_ops, 1, "{what}: one counts exchange");
+    assert_eq!(s.counts_bytes, (n * 4 * (n - 1)) as u64, "{what}: counts bytes");
+    assert_eq!(s.a2a_ops, 4, "{what}: f32 + legacy + rows + chunked");
+    assert_eq!(s.a2a_bytes, expected_a2a_bytes(n), "{what}: off-rank payload bytes");
+    assert_eq!(s.allreduce_ops, 1, "{what}: the unaccounted variant must stay off-ledger");
+    assert_eq!(s.broadcast_ops, 1, "{what}: one decision-style broadcast");
+    assert_eq!(s.broadcast_bytes, 3, "{what}: root payload bytes, charged once");
+}
+
+/// Loopback NetFabric mesh, in-process: rank 0 pre-binds the coord
+/// listener (no port race), ranks 1.. dial concurrently.
+fn connect_loopback(world: usize, cluster: bool) -> Vec<Arc<NetFabric>> {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let coord = listener.local_addr().unwrap().to_string();
+    let mk = |rank: usize| {
+        let mut c = NetConfig::new(rank, world, coord.clone());
+        c.cluster = cluster.then_some(V100_IB100);
+        c
+    };
+    let mut hs = Vec::new();
+    for rank in 1..world {
+        let cfg = mk(rank);
+        hs.push(std::thread::spawn(move || NetFabric::connect(&cfg).unwrap()));
+    }
+    let mut fabs = vec![Arc::new(NetFabric::connect_with(&mk(0), Some(listener)).unwrap())];
+    for h in hs {
+        fabs.push(Arc::new(h.join().unwrap()));
+    }
+    fabs
+}
+
+#[test]
+fn thread_fabric_conforms_at_worlds_1_2_4() {
+    for n in [1usize, 2, 4] {
+        let fab = Arc::new(ThreadFabric::new(n));
+        let fabs: Vec<Arc<ThreadFabric>> = (0..n).map(|_| fab.clone()).collect();
+        exercise(&fabs);
+        assert_exercise_ledger(&fab.stats(), n, &format!("thread world={n}"));
+    }
+}
+
+#[test]
+fn net_fabric_conforms_at_worlds_1_2_4() {
+    for n in [1usize, 2, 4] {
+        let fabs = connect_loopback(n, false);
+        exercise(&fabs);
+        let per_rank: Vec<FabricStats> = fabs.iter().map(|f| f.stats()).collect();
+        let merged = FabricStats::merge_ranks(&per_rank);
+        assert_exercise_ledger(&merged, n, &format!("net world={n}"));
+        if n > 1 {
+            assert!(merged.wall_a2a_nanos > 0, "world={n}: TCP wall time must be measured");
+            assert!(
+                merged.wall_bytes > merged.a2a_bytes,
+                "world={n}: framed wire bytes must include headers"
+            );
+        }
+        for f in &fabs {
+            f.shutdown().unwrap();
+        }
+    }
+}
+
+/// The acceptance bar for interchangeability: with the same cluster
+/// model attached, the merged per-rank TCP ledger must equal the shared
+/// thread ledger field for field -- ops, bytes, AND the modeled time
+/// (bit-exact f64: both fabrics charge the identical formula in the
+/// identical SPMD order).
+#[test]
+fn merged_net_ledger_equals_shared_thread_ledger() {
+    for n in [2usize, 4] {
+        let tf = Arc::new(ThreadFabric::with_cluster(n, Some(V100_IB100)));
+        let tfs: Vec<Arc<ThreadFabric>> = (0..n).map(|_| tf.clone()).collect();
+        exercise(&tfs);
+        let thread = tf.stats();
+
+        let nfs = connect_loopback(n, true);
+        exercise(&nfs);
+        let per_rank: Vec<FabricStats> = nfs.iter().map(|f| f.stats()).collect();
+        let net = FabricStats::merge_ranks(&per_rank);
+        for f in &nfs {
+            f.shutdown().unwrap();
+        }
+
+        assert_eq!(net.a2a_ops, thread.a2a_ops, "world={n}");
+        assert_eq!(net.a2a_bytes, thread.a2a_bytes, "world={n}");
+        assert_eq!(net.counts_ops, thread.counts_ops, "world={n}");
+        assert_eq!(net.counts_bytes, thread.counts_bytes, "world={n}");
+        assert_eq!(net.allreduce_ops, thread.allreduce_ops, "world={n}");
+        assert_eq!(net.allreduce_bytes, thread.allreduce_bytes, "world={n}");
+        assert_eq!(net.broadcast_ops, thread.broadcast_ops, "world={n}");
+        assert_eq!(net.broadcast_bytes, thread.broadcast_bytes, "world={n}");
+        assert_eq!(
+            net.modeled_time.to_bits(),
+            thread.modeled_time.to_bits(),
+            "world={n}: modeled time must be bit-identical ({} vs {})",
+            net.modeled_time,
+            thread.modeled_time,
+        );
+    }
+}
+
+/// The shared `all_to_all_rows` wire guard produces the identical error
+/// text on both fabrics: rank, leg, and expected-vs-actual rows.
+#[test]
+fn desynced_buffer_error_is_identical_on_both_fabrics() {
+    let tf = ThreadFabric::new(1);
+    let nf = NetFabric::connect(&NetConfig::new(0, 1, "127.0.0.1:9")).unwrap();
+    let bad = |f: &dyn Collective| {
+        f.all_to_all_rows(0, vec![vec![0f32; 3]], &[1], &[1], 4, "dispatch")
+            .unwrap_err()
+            .to_string()
+    };
+    let (a, b) = (bad(&tf), bad(&nf));
+    assert_eq!(a, b, "wire-guard text must not depend on the fabric");
+    assert!(a.contains("rank 0"), "names the rank: {a}");
+    assert!(a.contains("dispatch leg"), "names the leg: {a}");
+    assert!(a.contains("len 3 != 1 rows x stride 4"), "expected-vs-actual: {a}");
+    nf.shutdown().unwrap();
+}

@@ -80,11 +80,11 @@ fn zero_capacity_drops_all_tokens_with_balanced_accounting() {
             let gates = vec![0.5f32; t];
             let x = vec![1.0f32; t * d];
             let counts = topo.owner_counts(&experts);
-            let recv = fab.all_to_all_counts(rank, &counts);
+            let recv = fab.all_to_all_counts(rank, &counts).unwrap();
             let stride = moe::HEADER + d;
             let packed = moe::route_pack(&topo, &x, d, &experts, &gates, &counts);
             let expect: Vec<usize> = recv.iter().map(|c| c * stride).collect();
-            let arrivals = fab.all_to_all_f32(rank, packed, &expect);
+            let arrivals = fab.all_to_all_f32(rank, packed, &expect).unwrap();
             let (xe, adm) = moe::route_admit(rank, &topo, &arrivals, d, 0);
             assert!(xe.is_empty(), "zero capacity allocates no expert rows");
             assert!(adm.is_empty(), "zero capacity admits nothing");
@@ -92,7 +92,7 @@ fn zero_capacity_drops_all_tokens_with_balanced_accounting() {
             let rc = moe::return_counts(&topo, &adm);
             assert_eq!(rc, vec![0, 0]);
             let back = moe::return_pack(&topo, &adm, &xe, d, &rc);
-            let returned = fab.all_to_all_f32(rank, back, &[0, 0]);
+            let returned = fab.all_to_all_f32(rank, back, &[0, 0]).unwrap();
             let r = moe::return_unpack(&returned, t, d);
             assert!(r.slot.iter().all(|&s| s == -1), "every token dropped");
             assert!(r.gate.iter().all(|&g| g == 0.0));

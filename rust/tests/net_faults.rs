@@ -1,0 +1,169 @@
+//! Fault injection for the TCP fabric: every way a distributed run dies
+//! must surface as a *typed error naming the rank and leg*, within the
+//! configured timeout -- never a silent hang. Covers a peer that
+//! vanishes mid-step (EOF), a peer that goes silent (read deadline), a
+//! corrupted frame on the wire (checksum), a rendezvous straggler that
+//! converges inside the retry budget, and a real child process killed
+//! mid-run under `--fabric tcp-local`.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use gating_dropout::collective::net::{encode_frame, HEADER_LEN, LEG_HELLO};
+use gating_dropout::collective::{Collective, NetConfig, NetFabric};
+use gating_dropout::distributed::{DistEngine, DistRunConfig, NetOpts};
+
+/// Pre-bind rank 0's rendezvous listener on port 0 so in-process tests
+/// never race on a fixed port.
+fn bound_coord() -> (TcpListener, String) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let coord = listener.local_addr().unwrap().to_string();
+    (listener, coord)
+}
+
+/// A peer that dies between steps: rank 1 joins the mesh and then drops
+/// its fabric (sockets close). Rank 0's next collective must fail with
+/// an error naming the counts leg and rank 1 -- immediately on the EOF,
+/// well inside the io timeout.
+#[test]
+fn dead_peer_mid_step_is_a_typed_error_naming_rank_and_leg() {
+    let (listener, coord) = bound_coord();
+    let peer = std::thread::spawn({
+        let coord = coord.clone();
+        move || {
+            let fab = NetFabric::connect(&NetConfig::new(1, 2, coord)).unwrap();
+            drop(fab); // no shutdown handshake: this peer just dies
+        }
+    });
+    let mut cfg = NetConfig::new(0, 2, coord);
+    cfg.io_timeout_ms = 750;
+    let fab = NetFabric::connect_with(&cfg, Some(listener)).unwrap();
+    peer.join().unwrap(); // rank 1 is certainly gone now
+
+    let t0 = Instant::now();
+    let e = fab.all_to_all_counts(0, &[1, 1]).unwrap_err().to_string();
+    let waited = t0.elapsed();
+    assert!(e.contains("counts frame"), "error must name the leg: {e}");
+    assert!(e.contains("from rank 1"), "error must name the dead peer: {e}");
+    assert!(e.contains("peer dead, killed, or desynced"), "typed diagnosis: {e}");
+    assert!(waited < Duration::from_secs(5), "EOF must not wait out the clock: {waited:?}");
+}
+
+/// A peer that is alive but silent: rank 1 joins and then stalls past
+/// rank 0's read deadline. The error must fire at roughly the deadline
+/// (not hang, not instantly) and carry the configured timeout.
+#[test]
+fn silent_peer_times_out_at_the_read_deadline() {
+    let (listener, coord) = bound_coord();
+    let peer = std::thread::spawn({
+        let coord = coord.clone();
+        move || {
+            let fab = NetFabric::connect(&NetConfig::new(1, 2, coord)).unwrap();
+            std::thread::sleep(Duration::from_millis(1500)); // stall, send nothing
+            drop(fab);
+        }
+    });
+    let mut cfg = NetConfig::new(0, 2, coord);
+    cfg.io_timeout_ms = 500;
+    let fab = NetFabric::connect_with(&cfg, Some(listener)).unwrap();
+
+    let t0 = Instant::now();
+    let e = fab.all_to_all_counts(0, &[1, 1]).unwrap_err().to_string();
+    let waited = t0.elapsed();
+    assert!(e.contains("counts frame"), "error must name the leg: {e}");
+    assert!(e.contains("from rank 1"), "error must name the silent peer: {e}");
+    assert!(e.contains("io timeout 500ms"), "error must carry the deadline: {e}");
+    assert!(
+        waited >= Duration::from_millis(300),
+        "a silent (not closed) peer only fails at the deadline: {waited:?}"
+    );
+    assert!(waited < Duration::from_secs(5), "deadline must actually fire: {waited:?}");
+    peer.join().unwrap();
+}
+
+/// One flipped payload byte in a frame: the checksum guard rejects it
+/// with an error naming the leg, seq, and claimed source rank, instead
+/// of rendezvousing with garbage.
+#[test]
+fn corrupted_frame_fails_the_checksum_with_seq_leg_and_src() {
+    let (listener, coord) = bound_coord();
+    let root = std::thread::spawn(move || {
+        NetFabric::connect_with(&NetConfig::new(0, 2, "ignored"), Some(listener))
+            .map(|_| ())
+            .unwrap_err()
+            .to_string()
+    });
+    // a fake rank 1: a well-formed hello frame, then one bit flipped in
+    // the payload AFTER the checksum was computed over the clean bytes
+    let mut stream = TcpStream::connect(&coord).unwrap();
+    let mut frame = encode_frame(1, LEG_HELLO, 0, 0, b"127.0.0.1:9");
+    frame[HEADER_LEN] ^= 0x10;
+    {
+        use std::io::Write as _;
+        stream.write_all(&frame).unwrap();
+    }
+    let e = root.join().unwrap();
+    assert!(e.contains("checksum mismatch"), "checksum guard must fire: {e}");
+    assert!(e.contains("hello frame"), "error must name the leg: {e}");
+    assert!(e.contains("from rank 1"), "error must name the claimed src: {e}");
+    assert!(e.contains("seq 0"), "error must name the seq: {e}");
+    drop(stream);
+}
+
+/// Rendezvous under realistic skew: rank 1 starts dialing before the
+/// coordinator even has a listener, and rank 2 shows up late. The
+/// bounded connect retry (default 80 x 25ms) absorbs both; the mesh
+/// comes up and a full counts round + clean shutdown proves it.
+#[test]
+fn rendezvous_straggler_converges_within_the_retry_budget() {
+    // probe a free port, then release it: the coordinator address exists
+    // before any listener does, exactly the straggler scenario
+    let coord = {
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        probe.local_addr().unwrap().to_string()
+    };
+    let spawn = |rank: usize, delay_ms: u64| {
+        let coord = coord.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(delay_ms));
+            let fab = NetFabric::connect(&NetConfig::new(rank, 3, coord)).unwrap();
+            let got = fab.all_to_all_counts(rank, &[rank + 1; 3]).unwrap();
+            assert_eq!(got, vec![1, 2, 3], "rank {rank}: counts after a skewed rendezvous");
+            fab.shutdown().unwrap();
+        })
+    };
+    // rank 1 dials into nothing first; rank 0 binds 250ms late; rank 2
+    // joins 400ms late -- all inside the 2s default retry budget
+    let hs = [spawn(1, 0), spawn(0, 250), spawn(2, 400)];
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+/// The process-level kill: under `tcp-local`, `--net-die-at-step 2`
+/// makes the last rank exit hard before step 2's collectives. The
+/// survivors must fail with typed errors (their sockets see EOF), and
+/// the parent must report which rank died -- within the io timeout, not
+/// after a hung `wait()`.
+#[test]
+fn killed_rank_fails_the_survivors_within_the_timeout() {
+    let cfg = DistRunConfig { artifact_dir: "synthetic".into(), steps: 6, ..Default::default() };
+    let mut net = NetOpts::new(0, cfg.n_ranks, "");
+    net.timeout_ms = 2000;
+    net.die_at_step = Some(2);
+    let t0 = Instant::now();
+    let e = DistEngine::run_tcp_local(&cfg, &net, env!("CARGO_BIN_EXE_repro"))
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    let waited = t0.elapsed();
+    assert!(e.contains("tcp-local ranks failed"), "parent must aggregate: {e}");
+    assert!(
+        e.contains(&format!("rank {} exited with", cfg.n_ranks - 1)),
+        "the injected victim is the last rank: {e}"
+    );
+    assert!(
+        waited < Duration::from_secs(60),
+        "survivors must fail on EOF/timeout, not hang: {waited:?}"
+    );
+}

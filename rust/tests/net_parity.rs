@@ -1,0 +1,122 @@
+//! The NetFabric acceptance bar: a 4-rank `--fabric tcp-local` run (four
+//! real OS processes over loopback TCP) must be bit-identical to the
+//! in-process ThreadFabric run of the same seed -- per-step losses, the
+//! full-model fingerprint hash, `a2a_ops`/`a2a_bytes`/`counts_ops`/
+//! `counts_bytes`, the dense-replica consistency bit, and the observed
+//! drop rate -- at every router x policy x `overlap_chunks` combination
+//! the overlap suite pins.
+//!
+//! These tests spawn the `repro` binary (`CARGO_BIN_EXE_repro`), so a
+//! parity break anywhere in the stack -- frame codec, rendezvous, CLI
+//! flag forwarding, result-line round trip -- fails here by name.
+
+use gating_dropout::coordinator::Policy;
+use gating_dropout::distributed::{DistEngine, DistRunConfig, NetOpts, NetRunReport};
+use gating_dropout::moe::Router;
+
+fn cfg(router: Router, policy: Policy, overlap_chunks: usize) -> DistRunConfig {
+    DistRunConfig {
+        artifact_dir: "synthetic".into(),
+        steps: 6,
+        policy,
+        router,
+        overlap_chunks,
+        ..Default::default()
+    }
+}
+
+/// Run the same config on both fabrics: tcp-local spawns one `repro dist
+/// --fabric tcp` child per rank; the thread run stays in-process.
+fn both(router: Router, policy: Policy, overlap_chunks: usize) -> (NetRunReport, NetRunReport) {
+    let c = cfg(router, policy, overlap_chunks);
+    let mut net = NetOpts::new(0, c.n_ranks, "");
+    net.timeout_ms = 30_000; // CI machines can be slow to schedule 4 children
+    let tcp = DistEngine::run_tcp_local(&c, &net, env!("CARGO_BIN_EXE_repro"))
+        .unwrap_or_else(|e| panic!("tcp-local run failed: {e}"));
+    let thread = DistEngine::run(&c).unwrap_or_else(|e| panic!("thread run failed: {e}"));
+    // project the thread result into the same report shape
+    let thread_report = NetRunReport {
+        losses: thread.losses.clone(),
+        fabric: thread.fabric,
+        dense_consistent: thread.dense_consistent,
+        fingerprint_hash: thread.fingerprint_hash(),
+        observed_drop_rate: thread.observed_drop_rate,
+    };
+    (tcp, thread_report)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_parity(tcp: &NetRunReport, thread: &NetRunReport, tag: &str) {
+    assert!(tcp.dense_consistent, "{tag}: tcp dense replicas desynced");
+    assert!(thread.dense_consistent, "{tag}: thread dense replicas desynced");
+    assert_eq!(
+        bits(&tcp.losses),
+        bits(&thread.losses),
+        "{tag}: per-step losses must be bit-identical across fabrics"
+    );
+    assert_eq!(
+        tcp.fingerprint_hash, thread.fingerprint_hash,
+        "{tag}: full-model fingerprint hash"
+    );
+    assert_eq!(tcp.fabric.a2a_ops, thread.fabric.a2a_ops, "{tag}: a2a_ops");
+    assert_eq!(tcp.fabric.a2a_bytes, thread.fabric.a2a_bytes, "{tag}: a2a_bytes");
+    assert_eq!(tcp.fabric.counts_ops, thread.fabric.counts_ops, "{tag}: counts_ops");
+    assert_eq!(tcp.fabric.counts_bytes, thread.fabric.counts_bytes, "{tag}: counts_bytes");
+    assert_eq!(tcp.fabric.broadcast_ops, thread.fabric.broadcast_ops, "{tag}: broadcast_ops");
+    assert_eq!(
+        tcp.fabric.broadcast_bytes, thread.fabric.broadcast_bytes,
+        "{tag}: broadcast_bytes"
+    );
+    assert_eq!(tcp.fabric.allreduce_ops, thread.fabric.allreduce_ops, "{tag}: allreduce_ops");
+    assert_eq!(
+        tcp.fabric.allreduce_bytes, thread.fabric.allreduce_bytes,
+        "{tag}: allreduce_bytes"
+    );
+    assert_eq!(
+        tcp.observed_drop_rate.to_bits(),
+        thread.observed_drop_rate.to_bits(),
+        "{tag}: observed drop rate"
+    );
+    if tcp.fabric.a2a_ops > 0 {
+        assert!(
+            tcp.fabric.wall_a2a_nanos > 0,
+            "{tag}: the TCP path must measure nonzero all-to-all wall time"
+        );
+        assert!(
+            tcp.fabric.wall_bytes > tcp.fabric.a2a_bytes,
+            "{tag}: framed wire bytes must exceed payload bytes (40-byte headers)"
+        );
+    }
+}
+
+/// The full acceptance matrix: k=1 and k=2 routing, baseline and
+/// gate-drop policies, serial and 2-chunk pipelined schedules.
+#[test]
+fn tcp_local_matches_thread_fabric_across_router_policy_chunks() {
+    for router in [Router::Top1, Router::TopK { k: 2 }] {
+        for policy in [Policy::Baseline, Policy::GateDrop { p: 0.3 }] {
+            for chunks in [1usize, 2] {
+                let tag =
+                    format!("{}/{} chunks={chunks}", router.name(), policy.name());
+                let (tcp, thread) = both(router, policy, chunks);
+                assert_parity(&tcp, &thread, &tag);
+            }
+        }
+    }
+}
+
+/// The degenerate extremes stay in lockstep too: a policy that never
+/// touches the wire (all dropped) and the adaptive router.
+#[test]
+fn tcp_local_matches_thread_fabric_at_the_extremes() {
+    let (tcp, thread) = both(Router::Top1, Policy::GateDrop { p: 1.0 }, 1);
+    assert_parity(&tcp, &thread, "top1/gate-drop:1.0");
+    assert_eq!(tcp.fabric.a2a_ops, 0, "all-dropped runs must stay off the wire");
+
+    let (tcp, thread) =
+        both(Router::Adaptive { thresh: 0.6, k_max: 2 }, Policy::GateDrop { p: 0.3 }, 2);
+    assert_parity(&tcp, &thread, "adaptive/gate-drop:0.3 chunks=2");
+}
