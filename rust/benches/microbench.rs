@@ -13,6 +13,13 @@
 //! fanned over the pool. Target: >= 2x at 512^3 on a 4-core runner, with
 //! the outputs asserted bit-identical (the backend's whole premise).
 //!
+//! `bench_matmul_simd` is the acceptance gate for the `backend-simd`
+//! lane kernels: the scalar skip-zero matmul vs the lane-tree kernel
+//! (AVX2/NEON where available, scalar emulation otherwise), sequential
+//! and pooled. Emulation-vs-native and pooled-vs-sequential bit-equality
+//! are asserted before any timing. Target: >= 4x single-thread at 512^3
+//! on an AVX2 host.
+//!
 //! `bench_pool_dispatch` is the acceptance gate for the persistent-worker
 //! pool (PR 5): per-region dispatch overhead of the retained scoped-spawn
 //! baseline (`tensor::run_parts_scoped`) vs the parked-worker pool, at
@@ -342,6 +349,104 @@ fn bench_matmul_par() -> Vec<BenchEntry> {
     entries
 }
 
+/// Acceptance gate for the `backend-simd` lane kernels: the scalar
+/// skip-zero matmul vs the lane-tree kernel (native AVX2/NEON when the
+/// host has it, the scalar emulation otherwise), single-thread and over
+/// the ThreadPool. The lane kernels are compiled in every build, so this
+/// section runs under plain `backend-ref` too. Bit-equality is asserted
+/// before any timing: the scalar emulation must match native SIMD
+/// bit-for-bit, and the pooled lane kernel must match the sequential one
+/// -- determinism is the tier's whole premise.
+fn bench_matmul_simd() -> Vec<BenchEntry> {
+    use gating_dropout::runtime::tensor::{
+        matmul_kind, matmul_par_kind, native_simd_available, KernelKind,
+    };
+    let mut entries = Vec::new();
+    let threads = resolve_threads(0).expect("GD_THREADS must parse");
+    let pool = ThreadPool::with_cutoff(threads, 0);
+    let native = native_simd_available();
+    let lane = if native { KernelKind::LaneSimd } else { KernelKind::LaneScalar };
+    println!(
+        "-- bench_matmul_simd: scalar kernel vs {} (1 thread and ThreadPool({threads})) --",
+        lane.name()
+    );
+    entries.push(BenchEntry::new("native_simd", if native { 1.0 } else { 0.0 }, "bool"));
+    for (m, k, n, warmup, iters) in
+        [(256usize, 256usize, 256usize, 3, 20), (512, 512, 512, 2, 10), (768, 512, 768, 1, 5)]
+    {
+        let mut rng = Rng::new(29);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut scalar_out = vec![0f32; m * n];
+        let mut emu_out = vec![0f32; m * n];
+        let mut lane_out = vec![0f32; m * n];
+        let mut lane_par_out = vec![0f32; m * n];
+        matmul_kind(KernelKind::Scalar, &mut scalar_out, &a, &b, m, k, n);
+        matmul_kind(KernelKind::LaneScalar, &mut emu_out, &a, &b, m, k, n);
+        matmul_kind(lane, &mut lane_out, &a, &b, m, k, n);
+        matmul_par_kind(lane, &pool, &mut lane_par_out, &a, &b, m, k, n);
+        assert!(
+            emu_out.iter().zip(&lane_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "scalar emulation must be bit-identical to the {} kernel ({m}x{k}x{n})",
+            lane.name()
+        );
+        assert!(
+            lane_out.iter().zip(&lane_par_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "pooled lane matmul must be bit-identical to sequential ({m}x{k}x{n})"
+        );
+        // sanity, not bit-equality: the lane order rounds differently from
+        // the scalar order, but both compute the same product
+        for (i, (x, y)) in scalar_out.iter().zip(&lane_out).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-3 * x.abs().max(y.abs()).max(1.0),
+                "scalar vs lane diverged beyond rounding at {i}: {x} vs {y} ({m}x{k}x{n})"
+            );
+        }
+        let scalar = bench(warmup, iters, || {
+            matmul_kind(KernelKind::Scalar, &mut scalar_out, &a, &b, m, k, n);
+            std::hint::black_box(&scalar_out);
+        });
+        let lane_seq = bench(warmup, iters, || {
+            matmul_kind(lane, &mut lane_out, &a, &b, m, k, n);
+            std::hint::black_box(&lane_out);
+        });
+        let lane_par = bench(warmup, iters, || {
+            matmul_par_kind(lane, &pool, &mut lane_par_out, &a, &b, m, k, n);
+            std::hint::black_box(&lane_par_out);
+        });
+        let name = format!("matmul {m}x{k}x{n}");
+        report(&format!("{name} [scalar]"), &scalar);
+        report(&format!("{name} [{}]", lane.name()), &lane_seq);
+        report(&format!("{name} [{} x{threads}t]", lane.name()), &lane_par);
+        println!(
+            "{name:<44} lane speedup {:.2}x  (median {} -> {}; target >= 4x at 512^3 with AVX2)",
+            scalar.median_ns / lane_seq.median_ns,
+            fmt_ns(scalar.median_ns),
+            fmt_ns(lane_seq.median_ns),
+        );
+        println!(
+            "{name:<44} lane x threads {:.2}x over scalar  (median {})",
+            scalar.median_ns / lane_par.median_ns,
+            fmt_ns(lane_par.median_ns),
+        );
+        let tag = format!("matmul_{m}x{k}x{n}");
+        entries.push(BenchEntry::new(format!("{tag}_scalar_median"), scalar.median_ns, "ns"));
+        entries.push(BenchEntry::new(format!("{tag}_lane_median"), lane_seq.median_ns, "ns"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_lane_speedup"),
+            scalar.median_ns / lane_seq.median_ns,
+            "x",
+        ));
+        entries.push(BenchEntry::new(format!("{tag}_lane_par_median"), lane_par.median_ns, "ns"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_lane_par_speedup"),
+            scalar.median_ns / lane_par.median_ns,
+            "x",
+        ));
+    }
+    entries
+}
+
 /// Per-request sequential decode vs one ragged `decode_batch` over the
 /// same requests, on the tiny-preset reference model. Bit-equality is
 /// asserted before any timing (mirrors `bench_matmul_par`).
@@ -652,7 +757,11 @@ fn bench_netfabric() -> Vec<BenchEntry> {
             payload / sn.median_secs() / 1e9,
             "GB/s",
         ));
-        entries.push(BenchEntry::new(format!("{tag}_tcp_over_thread"), sn.median_ns / st.median_ns, "x"));
+        entries.push(BenchEntry::new(
+            format!("{tag}_tcp_over_thread"),
+            sn.median_ns / st.median_ns,
+            "x",
+        ));
     }
 
     // measured wire rate over the whole run, straight from the ledger's
@@ -712,13 +821,14 @@ fn main() {
         report(&format!("moe routing round-trip ({t} tokens, d={d})"), &s);
     }
 
-    let sections: [(&str, fn() -> Vec<BenchEntry>); 7] = [
+    let sections: [(&str, fn() -> Vec<BenchEntry>); 8] = [
         ("dispatch", bench_dispatch),
         ("routing", bench_routing),
         ("matmul_par", || {
             bench_pool_dispatch();
             bench_matmul_par()
         }),
+        ("matmul_simd", bench_matmul_simd),
         ("decode", bench_decode),
         ("overlap", bench_overlap),
         ("soak", bench_soak),

@@ -38,7 +38,9 @@ use crate::collective::{Collective, Fabric, FabricStats, OverlapKind, ThreadFabr
 use crate::coordinator::{Decision, DistCoordinator, Policy};
 use crate::moe;
 use crate::netmodel::{Cluster, V100_IB100};
-use crate::runtime::tensor::{resolve_seq_cutoff, resolve_threads_explicit, ThreadPool};
+use crate::runtime::tensor::{
+    init_kernel_kind, resolve_seq_cutoff, resolve_threads_explicit, ThreadPool,
+};
 use crate::topology::Topology;
 use crate::util::rng::Rng;
 
@@ -951,9 +953,11 @@ impl DistEngine {
             Some(explicit) => explicit,
             None => (std::thread::available_parallelism().map_or(1, |p| p.get()) / n).max(1),
         };
-        // resolve the cutoff once here so a garbage GD_SEQ_CUTOFF is a
-        // clean launch error, not a panic inside every rank thread
+        // resolve the cutoff and kernel kind once here so a garbage
+        // GD_SEQ_CUTOFF or GD_SIMD is a clean launch error, not a panic
+        // inside every rank thread
         let seq_cutoff = resolve_seq_cutoff()?;
+        init_kernel_kind()?;
         let fabric = Arc::new(Fabric::Thread(ThreadFabric::with_cluster(n, cfg.cluster)));
         let task = Arc::new(ClusterTask::new(
             manifest.d_in,
@@ -1037,6 +1041,7 @@ impl DistEngine {
             }
         };
         let seq_cutoff = resolve_seq_cutoff()?;
+        init_kernel_kind()?;
         let mut ncfg = NetConfig::new(net.rank, net.world, net.coord.clone());
         ncfg.io_timeout_ms = net.timeout_ms;
         ncfg.connect_retries = net.retries;

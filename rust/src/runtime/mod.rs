@@ -18,6 +18,14 @@
 //!   [`ReferenceBackend`] at any thread count. The same pool type carries
 //!   the distributed engine's per-rank stage math.
 //!
+//! The `backend-simd` cargo feature (implies `backend-ref`) is a kernel
+//! tier rather than a fourth engine: it puts the explicit-SIMD lane
+//! kernels of [`simd`] onto the shared `tensor::{mm, mm_at, mm_bt}` seam
+//! for whichever engines are compiled, selected once per process by
+//! [`simd::KernelKind`] (CPU detection x `GD_SIMD` override) and
+//! bit-identical across native SIMD, scalar emulation, and any thread
+//! count.
+//!
 //! [`StubBackend`] (always compiled) is a fourth, decode-only engine:
 //! a deterministic FNV token mixer with no model math, for
 //! scheduler-scale soak runs where the transformer would be the
@@ -34,6 +42,7 @@ mod manifest;
 #[cfg(feature = "backend-par")]
 mod parallel;
 mod reference;
+pub mod simd;
 mod stub;
 pub mod tensor;
 

@@ -23,6 +23,7 @@ use crate::data::Batch;
 use super::backend::{Backend, BackendError, BackendResult, EvalMetrics, TrainMetrics};
 use super::manifest::{Manifest, ModelDims, TensorSpec};
 use super::reference::{RefHyper, ReferenceBackend};
+use super::tensor;
 use super::tensor::{resolve_seq_cutoff, resolve_threads, ThreadPool};
 
 pub struct ParallelBackend {
@@ -38,13 +39,15 @@ impl ParallelBackend {
 
     /// Build for a preset; `threads` = 0 means auto (env, then available
     /// parallelism), anything else is taken as the configured count
-    /// unless `GD_THREADS` overrides it. An unparsable `GD_THREADS` or
-    /// `GD_SEQ_CUTOFF` is a loud [`BackendError::Init`], not a silent
-    /// default (both knobs are resolved here, up front).
+    /// unless `GD_THREADS` overrides it. An unparsable `GD_THREADS`,
+    /// `GD_SEQ_CUTOFF`, or `GD_SIMD` is a loud [`BackendError::Init`],
+    /// not a silent default (all three knobs are resolved here, up
+    /// front).
     pub fn with_threads(preset: &str, seed: u64, threads: usize) -> BackendResult<ParallelBackend> {
         let env = |e: crate::util::error::Error| BackendError::Init { detail: e.to_string() };
         let threads = resolve_threads(threads).map_err(env)?;
         let cutoff = resolve_seq_cutoff().map_err(env)?;
+        tensor::init_kernel_kind().map_err(env)?;
         let mut inner = ReferenceBackend::for_preset(preset, seed)?;
         inner.attach_thread_pool(ThreadPool::with_cutoff(threads, cutoff));
         Ok(ParallelBackend { inner })

@@ -162,6 +162,10 @@ impl ReferenceBackend {
     /// for the reference model's shallower, attention-free graph so that
     /// CI-scale runs show real learning progress).
     pub fn for_preset(preset: &str, seed: u64) -> BackendResult<ReferenceBackend> {
+        // pin the process-wide kernel kind up front so a garbage GD_SIMD
+        // is a clean init error, not a panic mid-step
+        tensor::init_kernel_kind()
+            .map_err(|e| BackendError::Init { detail: e.to_string() })?;
         let (dims, hyper) = match preset {
             "tiny" => (dims(512, 64, 128, 4, 1, 1, 16, 8), RefHyper { lr: 1e-2, warmup: 4.0 }),
             "wmt10_sim" => (

@@ -1,0 +1,990 @@
+//! Explicit-SIMD f32 lane kernels behind the shared `mm` seam, plus the
+//! `KernelKind` / `GD_SIMD` resolution that selects them.
+//!
+//! # The lane kernels
+//!
+//! Three matmul orientations, mirroring `tensor::{matmul, matmul_at,
+//! matmul_bt}` but written against a portable 8-lane `f32x8`-style
+//! abstraction ([`LANES`] = 8):
+//!
+//! * [`matmul_lane`]     `out = a · b`   -- broadcast-multiply-accumulate,
+//!   vectorized over the `n` columns, register-blocked 4 rows x 16 cols
+//! * [`matmul_at_lane`]  `out = aᵀ · b`  -- same body, `a` walked down the
+//!   token axis at stride `m`
+//! * [`matmul_bt_lane`]  `out = a · bᵀ`  -- 8-lane dot products with the
+//!   fixed lane-tree fold below
+//!
+//! Each kernel has two bit-identical instantiations: a **scalar
+//! emulation** struct (`[f32; 8]`, plain arithmetic, compiles on every
+//! target) and a **native** struct over `std::arch` (AVX2 `__m256` on
+//! x86_64 behind `is_x86_feature_detected!`, NEON `float32x4_t` pairs on
+//! aarch64 where NEON is baseline). The `native: bool` argument selects
+//! the instantiation; when the CPU lacks the feature the native entry
+//! falls back to the emulation, which produces the same bits anyway.
+//!
+//! # Determinism by construction: the lane-tree accumulation order
+//!
+//! The SIMD kernels do not chase the scalar kernels' accumulation order
+//! within a tolerance -- they *define* a new reference order and every
+//! path (native SIMD, scalar emulation, pooled row chunks, and the
+//! Python fixture generator `tests/fixtures/gen_ref_tiny_golden.py`)
+//! implements it exactly:
+//!
+//! * `matmul` / `matmul_at` shapes: each output element accumulates its
+//!   products in ascending shared-index order, one `mul` then one `add`
+//!   per product (**no** fused multiply-add -- see below), with **no**
+//!   skip of zero operands (the scalar kernels skip `a == 0.0` rows,
+//!   which can differ in the sign of zero outputs).
+//! * `matmul_bt` (dot over `k`): product `k` goes to lane `k % 8`; the
+//!   final partial 8-chunk is zero-padded on *both* operands, so the pad
+//!   products are `+0.0` and participate in the accumulation; the eight
+//!   lane accumulators then fold through the fixed tree of
+//!   [`fold8_spec`]: `s[i] = acc[i] + acc[i+4]`, `t[i] = s[i] + s[i+2]`,
+//!   result `t[0] + t[1]`. This tree is exactly one AVX
+//!   `extractf128`+`movehl` reduction and one NEON `vget_low/high`
+//!   reduction, so the native folds are the spec, not an approximation
+//!   of it.
+//!
+//! **Why no FMA:** `_mm256_fmadd_ps` rounds once per multiply-add where
+//! `mul`+`add` rounds twice, so an FMA kernel could never be bit-equal to
+//! the scalar emulation without emulating correctly-rounded f32 FMA in
+//! the (numpy-based, Python 3.10) fixture generator -- a double-rounding
+//! minefield with no Rust toolchain in the fixture environment to check
+//! it against. Separate `mul` and `add` keep every instantiation in
+//! plain IEEE single-rounding ops and make "bit-identical everywhere"
+//! checkable. The speedup comes from register blocking (the scalar
+//! kernels stream the output row through memory once per shared-dim
+//! step; the lane kernels hold it in registers across all of `k`), not
+//! from fusing.
+//!
+//! # Kind resolution
+//!
+//! [`KernelKind`] is resolved once per process from compile-time feature
+//! x runtime CPU detection x the `GD_SIMD` env override
+//! ([`parse_gd_simd`], through the same hardened parser seam as
+//! `GD_THREADS` / `GD_SEQ_CUTOFF`):
+//!
+//! | build                 | `GD_SIMD`                | kind         |
+//! |-----------------------|--------------------------|--------------|
+//! | without `backend-simd`| unset / `auto` / `off`   | `Scalar`     |
+//! | without `backend-simd`| `force-scalar-emulation` | loud error   |
+//! | with `backend-simd`   | `off`                    | `Scalar`     |
+//! | with `backend-simd`   | `force-scalar-emulation` | `LaneScalar` |
+//! | with `backend-simd`   | unset / `auto`           | `LaneSimd` if the CPU has the feature, else `LaneScalar` |
+//!
+//! Engines prime the kind at construction ([`init_kernel_kind`], a
+//! `Result` so garbage env is a clean init error); the seam reads it per
+//! call through [`active_kernel_kind`] (panics loudly on garbage env if
+//! nothing primed it first -- same contract as `ThreadPool::new` with a
+//! bad `GD_SEQ_CUTOFF`).
+
+use std::sync::OnceLock;
+
+use crate::util::error::Result;
+
+/// Lane width of the portable kernels: 8 f32s (one AVX ymm register, two
+/// NEON q registers, or a `[f32; 8]` in the scalar emulation).
+pub const LANES: usize = 8;
+
+const W: usize = LANES;
+
+/// The fixed lane-tree fold the `matmul_bt` lane kernel reduces its 8
+/// lane accumulators through: `s[i] = acc[i] + acc[i+4]` (i in 0..4),
+/// then `t[i] = s[i] + s[i+2]` (i in 0..2), then `t[0] + t[1]`. Every
+/// instantiation (scalar emulation, AVX2, NEON) and the Python fixture
+/// generator implement exactly this tree; the property tests pin each
+/// against this function bitwise.
+pub fn fold8_spec(acc: &[f32; 8]) -> f32 {
+    let s = [acc[0] + acc[4], acc[1] + acc[5], acc[2] + acc[6], acc[3] + acc[7]];
+    let t = [s[0] + s[2], s[1] + s[3]];
+    t[0] + t[1]
+}
+
+/// 8 f32 lanes. Methods are `unsafe` because the native impls are
+/// `std::arch` intrinsics (caller guarantees the feature) and `load` /
+/// `store` take raw pointers to exactly [`LANES`] valid f32s.
+trait Lanes: Copy {
+    unsafe fn zero() -> Self;
+    unsafe fn splat(v: f32) -> Self;
+    unsafe fn load(p: *const f32) -> Self;
+    unsafe fn store(self, p: *mut f32);
+    unsafe fn mul(self, o: Self) -> Self;
+    unsafe fn add(self, o: Self) -> Self;
+    /// Horizontal sum through the [`fold8_spec`] lane tree.
+    unsafe fn fold(self) -> f32;
+}
+
+/// The scalar emulation: same shape, same ops, same bits as the native
+/// structs, on any target. This is what `GD_SIMD=force-scalar-emulation`
+/// runs and what the bit-equality property tests compare the native
+/// paths against.
+#[derive(Clone, Copy)]
+struct ScalarX8([f32; W]);
+
+impl Lanes for ScalarX8 {
+    #[inline(always)]
+    unsafe fn zero() -> Self {
+        ScalarX8([0.0; W])
+    }
+    #[inline(always)]
+    unsafe fn splat(v: f32) -> Self {
+        ScalarX8([v; W])
+    }
+    #[inline(always)]
+    unsafe fn load(p: *const f32) -> Self {
+        let mut l = [0f32; W];
+        for (i, v) in l.iter_mut().enumerate() {
+            *v = *p.add(i);
+        }
+        ScalarX8(l)
+    }
+    #[inline(always)]
+    unsafe fn store(self, p: *mut f32) {
+        for (i, v) in self.0.iter().enumerate() {
+            *p.add(i) = *v;
+        }
+    }
+    #[inline(always)]
+    unsafe fn mul(self, o: Self) -> Self {
+        let mut l = self.0;
+        for (v, w) in l.iter_mut().zip(&o.0) {
+            *v *= w;
+        }
+        ScalarX8(l)
+    }
+    #[inline(always)]
+    unsafe fn add(self, o: Self) -> Self {
+        let mut l = self.0;
+        for (v, w) in l.iter_mut().zip(&o.0) {
+            *v += w;
+        }
+        ScalarX8(l)
+    }
+    #[inline(always)]
+    unsafe fn fold(self) -> f32 {
+        fold8_spec(&self.0)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx {
+    use super::Lanes;
+    use std::arch::x86_64::*;
+
+    /// 8 f32 lanes in one AVX ymm register. Only instantiated inside the
+    /// `#[target_feature(enable = "avx2")]` wrappers below, so the
+    /// `#[inline(always)]` method bodies inline into a context where the
+    /// intrinsics are available.
+    #[derive(Clone, Copy)]
+    pub(super) struct Avx2X8(__m256);
+
+    impl Lanes for Avx2X8 {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            Avx2X8(_mm256_setzero_ps())
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            Avx2X8(_mm256_set1_ps(v))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            Avx2X8(_mm256_loadu_ps(p))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            _mm256_storeu_ps(p, self.0)
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            Avx2X8(_mm256_mul_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            Avx2X8(_mm256_add_ps(self.0, o.0))
+        }
+        #[inline(always)]
+        unsafe fn fold(self) -> f32 {
+            // fold8_spec as hardware shuffles: lanes 0..4 + lanes 4..8
+            // (cast low / extract high), then s[i] + s[i+2] (movehl),
+            // then t[0] + t[1] (shuffle lane 1 down, add_ss)
+            let s4 =
+                _mm_add_ps(_mm256_castps256_ps128(self.0), _mm256_extractf128_ps::<1>(self.0));
+            let t2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+            _mm_cvtss_f32(_mm_add_ss(t2, _mm_shuffle_ps::<1>(t2, t2)))
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mm_bcast(
+        out: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        rows: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        ci: usize,
+        ck: usize,
+    ) {
+        super::mm_bcast_body::<Avx2X8>(out, a, b, rows, k, n, i0, ci, ck)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mm_bt(
+        out: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        super::mm_bt_body::<Avx2X8>(out, a, b, m, k, n)
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::Lanes;
+    use std::arch::aarch64::*;
+
+    /// 8 f32 lanes as two NEON q registers: lanes 0..4 in `.0`, lanes
+    /// 4..8 in `.1`. NEON is baseline on aarch64, so no runtime
+    /// detection or `target_feature` wrapper is needed.
+    #[derive(Clone, Copy)]
+    pub(super) struct NeonX8(float32x4_t, float32x4_t);
+
+    impl Lanes for NeonX8 {
+        #[inline(always)]
+        unsafe fn zero() -> Self {
+            NeonX8(vdupq_n_f32(0.0), vdupq_n_f32(0.0))
+        }
+        #[inline(always)]
+        unsafe fn splat(v: f32) -> Self {
+            NeonX8(vdupq_n_f32(v), vdupq_n_f32(v))
+        }
+        #[inline(always)]
+        unsafe fn load(p: *const f32) -> Self {
+            NeonX8(vld1q_f32(p), vld1q_f32(p.add(4)))
+        }
+        #[inline(always)]
+        unsafe fn store(self, p: *mut f32) {
+            vst1q_f32(p, self.0);
+            vst1q_f32(p.add(4), self.1);
+        }
+        #[inline(always)]
+        unsafe fn mul(self, o: Self) -> Self {
+            NeonX8(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn add(self, o: Self) -> Self {
+            NeonX8(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1))
+        }
+        #[inline(always)]
+        unsafe fn fold(self) -> f32 {
+            // fold8_spec: s[i] = acc[i] + acc[i+4] is one vaddq (lanes
+            // 4..8 live in .1), then the low/high halves of s pair up
+            // into t (NOT vpadd, which pairs adjacent lanes -- a
+            // different tree), then t[0] + t[1]
+            let s4 = vaddq_f32(self.0, self.1);
+            let t2 = vadd_f32(vget_low_f32(s4), vget_high_f32(s4));
+            vget_lane_f32::<0>(t2) + vget_lane_f32::<1>(t2)
+        }
+    }
+
+    pub(super) unsafe fn mm_bcast(
+        out: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        rows: usize,
+        k: usize,
+        n: usize,
+        i0: usize,
+        ci: usize,
+        ck: usize,
+    ) {
+        super::mm_bcast_body::<NeonX8>(out, a, b, rows, k, n, i0, ci, ck)
+    }
+
+    pub(super) unsafe fn mm_bt(
+        out: *mut f32,
+        a: *const f32,
+        b: *const f32,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) {
+        super::mm_bt_body::<NeonX8>(out, a, b, m, k, n)
+    }
+}
+
+/// One register block of the broadcast kernel: `MR` output rows x `NR`
+/// lane vectors (so `MR * NR * 8` output elements) accumulated in
+/// registers across the whole shared dimension. Per output element the
+/// order is ascending-`kk` mul-then-add -- identical at every `MR`/`NR`,
+/// which is why blocking is a pure speed knob, never a bits knob.
+///
+/// The `a` element for output row `i` at shared index `kk` sits at
+/// `a[(i0 + i) * ci + kk * ck]`: `(ci, ck) = (k, 1)` is `a · b`,
+/// `(1, m)` is `aᵀ · b`, and `i0` offsets into the full row range for
+/// the pooled row-chunk path.
+#[inline(always)]
+unsafe fn bcast_block<L: Lanes, const MR: usize, const NR: usize>(
+    out: *mut f32,
+    a: *const f32,
+    b: *const f32,
+    i: usize,
+    j: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    ci: usize,
+    ck: usize,
+) {
+    let mut acc = [[L::zero(); NR]; MR];
+    for kk in 0..k {
+        let brow = b.add(kk * n + j);
+        let mut bv = [L::zero(); NR];
+        for (v, slot) in bv.iter_mut().enumerate() {
+            *slot = L::load(brow.add(v * W));
+        }
+        for (r, arow) in acc.iter_mut().enumerate() {
+            let av = L::splat(*a.add((i0 + i + r) * ci + kk * ck));
+            for (v, slot) in arow.iter_mut().enumerate() {
+                *slot = slot.add(av.mul(bv[v]));
+            }
+        }
+    }
+    for (r, arow) in acc.iter().enumerate() {
+        for (v, slot) in arow.iter().enumerate() {
+            slot.store(out.add((i + r) * n + j + v * W));
+        }
+    }
+}
+
+/// Shared body of the `a · b` / `aᵀ · b` lane kernels (see
+/// [`bcast_block`] for the `(i0, ci, ck)` addressing). Columns past the
+/// last full lane vector run a scalar loop in the same ascending-`kk`
+/// mul-then-add order, so the tail is bit-identical to the lanes.
+#[inline(always)]
+unsafe fn mm_bcast_body<L: Lanes>(
+    out: *mut f32,
+    a: *const f32,
+    b: *const f32,
+    rows: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    ci: usize,
+    ck: usize,
+) {
+    let nv = n - n % W;
+    let mut i = 0;
+    while i < rows {
+        let mr = (rows - i).min(4);
+        let mut j = 0;
+        while j + 2 * W <= nv {
+            match mr {
+                4 => bcast_block::<L, 4, 2>(out, a, b, i, j, k, n, i0, ci, ck),
+                3 => bcast_block::<L, 3, 2>(out, a, b, i, j, k, n, i0, ci, ck),
+                2 => bcast_block::<L, 2, 2>(out, a, b, i, j, k, n, i0, ci, ck),
+                _ => bcast_block::<L, 1, 2>(out, a, b, i, j, k, n, i0, ci, ck),
+            }
+            j += 2 * W;
+        }
+        if j < nv {
+            match mr {
+                4 => bcast_block::<L, 4, 1>(out, a, b, i, j, k, n, i0, ci, ck),
+                3 => bcast_block::<L, 3, 1>(out, a, b, i, j, k, n, i0, ci, ck),
+                2 => bcast_block::<L, 2, 1>(out, a, b, i, j, k, n, i0, ci, ck),
+                _ => bcast_block::<L, 1, 1>(out, a, b, i, j, k, n, i0, ci, ck),
+            }
+            j += W;
+        }
+        debug_assert_eq!(j, nv);
+        for r in i..i + mr {
+            for jj in nv..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += *a.add((i0 + r) * ci + kk * ck) * *b.add(kk * n + jj);
+                }
+                *out.add(r * n + jj) = acc;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// `NJ` simultaneous lane-dots of one `a` row against consecutive `b`
+/// rows (shared `a`-chunk loads, `NJ` independent accumulator chains).
+/// Full 8-chunks accumulate lane-wise in ascending chunk order; the
+/// final partial chunk is zero-padded on both operands (pad products
+/// are `+0.0` and participate); the fold is [`fold8_spec`].
+#[inline(always)]
+unsafe fn bt_dots<L: Lanes, const NJ: usize>(
+    arow: *const f32,
+    b: *const f32,
+    j: usize,
+    k: usize,
+) -> [f32; NJ] {
+    let mut acc = [L::zero(); NJ];
+    let kv = k - k % W;
+    let mut kk = 0;
+    while kk < kv {
+        let av = L::load(arow.add(kk));
+        for (t, slot) in acc.iter_mut().enumerate() {
+            *slot = slot.add(av.mul(L::load(b.add((j + t) * k + kk))));
+        }
+        kk += W;
+    }
+    if kk < k {
+        let rem = k - kk;
+        let mut apad = [0f32; W];
+        for (t, v) in apad.iter_mut().take(rem).enumerate() {
+            *v = *arow.add(kk + t);
+        }
+        let av = L::load(apad.as_ptr());
+        for (t, slot) in acc.iter_mut().enumerate() {
+            let mut bpad = [0f32; W];
+            for (u, v) in bpad.iter_mut().take(rem).enumerate() {
+                *v = *b.add((j + t) * k + kk + u);
+            }
+            *slot = slot.add(av.mul(L::load(bpad.as_ptr())));
+        }
+    }
+    let mut folded = [0f32; NJ];
+    for (t, v) in folded.iter_mut().enumerate() {
+        *v = acc[t].fold();
+    }
+    folded
+}
+
+/// Body of the `a · bᵀ` lane kernel: every output element is an
+/// independent lane-dot, blocked 4 columns at a time for `a`-chunk reuse
+/// and accumulator-chain parallelism (a pure speed knob -- each dot's
+/// bits depend only on its own operands).
+#[inline(always)]
+unsafe fn mm_bt_body<L: Lanes>(
+    out: *mut f32,
+    a: *const f32,
+    b: *const f32,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in 0..m {
+        let arow = a.add(i * k);
+        let orow = out.add(i * n);
+        let mut j = 0;
+        while j + 4 <= n {
+            let d = bt_dots::<L, 4>(arow, b, j, k);
+            for (t, v) in d.iter().enumerate() {
+                *orow.add(j + t) = *v;
+            }
+            j += 4;
+        }
+        while j < n {
+            let d = bt_dots::<L, 1>(arow, b, j, k);
+            *orow.add(j) = d[0];
+            j += 1;
+        }
+    }
+}
+
+/// Whether this build's native lane struct is usable on this CPU: AVX2
+/// on x86_64 (runtime-detected), NEON on aarch64 (baseline), `false`
+/// elsewhere (the scalar emulation still provides the lane semantics).
+pub fn native_simd_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    return std::arch::is_x86_feature_detected!("avx2");
+    #[cfg(target_arch = "aarch64")]
+    return true;
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    false
+}
+
+fn run_bcast(
+    native: bool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+    i0: usize,
+    ci: usize,
+    ck: usize,
+) {
+    // SAFETY: the public entry points assert the slice shapes against
+    // (rows, k, n, i0, ci, ck); the native path is only taken when the
+    // CPU reports the feature.
+    if native && native_simd_available() {
+        #[cfg(target_arch = "x86_64")]
+        return unsafe {
+            avx::mm_bcast(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), rows, k, n, i0, ci, ck)
+        };
+        #[cfg(target_arch = "aarch64")]
+        return unsafe {
+            neon::mm_bcast(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), rows, k, n, i0, ci, ck)
+        };
+    }
+    unsafe {
+        mm_bcast_body::<ScalarX8>(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), rows, k, n, i0, ci, ck)
+    }
+}
+
+/// Lane-kernel `out = a · b` (`a: [m,k]`, `b: [k,n]`, `out: [m,n]`,
+/// overwritten). `native` selects the `std::arch` instantiation when the
+/// CPU supports it; the scalar emulation otherwise -- bit-identical
+/// either way.
+pub fn matmul_lane(
+    native: bool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_lane: a shape");
+    assert_eq!(b.len(), k * n, "matmul_lane: b shape");
+    assert_eq!(out.len(), m * n, "matmul_lane: out shape");
+    run_bcast(native, out, a, b, m, k, n, 0, k, 1);
+}
+
+/// Lane-kernel `out = aᵀ · b` over token axis `s` (`a: [s,m]`,
+/// `b: [s,n]`), producing output rows `i0..i0 + out.len()/n` of the full
+/// `[m,n]` product (`i0 > 0` is the pooled row-chunk path; pass `0` for
+/// the whole product with `out: [m,n]`).
+pub fn matmul_at_lane(
+    native: bool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    i0: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), s * m, "matmul_at_lane: a shape");
+    assert_eq!(b.len(), s * n, "matmul_at_lane: b shape");
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    assert_eq!(out.len(), rows * n, "matmul_at_lane: out shape");
+    assert!(i0 + rows <= m, "matmul_at_lane: row range");
+    run_bcast(native, out, a, b, rows, s, n, i0, 1, m);
+}
+
+/// Lane-kernel `out = a · bᵀ` (`a: [m,k]`, `b: [n,k]`, `out: [m,n]`,
+/// overwritten): lane-dots with the [`fold8_spec`] tree.
+pub fn matmul_bt_lane(
+    native: bool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), m * k, "matmul_bt_lane: a shape");
+    assert_eq!(b.len(), n * k, "matmul_bt_lane: b shape");
+    assert_eq!(out.len(), m * n, "matmul_bt_lane: out shape");
+    // SAFETY: shapes checked above; native only when the CPU has it.
+    if native && native_simd_available() {
+        #[cfg(target_arch = "x86_64")]
+        return unsafe { avx::mm_bt(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), m, k, n) };
+        #[cfg(target_arch = "aarch64")]
+        return unsafe { neon::mm_bt(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), m, k, n) };
+    }
+    unsafe { mm_bt_body::<ScalarX8>(out.as_mut_ptr(), a.as_ptr(), b.as_ptr(), m, k, n) }
+}
+
+/// The `GD_SIMD` override, parsed by [`parse_gd_simd`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Keep the pre-SIMD scalar kernels (which stay compiled in every
+    /// build) on the seam.
+    Off,
+    /// The default: native lanes when compiled in (`backend-simd`) and
+    /// the CPU supports them, scalar lane emulation under the feature on
+    /// older CPUs, plain scalar kernels without the feature.
+    Auto,
+    /// The lane kernels through the scalar emulation struct -- same bits
+    /// as the native path, no `std::arch` (requires `backend-simd`).
+    ForceScalarEmulation,
+}
+
+/// Parse a `GD_SIMD` value. Garbage errors loudly (naming the variable
+/// and echoing the value) instead of silently resolving to a default --
+/// same contract as `parse_gd_threads` / `parse_gd_seq_cutoff`.
+pub fn parse_gd_simd(raw: &str) -> Result<SimdMode> {
+    match raw.trim() {
+        "off" => Ok(SimdMode::Off),
+        "auto" => Ok(SimdMode::Auto),
+        "force-scalar-emulation" => Ok(SimdMode::ForceScalarEmulation),
+        _ => crate::bail!(
+            "GD_SIMD: invalid value '{raw}' (want one of: off, auto, force-scalar-emulation)"
+        ),
+    }
+}
+
+/// Resolve the SIMD mode: the `GD_SIMD` env var wins, else `Auto`. An
+/// unparsable env value is an error, not a silent default.
+pub fn resolve_simd_mode() -> Result<SimdMode> {
+    match std::env::var("GD_SIMD") {
+        Ok(v) => parse_gd_simd(&v),
+        Err(_) => Ok(SimdMode::Auto),
+    }
+}
+
+/// Which kernel family the `mm` seam dispatches to. Resolved once per
+/// process (see [`init_kernel_kind`]); the explicit-kind entry points in
+/// `tensor` (`matmul_kind` & co) let tests and benches exercise every
+/// kind in one process regardless of what the seam resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// The pre-SIMD cache-blocked scalar kernels (always compiled).
+    Scalar,
+    /// Lane kernels through the scalar emulation struct.
+    LaneScalar,
+    /// Lane kernels through the native `std::arch` struct.
+    LaneSimd,
+}
+
+impl KernelKind {
+    /// Stable label for logs, benches, and fixture messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::LaneScalar => "lane-scalar",
+            KernelKind::LaneSimd => "lane-simd",
+        }
+    }
+
+    /// Whether this kind uses the lane-tree accumulation order (and
+    /// therefore the `ref_tiny_golden_lane.txt` fixture rather than the
+    /// scalar `ref_tiny_golden.txt`).
+    pub fn is_lane(self) -> bool {
+        !matches!(self, KernelKind::Scalar)
+    }
+}
+
+/// Map a parsed [`SimdMode`] to the kind this build runs. Pure over its
+/// input (unit-testable without env mutation); the compile-time feature
+/// and the CPU detection are the only other inputs.
+pub fn kernel_kind_for(mode: SimdMode) -> Result<KernelKind> {
+    #[cfg(feature = "backend-simd")]
+    {
+        Ok(match mode {
+            SimdMode::Off => KernelKind::Scalar,
+            SimdMode::ForceScalarEmulation => KernelKind::LaneScalar,
+            SimdMode::Auto => {
+                if native_simd_available() {
+                    KernelKind::LaneSimd
+                } else {
+                    KernelKind::LaneScalar
+                }
+            }
+        })
+    }
+    #[cfg(not(feature = "backend-simd"))]
+    {
+        match mode {
+            SimdMode::ForceScalarEmulation => crate::bail!(
+                "GD_SIMD=force-scalar-emulation requires the `backend-simd` cargo feature \
+                 (this build compiled only the scalar kernels onto the mm seam; \
+                 GD_SIMD=off and GD_SIMD=auto are valid here)"
+            ),
+            _ => Ok(KernelKind::Scalar),
+        }
+    }
+}
+
+/// [`kernel_kind_for`] over [`resolve_simd_mode`]: what this process's
+/// `mm` seam will dispatch to.
+pub fn resolve_kernel_kind() -> Result<KernelKind> {
+    kernel_kind_for(resolve_simd_mode()?)
+}
+
+static KERNEL_KIND: OnceLock<KernelKind> = OnceLock::new();
+
+/// Prime the process-wide kernel kind (idempotent; first resolution
+/// wins). Engines call this at construction so a garbage `GD_SIMD` is a
+/// clean `Init` error rather than a panic mid-step -- the same up-front
+/// contract `ParallelBackend::with_threads` applies to `GD_THREADS` /
+/// `GD_SEQ_CUTOFF`.
+pub fn init_kernel_kind() -> Result<KernelKind> {
+    if let Some(k) = KERNEL_KIND.get() {
+        return Ok(*k);
+    }
+    let k = resolve_kernel_kind()?;
+    Ok(*KERNEL_KIND.get_or_init(|| k))
+}
+
+/// The kernel kind the `mm` seam dispatches to, resolving (and pinning)
+/// it on first use if no engine primed it. Panics loudly on an
+/// unparsable `GD_SIMD` -- callers that want the error as a `Result`
+/// prime via [`init_kernel_kind`] first (every engine constructor does).
+pub fn active_kernel_kind() -> KernelKind {
+    *KERNEL_KIND.get_or_init(|| resolve_kernel_kind().unwrap_or_else(|e| panic!("{e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::run_prop;
+    use crate::util::rng::Rng;
+
+    /// Bit-exact reference for the `a · b` / `aᵀ · b` lane order: per
+    /// output element, ascending shared index, mul then add, no
+    /// zero-skip. Plain scalar f32 arithmetic.
+    fn naive_lane_mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += a[i * k + kk] * b[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// Bit-exact reference for the `a · bᵀ` lane order: product `kk`
+    /// into lane `kk % 8`, zero-padded tail on both operands, then the
+    /// [`fold8_spec`] tree.
+    fn naive_lane_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        let chunks = k.div_ceil(W);
+        for i in 0..m {
+            for j in 0..n {
+                let mut lanes = [0f32; W];
+                for c in 0..chunks {
+                    for (l, acc) in lanes.iter_mut().enumerate() {
+                        let kk = c * W + l;
+                        let (x, y) =
+                            if kk < k { (a[i * k + kk], b[j * k + kk]) } else { (0.0, 0.0) };
+                        *acc += x * y;
+                    }
+                }
+                out[i * n + j] = fold8_spec(&lanes);
+            }
+        }
+        out
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Satellite: the fold at width 1 (a k=1 lane-dot: one product in
+    /// lane 0, zero pads everywhere else) matches `fold8_spec` bitwise
+    /// in every instantiation -- including `-0.0`, where the spec's
+    /// `-0.0 + 0.0 = +0.0` pads make the answer `+0.0`, a corner a
+    /// "just return lane 0" shortcut would get wrong -- and every
+    /// instantiation's fold matches `fold8_spec` on arbitrary lanes.
+    #[test]
+    fn lane_tree_fold_matches_spec_bitwise() {
+        for v in [1.5f32, -0.0, 0.0, f32::MIN_POSITIVE / 64.0, -7.25e-30] {
+            let want = fold8_spec(&[v, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+            for native in [false, true] {
+                let mut got = [7f32; 1];
+                matmul_bt_lane(native, &mut got, &[v], &[1.0], 1, 1, 1);
+                assert_eq!(
+                    got[0].to_bits(),
+                    want.to_bits(),
+                    "width-1 dot of {v} (native={native}) must be the spec fold"
+                );
+            }
+        }
+        // the identity holds for ordinary values (and the spec fold of a
+        // -0.0 product is +0.0 by the rule above, pinning the pads)
+        assert_eq!(fold8_spec(&[1.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]), 1.5);
+        let neg = fold8_spec(&[-0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(neg.to_bits(), 0f32.to_bits());
+        run_prop("fold8-impls-match-spec", 200, 7, |rng: &mut Rng| {
+            let mut lanes = [0f32; 8];
+            for l in lanes.iter_mut() {
+                *l = rng.uniform_in(-1e3, 1e3);
+                if rng.below(8) == 0 {
+                    *l = -0.0; // exercise the sign-of-zero corners
+                }
+            }
+            let want = fold8_spec(&lanes);
+            // SAFETY: ScalarX8 is plain arithmetic over a valid array.
+            let emu = unsafe { ScalarX8(lanes).fold() };
+            if emu.to_bits() != want.to_bits() {
+                return Err(format!("ScalarX8 fold {emu} != spec {want}"));
+            }
+            // the native fold through a 1x1 lane-dot (one full chunk)
+            let mut native = [0f32; 1];
+            let ones = [1f32; 8];
+            matmul_bt_lane(true, &mut native, &lanes, &ones, 1, 8, 1);
+            if native[0].to_bits() != want.to_bits() {
+                return Err(format!("native fold {} != spec {want}", native[0]));
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: non-multiple-of-8 K/M/N shapes -- K below the lane
+    /// width and empty matrices included -- match the scalar-emulation
+    /// path bit-for-bit on all three kernels, and the emulation matches
+    /// the written-out lane order.
+    #[test]
+    fn prop_lane_kernels_native_matches_emulation_bitwise() {
+        run_prop("lane-native-vs-emu", 60, 13, |rng: &mut Rng| {
+            // shapes deliberately straddle every tail: 0 (empty), 1..7
+            // (below lane width), exact multiples, multiples + remainder
+            let m = rng.below(21) as usize;
+            let k = rng.below(37) as usize;
+            let n = rng.below(41) as usize;
+            let fill = |len: usize, rng: &mut Rng| -> Vec<f32> {
+                (0..len)
+                    .map(|_| {
+                        if rng.below(10) == 0 {
+                            0.0 // exercise the no-skip-on-zero contract
+                        } else {
+                            rng.uniform_in(-1.0, 1.0)
+                        }
+                    })
+                    .collect()
+            };
+            let a = fill(m * k, rng);
+            let b = fill(k * n, rng);
+            let bt = fill(n * k, rng);
+            let ab = fill(m * n, rng);
+
+            let mut emu = vec![0f32; m * n];
+            matmul_lane(false, &mut emu, &a, &b, m, k, n);
+            if bits(&emu) != bits(&naive_lane_mm(&a, &b, m, k, n)) {
+                return Err(format!("matmul_lane emu != lane order at {m}x{k}x{n}"));
+            }
+            let mut nat = vec![0f32; m * n];
+            matmul_lane(true, &mut nat, &a, &b, m, k, n);
+            if bits(&nat) != bits(&emu) {
+                return Err(format!("matmul_lane native != emu at {m}x{k}x{n}"));
+            }
+
+            // aᵀ·b: reuse a as [s=m, k] against ab as [s=m, n]
+            let mut emu_at = vec![0f32; k * n];
+            matmul_at_lane(false, &mut emu_at, &a, &ab, m, k, 0, n);
+            let mut at_t = vec![0f32; k * m];
+            for ss in 0..m {
+                for i in 0..k {
+                    at_t[i * m + ss] = a[ss * k + i];
+                }
+            }
+            if bits(&emu_at) != bits(&naive_lane_mm(&at_t, &ab, k, m, n)) {
+                return Err(format!("matmul_at_lane emu != lane order at s={m} {k}x{n}"));
+            }
+            let mut nat_at = vec![0f32; k * n];
+            matmul_at_lane(true, &mut nat_at, &a, &ab, m, k, 0, n);
+            if bits(&nat_at) != bits(&emu_at) {
+                return Err(format!("matmul_at_lane native != emu at s={m} {k}x{n}"));
+            }
+
+            let mut emu_bt = vec![0f32; m * n];
+            matmul_bt_lane(false, &mut emu_bt, &a, &bt, m, k, n);
+            if bits(&emu_bt) != bits(&naive_lane_bt(&a, &bt, m, k, n)) {
+                return Err(format!("matmul_bt_lane emu != lane-tree order at {m}x{k}x{n}"));
+            }
+            let mut nat_bt = vec![0f32; m * n];
+            matmul_bt_lane(true, &mut nat_bt, &a, &bt, m, k, n);
+            if bits(&nat_bt) != bits(&emu_bt) {
+                return Err(format!("matmul_bt_lane native != emu at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
+    }
+
+    /// The chunked `aᵀ·b` entry (`i0 > 0`) agrees with the full product
+    /// row-for-row -- the pooled path's correctness precondition.
+    #[test]
+    fn matmul_at_lane_chunks_tile_the_full_product() {
+        let (s, m, n) = (13usize, 11usize, 9usize);
+        let mut rng = Rng::new(5);
+        let a: Vec<f32> = (0..s * m).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..s * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let mut full = vec![0f32; m * n];
+        matmul_at_lane(false, &mut full, &a, &b, s, m, 0, n);
+        for native in [false, true] {
+            for (i0, rows) in [(0usize, 4usize), (4, 4), (8, 3), (0, 11), (10, 1)] {
+                let mut chunk = vec![0f32; rows * n];
+                matmul_at_lane(native, &mut chunk, &a, &b, s, m, i0, n);
+                assert_eq!(
+                    bits(&chunk),
+                    bits(&full[i0 * n..(i0 + rows) * n]),
+                    "chunk i0={i0} rows={rows} native={native}"
+                );
+            }
+        }
+    }
+
+    /// Satellite: `parse_gd_simd` is strict -- garbage errors loudly,
+    /// naming the variable and echoing the value; no env mutation needed
+    /// to cover every branch.
+    #[test]
+    fn gd_simd_parsing_is_strict() {
+        assert_eq!(parse_gd_simd("off").unwrap(), SimdMode::Off);
+        assert_eq!(parse_gd_simd("auto").unwrap(), SimdMode::Auto);
+        assert_eq!(
+            parse_gd_simd("force-scalar-emulation").unwrap(),
+            SimdMode::ForceScalarEmulation
+        );
+        assert_eq!(parse_gd_simd(" off ").unwrap(), SimdMode::Off, "whitespace tolerated");
+        for bad in ["", "on", "1", "AVX2", "scalar", "force", "Off"] {
+            let err = parse_gd_simd(bad).unwrap_err().to_string();
+            assert!(err.contains("GD_SIMD"), "'{bad}' error must name the var: {err}");
+            assert!(err.contains(bad) || bad.is_empty(), "'{bad}' error must echo the value");
+        }
+    }
+
+    /// Kind resolution is a pure function of (feature, mode, CPU): with
+    /// `backend-simd` the lane kernels own the seam unless `off`;
+    /// without it `off`/`auto` stay scalar and forcing the emulation is
+    /// a loud error, not a silent scalar.
+    #[test]
+    fn kernel_kind_resolution_mapping() {
+        #[cfg(feature = "backend-simd")]
+        {
+            assert_eq!(kernel_kind_for(SimdMode::Off).unwrap(), KernelKind::Scalar);
+            assert_eq!(
+                kernel_kind_for(SimdMode::ForceScalarEmulation).unwrap(),
+                KernelKind::LaneScalar
+            );
+            let auto = kernel_kind_for(SimdMode::Auto).unwrap();
+            if native_simd_available() {
+                assert_eq!(auto, KernelKind::LaneSimd);
+            } else {
+                assert_eq!(auto, KernelKind::LaneScalar);
+            }
+            assert!(auto.is_lane());
+        }
+        #[cfg(not(feature = "backend-simd"))]
+        {
+            assert_eq!(kernel_kind_for(SimdMode::Off).unwrap(), KernelKind::Scalar);
+            assert_eq!(kernel_kind_for(SimdMode::Auto).unwrap(), KernelKind::Scalar);
+            let err = kernel_kind_for(SimdMode::ForceScalarEmulation).unwrap_err().to_string();
+            assert!(err.contains("backend-simd"), "must point at the feature: {err}");
+            assert!(err.contains("GD_SIMD"), "must name the knob: {err}");
+        }
+        assert_eq!(KernelKind::Scalar.name(), "scalar");
+        assert_eq!(KernelKind::LaneScalar.name(), "lane-scalar");
+        assert_eq!(KernelKind::LaneSimd.name(), "lane-simd");
+        assert!(!KernelKind::Scalar.is_lane());
+        assert!(KernelKind::LaneSimd.is_lane());
+    }
+
+    /// `init_kernel_kind` and `active_kernel_kind` agree and are stable
+    /// across calls (the OnceLock pins the first resolution).
+    #[test]
+    fn kind_initialization_is_idempotent() {
+        let a = init_kernel_kind().expect("GD_SIMD must be unset or valid in the test env");
+        let b = active_kernel_kind();
+        let c = init_kernel_kind().unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+}

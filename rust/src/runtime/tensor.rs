@@ -15,8 +15,26 @@
 //! direction of every operand is the inner loop), blocked over the shared
 //! dimension so the active output row stays in L1/L2 while a block of `b`
 //! rows streams through; [`matmul_bt`] is a row-dot kernel, which is
-//! already unit-stride in both operands. No SIMD intrinsics: the inner
-//! loops are shaped so LLVM auto-vectorizes them.
+//! already unit-stride in both operands. These scalar kernels carry no
+//! SIMD intrinsics (the inner loops are shaped so LLVM auto-vectorizes
+//! them) and stay compiled in every build -- they are what
+//! `GD_SIMD=off` and non-`backend-simd` builds run.
+//!
+//! # Kernel kinds
+//!
+//! The explicit-SIMD lane kernels live in [`super::simd`] (re-exported
+//! here: [`KernelKind`], [`parse_gd_simd`], [`init_kernel_kind`], ...).
+//! Each of the three orientations dispatches on a [`KernelKind`] through
+//! [`matmul_kind`] / [`matmul_at_kind`] / [`matmul_bt_kind`] (sequential)
+//! and [`matmul_par_kind`] / [`matmul_at_par_kind`] / [`matmul_bt_par_kind`]
+//! (pooled); the [`mm`] seam resolves the process-wide kind once via
+//! [`active_kernel_kind`]. The scalar and lane kinds are *different
+//! accumulation orders* (the scalar kernels skip zero `a` elements and
+//! re-walk the output row per shared-dim block; the lane kernels use the
+//! fixed lane order documented in [`super::simd`]), so outputs agree
+//! within rounding but not bitwise across kinds -- which is why the kind
+//! is pinned per process and the golden fixture exists per accumulation
+//! order, never mixed within a run.
 //!
 //! # Determinism of the parallel kernels
 //!
@@ -46,6 +64,12 @@
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::util::error::Result;
+
+pub use super::simd::{
+    active_kernel_kind, init_kernel_kind, kernel_kind_for, matmul_at_lane, matmul_bt_lane,
+    matmul_lane, native_simd_available, parse_gd_simd, resolve_kernel_kind, resolve_simd_mode,
+    KernelKind, SimdMode,
+};
 
 /// Block size over the shared (k) dimension: 64 rows of a 1k-wide f32 `b`
 /// panel is 256 KiB -- comfortably inside L2 next to one output row.
@@ -82,13 +106,22 @@ pub fn matmul_at(out: &mut [f32], a: &[f32], b: &[f32], s: usize, m: usize, n: u
     assert_eq!(a.len(), s * m, "matmul_at: a shape");
     assert_eq!(b.len(), s * n, "matmul_at: b shape");
     assert_eq!(out.len(), m * n, "matmul_at: out shape");
+    matmul_at_rows(out, a, b, s, m, 0, n);
+}
+
+/// The scalar `aᵀ · b` body on output rows `i0..i0 + out.len()/n` of the
+/// full `[m, n]` product -- shared by [`matmul_at`] (`i0 = 0`) and the
+/// pooled row-chunk path, so the chunked accumulation order is the
+/// sequential one by construction.
+fn matmul_at_rows(out: &mut [f32], a: &[f32], b: &[f32], s: usize, m: usize, i0: usize, n: usize) {
+    let rows = out.len() / n.max(1);
     out.fill(0.0);
     for s0 in (0..s).step_by(BLOCK_K) {
         let s1 = (s0 + BLOCK_K).min(s);
-        for i in 0..m {
+        for i in 0..rows {
             let orow = &mut out[i * n..(i + 1) * n];
             for ss in s0..s1 {
-                let asi = a[ss * m + i];
+                let asi = a[ss * m + i0 + i];
                 if asi == 0.0 {
                     continue;
                 }
@@ -688,10 +721,72 @@ pub fn run_parts_scoped<T: Send>(threads: usize, parts: Vec<T>, f: &(dyn Fn(usiz
     });
 }
 
-/// Parallel [`matmul`]: output rows are chunked over the pool and each
-/// chunk re-runs the sequential cache-blocked kernel on its row range, so
-/// the result is bit-identical to `matmul` at any thread count.
-pub fn matmul_par(
+// ---------------------------------------------------------------------------
+// Kind dispatch: each orientation for an explicit KernelKind. The Scalar
+// arms are the cache-blocked kernels above; the lane arms are the
+// `super::simd` kernels (native std::arch when the kind says so, the
+// scalar emulation otherwise -- bit-identical to each other, NOT to the
+// Scalar arm, which is a different accumulation order).
+
+/// [`matmul`]-shaped product under an explicit [`KernelKind`].
+pub fn matmul_kind(
+    kind: KernelKind,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match kind {
+        KernelKind::Scalar => matmul(out, a, b, m, k, n),
+        KernelKind::LaneScalar => matmul_lane(false, out, a, b, m, k, n),
+        KernelKind::LaneSimd => matmul_lane(true, out, a, b, m, k, n),
+    }
+}
+
+/// [`matmul_at`]-shaped product under an explicit [`KernelKind`].
+pub fn matmul_at_kind(
+    kind: KernelKind,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    assert_eq!(out.len(), m * n, "matmul_at_kind: out shape");
+    match kind {
+        KernelKind::Scalar => matmul_at(out, a, b, s, m, n),
+        KernelKind::LaneScalar => matmul_at_lane(false, out, a, b, s, m, 0, n),
+        KernelKind::LaneSimd => matmul_at_lane(true, out, a, b, s, m, 0, n),
+    }
+}
+
+/// [`matmul_bt`]-shaped product under an explicit [`KernelKind`].
+pub fn matmul_bt_kind(
+    kind: KernelKind,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    match kind {
+        KernelKind::Scalar => matmul_bt(out, a, b, m, k, n),
+        KernelKind::LaneScalar => matmul_bt_lane(false, out, a, b, m, k, n),
+        KernelKind::LaneSimd => matmul_bt_lane(true, out, a, b, m, k, n),
+    }
+}
+
+/// Pooled [`matmul_kind`]: output rows are chunked over the pool and each
+/// chunk re-runs the sequential kernel *of the same kind* on its row
+/// range, so the result is bit-identical to the sequential kind at any
+/// thread count -- the same argument that made [`matmul_par`]
+/// bit-identical to [`matmul`] now holds per kind.
+pub fn matmul_par_kind(
+    kind: KernelKind,
     pool: &ThreadPool,
     out: &mut [f32],
     a: &[f32],
@@ -705,13 +800,20 @@ pub fn matmul_par(
     assert_eq!(out.len(), m * n, "matmul_par: out shape");
     pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
         let rows = chunk.len() / n;
-        matmul(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
+        let a_rows = &a[i0 * k..(i0 + rows) * k];
+        match kind {
+            KernelKind::Scalar => matmul(chunk, a_rows, b, rows, k, n),
+            KernelKind::LaneScalar => matmul_lane(false, chunk, a_rows, b, rows, k, n),
+            KernelKind::LaneSimd => matmul_lane(true, chunk, a_rows, b, rows, k, n),
+        }
     });
 }
 
-/// Parallel [`matmul_at`]; bit-identical to the sequential kernel (the
-/// per-output-row accumulation order over `s` is unchanged).
-pub fn matmul_at_par(
+/// Pooled [`matmul_at_kind`]; bit-identical to the sequential kind (each
+/// chunk runs the same per-output-row accumulation over `s`, offset to
+/// its row range).
+pub fn matmul_at_par_kind(
+    kind: KernelKind,
     pool: &ThreadPool,
     out: &mut [f32],
     a: &[f32],
@@ -724,30 +826,18 @@ pub fn matmul_at_par(
     assert_eq!(b.len(), s * n, "matmul_at_par: b shape");
     assert_eq!(out.len(), m * n, "matmul_at_par: out shape");
     pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
-        let rows = chunk.len() / n;
-        chunk.fill(0.0);
-        for s0 in (0..s).step_by(BLOCK_K) {
-            let s1 = (s0 + BLOCK_K).min(s);
-            for i in 0..rows {
-                let orow = &mut chunk[i * n..(i + 1) * n];
-                for ss in s0..s1 {
-                    let asi = a[ss * m + i0 + i];
-                    if asi == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[ss * n..(ss + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += asi * bv;
-                    }
-                }
-            }
+        match kind {
+            KernelKind::Scalar => matmul_at_rows(chunk, a, b, s, m, i0, n),
+            KernelKind::LaneScalar => matmul_at_lane(false, chunk, a, b, s, m, i0, n),
+            KernelKind::LaneSimd => matmul_at_lane(true, chunk, a, b, s, m, i0, n),
         }
     });
 }
 
-/// Parallel [`matmul_bt`]; bit-identical (row-dot kernel, rows are
-/// independent).
-pub fn matmul_bt_par(
+/// Pooled [`matmul_bt_kind`]; bit-identical per kind (row-dot kernels,
+/// rows are independent).
+pub fn matmul_bt_par_kind(
+    kind: KernelKind,
     pool: &ThreadPool,
     out: &mut [f32],
     a: &[f32],
@@ -761,8 +851,54 @@ pub fn matmul_bt_par(
     assert_eq!(out.len(), m * n, "matmul_bt_par: out shape");
     pool.run_row_chunks(out, n, &|i0, chunk: &mut [f32]| {
         let rows = chunk.len() / n;
-        matmul_bt(chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
+        matmul_bt_kind(kind, chunk, &a[i0 * k..(i0 + rows) * k], b, rows, k, n);
     });
+}
+
+/// Parallel [`matmul`] with the scalar kernels: output rows are chunked
+/// over the pool and each chunk re-runs the sequential cache-blocked
+/// kernel on its row range, so the result is bit-identical to `matmul`
+/// at any thread count. (The `bench_pool_dispatch` / `bench_matmul_par`
+/// baseline; the seam itself goes through [`matmul_par_kind`].)
+pub fn matmul_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_par_kind(KernelKind::Scalar, pool, out, a, b, m, k, n);
+}
+
+/// Parallel [`matmul_at`] with the scalar kernels; bit-identical to the
+/// sequential kernel (the per-output-row accumulation order over `s` is
+/// unchanged).
+pub fn matmul_at_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    matmul_at_par_kind(KernelKind::Scalar, pool, out, a, b, s, m, n);
+}
+
+/// Parallel [`matmul_bt`] with the scalar kernels; bit-identical
+/// (row-dot kernel, rows are independent).
+pub fn matmul_bt_par(
+    pool: &ThreadPool,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    matmul_bt_par_kind(KernelKind::Scalar, pool, out, a, b, m, k, n);
 }
 
 // ---------------------------------------------------------------------------
@@ -770,10 +906,15 @@ pub fn matmul_bt_par(
 // sequential otherwise; bit-identical either way. Every engine (the
 // reference backend, the distributed stage runner) routes its matmuls
 // through these three entry points, so "thread this layer" always means
-// "hand it a pool" and never "fork the math".
+// "hand it a pool" and never "fork the math" -- and since PR 10,
+// "vectorize this layer" means the process-wide [`KernelKind`]
+// (`backend-simd` feature x CPU detection x `GD_SIMD`) swaps the kernel
+// family here, never a fork either.
 
-/// [`matmul`] through the optional-pool seam.
-pub fn mm(
+/// [`mm`] under an explicit [`KernelKind`] (tests and benches; the seam
+/// proper resolves the kind once via [`active_kernel_kind`]).
+pub fn mm_kind(
+    kind: KernelKind,
     pool: Option<&ThreadPool>,
     out: &mut [f32],
     a: &[f32],
@@ -783,13 +924,14 @@ pub fn mm(
     n: usize,
 ) {
     match pool {
-        Some(p) => matmul_par(p, out, a, b, m, k, n),
-        None => matmul(out, a, b, m, k, n),
+        Some(p) => matmul_par_kind(kind, p, out, a, b, m, k, n),
+        None => matmul_kind(kind, out, a, b, m, k, n),
     }
 }
 
-/// [`matmul_at`] through the optional-pool seam.
-pub fn mm_at(
+/// [`mm_at`] under an explicit [`KernelKind`].
+pub fn mm_at_kind(
+    kind: KernelKind,
     pool: Option<&ThreadPool>,
     out: &mut [f32],
     a: &[f32],
@@ -799,13 +941,14 @@ pub fn mm_at(
     n: usize,
 ) {
     match pool {
-        Some(p) => matmul_at_par(p, out, a, b, s, m, n),
-        None => matmul_at(out, a, b, s, m, n),
+        Some(p) => matmul_at_par_kind(kind, p, out, a, b, s, m, n),
+        None => matmul_at_kind(kind, out, a, b, s, m, n),
     }
 }
 
-/// [`matmul_bt`] through the optional-pool seam.
-pub fn mm_bt(
+/// [`mm_bt`] under an explicit [`KernelKind`].
+pub fn mm_bt_kind(
+    kind: KernelKind,
     pool: Option<&ThreadPool>,
     out: &mut [f32],
     a: &[f32],
@@ -815,9 +958,51 @@ pub fn mm_bt(
     n: usize,
 ) {
     match pool {
-        Some(p) => matmul_bt_par(p, out, a, b, m, k, n),
-        None => matmul_bt(out, a, b, m, k, n),
+        Some(p) => matmul_bt_par_kind(kind, p, out, a, b, m, k, n),
+        None => matmul_bt_kind(kind, out, a, b, m, k, n),
     }
+}
+
+/// `a · b` through the optional-pool seam, under the process-wide
+/// [`KernelKind`].
+pub fn mm(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    mm_kind(active_kernel_kind(), pool, out, a, b, m, k, n);
+}
+
+/// `aᵀ · b` through the optional-pool seam, under the process-wide
+/// [`KernelKind`].
+pub fn mm_at(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    s: usize,
+    m: usize,
+    n: usize,
+) {
+    mm_at_kind(active_kernel_kind(), pool, out, a, b, s, m, n);
+}
+
+/// `a · bᵀ` through the optional-pool seam, under the process-wide
+/// [`KernelKind`].
+pub fn mm_bt(
+    pool: Option<&ThreadPool>,
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    mm_bt_kind(active_kernel_kind(), pool, out, a, b, m, k, n);
 }
 
 #[cfg(test)]
@@ -1167,9 +1352,12 @@ mod tests {
         assert!(resolve_threads(0).unwrap() >= 1);
     }
 
-    /// The optional-pool dispatch seam is bit-neutral in both states.
+    /// The optional-pool dispatch seam is bit-neutral in both states,
+    /// whatever kind the process resolved (`mm` must equal the
+    /// sequential kernel *of the active kind*).
     #[test]
     fn mm_seam_matches_kernels_bitwise() {
+        let kind = active_kernel_kind();
         let (m, k, n) = (9usize, 67usize, 5usize);
         let mut rng = Rng::new(41);
         let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
@@ -1180,26 +1368,83 @@ mod tests {
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
 
         let mut want = vec![0f32; m * n];
-        matmul(&mut want, &a, &b, m, k, n);
+        matmul_kind(kind, &mut want, &a, &b, m, k, n);
         for p in [None, Some(&pool)] {
             let mut got = vec![0f32; m * n];
             mm(p, &mut got, &a, &b, m, k, n);
-            assert_eq!(bits(&got), bits(&want), "mm pool={}", p.is_some());
+            assert_eq!(bits(&got), bits(&want), "mm kind={} pool={}", kind.name(), p.is_some());
         }
         let mut want_at = vec![0f32; k * n];
-        matmul_at(&mut want_at, &a, &ab, m, k, n);
+        matmul_at_kind(kind, &mut want_at, &a, &ab, m, k, n);
         for p in [None, Some(&pool)] {
             let mut got = vec![0f32; k * n];
             mm_at(p, &mut got, &a, &ab, m, k, n);
-            assert_eq!(bits(&got), bits(&want_at), "mm_at pool={}", p.is_some());
+            let tag = format!("mm_at kind={} pool={}", kind.name(), p.is_some());
+            assert_eq!(bits(&got), bits(&want_at), "{tag}");
         }
         let mut want_bt = vec![0f32; m * n];
-        matmul_bt(&mut want_bt, &a, &bt, m, k, n);
+        matmul_bt_kind(kind, &mut want_bt, &a, &bt, m, k, n);
         for p in [None, Some(&pool)] {
             let mut got = vec![0f32; m * n];
             mm_bt(p, &mut got, &a, &bt, m, k, n);
-            assert_eq!(bits(&got), bits(&want_bt), "mm_bt pool={}", p.is_some());
+            let tag = format!("mm_bt kind={} pool={}", kind.name(), p.is_some());
+            assert_eq!(bits(&got), bits(&want_bt), "{tag}");
         }
+    }
+
+    /// The tentpole contract at the seam: for EVERY kind, the pooled
+    /// kernels are bit-identical to that kind's sequential kernel at any
+    /// thread count; and the two lane kinds (native SIMD vs scalar
+    /// emulation) are bit-identical to each other, pooled or not. The
+    /// shapes cross the lane width, the 2x16 register-block boundary,
+    /// and the rows-per-worker chunk boundaries.
+    #[test]
+    fn prop_kind_seam_bit_identical_across_pools() {
+        run_prop("kind-seam-bitwise", 15, 37, |rng: &mut Rng| {
+            let m = 1 + rng.below(18) as usize;
+            let k = 1 + rng.below(70) as usize;
+            let n = 1 + rng.below(37) as usize;
+            let a: Vec<f32> = (0..m * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let ab: Vec<f32> = (0..m * n).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            let kinds = [KernelKind::Scalar, KernelKind::LaneScalar, KernelKind::LaneSimd];
+            let mut lane_runs: Vec<[Vec<u32>; 3]> = Vec::new();
+            for kind in kinds {
+                let mut want = vec![0f32; m * n];
+                matmul_kind(kind, &mut want, &a, &b, m, k, n);
+                let mut want_at = vec![0f32; k * n];
+                matmul_at_kind(kind, &mut want_at, &a, &ab, m, k, n);
+                let mut want_bt = vec![0f32; m * n];
+                matmul_bt_kind(kind, &mut want_bt, &a, &bt, m, k, n);
+                for threads in [1usize, 2, 4] {
+                    let pool = ThreadPool::with_cutoff(threads, 0);
+                    let mut got = vec![0f32; m * n];
+                    mm_kind(kind, Some(&pool), &mut got, &a, &b, m, k, n);
+                    if bits(&got) != bits(&want) {
+                        return Err(format!("mm {} diverged at {threads} threads", kind.name()));
+                    }
+                    let mut got_at = vec![0f32; k * n];
+                    mm_at_kind(kind, Some(&pool), &mut got_at, &a, &ab, m, k, n);
+                    if bits(&got_at) != bits(&want_at) {
+                        return Err(format!("mm_at {} diverged at {threads} threads", kind.name()));
+                    }
+                    let mut got_bt = vec![0f32; m * n];
+                    mm_bt_kind(kind, Some(&pool), &mut got_bt, &a, &bt, m, k, n);
+                    if bits(&got_bt) != bits(&want_bt) {
+                        return Err(format!("mm_bt {} diverged at {threads} threads", kind.name()));
+                    }
+                }
+                if kind.is_lane() {
+                    lane_runs.push([bits(&want), bits(&want_at), bits(&want_bt)]);
+                }
+            }
+            if lane_runs[0] != lane_runs[1] {
+                return Err(format!("lane-scalar != lane-simd at {m}x{k}x{n}"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -29,6 +29,24 @@ This script exists for provenance and for toolchain-less environments;
 if the two ever disagree, the Rust output wins -- and the disagreement
 itself is signal (libm drift or a semantics change in reference.rs).
 Writes to /tmp/golden/ref_tiny_golden.txt; diff/copy manually.
+
+Lane mode (--lane): replicates the backend-simd lane kernels of
+rust/src/runtime/simd.rs instead of the scalar kernels -- the fixed
+lane-tree accumulation order:
+  * matmul / matmul_at shapes: per output element, products accumulate
+    in ascending shared-index order, one f32 mul then one f32 add per
+    product (never fused), with NO skip of zero operands;
+  * matmul_bt (dot over k): product kk goes to lane kk % 8, the final
+    partial 8-chunk is zero-padded on BOTH operands (the +0.0 pad
+    products participate), and the 8 lane accumulators fold through
+    s[i] = acc[i] + acc[i+4], t[i] = s[i] + s[i+2], t[0] + t[1].
+Only the three matmul kernels change; every other op is shared, so the
+scalar and lane fixtures differ exactly where accumulation order does.
+Writes to /tmp/golden/ref_tiny_golden_lane.txt (the fixture the golden
+test compares against when the process resolved a lane KernelKind).
+Before generating, lane mode self-checks the vectorized numpy kernels
+bit-for-bit against a scalar pure-Python f32 model on small shapes
+(f32 via f64 round-trips is single-rounding-exact: 53 >= 2*24 + 2).
 """
 import ctypes
 import math
@@ -303,6 +321,124 @@ def matmul_bt(a, bT):
         out[i] = acc
     return out
 
+# ----- the backend-simd lane kernels (simd.rs), selected by --lane ----------
+# Same shapes as the scalar kernels above, different accumulation order:
+# ascending-kk mul-then-add with NO zero skip for the two broadcast
+# shapes, and the fixed 8-lane tree fold for the dot shape. numpy's
+# elementwise f32 ops are correctly rounded single ops (no FMA fusing
+# across `t = x * y; acc += t`), which is exactly why simd.rs forbids
+# FMA -- see selfcheck_lane() for the bitwise pin against pure Python.
+
+def matmul_rows_lane(a, b):
+    """simd::matmul_lane -- per element ascending kk, mul then add, no skip."""
+    m = a.shape[0]
+    k = a.shape[1]
+    n = b.shape[1]
+    out = np.zeros((m, n), np.float32)
+    for i in range(m):
+        orow = out[i]
+        arow = a[i]
+        for kk in range(k):
+            orow += arow[kk] * b[kk]
+    return out
+
+def matmul_at_lane(a, b, m_out):
+    """simd::matmul_at_lane -- ss ascending, mul then add, no skip."""
+    s = a.shape[0]
+    n = b.shape[1]
+    out = np.zeros((m_out, n), np.float32)
+    for i in range(m_out):
+        orow = out[i]
+        col = np.ascontiguousarray(a[:, i])
+        for ss in range(s):
+            orow += col[ss] * b[ss]
+    return out
+
+def matmul_bt_lane(a, bT):
+    """simd::matmul_bt_lane -- product kk in lane kk % 8 (ascending chunk
+    order, zero-padded tail on both operands), then the fixed fold
+    s[i] = acc[i] + acc[i+4], t[i] = s[i] + s[i+2], t[0] + t[1]."""
+    m, k = a.shape
+    n = bT.shape[1]
+    out = np.zeros((m, n), np.float32)
+    kpad = ((k + 7) // 8) * 8
+    ap = np.zeros(kpad, np.float32)
+    bp = np.zeros((kpad, n), np.float32)
+    bp[:k] = bT
+    for i in range(m):
+        ap[:k] = a[i]
+        lanes = np.zeros((8, n), np.float32)
+        for c in range(0, kpad, 8):
+            for l in range(8):
+                lanes[l] += ap[c + l] * bp[c + l]
+        s = lanes[0:4] + lanes[4:8]
+        t = s[0:2] + s[2:4]
+        out[i] = t[0] + t[1]
+    return out
+
+def _f32_mul(x, y):
+    # exact: the product of two f32s fits in f64, so rounding the f64
+    # product to f32 IS the correctly rounded f32 multiply
+    return F(float(np.float32(x)) * float(np.float32(y)))
+
+def _f32_add(x, y):
+    # exact: f64 has p=53 >= 2*24 + 2, so f64-then-f32 double rounding
+    # agrees with the directly rounded f32 add
+    return F(float(np.float32(x)) + float(np.float32(y)))
+
+def selfcheck_lane():
+    """Pin the vectorized numpy lane kernels bit-for-bit against a scalar
+    pure-Python f32 model on shapes straddling every tail case."""
+    rng = Rng(0xC11EC4)
+    for m, k, n in [(3, 1, 5), (2, 7, 9), (4, 8, 8), (5, 17, 3), (1, 23, 16)]:
+        def mat(r, c):
+            v = np.empty(r * c, np.float32)
+            for i in range(r * c):
+                v[i] = rng.uniform_in_f32(-1.0, 1.0)
+            return v.reshape(r, c)
+        a, b, bT = mat(m, k), mat(k, n), mat(k, n)
+        got_mm = matmul_rows_lane(a, b)
+        got_bt = matmul_bt_lane(a, bT)
+        kpad = ((k + 7) // 8) * 8
+        for i in range(m):
+            for j in range(n):
+                acc = F(0.0)
+                for kk in range(k):
+                    acc = _f32_add(acc, _f32_mul(a[i, kk], b[kk, j]))
+                assert np.float32(acc).tobytes() == got_mm[i, j].tobytes(), \
+                    f"mm lane selfcheck {m}x{k}x{n} at ({i},{j})"
+                lanes = [F(0.0)] * 8
+                for kk in range(kpad):
+                    x = a[i, kk] if kk < k else F(0.0)
+                    y = bT[kk, j] if kk < k else F(0.0)
+                    lanes[kk % 8] = _f32_add(lanes[kk % 8], _f32_mul(x, y))
+                s = [_f32_add(lanes[q], lanes[q + 4]) for q in range(4)]
+                t = [_f32_add(s[q], s[q + 2]) for q in range(2)]
+                want = _f32_add(t[0], t[1])
+                assert np.float32(want).tobytes() == got_bt[i, j].tobytes(), \
+                    f"bt lane selfcheck {m}x{k}x{n} at ({i},{j})"
+        # a^T b: reuse a as [s=m, k] against b2 [s=m, n]
+        b2 = mat(m, n)
+        got_at = matmul_at_lane(a, b2, k)
+        for i in range(k):
+            for j in range(n):
+                acc = F(0.0)
+                for ss in range(m):
+                    acc = _f32_add(acc, _f32_mul(a[ss, i], b2[ss, j]))
+                assert np.float32(acc).tobytes() == got_at[i, j].tobytes(), \
+                    f"at lane selfcheck s={m} {k}x{n} at ({i},{j})"
+
+KERNEL = "scalar"
+
+def mm_rows(a, b):
+    return matmul_rows_lane(a, b) if KERNEL == "lane" else matmul_rows(a, b)
+
+def mm_at(a, b, m_out):
+    return matmul_at_lane(a, b, m_out) if KERNEL == "lane" else matmul_at(a, b, m_out)
+
+def mm_bt(a, bT):
+    return matmul_bt_lane(a, bT) if KERNEL == "lane" else matmul_bt(a, bT)
+
 class RefModel:
     def __init__(self, seed):
         self.P = init_params(seed)
@@ -342,7 +478,7 @@ class RefModel:
                 jit[i] = jr.uniform_in_f32(lo, hi)
             jit = jit.reshape(T, D)
             gate_in = x * jit
-            probs = matmul_rows(gate_in, wr)
+            probs = mm_rows(gate_in, wr)
             # softmax_rows, max-subtracted, sequential sum
             for i in range(T):
                 row = probs[i]
@@ -422,7 +558,7 @@ class RefModel:
             x = y
         # tied-projection head
         embT = np.ascontiguousarray(embed.T)  # [D, V]
-        logits = matmul_bt(x, embT)
+        logits = mm_bt(x, embT)
         logits += self.P[8]
         balance = balance_sum / F(float(NL))
         kept_frac = kept_sum / F(float(NL))
@@ -465,9 +601,9 @@ class RefModel:
         dob = grads[8]
         for i in range(T):
             dob += dlogits[i]
-        dep = matmul_at(dlogits, yfin, V)
+        dep = mm_at(dlogits, yfin, V)
         grads[0] += dep
-        dy = matmul_rows(dlogits, self.P[0])  # [T, D]
+        dy = mm_rows(dlogits, self.P[0])  # [T, D]
 
         # layers, deepest first
         for l in (1, 0):
@@ -516,10 +652,10 @@ class RefModel:
                 dp = dprobs[i]
                 inner = dot(dp, p_)
                 dgl[i] = p_ * (dp - inner)
-            dwrl = matmul_at(c["gate_in"], dgl, D)
+            dwrl = mm_at(c["gate_in"], dgl, D)
             dwr += dwrl
             wrT = np.ascontiguousarray(wr.T)  # [E, D]
-            dgin = matmul_bt(dgl, wrT)
+            dgin = mm_bt(dgl, wrT)
             dx += dgin * c["jit"]
             dy = dx
 
@@ -550,6 +686,12 @@ class RefModel:
 
 def main():
     import sys, time
+    global KERNEL
+    lane = "--lane" in sys.argv[1:]
+    if lane:
+        KERNEL = "lane"
+        selfcheck_lane()
+        print("lane kernel selfcheck vs pure-Python f32: OK", file=sys.stderr)
     seed = 42
     model = RefModel(seed)
     corpus = Corpus(4, V, LEN, seed)
@@ -572,9 +714,10 @@ def main():
             file=sys.stderr,
         )
     out = "\n".join(lines) + "\n"
-    with open("/tmp/golden/ref_tiny_golden.txt", "w") as f:
+    path = "/tmp/golden/ref_tiny_golden_lane.txt" if lane else "/tmp/golden/ref_tiny_golden.txt"
+    with open(path, "w") as f:
         f.write(out)
-    print("wrote /tmp/golden/ref_tiny_golden.txt", file=sys.stderr)
+    print(f"wrote {path}", file=sys.stderr)
 
 if __name__ == "__main__":
     main()

@@ -2,13 +2,20 @@
 //!
 //! * Golden trace: a fixed-seed 20-step tiny run must be bit-identical
 //!   across two consecutive in-process runs, and must match the
-//!   **committed** fixture `tests/fixtures/ref_tiny_golden.txt` -- a
-//!   missing fixture is a hard failure, not a silent bootstrap, so CI can
-//!   never accidentally re-pin drifted numerics against themselves. To
+//!   **committed** fixture for the active kernel kind -- a missing
+//!   fixture is a hard failure, not a silent bootstrap, so CI can never
+//!   accidentally re-pin drifted numerics against themselves. There is
+//!   one fixture per accumulation order: `tests/fixtures/
+//!   ref_tiny_golden.txt` pins the scalar skip-zero kernels (every
+//!   backend-ref / backend-par build), and `ref_tiny_golden_lane.txt`
+//!   pins the lane-tree order shared by the SIMD kernels and their
+//!   scalar emulation (only reachable under `backend-simd`). To
 //!   regenerate after an *intentional* numerics change, run the explicit
-//!   ignored test: `cargo test --no-default-features --features
-//!   backend-ref --test reference_backend -- --ignored` and commit the
-//!   rewritten fixture.
+//!   ignored test under the matching feature set: `cargo test
+//!   --no-default-features --features backend-ref --test
+//!   reference_backend -- --ignored regen_golden_fixture` for the scalar
+//!   fixture, `--features backend-simd` for the lane one, and commit the
+//!   rewritten file.
 //! * Rate-0 property: Gating Dropout with p = 0.0 never fires, so its
 //!   decision stream and the full training trace reproduce the undropped
 //!   Baseline run exactly, bit for bit, for any seed.
@@ -18,6 +25,7 @@
 
 use gating_dropout::coordinator::{Coordinator, Policy};
 use gating_dropout::data::{Batcher, Corpus, CorpusConfig};
+use gating_dropout::runtime::tensor::active_kernel_kind;
 use gating_dropout::runtime::{Backend, ReferenceBackend};
 use gating_dropout::topology::Topology;
 use gating_dropout::util::prop::run_prop;
@@ -60,6 +68,19 @@ fn render(t: &[[u32; 5]]) -> String {
 
 const GOLDEN_PATH: &str =
     concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/ref_tiny_golden.txt");
+const GOLDEN_LANE_PATH: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures/ref_tiny_golden_lane.txt");
+
+/// The fixture pinning the *active* accumulation order: the scalar
+/// skip-zero kernels and the lane-tree kernels round differently, so
+/// each kernel kind has its own committed golden trace.
+fn golden_path_for_kind() -> &'static str {
+    if active_kernel_kind().is_lane() {
+        GOLDEN_LANE_PATH
+    } else {
+        GOLDEN_PATH
+    }
+}
 
 /// The golden-trace configuration: Gate-Drop p=0.5 exercises both the
 /// dropped (local-routing) and the full top-1 paths inside one trace.
@@ -78,32 +99,46 @@ fn golden_trace_fixed_seed_20_steps() {
     assert!(a.iter().all(|row| f32::from_bits(row[0]).is_finite()));
     assert_ne!(a[19], a[0], "params must move across steps");
 
+    let kind = active_kernel_kind();
+    let path = golden_path_for_kind();
     let rendered = render(&a);
-    let fixture = std::fs::read_to_string(GOLDEN_PATH).unwrap_or_else(|e| {
+    let fixture = std::fs::read_to_string(path).unwrap_or_else(|e| {
         panic!(
-            "golden fixture {GOLDEN_PATH} unreadable ({e}); the committed fixture pins \
-             the reference numerics and must exist. To regenerate intentionally: \
-             `cargo test --no-default-features --features backend-ref --test \
-             reference_backend -- --ignored` and commit the result"
+            "golden fixture {path} for kernel kind {} unreadable ({e}); the committed \
+             fixture pins the reference numerics and must exist. To regenerate \
+             intentionally: `cargo test --no-default-features --features backend-ref \
+             --test reference_backend -- --ignored regen_golden_fixture` (use \
+             --features backend-simd for the lane fixture) and commit the result",
+            kind.name()
         )
     });
     assert_eq!(
-        fixture, rendered,
+        fixture,
+        rendered,
         "reference-backend numerics drifted from the checked-in golden trace \
-         (tests/fixtures/ref_tiny_golden.txt); if the change is intentional, \
-         regenerate via the ignored `regen_golden_fixture` test and commit it"
+         ({path}, kernel kind {}); if the change is intentional, regenerate via \
+         the ignored `regen_golden_fixture` test under the same feature set and \
+         commit it",
+        kind.name()
     );
 }
 
 /// Explicit fixture (re)generation -- never runs in a normal `cargo test`
-/// pass: `cargo test ... --test reference_backend -- --ignored`.
+/// pass: `cargo test ... --test reference_backend -- --ignored`. Writes
+/// the fixture for whichever kernel kind the build resolves, so run it
+/// once per fixture: `--features backend-ref` rewrites the scalar one,
+/// `--features backend-simd` the lane one.
 #[test]
-#[ignore = "rewrites tests/fixtures/ref_tiny_golden.txt; run explicitly to regenerate"]
+#[ignore = "rewrites the active kind's tests/fixtures golden trace; run explicitly to regenerate"]
 fn regen_golden_fixture() {
+    let path = golden_path_for_kind();
     let rendered = render(&golden_trace());
     std::fs::create_dir_all(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/fixtures")).unwrap();
-    std::fs::write(GOLDEN_PATH, &rendered).unwrap();
-    eprintln!("regen_golden_fixture: wrote {GOLDEN_PATH}; commit it to pin the numerics");
+    std::fs::write(path, &rendered).unwrap();
+    eprintln!(
+        "regen_golden_fixture: wrote {path} (kernel kind {}); commit it to pin the numerics",
+        active_kernel_kind().name()
+    );
 }
 
 #[test]
